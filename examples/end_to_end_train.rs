@@ -1,0 +1,106 @@
+//! End-to-end driver: REAL federated training through all three layers.
+//!
+//! Trains the paper's FEMNIST CNN (≈1.14M params, compiled from the
+//! Pallas/JAX L1+L2 stack into `artifacts/femnist_cnn_*.hlo.txt`) with
+//! DPASGD across the 11-silo Gaia network, once under the RING baseline
+//! and once under the multigraph topology, logging per-round loss,
+//! simulated wall-clock, and isolated-node counts. This proves the full
+//! composition: rust coordinator -> PJRT executables -> Pallas kernels.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!   cargo run --release --example end_to_end_train             # CNN, 60 rounds
+//!   cargo run --release --example end_to_end_train -- --quick  # MLP, 20 rounds
+//!   cargo run --release --example end_to_end_train -- --model femnist_cnn --rounds 200
+//!
+//! Outputs: results/e2e_<topology>.csv + a comparison summary on stdout.
+
+use anyhow::Result;
+use mgfl::config::TrainConfig;
+use mgfl::coordinator::Trainer;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::runtime::ModelRuntime;
+use mgfl::topo::{ring::RingTopology, MultigraphTopology, TopologyDesign};
+use mgfl::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has("quick");
+    let model = args.get_str("model", if quick { "femnist_mlp" } else { "femnist_cnn" });
+    let rounds: usize = args.get("rounds", if quick { 20 } else { 60 })?;
+    let eval_every: usize = args.get("eval-every", (rounds / 6).max(1))?;
+    let t: u32 = args.get("t", 5)?;
+
+    if !mgfl::runtime::artifacts_available() {
+        anyhow::bail!("artifacts/ missing — run `make artifacts` first");
+    }
+    std::fs::create_dir_all("results")?;
+
+    let net = zoo::gaia();
+    let profile = DatasetProfile::femnist();
+    println!(
+        "== end-to-end: {} on {} ({} silos, {} rounds, u=1) ==",
+        model,
+        net.name,
+        net.n(),
+        rounds
+    );
+
+    let mut summaries = Vec::new();
+    for topo_name in ["ring", "multigraph"] {
+        let runtime = ModelRuntime::load_default(&model)?;
+        println!(
+            "\n-- {topo_name}: loaded {} (P={}, {:.2} MB) --",
+            model,
+            runtime.param_count(),
+            runtime.entry.model_size_mb
+        );
+        let topo: Box<dyn TopologyDesign> = match topo_name {
+            "ring" => Box::new(RingTopology::new(&net, &profile)),
+            _ => Box::new(MultigraphTopology::from_network(&net, &profile, t)),
+        };
+        let cfg = TrainConfig {
+            model: model.clone(),
+            rounds,
+            lr: 0.06,
+            eval_examples: 512,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(runtime, topo, net.clone(), profile.clone(), cfg)?;
+        let trace = trainer.run(eval_every)?;
+
+        // Loss curve to stdout (sparse) + full CSV.
+        for r in trace.records.iter().step_by((rounds / 10).max(1)) {
+            println!(
+                "  round {:>4}  loss {:.4}  sim {:>9.1} ms  isolated {}",
+                r.round, r.train_loss, r.sim_elapsed_ms, r.isolated
+            );
+        }
+        let timings = trainer.runtime.timings.borrow().clone();
+        let path = format!("results/e2e_{topo_name}.csv");
+        trace.write_csv(&path)?;
+        println!(
+            "  final: acc {:.2}%  train-loss {:.4}  sim {:.2} s  host {:.1} s  (mean step {:.1} ms, mean agg {:.1} ms) -> {path}",
+            trace.final_accuracy().unwrap_or(f64::NAN) * 100.0,
+            trace.final_train_loss().unwrap_or(f64::NAN),
+            trace.total_sim_ms() / 1e3,
+            trace.host_elapsed_ms / 1e3,
+            timings.mean_train_ms(),
+            timings.mean_agg_ms(),
+        );
+        summaries.push((topo_name, trace));
+    }
+
+    let (_, ring) = &summaries[0];
+    let (_, ours) = &summaries[1];
+    println!(
+        "\n== comparison ({rounds} rounds) ==\n  simulated time : ring {:.2} s vs multigraph {:.2} s  ({:.2}x faster)\n  final accuracy : ring {:.2}% vs multigraph {:.2}%\n  final loss     : ring {:.4} vs multigraph {:.4}",
+        ring.total_sim_ms() / 1e3,
+        ours.total_sim_ms() / 1e3,
+        ring.total_sim_ms() / ours.total_sim_ms(),
+        ring.final_accuracy().unwrap_or(f64::NAN) * 100.0,
+        ours.final_accuracy().unwrap_or(f64::NAN) * 100.0,
+        ring.final_train_loss().unwrap_or(f64::NAN),
+        ours.final_train_loss().unwrap_or(f64::NAN),
+    );
+    Ok(())
+}

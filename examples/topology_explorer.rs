@@ -1,0 +1,84 @@
+//! Topology explorer: sweep every design across every network and
+//! profile; print a Table-1-style grid plus per-design overlay
+//! diagnostics (degrees, weight, matchings, multigraph states).
+//!
+//! Run: `cargo run --release --example topology_explorer [-- --rounds 6400]`
+
+use anyhow::Result;
+use mgfl::config::{ExperimentConfig, TopologyKind};
+use mgfl::metrics::render_table;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::simulate;
+use mgfl::topo::MultigraphTopology;
+use mgfl::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rounds: usize = args.get("rounds", 6400)?;
+    let t: u32 = args.get("t", 5)?;
+
+    for prof in DatasetProfile::all() {
+        println!(
+            "\n== {} (M = {} Mbit, T_c = {} ms, u = {}; {} rounds) ==",
+            prof.name, prof.model_size_mbits, prof.t_c_ms, prof.u, rounds
+        );
+        let mut rows = Vec::new();
+        for net in zoo::all_networks() {
+            let mut row = vec![net.name.clone()];
+            let mut ring_ms = f64::NAN;
+            for kind in TopologyKind::all() {
+                let cfg = ExperimentConfig {
+                    network: net.name.clone(),
+                    topology: kind,
+                    t,
+                    sim_rounds: rounds,
+                    ..Default::default()
+                };
+                let mut topo = cfg.build_topology();
+                let res = simulate(topo.as_mut(), &net, &prof, rounds);
+                if kind == TopologyKind::Ring {
+                    ring_ms = res.mean_cycle_ms;
+                }
+                row.push(format!("{:.1}", res.mean_cycle_ms));
+            }
+            // Speedup column (RING / ours) like the paper's (↓ x) marks.
+            let ours: f64 = row.last().unwrap().parse().unwrap();
+            row.push(format!("{:.2}x", ring_ms / ours));
+            rows.push(row);
+        }
+        print!(
+            "{}",
+            render_table(
+                &["network", "STAR", "MATCHA", "MATCHA+", "MST", "d-MBST", "RING", "OURS", "vs RING"],
+                &rows
+            )
+        );
+    }
+
+    // Per-network multigraph diagnostics.
+    println!("\n== multigraph diagnostics (femnist, t = {t}) ==");
+    let prof = DatasetProfile::femnist();
+    let mut rows = Vec::new();
+    for net in zoo::all_networks() {
+        let topo = MultigraphTopology::from_network(&net, &prof, t);
+        let mg = topo.multigraph();
+        let iso = topo.states_with_isolated(10_000).len();
+        rows.push(vec![
+            net.name.clone(),
+            format!("{}", net.n()),
+            format!("{}", mg.total_edges()),
+            format!("{}", mg.weak_edges()),
+            format!("{:.2}", mg.d_min_ms),
+            format!("{}", topo.s_max()),
+            format!("{}/{}", iso, topo.s_max().min(10_000)),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &["network", "silos", "edges", "weak", "d_min ms", "s_max", "iso states"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,142 @@
+"""AOT export: lower L2 step functions to HLO *text* + a JSON manifest.
+
+This is the only place Python touches the artifact boundary.  The rust
+runtime (rust/src/runtime/) loads `artifacts/<name>.hlo.txt` via
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+executes -- Python never runs on the round path.
+
+Interchange is HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model (shapes are baked; the manifest records them):
+  <model>_train     (params f32[P], x, y i32[B], lr f32[]) -> (params', loss)
+  <model>_eval      (params, x, y)                         -> (loss, correct)
+  <model>_init      (seed i32[])                           -> params
+  <model>_agg       (w f32[K], models f32[K,P])            -> params
+Usage: python -m compile.aot --out ../artifacts [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import aggregate as agg_k
+
+# Models exported by default; --full adds the compile-only paper-scale
+# presets (slow to lower, never trained on this testbed).
+DEFAULT_MODELS = ("femnist_mlp", "femnist_cnn", "sentiment_lstm")
+FULL_MODELS = DEFAULT_MODELS + ("cifar_resnet", "sentiment_lstm_paper")
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, *args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def export_model(model: M.ModelDef, out: pathlib.Path,
+                 train_batch: int = TRAIN_BATCH,
+                 eval_batch: int = EVAL_BATCH,
+                 k_max: int = agg_k.K_MAX) -> dict:
+    """Write all artifacts for one model; return its manifest entry."""
+    p = model.param_count
+    flat = jax.ShapeDtypeStruct((p,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    xt, yt = M.example_batch(model, train_batch)
+    xe, ye = M.example_batch(model, eval_batch)
+    w = jax.ShapeDtypeStruct((k_max,), jnp.float32)
+    stack = jax.ShapeDtypeStruct((k_max, p), jnp.float32)
+
+    files = {}
+    for suffix, text in (
+        ("train", _lower(M.make_train_step(model), flat, xt, yt, lr)),
+        ("eval", _lower(M.make_eval_step(model), flat, xe, ye)),
+        ("init", _lower(M.make_init(model), seed)),
+        ("agg", _lower(M.make_aggregate(model), w, stack)),
+    ):
+        name = f"{model.name}_{suffix}.hlo.txt"
+        (out / name).write_text(text)
+        files[suffix] = name
+
+    return {
+        "model": model.name,
+        "param_count": p,
+        "model_size_mbits": model.model_size_mbits,
+        "model_size_mb": model.model_size_mb,
+        "num_classes": model.num_classes,
+        "input_shape": list(model.input_shape),
+        "input_dtype": model.input_dtype,
+        "train_batch": train_batch,
+        "eval_batch": eval_batch,
+        "k_max": k_max,
+        "artifacts": files,
+        "param_specs": [
+            {"name": s.name, "shape": list(s.shape)} for s in model.specs
+        ],
+    }
+
+
+def _input_fingerprint() -> str:
+    """Hash of the compile-path sources, for `make artifacts` up-to-date
+    checks on the rust side (runtime refuses stale manifests loudly)."""
+    h = hashlib.sha256()
+    root = pathlib.Path(__file__).parent
+    for f in sorted(root.rglob("*.py")):
+        h.update(f.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also export compile-only paper-scale models")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="explicit model subset")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    names = args.models or (FULL_MODELS if args.full else DEFAULT_MODELS)
+
+    entries = []
+    for name in names:
+        model = M.MODELS[name]
+        print(f"[aot] lowering {name} (P={model.param_count:,}) ...", flush=True)
+        entries.append(export_model(model, out))
+
+    manifest = {
+        "version": 1,
+        "fingerprint": _input_fingerprint(),
+        "models": {e["model"]: e for e in entries},
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    total = sum(len((out / f).read_bytes())
+                for e in entries for f in e["artifacts"].values())
+    print(f"[aot] wrote {len(entries)} models, {total/1e6:.1f} MB of HLO, "
+          f"manifest fingerprint {manifest['fingerprint']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Public surface: matmul.matmul, conv.conv2d, aggregate.aggregate, and the
+pure-jnp oracles in ref.  All kernels run interpret=True (CPU-PJRT
+compatible); see DESIGN.md §Hardware-Adaptation.
+"""
+from . import aggregate, conv, matmul, ref  # noqa: F401

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: consensus aggregation (the DPASGD mixing step).
+
+Eq. 2 / Eq. 6 of the paper: w_i(k+1) = sum_j A[i,j] * w_j(k-h) over the
+strong in-neighbour set.  On the rust side every silo's model is a flat
+f32[P] vector; the coordinator stacks the (up to K_MAX) neighbour models
+into f32[K, P] plus a weight vector f32[K] (zero-padded -- zero weights
+are exact no-ops), and this kernel computes the weighted sum.
+
+This is the per-round hot-spot of the *coordination* layer: for the
+paper's iNaturalist model (11.2M params) at 87 silos it is ~1 GB of
+streamed reads per round, so it is tiled as a 1-D grid over P with the
+K-reduction unrolled inside the block (K <= K_MAX is tiny; P is huge).
+The HBM->VMEM schedule streams (K, bp) slabs; weights stay resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block along the parameter axis.  (K_MAX+1) * bp * 4B per slab; at
+# K_MAX=16, bp=65536 that is ~4.2 MiB -- within VMEM with double
+# buffering.  §Perf iteration 2: raised from 4096 to cut the interpret
+# grid from 278 to 18 steps at P=1.14M (per-step loop overhead
+# dominates on CPU; on real TPU both sizes stream fine).
+DEFAULT_BP = 65536
+K_MAX = 16
+
+
+def _agg_kernel(w_ref, models_ref, o_ref):
+    """o[p] = sum_k w[k] * models[k, p] for one parameter block."""
+    # (K, bp) slab contracted against (K,) weights on the VPU; no MXU
+    # needed -- this is bandwidth-bound, the tiling is for streaming.
+    o_ref[...] = jnp.einsum(
+        "k,kp->p", w_ref[...], models_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bp",))
+def aggregate(weights: jax.Array, models: jax.Array, *, bp: int = DEFAULT_BP) -> jax.Array:
+    """Weighted sum over stacked flat models.
+
+    Args:
+      weights: f32[K] consensus row (A[i, j] entries; zero = padding).
+      models:  f32[K, P] stacked neighbour parameter vectors.
+    Returns:
+      f32[P] aggregated parameters.
+    """
+    if models.ndim != 2 or weights.ndim != 1 or weights.shape[0] != models.shape[0]:
+        raise ValueError(f"aggregate shape mismatch: {weights.shape} x {models.shape}")
+    k, p = models.shape
+    bp_ = min(bp, p) if p else 1
+    pp = (p + bp_ - 1) // bp_ * bp_
+    mp = jnp.pad(models, ((0, 0), (0, pp - p)))
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(pp // bp_,),
+        in_specs=[
+            # Weights are tiny and revisited every block: index map pins
+            # them to block 0 so they stay VMEM-resident across the grid.
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, bp_), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bp_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), models.dtype),
+        interpret=True,
+    )(weights, mp)
+    return out[:p]
+
+
+def vmem_footprint_bytes(k: int = K_MAX, bp: int = DEFAULT_BP,
+                         dtype_bytes: int = 4) -> int:
+    """Static VMEM estimate: weight vector + double-buffered model slab +
+    output block."""
+    return k * dtype_bytes + 2 * k * bp * dtype_bytes + bp * dtype_bytes

@@ -1,0 +1,50 @@
+"""Layer-1: conv2d lowered to im2col + the Pallas matmul kernel.
+
+The paper's FEMNIST backbone is the Marfoq et al. CNN (two conv layers +
+two dense).  On GPU the convs hit cuDNN implicit-GEMM; the TPU-shaped
+equivalent is explicit im2col (pure data movement, XLA fuses the gathers)
+feeding the MXU-tiled Pallas matmul from matmul.py, so the *entire*
+FLOP-carrying path of the model runs through the L1 kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> tuple[jax.Array, int, int]:
+    """NHWC -> (N*OH*OW, KH*KW*C) patch matrix."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # Gather patches with static slices; XLA fuses this into the consumer.
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            sl = xp[:, di:di + stride * oh:stride, dj:dj + stride * ow:stride, :]
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, KH*KW*C)
+    return patches.reshape(n * oh * ow, kh * kw * c), oh, ow
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, padding: int = 1) -> jax.Array:
+    """NHWC conv2d with HWIO weights via im2col + Pallas matmul.
+
+    Args:
+      x: f32[N, H, W, C_in]
+      w: f32[KH, KW, C_in, C_out]
+    Returns:
+      f32[N, OH, OW, C_out]
+    """
+    kh, kw, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"conv2d channel mismatch: {x.shape} vs {w.shape}")
+    n = x.shape[0]
+    patches, oh, ow = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul(patches, wmat)
+    return out.reshape(n, oh, ow, cout)

@@ -1,0 +1,158 @@
+"""Layer-1 Pallas kernel: tiled matmul targeting the MXU systolic array.
+
+The paper's per-silo compute hot-spot is the CNN/LSTM forward+backward,
+which is GEMM-dominated (conv is lowered to im2col + GEMM, see conv.py).
+On the paper's P100 testbed this work ran through cuDNN; the TPU-shaped
+re-think is a Pallas kernel tiled for VMEM with (bm, bk) x (bk, bn)
+blocks feeding the 128x128 MXU, f32 accumulation in a VMEM scratch
+accumulator, and a K-innermost grid so each output tile is revisited
+contiguously (double-buffer friendly HBM->VMEM schedule via BlockSpec).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the rust runtime.  Real-TPU efficiency is *estimated* from
+the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU-shaped default tiles.  8 * (128*128*4B) * 3 buffers ~= 1.5 MiB of
+# VMEM at the defaults -- far under the ~16 MiB budget, leaving room for
+# double buffering (see DESIGN.md §Perf for the footprint table).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid is (M/bm, N/bn, K/bk), K innermost.
+
+    The accumulator lives in VMEM scratch across the K sweep; the output
+    ref is written once on the final K step (revisiting o_ref every step
+    would round-trip HBM).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # f32 accumulation regardless of input dtype: this is the MXU contract
+    # (bf16 multiplicands, f32 accumulate).
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_dim(d: int, b: int) -> int:
+    return (d + b - 1) // b * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_tiled(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """C = X @ Y via the Pallas tile kernel, any (M, K) x (K, N) f32.
+
+    Ragged shapes are zero-padded up to the tile grid and sliced back;
+    zero padding is exact for matmul.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm_ = min(bm, _pad_dim(m, 8))
+    bn_ = min(bn, _pad_dim(n, 8))
+    bk_ = min(bk, _pad_dim(k, 8))
+    mp, kp, np_ = _pad_dim(m, bm_), _pad_dim(k, bk_), _pad_dim(n, bn_)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    n_k = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm_, np_ // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _pick_tiles(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Shape-adaptive tiles (§Perf iteration 2, EXPERIMENTS.md).
+
+    interpret=True lowers the grid to an XLA while-loop whose
+    per-iteration overhead (dynamic-slice / dot / dynamic-update-slice)
+    dominates small dots on CPU; larger tiles cut the step count ~5-10x
+    on the CNN's GEMMs (conv1 196->49 steps, fc1 75->4). The (512, 512,
+    1024) caps keep the worst-case VMEM footprint ~6 MiB -- still valid
+    for a real-TPU deployment, where one would drop back to the
+    (128, 128, 128) MXU defaults of `matmul_tiled`.
+    """
+    bm = min(512, _pad_dim(m, 8))
+    bn = min(512, _pad_dim(n, 8))
+    bk = min(1024, _pad_dim(k, 8))
+    return bm, bn, bk
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable C = X @ Y at shape-adaptive tiles.
+
+    pallas_call has no automatic AD rule; the VJP is expressed with the
+    same kernel (dX = dC @ Yᵀ, dY = Xᵀ @ dC) so the backward pass also
+    runs on the tiled kernel -- the whole train-step HLO stays on the L1
+    kernel path.
+    """
+    bm, bn, bk = _pick_tiles(x.shape[0], x.shape[1], y.shape[1])
+    return matmul_tiled(x, y, bm=bm, bn=bn, bk=bk)
+
+
+def _matmul_fwd(x, y):
+    bm, bn, bk = _pick_tiles(x.shape[0], x.shape[1], y.shape[1])
+    return matmul_tiled(x, y, bm=bm, bn=bn, bk=bk), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    bm, bn, bk = _pick_tiles(g.shape[0], g.shape[1], y.shape[0])
+    dx = matmul_tiled(g, y.T, bm=bm, bn=bn, bk=bk)
+    bm, bn, bk = _pick_tiles(x.shape[1], x.shape[0], g.shape[1])
+    dy = matmul_tiled(x.T, g, bm=bm, bn=bn, bk=bk)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                         bk: int = DEFAULT_BK, dtype_bytes: int = 4) -> int:
+    """Static VMEM estimate for DESIGN.md §Perf: x tile + y tile + out tile
+    + f32 accumulator, x2 for double buffering of the input streams."""
+    x_t = bm * bk * dtype_bytes
+    y_t = bk * bn * dtype_bytes
+    o_t = bm * bn * dtype_bytes
+    acc = bm * bn * 4
+    return 2 * (x_t + y_t) + o_t + acc

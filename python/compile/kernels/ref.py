@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness contracts: pytest asserts allclose between each
+Pallas kernel and its oracle across a hypothesis-driven shape/dtype sweep
+(python/tests/test_kernel.py).  Keep these trivially-obviously-correct --
+no tiling, no padding, just the textbook expression.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """C = X @ Y, f32 accumulation."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def aggregate_ref(weights: jax.Array, models: jax.Array) -> jax.Array:
+    """o[p] = sum_k w[k] models[k,p]."""
+    return jnp.einsum("k,kp->p", weights, models,
+                      preferred_element_type=jnp.float32).astype(models.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
+               padding: int = 1) -> jax.Array:
+    """NHWC x HWIO conv via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,351 @@
+"""Layer-2: JAX model definitions + flat-parameter train/eval steps.
+
+Every model is a `ModelDef`: a list of named parameter shapes plus an
+`apply(params_dict, x) -> logits` function whose FLOP-carrying ops route
+through the Layer-1 Pallas kernels (kernels.matmul / kernels.conv).
+
+The cross-layer contract with the Rust coordinator is a FLAT f32[P]
+parameter vector: `train_step` / `eval_step` unflatten internally, so the
+Rust side stays model-agnostic (aggregation, staleness buffers, and
+transmission accounting all operate on flat vectors).
+
+Models (paper Table 2):
+  femnist_cnn    Marfoq-style 2-conv CNN, 28x28x1 -> 62 classes, ~1.1M
+                 params (paper: 1.2M).
+  sentiment_lstm single-layer LSTM over token ids (paper: Sentiment140
+                 LSTM; `paper` preset ~4.8M params, `small` for training
+                 on this CPU testbed).
+  cifar_resnet   small residual CNN standing in for the iNaturalist
+                 ResNet (compile-path exercised; the paper's accuracy
+                 experiments are FEMNIST-only).
+  femnist_mlp    tiny MLP used by tests and the quickstart example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import aggregate as agg_k
+from .kernels import conv as conv_k
+from .kernels import matmul as mm_k
+
+# ---------------------------------------------------------------------------
+# Parameter spec / flattening
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    # Fan-in for scaled init; 0 means zeros-init (biases).
+    fan_in: int = 0
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A model the coordinator can train: specs + pure apply function."""
+
+    name: str
+    specs: tuple[ParamSpec, ...]
+    apply: Callable  # (params: dict[str, Array], x) -> logits
+    input_shape: tuple[int, ...]  # per-example shape (no batch dim)
+    input_dtype: str  # "f32" | "i32"
+    num_classes: int
+
+    @property
+    def param_count(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    @property
+    def model_size_mbits(self) -> float:
+        """Transmission size in Mbit (used by the Eq. 3 delay model)."""
+        return self.param_count * 32 / 1e6
+
+    @property
+    def model_size_mb(self) -> float:
+        """Size in MB -- the unit paper Table 2 actually reports (its
+        "4.62 Mb" for the 1.2M-param CNN is params*4B/1e6)."""
+        return self.param_count * 4 / 1e6
+
+    def unflatten(self, flat: jax.Array) -> dict[str, jax.Array]:
+        out, off = {}, 0
+        for s in self.specs:
+            out[s.name] = jax.lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape)
+            off += s.size
+        return out
+
+    def flatten(self, params: dict[str, jax.Array]) -> jax.Array:
+        return jnp.concatenate([params[s.name].reshape(-1) for s in self.specs])
+
+    def init(self, seed: jax.Array) -> jax.Array:
+        """Flat He-initialized parameter vector from an i32 seed scalar."""
+        key = jax.random.PRNGKey(seed)
+        chunks = []
+        for i, s in enumerate(self.specs):
+            if s.fan_in == 0:
+                chunks.append(jnp.zeros((s.size,), jnp.float32))
+            else:
+                sub = jax.random.fold_in(key, i)
+                scale = jnp.sqrt(2.0 / s.fan_in)
+                chunks.append(
+                    jax.random.normal(sub, (s.size,), jnp.float32) * scale
+                )
+        return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Shared nn pieces (all matmuls route through the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def dense(params: dict, name: str, x: jax.Array) -> jax.Array:
+    return mm_k.matmul(x, params[f"{name}.w"]) + params[f"{name}.b"]
+
+
+def max_pool2(x: jax.Array) -> jax.Array:
+    """2x2 max pool, NHWC."""
+    n, h, w, c = x.shape
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(2, 4))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logz, labels[:, None], axis=1).mean()
+
+
+# ---------------------------------------------------------------------------
+# FEMNIST CNN (Marfoq et al. backbone; ~1.14M params vs paper's 1.2M)
+# ---------------------------------------------------------------------------
+
+
+def _femnist_cnn_apply(p: dict, x: jax.Array) -> jax.Array:
+    x = conv_k.conv2d(x, p["conv1.w"]) + p["conv1.b"]
+    x = max_pool2(jax.nn.relu(x))  # 14x14x32
+    x = conv_k.conv2d(x, p["conv2.w"]) + p["conv2.b"]
+    x = max_pool2(jax.nn.relu(x))  # 7x7x64
+    x = x.reshape(x.shape[0], -1)  # 3136
+    x = jax.nn.relu(dense(p, "fc1", x))
+    return dense(p, "fc2", x)
+
+
+FEMNIST_CNN = ModelDef(
+    name="femnist_cnn",
+    specs=(
+        ParamSpec("conv1.w", (3, 3, 1, 32), fan_in=9),
+        ParamSpec("conv1.b", (32,)),
+        ParamSpec("conv2.w", (3, 3, 32, 64), fan_in=288),
+        ParamSpec("conv2.b", (64,)),
+        ParamSpec("fc1.w", (3136, 350), fan_in=3136),
+        ParamSpec("fc1.b", (350,)),
+        ParamSpec("fc2.w", (350, 62), fan_in=350),
+        ParamSpec("fc2.b", (62,)),
+    ),
+    apply=_femnist_cnn_apply,
+    input_shape=(28, 28, 1),
+    input_dtype="f32",
+    num_classes=62,
+)
+
+
+# ---------------------------------------------------------------------------
+# FEMNIST MLP (tests / quickstart; fast to compile and run)
+# ---------------------------------------------------------------------------
+
+
+def _femnist_mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(dense(p, "fc1", x))
+    return dense(p, "fc2", x)
+
+
+FEMNIST_MLP = ModelDef(
+    name="femnist_mlp",
+    specs=(
+        ParamSpec("fc1.w", (784, 128), fan_in=784),
+        ParamSpec("fc1.b", (128,)),
+        ParamSpec("fc2.w", (128, 62), fan_in=128),
+        ParamSpec("fc2.b", (62,)),
+    ),
+    apply=_femnist_mlp_apply,
+    input_shape=(28, 28, 1),
+    input_dtype="f32",
+    num_classes=62,
+)
+
+
+# ---------------------------------------------------------------------------
+# Sentiment LSTM
+# ---------------------------------------------------------------------------
+
+
+def _make_lstm(name: str, vocab: int, embed: int, hidden: int, seq: int,
+               classes: int) -> ModelDef:
+    def apply(p: dict, x: jax.Array) -> jax.Array:
+        # x: i32[B, T] token ids
+        emb = p["embed.w"][x]  # (B, T, E)
+        b = emb.shape[0]
+        h0 = jnp.zeros((b, hidden), jnp.float32)
+        c0 = jnp.zeros((b, hidden), jnp.float32)
+
+        def cell(carry, x_t):
+            h, c = carry
+            z = mm_k.matmul(jnp.concatenate([x_t, h], axis=1), p["lstm.w"]) + p["lstm.b"]
+            i, f, g, o = jnp.split(z, 4, axis=1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        (h, _), _ = jax.lax.scan(cell, (h0, c0), emb.transpose(1, 0, 2))
+        return dense(p, "fc", h)
+
+    return ModelDef(
+        name=name,
+        specs=(
+            ParamSpec("embed.w", (vocab, embed), fan_in=embed),
+            ParamSpec("lstm.w", (embed + hidden, 4 * hidden), fan_in=embed + hidden),
+            ParamSpec("lstm.b", (4 * hidden,)),
+            ParamSpec("fc.w", (hidden, classes), fan_in=hidden),
+            ParamSpec("fc.b", (classes,)),
+        ),
+        apply=apply,
+        input_shape=(seq,),
+        input_dtype="i32",
+        num_classes=classes,
+    )
+
+
+SENTIMENT_LSTM = _make_lstm("sentiment_lstm", vocab=2048, embed=64,
+                            hidden=96, seq=24, classes=2)
+# Paper-scale preset (Table 2: 4.8M params, 18.38 Mbit).  Compile-only;
+# exporting it is gated behind `aot.py --full`.
+SENTIMENT_LSTM_PAPER = _make_lstm("sentiment_lstm_paper", vocab=16384,
+                                  embed=256, hidden=256, seq=24, classes=2)
+
+
+# ---------------------------------------------------------------------------
+# Small residual CNN (iNaturalist stand-in)
+# ---------------------------------------------------------------------------
+
+
+def _make_resnet(name: str, widths: tuple[int, ...], classes: int,
+                 hw: int = 32) -> ModelDef:
+    specs: list[ParamSpec] = [
+        ParamSpec("stem.w", (3, 3, 3, widths[0]), fan_in=27),
+        ParamSpec("stem.b", (widths[0],)),
+    ]
+    for i, w in enumerate(widths):
+        cin = widths[i - 1] if i else widths[0]
+        specs += [
+            ParamSpec(f"b{i}.c1.w", (3, 3, cin, w), fan_in=9 * cin),
+            ParamSpec(f"b{i}.c1.b", (w,)),
+            ParamSpec(f"b{i}.c2.w", (3, 3, w, w), fan_in=9 * w),
+            ParamSpec(f"b{i}.c2.b", (w,)),
+        ]
+        if cin != w:
+            specs.append(ParamSpec(f"b{i}.proj.w", (1, 1, cin, w), fan_in=cin))
+    specs += [
+        ParamSpec("fc.w", (widths[-1], classes), fan_in=widths[-1]),
+        ParamSpec("fc.b", (classes,)),
+    ]
+
+    def apply(p: dict, x: jax.Array) -> jax.Array:
+        x = jax.nn.relu(conv_k.conv2d(x, p["stem.w"]) + p["stem.b"])
+        for i, w in enumerate(widths):
+            cin = widths[i - 1] if i else widths[0]
+            h = jax.nn.relu(conv_k.conv2d(x, p[f"b{i}.c1.w"]) + p[f"b{i}.c1.b"])
+            h = conv_k.conv2d(h, p[f"b{i}.c2.w"]) + p[f"b{i}.c2.b"]
+            if cin != w:
+                x = conv_k.conv2d(x, p[f"b{i}.proj.w"], padding=0)
+            x = jax.nn.relu(x + h)
+            if i + 1 < len(widths):
+                x = max_pool2(x)
+        x = x.mean(axis=(1, 2))
+        return dense(p, "fc", x)
+
+    return ModelDef(
+        name=name,
+        specs=tuple(specs),
+        apply=apply,
+        input_shape=(hw, hw, 3),
+        input_dtype="f32",
+        num_classes=classes,
+    )
+
+
+CIFAR_RESNET = _make_resnet("cifar_resnet", widths=(16, 32, 64), classes=64)
+
+
+MODELS: dict[str, ModelDef] = {
+    m.name: m
+    for m in (FEMNIST_CNN, FEMNIST_MLP, SENTIMENT_LSTM, SENTIMENT_LSTM_PAPER,
+              CIFAR_RESNET)
+}
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter step functions (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: ModelDef):
+    """(flat f32[P], x[B,...], y i32[B], lr f32[]) -> (flat', loss)."""
+
+    def loss_fn(flat, x, y):
+        logits = model.apply(model.unflatten(flat), x)
+        return softmax_xent(logits, y)
+
+    def step(flat, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x, y)
+        return flat - lr * g, loss
+
+    return step
+
+
+def make_eval_step(model: ModelDef):
+    """(flat, x, y) -> (loss, correct_count f32[])."""
+
+    def step(flat, x, y):
+        logits = model.apply(model.unflatten(flat), x)
+        loss = softmax_xent(logits, y)
+        correct = (logits.argmax(axis=1) == y).sum().astype(jnp.float32)
+        return loss, correct
+
+    return step
+
+
+def make_aggregate(model: ModelDef, k_max: int = agg_k.K_MAX):
+    """(weights f32[K], models f32[K, P]) -> f32[P] via the Pallas kernel."""
+    del model, k_max  # shape comes from the lowering args
+
+    def step(weights, models):
+        return agg_k.aggregate(weights, models)
+
+    return step
+
+
+def make_init(model: ModelDef):
+    """(seed i32[]) -> flat f32[P]."""
+
+    def step(seed):
+        return model.init(seed)
+
+    return step
+
+
+def example_batch(model: ModelDef, batch: int):
+    """ShapeDtypeStructs for lowering."""
+    dt = jnp.float32 if model.input_dtype == "f32" else jnp.int32
+    x = jax.ShapeDtypeStruct((batch, *model.input_shape), dt)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y

@@ -1,0 +1,77 @@
+"""AOT boundary: HLO text export is parseable, runs, and matches the
+eager L2 computation -- the exact contract the rust runtime relies on.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+class TestExport:
+    def test_to_hlo_text_roundtrip_simple(self):
+        """Lower a function, confirm the text contains a parseable module
+        with the ENTRY signature the rust loader expects."""
+        def fn(x, y):
+            return (jnp.matmul(x, y) + 2.0,)
+
+        spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+        assert "ENTRY" in text and "f32[2,2]" in text
+        # return_tuple=True: the rust side unwraps a 1-tuple
+        assert "(f32[2,2]" in text
+
+    def test_manifest_written(self, tmp_path):
+        entry = aot.export_model(M.FEMNIST_MLP, tmp_path, train_batch=4,
+                                 eval_batch=4)
+        for f in entry["artifacts"].values():
+            assert (tmp_path / f).exists()
+            text = (tmp_path / f).read_text()
+            assert text.startswith("HloModule") and "ENTRY" in text
+        assert entry["param_count"] == M.FEMNIST_MLP.param_count
+
+    def test_train_artifact_signature(self, tmp_path):
+        entry = aot.export_model(M.FEMNIST_MLP, tmp_path, train_batch=4,
+                                 eval_batch=4)
+        text = (tmp_path / entry["artifacts"]["train"]).read_text()
+        p = M.FEMNIST_MLP.param_count
+        # params, x, y, lr inputs all appear in the entry computation
+        assert f"f32[{p}]" in text
+        assert "f32[4,28,28,1]" in text
+        assert "s32[4]" in text
+
+    def test_fingerprint_stable(self):
+        assert aot._input_fingerprint() == aot._input_fingerprint()
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+class TestBuiltArtifacts:
+    """Validate the checked-out artifacts/ dir the rust tests also use."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        return json.loads((ARTIFACTS / "manifest.json").read_text())
+
+    def test_all_files_present(self, manifest):
+        for entry in manifest["models"].values():
+            for f in entry["artifacts"].values():
+                assert (ARTIFACTS / f).exists(), f
+
+    def test_fingerprint_current(self, manifest):
+        assert manifest["fingerprint"] == aot._input_fingerprint(), (
+            "artifacts stale vs python/compile sources -- run `make artifacts`"
+        )
+
+    def test_param_counts_match_models(self, manifest):
+        for name, entry in manifest["models"].items():
+            assert entry["param_count"] == M.MODELS[name].param_count

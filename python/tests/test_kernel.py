@@ -1,0 +1,221 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts -- the same
+kernels lower into the train/eval HLO the rust runtime executes.
+Hypothesis sweeps shapes; fixed cases pin the paper-relevant geometries
+(the FEMNIST CNN's GEMMs, the aggregation slabs at K_MAX).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate as agg
+from compile.kernels import conv as cv
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=160)
+small_dims = st.integers(min_value=1, max_value=40)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_random_shapes(self, m, k, n, seed):
+        x = rand(seed, (m, k))
+        y = rand(seed + 1, (k, n))
+        np.testing.assert_allclose(
+            mm.matmul(x, y), ref.matmul_ref(x, y), rtol=2e-5, atol=2e-5
+        )
+
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (25088, 16, 32),   # femnist conv1 im2col GEMM (padded K)
+            (6272, 288, 64),   # femnist conv2
+            (32, 3136, 350),   # femnist fc1, train batch
+            (32, 350, 62),     # femnist fc2
+            (128, 128, 128),   # exact single tile
+            (256, 384, 512),   # exact multi-tile
+            (1, 1, 1),         # degenerate
+            (129, 129, 129),   # one past the tile boundary
+        ],
+    )
+    def test_paper_geometries(self, m, k, n):
+        x = rand(m * 7 + n, (m, k))
+        y = rand(k * 3 + 1, (k, n))
+        np.testing.assert_allclose(
+            mm.matmul(x, y), ref.matmul_ref(x, y), rtol=3e-5, atol=3e-5
+        )
+
+    @pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (64, 128, 32), (8, 8, 8)])
+    def test_tile_invariance(self, bm, bn, bk):
+        """Result must not depend on the tiling (pure perf knob)."""
+        x = rand(0, (100, 70))
+        y = rand(1, (70, 90))
+        np.testing.assert_allclose(
+            mm.matmul_tiled(x, y, bm=bm, bn=bn, bk=bk),
+            ref.matmul_ref(x, y),
+            rtol=2e-5,
+            atol=2e-5,
+        )
+
+    def test_grad_matches_ref(self):
+        """custom_vjp must agree with jnp autodiff."""
+        x = rand(2, (17, 23))
+        y = rand(3, (23, 9))
+
+        def f_pallas(x, y):
+            return (mm.matmul(x, y) ** 2).sum()
+
+        def f_ref(x, y):
+            return (ref.matmul_ref(x, y) ** 2).sum()
+
+        gx_p, gy_p = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+        gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(gx_p, gx_r, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gy_p, gy_r, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError, match="matmul shape mismatch"):
+            mm.matmul_tiled(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+    def test_vmem_budget(self):
+        """Default tiles must fit the 16 MiB VMEM budget with headroom."""
+        assert mm.vmem_footprint_bytes() < 8 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# aggregate (the consensus kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestAggregate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        k=st.integers(1, agg.K_MAX),
+        p=st.integers(1, 20000),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, k, p, seed):
+        w = rand(seed, (k,))
+        m = rand(seed + 1, (k, p))
+        np.testing.assert_allclose(
+            agg.aggregate(w, m), ref.aggregate_ref(w, m), rtol=2e-5, atol=2e-5
+        )
+
+    def test_zero_weights_are_padding(self):
+        """Coordinator zero-pads to K_MAX: padded rows must be exact no-ops
+        even when they hold garbage."""
+        w = jnp.array([0.5, 0.5, 0.0, 0.0])
+        m = jnp.stack(
+            [rand(0, (1000,)), rand(1, (1000,)),
+             jnp.full((1000,), 1e30), jnp.full((1000,), -1e30)]
+        )
+        expect = 0.5 * m[0] + 0.5 * m[1]
+        np.testing.assert_allclose(agg.aggregate(w, m), expect, rtol=1e-6)
+
+    def test_convex_identity(self):
+        """sum(w)=1 over identical models returns the model unchanged."""
+        x = rand(5, (4096,))
+        w = jnp.array([0.2, 0.3, 0.5])
+        m = jnp.stack([x, x, x])
+        np.testing.assert_allclose(agg.aggregate(w, m), x, rtol=1e-6, atol=1e-6)
+
+    def test_femnist_scale(self):
+        """Paper-scale slab: K_MAX x 1.14M params."""
+        p = 1138528
+        w = jnp.ones((agg.K_MAX,)) / agg.K_MAX
+        m = rand(9, (agg.K_MAX, p))
+        np.testing.assert_allclose(
+            agg.aggregate(w, m), ref.aggregate_ref(w, m), rtol=2e-5, atol=2e-5
+        )
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError, match="aggregate shape mismatch"):
+            agg.aggregate(jnp.zeros((3,)), jnp.zeros((4, 10)))
+
+    def test_vmem_budget(self):
+        # §Perf iteration 2 raised bp to 65536 (~8.5 MiB with double
+        # buffering) — must stay inside the 16 MiB VMEM budget.
+        assert agg.vmem_footprint_bytes() < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+class TestConv2d:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 4),
+        hw=st.integers(4, 20),
+        cin=st.integers(1, 8),
+        cout=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_lax_conv(self, n, hw, cin, cout, seed):
+        x = rand(seed, (n, hw, hw, cin))
+        w = rand(seed + 1, (3, 3, cin, cout)) * 0.2
+        np.testing.assert_allclose(
+            cv.conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.parametrize("stride,padding", [(1, 0), (2, 1), (1, 1), (2, 0)])
+    def test_stride_padding(self, stride, padding):
+        x = rand(0, (2, 12, 12, 3))
+        w = rand(1, (3, 3, 3, 5)) * 0.2
+        np.testing.assert_allclose(
+            cv.conv2d(x, w, stride=stride, padding=padding),
+            ref.conv2d_ref(x, w, stride=stride, padding=padding),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_1x1_projection(self):
+        x = rand(0, (2, 8, 8, 16))
+        w = rand(1, (1, 1, 16, 32)) * 0.2
+        np.testing.assert_allclose(
+            cv.conv2d(x, w, padding=0), ref.conv2d_ref(x, w, padding=0),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_femnist_layer_shapes(self):
+        x = rand(0, (8, 28, 28, 1))
+        w = rand(1, (3, 3, 1, 32)) * 0.3
+        out = cv.conv2d(x, w)
+        assert out.shape == (8, 28, 28, 32)
+        np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_grad_flows(self):
+        x = rand(2, (2, 8, 8, 3))
+        w = rand(3, (3, 3, 3, 4)) * 0.2
+
+        def f(w):
+            return (cv.conv2d(x, w) ** 2).mean()
+
+        def f_ref(w):
+            return (ref.conv2d_ref(x, w) ** 2).mean()
+
+        np.testing.assert_allclose(
+            jax.grad(f)(w), jax.grad(f_ref)(w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_rejects_channel_mismatch(self):
+        with pytest.raises(ValueError, match="channel mismatch"):
+            cv.conv2d(jnp.zeros((1, 8, 8, 3)), jnp.zeros((3, 3, 4, 8)))

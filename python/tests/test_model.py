@@ -1,0 +1,127 @@
+"""L2 correctness: model definitions, flat-param bijection, train/eval
+steps, and learning sanity (loss decreases on a learnable synthetic task).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def synthetic_batch(model: M.ModelDef, batch: int, seed: int = 0):
+    """Class-conditional synthetic batch (same family the rust data layer
+    generates): mean-shifted Gaussians per class, so it is learnable."""
+    key = jax.random.PRNGKey(seed)
+    ky, kx = jax.random.split(key)
+    y = jax.random.randint(ky, (batch,), 0, model.num_classes)
+    if model.input_dtype == "f32":
+        base = jax.random.normal(kx, (batch, *model.input_shape))
+        shift = (y / model.num_classes).reshape(batch, *([1] * len(model.input_shape)))
+        x = base * 0.3 + shift
+    else:
+        x = jax.random.randint(kx, (batch, *model.input_shape), 0, 64)
+        # Strongly class-dependent prefix token (same scheme as the rust
+        # data generator): the sequence starts with a class-indicator id.
+        x = x.at[:, 0].set(64 + y * 16)
+        x = x.astype(jnp.int32)
+    return x, y
+
+
+ALL = ["femnist_mlp", "femnist_cnn", "sentiment_lstm", "cifar_resnet"]
+FAST = ["femnist_mlp", "sentiment_lstm"]
+
+
+class TestParamSpecs:
+    @pytest.mark.parametrize("name", ALL + ["sentiment_lstm_paper"])
+    def test_flatten_unflatten_roundtrip(self, name):
+        m = M.MODELS[name]
+        flat = m.init(jnp.int32(7))
+        assert flat.shape == (m.param_count,)
+        rt = m.flatten(m.unflatten(flat))
+        np.testing.assert_array_equal(flat, rt)
+
+    def test_femnist_cnn_matches_paper_size(self):
+        """Paper Table 2: FEMNIST CNN = 1.2M params, 4.62 'Mb' (MB)."""
+        m = M.FEMNIST_CNN
+        assert 1.0e6 < m.param_count < 1.3e6
+        assert 4.0 < m.model_size_mb < 5.1
+
+    def test_sentiment_paper_preset_size(self):
+        """Paper Table 2: 4.8M params."""
+        m = M.MODELS["sentiment_lstm_paper"]
+        assert 4.3e6 < m.param_count < 5.3e6
+
+    def test_init_deterministic_in_seed(self):
+        m = M.FEMNIST_MLP
+        a, b = m.init(jnp.int32(3)), m.init(jnp.int32(3))
+        c = m.init(jnp.int32(4))
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, c)
+
+    def test_biases_zero_init(self):
+        m = M.FEMNIST_MLP
+        p = m.unflatten(m.init(jnp.int32(0)))
+        np.testing.assert_array_equal(p["fc1.b"], 0.0)
+        np.testing.assert_array_equal(p["fc2.b"], 0.0)
+
+
+class TestSteps:
+    @pytest.mark.parametrize("name", ALL)
+    def test_shapes_and_finite(self, name):
+        m = M.MODELS[name]
+        flat = m.init(jnp.int32(0))
+        x, y = synthetic_batch(m, 8)
+        step = jax.jit(M.make_train_step(m))
+        flat2, loss = step(flat, x, y, jnp.float32(0.05))
+        assert flat2.shape == flat.shape
+        assert np.isfinite(float(loss))
+        ev = jax.jit(M.make_eval_step(m))
+        l2, correct = ev(flat2, x, y)
+        assert np.isfinite(float(l2))
+        assert 0 <= float(correct) <= 8
+
+    @pytest.mark.parametrize("name", FAST)
+    def test_loss_decreases(self, name):
+        m = M.MODELS[name]
+        flat = m.init(jnp.int32(1))
+        step = jax.jit(M.make_train_step(m))
+        x, y = synthetic_batch(m, 32, seed=5)
+        first = None
+        for i in range(30):
+            flat, loss = step(flat, x, y, jnp.float32(0.1))
+            if first is None:
+                first = float(loss)
+        assert float(loss) < 0.7 * first, (first, float(loss))
+
+    def test_initial_loss_near_log_c(self):
+        """Untrained softmax CE should sit at ~log(num_classes)."""
+        m = M.FEMNIST_MLP
+        flat = m.init(jnp.int32(0))
+        x, y = synthetic_batch(m, 64)
+        loss, _ = jax.jit(M.make_eval_step(m))(flat, x, y)
+        assert abs(float(loss) - np.log(62)) < 1.0
+
+    def test_aggregate_step_is_convex_combination(self):
+        m = M.FEMNIST_MLP
+        a, b = m.init(jnp.int32(0)), m.init(jnp.int32(1))
+        k = 16
+        w = jnp.zeros((k,)).at[0].set(0.25).at[1].set(0.75)
+        stack = jnp.zeros((k, m.param_count)).at[0].set(a).at[1].set(b)
+        out = jax.jit(M.make_aggregate(m))(w, stack)
+        np.testing.assert_allclose(out, 0.25 * a + 0.75 * b, rtol=2e-5, atol=2e-5)
+
+    def test_train_step_gradient_direction(self):
+        """One step at tiny lr must reduce loss on the same batch."""
+        m = M.FEMNIST_MLP
+        flat = m.init(jnp.int32(2))
+        x, y = synthetic_batch(m, 16, seed=3)
+        step = jax.jit(M.make_train_step(m))
+        ev = jax.jit(M.make_eval_step(m))
+        l0, _ = ev(flat, x, y)
+        flat2, _ = step(flat, x, y, jnp.float32(0.01))
+        l1, _ = ev(flat2, x, y)
+        assert float(l1) < float(l0)

@@ -1,0 +1,92 @@
+//! Bench: the L3 hot paths — aggregation backends (compiled Pallas
+//! kernel vs native SIMD-ish loop), PJRT step latencies, topology plan
+//! generation, and the Eq. 4 delay tracker. This is the §Perf
+//! before/after instrument (EXPERIMENTS.md).
+
+use mgfl::data::SyntheticTask;
+use mgfl::fl::Partition;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::runtime::{aggregate_native, ModelRuntime};
+use mgfl::simtime::DelayTracker;
+use mgfl::topo::{MultigraphTopology, TopologyDesign};
+use mgfl::util::{bench, Rng64};
+
+fn main() {
+    // --- pure-rust paths (always available) ---
+    bench::header("topology + delay hot loop (no PJRT)");
+    let prof = DatasetProfile::femnist();
+    let net = zoo::ebone(); // largest network, 87 silos
+
+    bench::bench("christofides ring, ebone (87 nodes)", 2, 20, || {
+        let conn = net.connectivity_graph(&prof);
+        std::hint::black_box(mgfl::graph::ring_overlay(&conn).edges().len());
+    });
+
+    let mut topo = MultigraphTopology::from_network(&net, &prof, 5);
+    bench::bench("plan() x1000 rounds, ebone", 2, 20, || {
+        let mut acc = 0usize;
+        for k in 0..1000 {
+            acc += topo.plan(k).edges.len();
+        }
+        std::hint::black_box(acc);
+    });
+
+    bench::bench("DelayTracker.step x1000 rounds, ebone", 2, 20, || {
+        let mut tracker = DelayTracker::new(&net, &prof);
+        let mut acc = 0.0;
+        for k in 0..1000 {
+            acc += tracker.step(&topo.plan(k)).cycle_ms;
+        }
+        std::hint::black_box(acc);
+    });
+
+    // --- aggregation backends ---
+    bench::header("aggregation backends (K=8 neighbours)");
+    let p_count = 1_138_528; // femnist_cnn size
+    let models_owned: Vec<Vec<f32>> = (0..8)
+        .map(|i| {
+            let mut rng = Rng64::seed_from_u64(i);
+            (0..p_count).map(|_| rng.gen_f32()).collect()
+        })
+        .collect();
+    let models: Vec<&[f32]> = models_owned.iter().map(|m| m.as_slice()).collect();
+    let weights = vec![0.125f32; 8];
+
+    bench::bench("native rust loop, P=1.14M K=8", 2, 20, || {
+        std::hint::black_box(aggregate_native(&weights, &models).len());
+    });
+
+    if !mgfl::runtime::artifacts_available() {
+        println!("artifacts/ missing — skipping PJRT benches (run `make artifacts`)");
+        return;
+    }
+
+    let rt = ModelRuntime::load_default("femnist_cnn").expect("load cnn");
+    bench::bench("PJRT pallas agg kernel, P=1.14M K=8 (incl. marshal)", 1, 10, || {
+        std::hint::black_box(rt.aggregate(&weights, &models).unwrap().len());
+    });
+
+    // --- PJRT step latencies (the real per-round cost) ---
+    bench::header("PJRT step latencies");
+    let task = SyntheticTask::image(rt.entry.input_len(), rt.entry.num_classes, 7);
+    let part = Partition::iid(1, rt.entry.num_classes);
+    let mut rng = Rng64::seed_from_u64(0);
+    let batch = task.batch(&part, 0, rt.entry.train_batch, &mut rng);
+    let params = rt.init_params(0).unwrap();
+
+    bench::bench("femnist_cnn train_step (B=32)", 1, 8, || {
+        std::hint::black_box(rt.train_step(&params, &batch, 0.05).unwrap().1);
+    });
+    let ebatch = task.eval_batch(rt.entry.eval_batch, &mut rng);
+    bench::bench("femnist_cnn eval_step (B=64)", 1, 8, || {
+        std::hint::black_box(rt.eval_step(&params, &ebatch).unwrap().0);
+    });
+
+    let mlp = ModelRuntime::load_default("femnist_mlp").expect("load mlp");
+    let mtask = SyntheticTask::image(mlp.entry.input_len(), mlp.entry.num_classes, 7);
+    let mbatch = mtask.batch(&part, 0, mlp.entry.train_batch, &mut rng);
+    let mparams = mlp.init_params(0).unwrap();
+    bench::bench("femnist_mlp train_step (B=32)", 1, 20, || {
+        std::hint::black_box(mlp.train_step(&mparams, &mbatch, 0.05).unwrap().1);
+    });
+}

@@ -1,0 +1,61 @@
+//! Bench: regenerate paper Table 1 — cycle time (ms) for every topology
+//! x network x dataset at 6400 rounds — and time the simulator itself.
+//!
+//! Run: `cargo bench --bench table1_cycle_time`
+//! Override rounds: `MGFL_BENCH_ROUNDS=640 cargo bench ...`
+
+use mgfl::metrics::render_table;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::simulate;
+use mgfl::util::bench;
+
+fn rounds() -> usize {
+    std::env::var("MGFL_BENCH_ROUNDS").ok().and_then(|s| s.parse().ok()).unwrap_or(6400)
+}
+
+fn main() {
+    let rounds = rounds();
+    bench::header(&format!("Table 1 — cycle time, {rounds} rounds (paper: 6400)"));
+
+    for prof in DatasetProfile::all() {
+        let mut rows = Vec::new();
+        for net in zoo::all_networks() {
+            let mut row = vec![net.name.clone()];
+            let mut ring = f64::NAN;
+            for mut topo in mgfl::all_topologies(&net, &prof, 5, 17) {
+                let res = simulate(topo.as_mut(), &net, &prof, rounds);
+                if topo.name() == "ring" {
+                    ring = res.mean_cycle_ms;
+                }
+                row.push(format!("{:.1}", res.mean_cycle_ms));
+            }
+            let ours: f64 = row.last().unwrap().parse().unwrap();
+            row.push(format!("(v{:.1})", ring / ours));
+            rows.push(row);
+        }
+        println!("\n--- {} ---", prof.name);
+        print!(
+            "{}",
+            render_table(
+                &["network", "STAR", "MATCHA", "MATCHA+", "MST", "d-MBST", "RING", "OURS", "vsRING"],
+                &rows
+            )
+        );
+    }
+
+    // Simulator throughput (the L3 hot loop without PJRT).
+    bench::header("simulator throughput");
+    let prof = DatasetProfile::femnist();
+    for net in [zoo::gaia(), zoo::ebone()] {
+        bench::bench(
+            &format!("simulate multigraph {} x1000 rounds", net.name),
+            2,
+            10,
+            || {
+                let mut topo = mgfl::topo::MultigraphTopology::from_network(&net, &prof, 5);
+                let res = simulate(&mut topo, &net, &prof, 1000);
+                std::hint::black_box(res.mean_cycle_ms);
+            },
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate paper Table 3 — isolated-node effectiveness per
+//! network (FEMNIST, t = 5): silo count, rounds/states with isolated
+//! nodes, and multigraph vs RING cycle time.
+
+use mgfl::metrics::render_table;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::simulate;
+use mgfl::topo::{ring::RingTopology, MultigraphTopology};
+use mgfl::util::bench;
+
+fn main() {
+    let rounds: usize = std::env::var("MGFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6400);
+    bench::header(&format!("Table 3 — isolated nodes (FEMNIST, {rounds} rounds, t=5)"));
+
+    let prof = DatasetProfile::femnist();
+    let mut rows = Vec::new();
+    for net in zoo::all_networks() {
+        let topo = MultigraphTopology::from_network(&net, &prof, 5);
+        let s_max = topo.s_max();
+        let iso_states = topo.states_with_isolated(10_000).len();
+        let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
+        let res = simulate(&mut ours, &net, &prof, rounds);
+        let mut ring = RingTopology::new(&net, &prof);
+        let ring_res = simulate(&mut ring, &net, &prof, rounds);
+        rows.push(vec![
+            net.name.clone(),
+            format!("{}", net.n()),
+            format!("{}/{}", res.rounds_with_isolated, rounds),
+            format!("{}/{} ({:.1}%)", iso_states, s_max, 100.0 * iso_states as f64 / s_max as f64),
+            format!("{:.1} (v{:.1})", res.mean_cycle_ms, ring_res.mean_cycle_ms / res.mean_cycle_ms),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(&["network", "silos", "#rounds", "#states", "cycle ms (vs ring)"], &rows)
+    );
+    println!(
+        "\npaper reference: gaia 4693/6400, 44/60 (73.3%) | amazon 2133/6400, 2/6 (33.3%) |\n\
+         geant 4266/6400, 8/12 (66.7%) | exodus 3306/6400, 31/60 (51.7%) | ebone 2346/6400, 11/30 (36.7%)"
+    );
+
+    // State-analysis throughput.
+    bench::header("state parsing throughput");
+    let net = zoo::ebone();
+    bench::bench("states_with_isolated ebone (full period)", 2, 10, || {
+        let topo = MultigraphTopology::from_network(&net, &prof, 5);
+        std::hint::black_box(topo.states_with_isolated(10_000).len());
+    });
+}

@@ -1,0 +1,103 @@
+//! Bench: regenerate paper Table 4 — cycle time when silos are removed
+//! from the RING overlay (randomly / most-inefficient) vs the
+//! multigraph, on Exodus + FEMNIST. The paper's point: removal buys
+//! cycle time but costs accuracy (Table 4's acc column comes from the
+//! `mgfl table4 --train-rounds N` CLI, which runs real training);
+//! the multigraph gets the cycle-time win without removing anyone.
+
+use mgfl::graph::{christofides_cycle, Graph};
+use mgfl::metrics::render_table;
+use mgfl::net::{zoo, DatasetProfile, NetworkSpec};
+use mgfl::simtime::simulate;
+use mgfl::topo::{ring::RingTopology, MultigraphTopology, TopologyDesign};
+use mgfl::util::{bench, Rng64};
+
+/// Re-ring the retained silos (removed ones become degree-0 spectators).
+fn remove_silos(
+    net: &NetworkSpec,
+    prof: &DatasetProfile,
+    criterion: &str,
+    count: usize,
+) -> Graph {
+    let base = RingTopology::new(net, prof);
+    let overlay = base.overlay();
+    let n = overlay.n();
+    let victims: Vec<usize> = match criterion {
+        "random" => {
+            let mut rng = Rng64::seed_from_u64(99);
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            idx.into_iter().take(count).collect()
+        }
+        _ => {
+            let mut scored: Vec<(f64, usize)> = (0..n)
+                .map(|i| {
+                    let worst = overlay
+                        .neighbors(i)
+                        .map(|(j, _)| mgfl::delay::eq3_delay_ms(net, prof, i, j, 2, 2))
+                        .fold(0.0, f64::max);
+                    (worst, i)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+            scored.into_iter().take(count).map(|(_, i)| i).collect()
+        }
+    };
+    let keep: Vec<usize> = (0..n).filter(|i| !victims.contains(i)).collect();
+    let conn = net.connectivity_graph(prof);
+    let sub =
+        Graph::complete(keep.len(), |a, b| conn.edge_weight(keep[a], keep[b]).unwrap());
+    let cycle = christofides_cycle(&sub);
+    let mut g = Graph::new(n);
+    for w in 0..cycle.len() {
+        let a = keep[cycle[w]];
+        let b = keep[cycle[(w + 1) % cycle.len()]];
+        g.add_edge(a, b, conn.edge_weight(a, b).unwrap());
+    }
+    g
+}
+
+fn main() {
+    let rounds: usize = std::env::var("MGFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6400);
+    bench::header(&format!("Table 4 — silo removal vs multigraph (Exodus, FEMNIST, {rounds} rounds)"));
+
+    let net = zoo::exodus();
+    let prof = DatasetProfile::femnist();
+    let mut rows = Vec::new();
+
+    let mut base = RingTopology::new(&net, &prof);
+    let base_ms = simulate(&mut base, &net, &prof, rounds).mean_cycle_ms;
+    rows.push(vec!["RING baseline".into(), "-".into(), format!("{base_ms:.1}")]);
+
+    for criterion in ["random", "inefficient"] {
+        for removed in [1usize, 5, 10, 20] {
+            let reduced = remove_silos(&net, &prof, criterion, removed);
+            let mut topo = RingTopology::from_overlay(reduced);
+            let ms = simulate(&mut topo, &net, &prof, rounds).mean_cycle_ms;
+            rows.push(vec![
+                format!("RING remove {criterion}"),
+                format!("{removed}"),
+                format!("{ms:.1}"),
+            ]);
+        }
+    }
+
+    let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
+    let ours_ms = simulate(&mut ours, &net, &prof, rounds).mean_cycle_ms;
+    rows.push(vec!["Multigraph (ours)".into(), "-".into(), format!("{ours_ms:.1}")]);
+
+    print!("{}", render_table(&["method", "#removed", "cycle ms"], &rows));
+    println!(
+        "\npaper reference (cycle/acc): baseline 24.7/71.05 | random-20 13.0/61.2 |\n\
+         inefficient-20 11.2/61.48 | ours 12.1/71.13 — removal matches our cycle time\n\
+         only at a ~10-point accuracy cost (run `mgfl table4 --train-rounds 30` for acc)."
+    );
+
+    bench::header("removal machinery");
+    bench::bench("re-ring exodus minus 20 silos", 1, 10, || {
+        std::hint::black_box(remove_silos(&net, &prof, "inefficient", 20).edges().len());
+    });
+}

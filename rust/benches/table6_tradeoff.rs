@@ -1,0 +1,59 @@
+//! Bench: regenerate paper Table 6 — the cycle-time / accuracy trade-off
+//! in t (max edges between two nodes) on Exodus + FEMNIST. Cycle time
+//! must be non-increasing in t and saturate (paper: identical values for
+//! t >= 8); t = 1 must equal RING exactly.
+
+use mgfl::metrics::render_table;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::simulate;
+use mgfl::topo::{ring::RingTopology, MultigraphTopology};
+use mgfl::util::bench;
+
+fn main() {
+    let rounds: usize = std::env::var("MGFL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6400);
+    bench::header(&format!("Table 6 — t sweep (Exodus, FEMNIST, {rounds} rounds)"));
+
+    let net = zoo::exodus();
+    let prof = DatasetProfile::femnist();
+
+    let mut ring = RingTopology::new(&net, &prof);
+    let ring_ms = simulate(&mut ring, &net, &prof, rounds).mean_cycle_ms;
+    let mut rows = vec![vec!["RING".into(), "-".into(), format!("{ring_ms:.1}"), "-".into()]];
+
+    let mut prev = f64::MAX;
+    for t in [1u32, 3, 5, 8, 10, 20, 30] {
+        let mut topo = MultigraphTopology::from_network(&net, &prof, t);
+        let s_max = topo.s_max();
+        let ms = simulate(&mut topo, &net, &prof, rounds).mean_cycle_ms;
+        assert!(
+            ms <= prev * 1.05,
+            "cycle time must be ~non-increasing in t: t={t} gives {ms:.1} after {prev:.1}"
+        );
+        if t == 1 {
+            assert!((ms - ring_ms).abs() < 1e-6, "t=1 must equal RING");
+        }
+        prev = ms;
+        rows.push(vec![
+            "Multigraph".into(),
+            format!("{t}"),
+            format!("{ms:.1}"),
+            format!("{s_max}"),
+        ]);
+    }
+    print!("{}", render_table(&["topology", "t", "cycle ms", "s_max"], &rows));
+    println!(
+        "\npaper reference: RING 24.7 | t=1 24.7 | t=3 13.5 | t=5 12.1 | t>=8 11.9 (saturation);\n\
+         accuracy column via `mgfl table6 --train-rounds 30` (drops past t~5-8)."
+    );
+
+    bench::header("construction cost vs t");
+    for t in [5u32, 30] {
+        bench::bench(&format!("construct+parse exodus t={t}"), 2, 20, || {
+            let topo = MultigraphTopology::from_network(&net, &prof, t);
+            std::hint::black_box(topo.states_with_isolated(100).len());
+        });
+    }
+}

@@ -1,0 +1,432 @@
+//! Experiment configuration: typed config model + a TOML-subset loader
+//! (flat `key = value` pairs and `[section]` headers — all this project
+//! needs, parsed in-tree since the offline build has no toml crate).
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Which topology design to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    Star,
+    Matcha,
+    MatchaPlus,
+    Mst,
+    DeltaMbst,
+    Ring,
+    Multigraph,
+}
+
+impl TopologyKind {
+    pub fn all() -> [TopologyKind; 7] {
+        use TopologyKind::*;
+        [Star, Matcha, MatchaPlus, Mst, DeltaMbst, Ring, Multigraph]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TopologyKind::Star => "star",
+            TopologyKind::Matcha => "matcha",
+            TopologyKind::MatchaPlus => "matcha_plus",
+            TopologyKind::Mst => "mst",
+            TopologyKind::DeltaMbst => "delta_mbst",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Multigraph => "multigraph",
+        }
+    }
+}
+
+impl FromStr for TopologyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "star" => TopologyKind::Star,
+            "matcha" => TopologyKind::Matcha,
+            "matcha_plus" | "matcha+" => TopologyKind::MatchaPlus,
+            "mst" => TopologyKind::Mst,
+            "delta_mbst" | "dmbst" => TopologyKind::DeltaMbst,
+            "ring" => TopologyKind::Ring,
+            "multigraph" | "ours" => TopologyKind::Multigraph,
+            other => bail!("unknown topology '{other}'"),
+        })
+    }
+}
+
+/// What isolated nodes do during training (DESIGN.md §7: the paper's
+/// text supports both readings; `StaleAggregate` is the default used in
+/// our experiments, `Skip` is the ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IsolatedPolicy {
+    /// Aggregate with the cached (k-h) stale neighbour models, without
+    /// waiting (abstract: "model aggregation without waiting").
+    #[default]
+    StaleAggregate,
+    /// Pure local update, no aggregation (§4.2: "update their weights
+    /// internally and ignore all weakly-connected edges").
+    Skip,
+}
+
+impl FromStr for IsolatedPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "stale_aggregate" | "stale" => IsolatedPolicy::StaleAggregate,
+            "skip" | "local" => IsolatedPolicy::Skip,
+            other => bail!("unknown isolated policy '{other}'"),
+        })
+    }
+}
+
+/// Which backend executes the Eq. 6 weighted model aggregation.
+///
+/// §Perf (EXPERIMENTS.md): on CPU-PJRT the compiled interpret-mode
+/// kernel pays a ~73 MB zero-padded marshal plus XLA while-loop
+/// overhead per call (~4.8 s at P=1.14M) while the native loop runs in
+/// ~1.5 ms; `Native` is therefore the default. `Kernel` keeps the
+/// TPU-shaped path exercised (used by tests and the hotpath bench, and
+/// the right choice on a real accelerator where the stack stays
+/// device-resident).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggBackend {
+    #[default]
+    Native,
+    Kernel,
+}
+
+impl std::str::FromStr for AggBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" => AggBackend::Native,
+            "kernel" | "pallas" => AggBackend::Kernel,
+            other => bail!("unknown agg backend '{other}'"),
+        })
+    }
+}
+
+/// Training hyper-parameters for the real (PJRT-executed) runs.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model name in artifacts/manifest.json.
+    pub model: String,
+    /// Communication rounds.
+    pub rounds: usize,
+    /// Local updates per round (paper: u = 1).
+    pub local_updates: u32,
+    pub lr: f32,
+    /// Dirichlet alpha for the non-IID partition.
+    pub dirichlet_alpha: f64,
+    /// Per-silo synthetic training examples (bookkeeping).
+    pub examples_per_silo: usize,
+    pub eval_examples: usize,
+    pub seed: u64,
+    pub isolated_policy: IsolatedPolicy,
+    pub agg_backend: AggBackend,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "femnist_mlp".into(),
+            rounds: 50,
+            local_updates: 1,
+            lr: 0.05,
+            dirichlet_alpha: 0.5,
+            examples_per_silo: 512,
+            eval_examples: 512,
+            seed: 17,
+            isolated_policy: IsolatedPolicy::StaleAggregate,
+            agg_backend: AggBackend::Native,
+        }
+    }
+}
+
+/// A full experiment: network x profile x topology (+ training).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub network: String,
+    /// Table 2 profile name: femnist | sentiment140 | inaturalist.
+    pub profile: String,
+    pub topology: TopologyKind,
+    /// Maximum edges between two nodes (Algorithm 1's t; paper: 5).
+    pub t: u32,
+    /// Simulated communication rounds (paper: 6400).
+    pub sim_rounds: usize,
+    pub seed: u64,
+    pub train: Option<TrainConfig>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            network: "gaia".into(),
+            profile: "femnist".into(),
+            topology: TopologyKind::Multigraph,
+            t: 5,
+            sim_rounds: 6400,
+            seed: 17,
+            train: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let cfg = Self::from_toml_str(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse the TOML subset: comments (#), `[train]` section, flat
+    /// `key = value` with string / number / bool values.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section == "train" && cfg.train.is_none() {
+                    cfg.train = Some(TrainConfig::default());
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim().trim_matches('"');
+            let ctx = |k: &str| format!("line {}: key '{k}'", lineno + 1);
+            match (section.as_str(), key) {
+                ("", "network") => cfg.network = value.to_string(),
+                ("", "profile") => cfg.profile = value.to_string(),
+                ("", "topology") => cfg.topology = value.parse().with_context(|| ctx(key))?,
+                ("", "t") => cfg.t = value.parse().with_context(|| ctx(key))?,
+                ("", "sim_rounds") => cfg.sim_rounds = value.parse().with_context(|| ctx(key))?,
+                ("", "seed") => cfg.seed = value.parse().with_context(|| ctx(key))?,
+                ("train", k) => {
+                    let t = cfg.train.as_mut().expect("section init");
+                    match k {
+                        "model" => t.model = value.to_string(),
+                        "rounds" => t.rounds = value.parse().with_context(|| ctx(k))?,
+                        "local_updates" => t.local_updates = value.parse().with_context(|| ctx(k))?,
+                        "lr" => t.lr = value.parse().with_context(|| ctx(k))?,
+                        "dirichlet_alpha" => {
+                            t.dirichlet_alpha = value.parse().with_context(|| ctx(k))?
+                        }
+                        "examples_per_silo" => {
+                            t.examples_per_silo = value.parse().with_context(|| ctx(k))?
+                        }
+                        "eval_examples" => t.eval_examples = value.parse().with_context(|| ctx(k))?,
+                        "seed" => t.seed = value.parse().with_context(|| ctx(k))?,
+                        "isolated_policy" => {
+                            t.isolated_policy = value.parse().with_context(|| ctx(k))?
+                        }
+                        "agg_backend" => t.agg_backend = value.parse().with_context(|| ctx(k))?,
+                        other => bail!("line {}: unknown [train] key '{other}'", lineno + 1),
+                    }
+                }
+                (sec, other) => bail!("line {}: unknown key '{other}' in section '[{sec}]'", lineno + 1),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize back to the TOML subset (for example configs).
+    pub fn to_toml_string(&self) -> String {
+        let mut s = format!(
+            "network = \"{}\"\nprofile = \"{}\"\ntopology = \"{}\"\nt = {}\nsim_rounds = {}\nseed = {}\n",
+            self.network,
+            self.profile,
+            self.topology.as_str(),
+            self.t,
+            self.sim_rounds,
+            self.seed
+        );
+        if let Some(t) = &self.train {
+            s.push_str(&format!(
+                "\n[train]\nmodel = \"{}\"\nrounds = {}\nlocal_updates = {}\nlr = {}\ndirichlet_alpha = {}\nexamples_per_silo = {}\neval_examples = {}\nseed = {}\nisolated_policy = \"{}\"\n",
+                t.model,
+                t.rounds,
+                t.local_updates,
+                t.lr,
+                t.dirichlet_alpha,
+                t.examples_per_silo,
+                t.eval_examples,
+                t.seed,
+                match t.isolated_policy {
+                    IsolatedPolicy::StaleAggregate => "stale_aggregate",
+                    IsolatedPolicy::Skip => "skip",
+                }
+            ));
+            s.push_str(&format!(
+                "agg_backend = \"{}\"\n",
+                match t.agg_backend {
+                    AggBackend::Native => "native",
+                    AggBackend::Kernel => "kernel",
+                }
+            ));
+        }
+        s
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.t >= 1, "t must be >= 1 (got {})", self.t);
+        ensure!(self.sim_rounds >= 1, "sim_rounds must be >= 1");
+        ensure!(
+            crate::net::zoo::by_name(&self.network).is_some(),
+            "unknown network '{}'",
+            self.network
+        );
+        self.resolve_profile()?;
+        if let Some(t) = &self.train {
+            ensure!(t.rounds >= 1, "train.rounds must be >= 1");
+            ensure!(t.lr > 0.0, "train.lr must be positive");
+            ensure!(t.local_updates >= 1, "train.local_updates must be >= 1");
+            ensure!(t.dirichlet_alpha > 0.0, "train.dirichlet_alpha must be positive");
+        }
+        Ok(())
+    }
+
+    pub fn resolve_network(&self) -> crate::net::NetworkSpec {
+        crate::net::zoo::by_name(&self.network).expect("validated")
+    }
+
+    pub fn resolve_profile(&self) -> Result<crate::net::DatasetProfile> {
+        match self.profile.as_str() {
+            "femnist" => Ok(crate::net::DatasetProfile::femnist()),
+            "sentiment140" => Ok(crate::net::DatasetProfile::sentiment140()),
+            "inaturalist" => Ok(crate::net::DatasetProfile::inaturalist()),
+            other => bail!("unknown profile '{other}'"),
+        }
+    }
+
+    /// Build the configured topology design.
+    pub fn build_topology(&self) -> Box<dyn crate::topo::TopologyDesign> {
+        let net = self.resolve_network();
+        let profile = self.resolve_profile().expect("validated");
+        use crate::topo;
+        match self.topology {
+            TopologyKind::Star => Box::new(topo::star::StarTopology::new(&net, &profile)),
+            TopologyKind::Matcha => Box::new(topo::matcha::MatchaTopology::new(
+                &net,
+                &profile,
+                topo::matcha::DEFAULT_BUDGET,
+                self.seed,
+            )),
+            TopologyKind::MatchaPlus => {
+                Box::new(topo::matcha::MatchaTopology::plus(&net, &profile, self.seed))
+            }
+            TopologyKind::Mst => Box::new(topo::mst::MstTopology::new(&net, &profile)),
+            TopologyKind::DeltaMbst => Box::new(topo::delta_mbst::DeltaMbstTopology::new(
+                &net,
+                &profile,
+                topo::delta_mbst::DEFAULT_DELTA,
+            )),
+            TopologyKind::Ring => Box::new(topo::ring::RingTopology::new(&net, &profile)),
+            TopologyKind::Multigraph => {
+                Box::new(topo::MultigraphTopology::from_network(&net, &profile, self.t))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_network_and_t() {
+        let mut c = ExperimentConfig::default();
+        c.network = "nowhere".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.t = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = ExperimentConfig {
+            network: "exodus".into(),
+            topology: TopologyKind::Ring,
+            train: Some(TrainConfig { rounds: 7, lr: 0.125, ..Default::default() }),
+            ..ExperimentConfig::default()
+        };
+        let text = cfg.to_toml_string();
+        let back = ExperimentConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.network, "exodus");
+        assert_eq!(back.topology, TopologyKind::Ring);
+        let t = back.train.unwrap();
+        assert_eq!(t.rounds, 7);
+        assert_eq!(t.lr, 0.125);
+    }
+
+    #[test]
+    fn parses_comments_and_sections() {
+        let text = r#"
+# experiment
+network = "gaia"   # inline comment
+topology = "multigraph"
+t = 3
+
+[train]
+model = "femnist_mlp"
+rounds = 5
+isolated_policy = "skip"
+"#;
+        let cfg = ExperimentConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.network, "gaia");
+        assert_eq!(cfg.t, 3);
+        let t = cfg.train.unwrap();
+        assert_eq!(t.rounds, 5);
+        assert_eq!(t.isolated_policy, IsolatedPolicy::Skip);
+    }
+
+    #[test]
+    fn unknown_keys_are_errors() {
+        assert!(ExperimentConfig::from_toml_str("bogus = 1").is_err());
+        assert!(ExperimentConfig::from_toml_str("[train]\nbogus = 1").is_err());
+    }
+
+    #[test]
+    fn topology_kind_parse_roundtrip() {
+        for kind in TopologyKind::all() {
+            assert_eq!(kind.as_str().parse::<TopologyKind>().unwrap(), kind);
+        }
+        assert!("bogus".parse::<TopologyKind>().is_err());
+    }
+
+    #[test]
+    fn builds_every_topology_kind() {
+        for kind in TopologyKind::all() {
+            let cfg = ExperimentConfig {
+                topology: kind,
+                sim_rounds: 1,
+                ..ExperimentConfig::default()
+            };
+            let topo = cfg.build_topology();
+            assert_eq!(topo.name(), kind.as_str());
+        }
+    }
+
+    #[test]
+    fn from_toml_file_errors_on_missing() {
+        assert!(ExperimentConfig::from_toml_file("/nonexistent.toml").is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! The L3 round engine: real DPASGD training (Eq. 2 / Eq. 6) over any
+//! topology design, executing local SGD steps and consensus aggregation
+//! through the PJRT runtime, while the Eq. 4 [`DelayTracker`] keeps the
+//! simulated wall clock.
+//!
+//! ## Concurrency model
+//!
+//! The `xla` crate's PJRT client is `Rc`-based (not `Send`), so silo
+//! *compute* is serialized through the runtime on one thread; this does
+//! not distort results because training time is **simulated** from the
+//! delay model (exactly as the paper's own PyTorch/MPI time simulator
+//! does, §5.1) — host wall-clock is tracked separately for §Perf. The
+//! round loop is deterministic given the experiment seed.
+//!
+//! ## Semantics of a round (k)
+//!
+//! 1. every silo takes `u` local SGD steps on its non-IID shard;
+//! 2. silos publish their post-step models along the round's edges:
+//!    strong edges deliver synchronously (the cycle time waits for
+//!    them), weak edges land in the receiver's [`NeighborCache`] and
+//!    become visible from round k+1 — that cache is Eq. 6's w_j(k−h);
+//! 3. non-isolated silos aggregate over fresh strong-neighbour models;
+//!    isolated silos follow [`IsolatedPolicy`]: aggregate from the stale
+//!    cache without waiting (default) or skip (ablation).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ExperimentConfig, TrainConfig};
+use crate::data::{InputKind, SyntheticTask};
+use crate::fl::{round_actions, ConsensusMatrix, NeighborCache, Partition, SiloAction};
+use crate::metrics::{RoundRecord, TrainTrace};
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::runtime::ModelRuntime;
+use crate::simtime::DelayTracker;
+use crate::util::Rng64;
+use crate::topo::TopologyDesign;
+
+/// One silo's training state.
+struct SiloState {
+    params: Vec<f32>,
+    cache: NeighborCache,
+    rng: Rng64,
+    last_loss: f32,
+}
+
+/// The training coordinator.
+pub struct Trainer {
+    pub runtime: ModelRuntime,
+    topo: Box<dyn TopologyDesign>,
+    net: NetworkSpec,
+    profile: DatasetProfile,
+    consensus: ConsensusMatrix,
+    task: SyntheticTask,
+    partition: Partition,
+    cfg: TrainConfig,
+    silos: Vec<SiloState>,
+    round: usize,
+}
+
+impl Trainer {
+    /// Build a trainer from an experiment config (must carry `train`).
+    pub fn from_config(exp: &ExperimentConfig) -> Result<Self> {
+        let cfg =
+            exp.train.clone().ok_or_else(|| anyhow!("config has no [train] section"))?;
+        let net = exp.resolve_network();
+        let profile = exp.resolve_profile()?;
+        let topo = exp.build_topology();
+        let runtime = ModelRuntime::load_default(&cfg.model)?;
+        Self::new(runtime, topo, net, profile, cfg)
+    }
+
+    pub fn new(
+        runtime: ModelRuntime,
+        topo: Box<dyn TopologyDesign>,
+        net: NetworkSpec,
+        profile: DatasetProfile,
+        cfg: TrainConfig,
+    ) -> Result<Self> {
+        let n = net.n();
+        let entry = &runtime.entry;
+        let kind = match entry.input_dtype.as_str() {
+            "f32" => InputKind::F32,
+            "i32" => InputKind::I32,
+            other => return Err(anyhow!("unsupported input dtype {other}")),
+        };
+        let task = match kind {
+            InputKind::F32 => SyntheticTask::image(entry.input_len(), entry.num_classes, cfg.seed),
+            InputKind::I32 => SyntheticTask::tokens(entry.input_len(), entry.num_classes, cfg.seed),
+        };
+        let partition =
+            Partition::dirichlet(n, entry.num_classes, cfg.dirichlet_alpha, cfg.seed);
+        let consensus = ConsensusMatrix::metropolis(topo.overlay());
+
+        // All silos start from the same init (standard decentralized FL).
+        let params0 = runtime.init_params(cfg.seed as i32)?;
+        let silos = (0..n)
+            .map(|i| SiloState {
+                params: params0.clone(),
+                cache: NeighborCache::new(),
+                rng: Rng64::seed_from_u64(cfg.seed ^ ((0x51 + i as u64) << 8)),
+                last_loss: f32::NAN,
+            })
+            .collect();
+
+        Ok(Trainer { runtime, topo, net, profile, consensus, task, partition, cfg, silos, round: 0 })
+    }
+
+    pub fn num_silos(&self) -> usize {
+        self.silos.len()
+    }
+
+    pub fn topology_name(&self) -> &str {
+        self.topo.name()
+    }
+
+    /// Run the configured number of rounds; eval every `eval_every`
+    /// rounds (and at the end). Returns the full trace.
+    pub fn run(&mut self, eval_every: usize) -> Result<TrainTrace> {
+        let host_t0 = Instant::now();
+        let mut trace = TrainTrace::new(self.topo.name(), &self.net.name, &self.cfg.model);
+        let mut tracker = DelayTracker::new(&self.net, &self.profile);
+        let mut sim_elapsed = 0.0;
+
+        for k in 0..self.cfg.rounds {
+            let rec = self.run_round(k, &mut tracker, &mut sim_elapsed)?;
+            let mut rec = rec;
+            if eval_every > 0 && (k + 1) % eval_every == 0 || k + 1 == self.cfg.rounds {
+                let (loss, acc) = self.evaluate()?;
+                rec.eval_loss = Some(loss);
+                rec.eval_acc = Some(acc);
+            }
+            trace.push(rec);
+        }
+        trace.host_elapsed_ms = host_t0.elapsed().as_secs_f64() * 1e3;
+        Ok(trace)
+    }
+
+    /// Execute one communication round; returns its metrics record.
+    fn run_round(
+        &mut self,
+        k: usize,
+        tracker: &mut DelayTracker,
+        sim_elapsed: &mut f64,
+    ) -> Result<RoundRecord> {
+        let plan = self.topo.plan(k);
+        let time = tracker.step(&plan);
+        *sim_elapsed += time.cycle_ms;
+
+        // 1. Local updates (Eq. 2 bottom branch), u steps per silo.
+        let mut loss_sum = 0.0f64;
+        for i in 0..self.silos.len() {
+            let mut loss = 0.0f32;
+            for _ in 0..self.cfg.local_updates {
+                let batch = self.task.batch(
+                    &self.partition,
+                    i,
+                    self.runtime.entry.train_batch,
+                    &mut self.silos[i].rng,
+                );
+                let (new_params, l) =
+                    self.runtime.train_step(&self.silos[i].params, &batch, self.cfg.lr)?;
+                self.silos[i].params = new_params;
+                loss = l;
+            }
+            self.silos[i].last_loss = loss;
+            loss_sum += loss as f64;
+        }
+
+        // 2. Aggregation (Eq. 6). Strong neighbours are read fresh
+        //    (post-local-update, this round); weak/cached neighbours come
+        //    from the (k-h) cache. Aggregations all read pre-aggregation
+        //    models, so order across silos does not matter.
+        let actions = round_actions(&plan, &self.consensus, self.cfg.isolated_policy);
+        let pre_agg: Vec<Vec<f32>> = self.silos.iter().map(|s| s.params.clone()).collect();
+        for (i, action) in actions.iter().enumerate() {
+            if let SiloAction::Aggregate { row, wait } = action {
+                let mut weights = Vec::with_capacity(row.len());
+                let mut models: Vec<&[f32]> = Vec::with_capacity(row.len());
+                let mut missing = 0.0f32;
+                for &(j, w) in row {
+                    if j == i {
+                        weights.push(w as f32);
+                        models.push(&pre_agg[i]);
+                    } else if *wait {
+                        // strong neighbour: fresh model, synchronous.
+                        weights.push(w as f32);
+                        models.push(&pre_agg[j]);
+                    } else if let Some(c) = self.silos[i].cache.get(j) {
+                        // isolated: stale cached model, no waiting.
+                        weights.push(w as f32);
+                        models.push(&c.params);
+                    } else {
+                        // neighbour never heard from: fold weight to self.
+                        missing += w as f32;
+                    }
+                }
+                if missing > 0.0 {
+                    // self entry is last in `row` by construction
+                    if let Some(wl) = weights.last_mut() {
+                        *wl += missing;
+                    }
+                }
+                if models.len() > 1 {
+                    self.silos[i].params =
+                        self.runtime.aggregate_with(self.cfg.agg_backend, &weights, &models)?;
+                }
+            }
+        }
+
+        // 3. Publish along every round edge (strong and weak): receivers
+        //    cache the sender's post-local-update model of round k, which
+        //    is what a later isolated round reads as w_j(k-h).
+        for &(u, v, _ty) in &plan.edges {
+            let mu = pre_agg[u].clone();
+            let mv = pre_agg[v].clone();
+            self.silos[v].cache.publish(u, mu, k);
+            self.silos[u].cache.publish(v, mv, k);
+        }
+
+        self.round = k + 1;
+        Ok(RoundRecord {
+            round: k,
+            cycle_ms: time.cycle_ms,
+            sim_elapsed_ms: *sim_elapsed,
+            train_loss: loss_sum / self.silos.len() as f64,
+            isolated: time.isolated,
+            eval_loss: None,
+            eval_acc: None,
+        })
+    }
+
+    /// Evaluate the network-average model on IID eval batches.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let n = self.silos.len();
+        let w = vec![1.0f32 / n as f32; n.min(self.runtime.entry.k_max)];
+        // Average in chunks of k_max through the aggregation kernel.
+        let mut avg: Vec<f32> = vec![0.0; self.runtime.param_count()];
+        let mut done = 0usize;
+        while done < n {
+            let chunk = (n - done).min(self.runtime.entry.k_max);
+            let models: Vec<&[f32]> =
+                (done..done + chunk).map(|i| self.silos[i].params.as_slice()).collect();
+            let weights: Vec<f32> = w.iter().take(chunk).map(|_| 1.0 / n as f32).collect();
+            let partial = self.runtime.aggregate_with(self.cfg.agg_backend, &weights, &models)?;
+            for (a, p) in avg.iter_mut().zip(&partial) {
+                *a += p;
+            }
+            done += chunk;
+        }
+
+        let mut rng = Rng64::seed_from_u64(self.cfg.seed ^ EVAL_SEED_MIX);
+        let batches = (self.cfg.eval_examples / self.runtime.entry.eval_batch).max(1);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        for _ in 0..batches {
+            let b = self.task.eval_batch(self.runtime.entry.eval_batch, &mut rng);
+            let (l, c) = self.runtime.eval_step(&avg, &b)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+            total += self.runtime.entry.eval_batch;
+        }
+        Ok((loss_sum / batches as f64, correct / total as f64))
+    }
+}
+
+/// Seed domain separator for eval batches (keeps eval data disjoint from
+/// training draws under the same experiment seed).
+const EVAL_SEED_MIX: u64 = 0xE7A1;

@@ -1,0 +1,130 @@
+//! Consensus matrix A (Eq. 2/6): Metropolis–Hastings weights over an
+//! overlay graph — the standard doubly-stochastic choice for DPASGD.
+
+use crate::graph::Graph;
+
+/// Row-indexed consensus matrix; `a[i][j]` is A_{i,j}. Rows sum to 1 and
+/// the matrix is symmetric (hence doubly stochastic).
+#[derive(Debug, Clone)]
+pub struct ConsensusMatrix {
+    a: Vec<Vec<f64>>,
+}
+
+impl ConsensusMatrix {
+    /// Metropolis–Hastings: A_{ij} = 1/(1 + max(deg_i, deg_j)) for
+    /// overlay neighbours, A_{ii} = 1 - Σ_j A_{ij}.
+    pub fn metropolis(g: &Graph) -> Self {
+        let n = g.n();
+        let mut a = vec![vec![0.0; n]; n];
+        for e in g.edges() {
+            let w = 1.0 / (1.0 + g.degree(e.u).max(g.degree(e.v)) as f64);
+            a[e.u][e.v] = w;
+            a[e.v][e.u] = w;
+        }
+        for (i, row) in a.iter_mut().enumerate() {
+            let off: f64 = row.iter().sum();
+            row[i] = 1.0 - off;
+        }
+        ConsensusMatrix { a }
+    }
+
+    /// Uniform averaging over an explicit neighbour subset ∪ {i} — the
+    /// weight row used when only part of the neighbourhood participates
+    /// (Eq. 6's N_i^{++}): w_j = 1/(|S|+1).
+    pub fn uniform_row(i: usize, neighbors: &[usize]) -> Vec<(usize, f64)> {
+        let k = neighbors.len() + 1;
+        let w = 1.0 / k as f64;
+        let mut row: Vec<(usize, f64)> = neighbors.iter().map(|&j| (j, w)).collect();
+        row.push((i, w));
+        row
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.a[i]
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i][j]
+    }
+
+    /// Row restricted to a participating subset S ∪ {i}, re-normalized to
+    /// sum 1 (mass of absent neighbours folds into self weight, the
+    /// standard partial-participation correction).
+    pub fn restricted_row(&self, i: usize, participants: &[usize]) -> Vec<(usize, f64)> {
+        let mut row: Vec<(usize, f64)> = participants
+            .iter()
+            .filter(|&&j| j != i && self.a[i][j] > 0.0)
+            .map(|&j| (j, self.a[i][j]))
+            .collect();
+        let off: f64 = row.iter().map(|&(_, w)| w).sum();
+        row.push((i, 1.0 - off));
+        row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring5() -> Graph {
+        Graph::from_edges(5, (0..5).map(|i| (i, (i + 1) % 5, 1.0)))
+    }
+
+    #[test]
+    fn metropolis_rows_sum_to_one_and_symmetric() {
+        let a = ConsensusMatrix::metropolis(&ring5());
+        for i in 0..5 {
+            let s: f64 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            for j in 0..5 {
+                assert!((a.get(i, j) - a.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn metropolis_weights_on_ring() {
+        // All degrees 2 -> neighbour weight 1/3, self 1/3.
+        let a = ConsensusMatrix::metropolis(&ring5());
+        assert!((a.get(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((a.get(0, 0) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn metropolis_nonnegative_self_weight_on_star() {
+        let mut g = Graph::new(5);
+        for i in 1..5 {
+            g.add_edge(0, i, 1.0);
+        }
+        let a = ConsensusMatrix::metropolis(&g);
+        assert!(a.get(0, 0) >= 0.0);
+        // Hub: 4 neighbours each 1/5 -> self 1/5.
+        assert!((a.get(0, 0) - 0.2).abs() < 1e-12);
+        // Leaf: one neighbour 1/5 -> self 4/5.
+        assert!((a.get(1, 1) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn restricted_row_renormalizes() {
+        let a = ConsensusMatrix::metropolis(&ring5());
+        // Node 0 with only neighbour 1 participating.
+        let row = a.restricted_row(0, &[1]);
+        let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        let self_w = row.iter().find(|&&(j, _)| j == 0).unwrap().1;
+        assert!((self_w - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_row_sums_to_one() {
+        let row = ConsensusMatrix::uniform_row(3, &[0, 1]);
+        let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert_eq!(row.len(), 3);
+    }
+}

@@ -1,0 +1,151 @@
+//! DPASGD round scheduling (Eq. 2 / Eq. 6): given a round's
+//! [`RoundPlan`], decide what every silo does — pure logic, no compute,
+//! so the coordinator and the tests share one source of truth.
+
+use crate::config::IsolatedPolicy;
+use crate::delay::EdgeType;
+use crate::fl::consensus::ConsensusMatrix;
+use crate::topo::RoundPlan;
+
+/// What one silo does in one communication round.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SiloAction {
+    /// u local SGD steps only (Eq. 2 bottom branch / isolated-skip).
+    LocalOnly,
+    /// Aggregate with `(neighbor, weight)` pairs plus `(self, weight)`;
+    /// `wait` = true means strong edges force a synchronous barrier,
+    /// false means the silo reads stale cached models (isolated node).
+    Aggregate { row: Vec<(usize, f64)>, wait: bool },
+}
+
+impl SiloAction {
+    pub fn is_aggregate(&self) -> bool {
+        matches!(self, SiloAction::Aggregate { .. })
+    }
+}
+
+/// Compute every silo's action for the round described by `plan`.
+///
+/// * Silos with ≥1 strong edge aggregate synchronously over their strong
+///   neighbours (Eq. 6 top branch, N_i^{++}).
+/// * Isolated silos (only weak edges) follow `policy`: aggregate from
+///   the stale cache over their weak neighbours, or pure local update.
+/// * Silos with no edges at all this round (MATCHA non-matched) do a
+///   local update.
+pub fn round_actions(
+    plan: &RoundPlan,
+    consensus: &ConsensusMatrix,
+    policy: IsolatedPolicy,
+) -> Vec<SiloAction> {
+    let n = plan.n;
+    let mut strong_nbrs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut weak_nbrs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(u, v, ty) in &plan.edges {
+        match ty {
+            EdgeType::Strong => {
+                strong_nbrs[u].push(v);
+                strong_nbrs[v].push(u);
+            }
+            EdgeType::Weak => {
+                weak_nbrs[u].push(v);
+                weak_nbrs[v].push(u);
+            }
+        }
+    }
+    (0..n)
+        .map(|i| {
+            if !strong_nbrs[i].is_empty() {
+                let mut participants = strong_nbrs[i].clone();
+                participants.push(i);
+                SiloAction::Aggregate {
+                    row: consensus.restricted_row(i, &participants),
+                    wait: true,
+                }
+            } else if !weak_nbrs[i].is_empty() {
+                match policy {
+                    IsolatedPolicy::StaleAggregate => {
+                        let mut participants = weak_nbrs[i].clone();
+                        participants.push(i);
+                        SiloAction::Aggregate {
+                            row: consensus.restricted_row(i, &participants),
+                            wait: false,
+                        }
+                    }
+                    IsolatedPolicy::Skip => SiloAction::LocalOnly,
+                }
+            } else {
+                SiloAction::LocalOnly
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn setup() -> (RoundPlan, ConsensusMatrix) {
+        // Ring of 4: 0-1 strong, 1-2 weak, 2-3 weak, 3-0 strong.
+        let g = Graph::from_edges(4, [(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 1.0)]);
+        let plan = RoundPlan {
+            n: 4,
+            edges: vec![
+                (0, 1, EdgeType::Strong),
+                (1, 2, EdgeType::Weak),
+                (2, 3, EdgeType::Weak),
+                (0, 3, EdgeType::Strong),
+            ],
+        };
+        (plan, ConsensusMatrix::metropolis(&g))
+    }
+
+    #[test]
+    fn strong_nodes_wait_isolated_do_not() {
+        let (plan, a) = setup();
+        let actions = round_actions(&plan, &a, IsolatedPolicy::StaleAggregate);
+        // Node 0 has two strong edges; 1 and 3 have one each; 2 only weak.
+        match &actions[0] {
+            SiloAction::Aggregate { row, wait } => {
+                assert!(wait);
+                assert_eq!(row.len(), 3); // {1, 3, self}
+            }
+            _ => panic!("node 0 must aggregate"),
+        }
+        match &actions[2] {
+            SiloAction::Aggregate { row, wait } => {
+                assert!(!wait, "isolated node must not wait");
+                assert_eq!(row.len(), 3); // {1, 3, self}
+            }
+            _ => panic!("node 2 must stale-aggregate"),
+        }
+    }
+
+    #[test]
+    fn skip_policy_makes_isolated_local() {
+        let (plan, a) = setup();
+        let actions = round_actions(&plan, &a, IsolatedPolicy::Skip);
+        assert_eq!(actions[2], SiloAction::LocalOnly);
+        assert!(actions[0].is_aggregate());
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let (plan, a) = setup();
+        for action in round_actions(&plan, &a, IsolatedPolicy::StaleAggregate) {
+            if let SiloAction::Aggregate { row, .. } = action {
+                let s: f64 = row.iter().map(|&(_, w)| w).sum();
+                assert!((s - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn unplanned_nodes_do_local_updates() {
+        let g = Graph::from_edges(3, [(0, 1, 1.0)]);
+        let plan = RoundPlan { n: 3, edges: vec![(0, 1, EdgeType::Strong)] };
+        let a = ConsensusMatrix::metropolis(&g);
+        let actions = round_actions(&plan, &a, IsolatedPolicy::StaleAggregate);
+        assert_eq!(actions[2], SiloAction::LocalOnly);
+    }
+}

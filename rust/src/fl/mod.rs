@@ -1,0 +1,12 @@
+//! Federated-learning substrate: consensus weights, DPASGD round
+//! scheduling, staleness buffers, and non-IID data partitioning.
+
+pub mod consensus;
+pub mod dpasgd;
+pub mod partition;
+pub mod staleness;
+
+pub use consensus::ConsensusMatrix;
+pub use dpasgd::{round_actions, SiloAction};
+pub use partition::Partition;
+pub use staleness::{CachedModel, NeighborCache};

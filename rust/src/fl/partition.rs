@@ -1,0 +1,146 @@
+//! Non-IID data partitioning: Dirichlet label-skew split, the standard
+//! cross-silo heterogeneity model (and what makes topology matter for
+//! accuracy — isolated silos drift toward their local label mix).
+
+use crate::util::Rng64;
+
+/// Per-silo class mixture: `mix[s][c]` = probability silo `s` draws an
+/// example of class `c`.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub mix: Vec<Vec<f64>>,
+}
+
+/// Sample a Dirichlet(alpha) vector via normalized Gamma draws
+/// (Marsaglia–Tsang for shape < 1 handled by the boost trick).
+fn dirichlet(rng: &mut Rng64, alpha: f64, k: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..k).map(|_| gamma_sample(rng, alpha)).collect();
+    let s: f64 = v.iter().sum();
+    if s <= 0.0 {
+        // Degenerate draw: fall back to one-hot at a random class.
+        let hot = rng.gen_range(0, k);
+        return (0..k).map(|i| if i == hot { 1.0 } else { 0.0 }).collect();
+    }
+    v.iter_mut().for_each(|x| *x /= s);
+    v
+}
+
+fn gamma_sample(rng: &mut Rng64, shape: f64) -> f64 {
+    if shape < 1.0 {
+        // Boost: Gamma(a) = Gamma(a+1) * U^(1/a).
+        let u: f64 = rng.gen_f64().max(1e-300);
+        return gamma_sample(rng, shape + 1.0) * u.powf(1.0 / shape);
+    }
+    // Marsaglia–Tsang.
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x: f64 = rng.gen_normal();
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u: f64 = rng.gen_f64();
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+impl Partition {
+    /// Dirichlet(alpha) label mixture per silo. Small alpha = heavy skew.
+    pub fn dirichlet(num_silos: usize, num_classes: usize, alpha: f64, seed: u64) -> Self {
+        assert!(alpha > 0.0 && num_silos > 0 && num_classes > 0);
+        let mut rng = Rng64::seed_from_u64(seed);
+        let mix = (0..num_silos).map(|_| dirichlet(&mut rng, alpha, num_classes)).collect();
+        Partition { mix }
+    }
+
+    /// IID partition (uniform mixture) — baseline / tests.
+    pub fn iid(num_silos: usize, num_classes: usize) -> Self {
+        Partition { mix: vec![vec![1.0 / num_classes as f64; num_classes]; num_silos] }
+    }
+
+    pub fn num_silos(&self) -> usize {
+        self.mix.len()
+    }
+
+    /// Draw a class label for silo `s`.
+    pub fn sample_class(&self, s: usize, rng: &mut Rng64) -> usize {
+        let row = &self.mix[s];
+        let mut r: f64 = rng.gen_f64();
+        for (c, &p) in row.iter().enumerate() {
+            r -= p;
+            if r <= 0.0 {
+                return c;
+            }
+        }
+        row.len() - 1
+    }
+
+    /// Total-variation distance of silo `s`'s mixture from uniform — a
+    /// skew diagnostic (0 = IID).
+    pub fn skew(&self, s: usize) -> f64 {
+        let k = self.mix[s].len() as f64;
+        0.5 * self.mix[s].iter().map(|p| (p - 1.0 / k).abs()).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixtures_are_distributions() {
+        let p = Partition::dirichlet(8, 10, 0.5, 3);
+        assert_eq!(p.num_silos(), 8);
+        for s in 0..8 {
+            let sum: f64 = p.mix[s].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(p.mix[s].iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn small_alpha_is_skewed_large_alpha_flat() {
+        let skewed = Partition::dirichlet(20, 10, 0.1, 7);
+        let flat = Partition::dirichlet(20, 10, 100.0, 7);
+        let mean_skew = |p: &Partition| {
+            (0..20).map(|s| p.skew(s)).sum::<f64>() / 20.0
+        };
+        assert!(mean_skew(&skewed) > 0.4, "{}", mean_skew(&skewed));
+        assert!(mean_skew(&flat) < 0.1, "{}", mean_skew(&flat));
+    }
+
+    #[test]
+    fn iid_has_zero_skew() {
+        let p = Partition::iid(4, 62);
+        for s in 0..4 {
+            assert!(p.skew(s) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sampling_matches_mixture() {
+        let p = Partition::dirichlet(1, 5, 0.5, 11);
+        let mut rng = Rng64::seed_from_u64(0);
+        let mut counts = [0usize; 5];
+        let n = 20000;
+        for _ in 0..n {
+            counts[p.sample_class(0, &mut rng)] += 1;
+        }
+        for c in 0..5 {
+            let freq = counts[c] as f64 / n as f64;
+            assert!((freq - p.mix[0][c]).abs() < 0.02, "class {c}: {freq} vs {}", p.mix[0][c]);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Partition::dirichlet(3, 4, 0.5, 42);
+        let b = Partition::dirichlet(3, 4, 0.5, 42);
+        assert_eq!(a.mix, b.mix);
+        let c = Partition::dirichlet(3, 4, 0.5, 43);
+        assert_ne!(a.mix, c.mix);
+    }
+}

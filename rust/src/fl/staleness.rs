@@ -1,0 +1,89 @@
+//! Stale-model buffers: the (k−h) bookkeeping of Eq. 6.
+//!
+//! Every silo keeps the most recent model *published* by each of its
+//! in-neighbours, tagged with the round it was produced in. Strong-edge
+//! rounds refresh the cache synchronously (that is what the cycle time
+//! waits for); weak-edge transfers land asynchronously and are visible
+//! from the next round on. Isolated nodes aggregate straight from this
+//! cache — "model aggregation without waiting for other nodes".
+
+/// A cached neighbour model with its provenance round.
+#[derive(Debug, Clone)]
+pub struct CachedModel {
+    pub params: Vec<f32>,
+    /// Round k at which the owner produced these params.
+    pub round: usize,
+}
+
+/// Per-silo view of its in-neighbours' models.
+#[derive(Debug, Default)]
+pub struct NeighborCache {
+    slots: std::collections::BTreeMap<usize, CachedModel>,
+}
+
+impl NeighborCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record neighbour `j`'s params as of `round`. Keeps the newest.
+    pub fn publish(&mut self, j: usize, params: Vec<f32>, round: usize) {
+        match self.slots.get(&j) {
+            Some(c) if c.round >= round => {}
+            _ => {
+                self.slots.insert(j, CachedModel { params, round });
+            }
+        }
+    }
+
+    pub fn get(&self, j: usize) -> Option<&CachedModel> {
+        self.slots.get(&j)
+    }
+
+    /// Staleness h = current_round - cached round (None if never seen).
+    pub fn staleness(&self, j: usize, current_round: usize) -> Option<usize> {
+        self.slots.get(&j).map(|c| current_round.saturating_sub(c.round))
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_keeps_newest() {
+        let mut c = NeighborCache::new();
+        c.publish(2, vec![1.0], 5);
+        c.publish(2, vec![2.0], 3); // older -> ignored
+        assert_eq!(c.get(2).unwrap().params, vec![1.0]);
+        assert_eq!(c.get(2).unwrap().round, 5);
+        c.publish(2, vec![3.0], 8);
+        assert_eq!(c.get(2).unwrap().params, vec![3.0]);
+    }
+
+    #[test]
+    fn staleness_computation() {
+        let mut c = NeighborCache::new();
+        c.publish(0, vec![0.0], 4);
+        assert_eq!(c.staleness(0, 7), Some(3));
+        assert_eq!(c.staleness(0, 4), Some(0));
+        assert_eq!(c.staleness(1, 7), None);
+    }
+
+    #[test]
+    fn empty_and_len() {
+        let mut c = NeighborCache::new();
+        assert!(c.is_empty());
+        c.publish(0, vec![], 0);
+        c.publish(1, vec![], 0);
+        assert_eq!(c.len(), 2);
+    }
+}

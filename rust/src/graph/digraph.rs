@@ -1,0 +1,214 @@
+//! Weighted undirected graph — the substrate every topology builder works on.
+//!
+//! Cross-silo connectivity graphs are small (tens of nodes, paper max 87),
+//! so the representation favours clarity and cheap cloning: a dense edge
+//! list plus adjacency index. Directed semantics (per-direction delays)
+//! live in [`crate::delay`]; topology *construction* is undirected, as in
+//! the paper (an overlay edge implies communication both ways).
+
+use std::collections::BTreeSet;
+
+/// Node index. Silos are 0..n.
+pub type NodeId = usize;
+
+/// An undirected weighted edge `(u, v, w)` with `u < v` canonically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub u: NodeId,
+    pub v: NodeId,
+    pub w: f64,
+}
+
+impl Edge {
+    pub fn new(u: NodeId, v: NodeId, w: f64) -> Self {
+        let (u, v) = if u <= v { (u, v) } else { (v, u) };
+        Edge { u, v, w }
+    }
+
+    /// The endpoint that is not `x`. Panics if `x` is not an endpoint.
+    pub fn other(&self, x: NodeId) -> NodeId {
+        if x == self.u {
+            self.v
+        } else {
+            assert_eq!(x, self.v, "node {x} not on edge ({}, {})", self.u, self.v);
+            self.u
+        }
+    }
+
+    /// Canonical unordered pair key.
+    pub fn pair(&self) -> (NodeId, NodeId) {
+        (self.u, self.v)
+    }
+}
+
+/// Undirected weighted graph over `n` nodes.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    n: usize,
+    edges: Vec<Edge>,
+    adj: Vec<Vec<usize>>, // node -> indices into `edges`
+}
+
+impl Graph {
+    pub fn new(n: usize) -> Self {
+        Graph { n, edges: Vec::new(), adj: vec![Vec::new(); n] }
+    }
+
+    /// Fully-connected graph with weights from `w(u, v)` — the paper's
+    /// *connectivity* graph \(\mathcal{G}_c\).
+    pub fn complete(n: usize, mut w: impl FnMut(NodeId, NodeId) -> f64) -> Self {
+        let mut g = Graph::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                g.add_edge(u, v, w(u, v));
+            }
+        }
+        g
+    }
+
+    pub fn from_edges(n: usize, edges: impl IntoIterator<Item = (NodeId, NodeId, f64)>) -> Self {
+        let mut g = Graph::new(n);
+        for (u, v, w) in edges {
+            g.add_edge(u, v, w);
+        }
+        g
+    }
+
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: f64) {
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range n={}", self.n);
+        assert_ne!(u, v, "self-loops not allowed in topology graphs");
+        let idx = self.edges.len();
+        self.edges.push(Edge::new(u, v, w));
+        self.adj[u].push(idx);
+        self.adj[v].push(idx);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn degree(&self, u: NodeId) -> usize {
+        self.adj[u].len()
+    }
+
+    /// Iterate `(neighbor, weight)` of `u`.
+    pub fn neighbors(&self, u: NodeId) -> impl Iterator<Item = (NodeId, f64)> + '_ {
+        self.adj[u].iter().map(move |&i| {
+            let e = self.edges[i];
+            (e.other(u), e.w)
+        })
+    }
+
+    pub fn neighbor_set(&self, u: NodeId) -> BTreeSet<NodeId> {
+        self.neighbors(u).map(|(v, _)| v).collect()
+    }
+
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.neighbors(u).any(|(x, _)| x == v)
+    }
+
+    pub fn edge_weight(&self, u: NodeId, v: NodeId) -> Option<f64> {
+        self.neighbors(u).find(|&(x, _)| x == v).map(|(_, w)| w)
+    }
+
+    /// Connectivity check (ignores weights). Empty graphs are connected.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for (v, _) in self.neighbors(u) {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Nodes with odd degree (input to Christofides' matching step).
+    pub fn odd_degree_nodes(&self) -> Vec<NodeId> {
+        (0..self.n).filter(|&u| self.degree(u) % 2 == 1).collect()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.w).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Graph {
+        Graph::from_edges(3, [(0, 1, 1.0), (1, 2, 2.0)])
+    }
+
+    #[test]
+    fn edge_canonicalizes_endpoints() {
+        let e = Edge::new(5, 2, 1.0);
+        assert_eq!((e.u, e.v), (2, 5));
+        assert_eq!(e.other(2), 5);
+        assert_eq!(e.other(5), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn edge_other_panics_off_edge() {
+        Edge::new(0, 1, 1.0).other(2);
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = path3();
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.neighbor_set(1), BTreeSet::from([0, 2]));
+        assert_eq!(g.edge_weight(1, 2), Some(2.0));
+        assert_eq!(g.edge_weight(0, 2), None);
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(path3().is_connected());
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        assert!(!g.is_connected());
+        assert!(Graph::new(0).is_connected());
+        assert!(!Graph::new(2).is_connected());
+    }
+
+    #[test]
+    fn complete_graph_edge_count() {
+        let g = Graph::complete(5, |u, v| (u + v) as f64);
+        assert_eq!(g.edges().len(), 10);
+        assert!(g.is_connected());
+        assert_eq!(g.edge_weight(2, 3), Some(5.0));
+    }
+
+    #[test]
+    fn odd_degree_nodes_of_path() {
+        assert_eq!(path3().odd_degree_nodes(), vec![0, 2]);
+        // Handshake lemma: odd-degree count is always even.
+        let g = Graph::complete(6, |_, _| 1.0);
+        assert_eq!(g.odd_degree_nodes().len() % 2, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_self_loop() {
+        let mut g = Graph::new(2);
+        g.add_edge(1, 1, 1.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Eulerian circuit (Hierholzer) + TSP shortcutting — Christofides step 3.
+
+use super::digraph::NodeId;
+
+/// Multigraph edge list (parallel edges allowed) -> Eulerian circuit as a
+/// node sequence starting and ending at the same node.
+///
+/// Requires: every node that appears has even degree and the edge-induced
+/// graph is connected (Christofides guarantees both: MST + perfect
+/// matching on odd-degree vertices).
+pub fn eulerian_circuit(n: usize, edges: &[(NodeId, NodeId)]) -> Vec<NodeId> {
+    if edges.is_empty() {
+        return Vec::new();
+    }
+    // adjacency as (edge index) lists; `used` marks consumed edges.
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, &(u, v)) in edges.iter().enumerate() {
+        adj[u].push(i);
+        adj[v].push(i);
+    }
+    for (u, a) in adj.iter().enumerate() {
+        assert!(a.len() % 2 == 0, "node {u} has odd degree {}", a.len());
+    }
+    let mut used = vec![false; edges.len()];
+    let mut ptr = vec![0usize; n]; // per-node cursor into adj
+    let start = edges[0].0;
+    let mut stack = vec![start];
+    let mut circuit = Vec::with_capacity(edges.len() + 1);
+    while let Some(&u) = stack.last() {
+        // advance cursor past consumed edges
+        while ptr[u] < adj[u].len() && used[adj[u][ptr[u]]] {
+            ptr[u] += 1;
+        }
+        if ptr[u] == adj[u].len() {
+            circuit.push(u);
+            stack.pop();
+        } else {
+            let ei = adj[u][ptr[u]];
+            used[ei] = true;
+            let (a, b) = edges[ei];
+            stack.push(if a == u { b } else { a });
+        }
+    }
+    assert!(
+        used.iter().all(|&b| b),
+        "edge set not connected: Eulerian circuit missed edges"
+    );
+    circuit
+}
+
+/// Shortcut an Eulerian circuit into a Hamiltonian cycle (skip repeats).
+/// Returns the node order of the cycle (first node NOT repeated at end).
+pub fn shortcut_to_hamiltonian(circuit: &[NodeId]) -> Vec<NodeId> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut cycle = Vec::new();
+    for &u in circuit {
+        if seen.insert(u) {
+            cycle.push(u);
+        }
+    }
+    cycle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_valid_circuit(n: usize, edges: &[(NodeId, NodeId)], circuit: &[NodeId]) -> bool {
+        let _ = n;
+        if circuit.len() != edges.len() + 1 || circuit.first() != circuit.last() {
+            return false;
+        }
+        // Multiset of traversed edges equals the input multiset.
+        let canon = |u: NodeId, v: NodeId| (u.min(v), u.max(v));
+        let mut want: Vec<_> = edges.iter().map(|&(u, v)| canon(u, v)).collect();
+        let mut got: Vec<_> = circuit.windows(2).map(|w| canon(w[0], w[1])).collect();
+        want.sort();
+        got.sort();
+        want == got
+    }
+
+    #[test]
+    fn circuit_on_triangle() {
+        let edges = vec![(0, 1), (1, 2), (2, 0)];
+        let c = eulerian_circuit(3, &edges);
+        assert!(is_valid_circuit(3, &edges, &c), "{c:?}");
+    }
+
+    #[test]
+    fn circuit_on_multigraph_with_parallel_edges() {
+        // Two parallel 0-1 edges: circuit 0-1-0.
+        let edges = vec![(0, 1), (0, 1)];
+        let c = eulerian_circuit(2, &edges);
+        assert!(is_valid_circuit(2, &edges, &c), "{c:?}");
+    }
+
+    #[test]
+    fn circuit_on_bowtie() {
+        // Two triangles sharing node 2 — classic Hierholzer case.
+        let edges = vec![(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 2)];
+        let c = eulerian_circuit(5, &edges);
+        assert!(is_valid_circuit(5, &edges, &c), "{c:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "odd degree")]
+    fn rejects_odd_degree() {
+        eulerian_circuit(3, &[(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn shortcut_visits_each_once() {
+        let circuit = vec![0, 1, 2, 0, 3, 4, 2, 0]; // bowtie-ish walk
+        let ham = shortcut_to_hamiltonian(&circuit);
+        assert_eq!(ham.len(), 5);
+        let set: std::collections::BTreeSet<_> = ham.iter().collect();
+        assert_eq!(set.len(), 5);
+        assert_eq!(ham[0], 0);
+    }
+
+    #[test]
+    fn empty_edge_set() {
+        assert!(eulerian_circuit(4, &[]).is_empty());
+    }
+}

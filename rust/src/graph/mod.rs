@@ -1,0 +1,18 @@
+//! Graph substrate: the algorithms every topology design is built from.
+//!
+//! The paper's overlay construction (Christofides on the delay-weighted
+//! connectivity graph), the MST / δ-MBST baselines (Prim variants), and
+//! MATCHA's matching decomposition all live here, independent of any
+//! federated-learning semantics.
+
+pub mod christofides;
+pub mod digraph;
+pub mod euler;
+pub mod matching;
+pub mod mst;
+
+pub use christofides::{christofides_cycle, cycle_weight, ring_overlay};
+pub use digraph::{Edge, Graph, NodeId};
+pub use euler::{eulerian_circuit, shortcut_to_hamiltonian};
+pub use matching::{greedy_min_weight_matching, matching_decomposition, maximal_matching};
+pub use mst::{degree_bounded_mst, prim_mst};

@@ -1,0 +1,167 @@
+//! Prim's minimum spanning tree — the paper's MST baseline (Table 1,
+//! "MST [72]" = Prim 1957) and the first step of Christofides.
+
+use super::digraph::{Graph, NodeId};
+
+/// Compute an MST of a connected graph with Prim's algorithm.
+///
+/// Returns the tree as a new [`Graph`] over the same node set.
+/// Panics if the input is empty or disconnected (topology builders must
+/// feed a connected connectivity graph; this is a programming error).
+pub fn prim_mst(g: &Graph) -> Graph {
+    assert!(g.n() > 0, "MST of empty graph");
+    let n = g.n();
+    let mut in_tree = vec![false; n];
+    // best[v] = (weight, parent) of the cheapest edge connecting v to the tree
+    let mut best: Vec<Option<(f64, NodeId)>> = vec![None; n];
+    let mut tree = Graph::new(n);
+    in_tree[0] = true;
+    for (v, w) in g.neighbors(0) {
+        best[v] = merge(best[v], (w, 0));
+    }
+    for _ in 1..n {
+        let u = (0..n)
+            .filter(|&v| !in_tree[v] && best[v].is_some())
+            .min_by(|&a, &b| best[a].unwrap().0.total_cmp(&best[b].unwrap().0))
+            .expect("graph is disconnected: Prim frontier is empty");
+        let (w, parent) = best[u].unwrap();
+        tree.add_edge(parent, u, w);
+        in_tree[u] = true;
+        for (v, w) in g.neighbors(u) {
+            if !in_tree[v] {
+                best[v] = merge(best[v], (w, u));
+            }
+        }
+    }
+    tree
+}
+
+fn merge(cur: Option<(f64, NodeId)>, cand: (f64, NodeId)) -> Option<(f64, NodeId)> {
+    match cur {
+        Some((w, _)) if w <= cand.0 => cur,
+        _ => Some(cand),
+    }
+}
+
+/// Degree-bounded MST approximation for the δ-MBST baseline (Marfoq et
+/// al.): Prim, but a node with `delta` tree-neighbors already is frozen —
+/// its remaining frontier edges are discarded. NP-hard exactly; this is
+/// the greedy the RING paper's implementation uses for its baseline.
+///
+/// Falls back to relaxing the bound by 1 (retry) if the constrained run
+/// cannot span the graph (can happen on sparse graphs with tiny delta).
+pub fn degree_bounded_mst(g: &Graph, delta: usize) -> Graph {
+    assert!(delta >= 1, "delta must be >= 1");
+    let n = g.n();
+    if n == 0 {
+        return Graph::new(0);
+    }
+    let mut in_tree = vec![false; n];
+    let mut deg = vec![0usize; n];
+    let mut tree = Graph::new(n);
+    in_tree[0] = true;
+    let mut count = 1;
+    while count < n {
+        // Cheapest edge (u in tree with spare degree) -> (v outside).
+        let mut cand: Option<(f64, NodeId, NodeId)> = None;
+        for u in 0..n {
+            if !in_tree[u] || deg[u] >= delta {
+                continue;
+            }
+            for (v, w) in g.neighbors(u) {
+                if !in_tree[v] && deg[v] < delta {
+                    let c = (w, u, v);
+                    cand = match cand {
+                        Some(best) if best.0 <= w => Some(best),
+                        _ => Some(c),
+                    };
+                }
+            }
+        }
+        match cand {
+            Some((w, u, v)) => {
+                tree.add_edge(u, v, w);
+                deg[u] += 1;
+                deg[v] += 1;
+                in_tree[v] = true;
+                count += 1;
+            }
+            // Bound too tight to span: relax (documented fallback).
+            None => return degree_bounded_mst(g, delta + 1),
+        }
+    }
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mst_of_square_with_diagonal() {
+        // 0-1 (1), 1-2 (1), 2-3 (1), 3-0 (10), 0-2 (5)
+        let g = Graph::from_edges(
+            4,
+            [(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0), (3, 0, 10.0), (0, 2, 5.0)],
+        );
+        let t = prim_mst(&g);
+        assert_eq!(t.edges().len(), 3);
+        assert_eq!(t.total_weight(), 3.0);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn mst_is_spanning_and_minimal_on_complete_graph() {
+        let g = Graph::complete(8, |u, v| ((u * 7 + v * 13) % 17) as f64 + 1.0);
+        let t = prim_mst(&g);
+        assert_eq!(t.edges().len(), 7);
+        assert!(t.is_connected());
+        // Cut property spot-check: every non-tree edge is >= the max tree
+        // edge on some path; cheap sanity — total weight below any star.
+        for center in 0..8 {
+            let star: f64 = (0..8)
+                .filter(|&v| v != center)
+                .map(|v| g.edge_weight(center, v).unwrap())
+                .sum();
+            assert!(t.total_weight() <= star + 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disconnected")]
+    fn mst_panics_on_disconnected() {
+        let mut g = Graph::new(4);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        prim_mst(&g);
+    }
+
+    #[test]
+    fn degree_bounded_respects_delta() {
+        let g = Graph::complete(9, |u, v| (u as f64 - v as f64).abs());
+        for delta in 2..5 {
+            let t = degree_bounded_mst(&g, delta);
+            assert!(t.is_connected());
+            assert_eq!(t.edges().len(), 8);
+            for u in 0..9 {
+                assert!(t.degree(u) <= delta, "deg({u}) > {delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn degree_bounded_matches_mst_when_loose() {
+        let g = Graph::complete(6, |u, v| ((u + 1) * (v + 1)) as f64);
+        let t1 = prim_mst(&g);
+        let t2 = degree_bounded_mst(&g, 5);
+        assert_eq!(t1.total_weight(), t2.total_weight());
+    }
+
+    #[test]
+    fn delta_one_relaxes_instead_of_looping() {
+        // delta=1 cannot span n>2; must fall back to delta=2 (a path).
+        let g = Graph::complete(4, |_, _| 1.0);
+        let t = degree_bounded_mst(&g, 1);
+        assert!(t.is_connected());
+    }
+}

@@ -1,0 +1,65 @@
+//! # mgfl — Multigraph Topology for Cross-Silo Federated Learning
+//!
+//! A rust + JAX/Pallas reproduction of *"Reducing Training Time in
+//! Cross-Silo Federated Learning using Multigraph Topology"* (Do et al.,
+//! 2022).
+//!
+//! ## Architecture
+//!
+//! Three layers; Python never runs on the round path:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: topology
+//!   designs ([`topo`]), the multigraph construction/parsing algorithms,
+//!   the delay model ([`delay`]) and time simulator ([`simtime`]), and
+//!   the DPASGD training coordinator ([`coordinator`]) that executes
+//!   real rounds against the PJRT runtime.
+//! * **Layer 2** — JAX model fwd/bwd (`python/compile/model.py`), AOT
+//!   lowered once to HLO text in `artifacts/`.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`): MXU-tiled
+//!   matmul, im2col conv, and the consensus aggregation kernel.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use mgfl::net::{zoo, DatasetProfile};
+//! use mgfl::topo::MultigraphTopology;
+//! use mgfl::simtime::simulate;
+//!
+//! let net = zoo::gaia();
+//! let profile = DatasetProfile::femnist();
+//! let mut ours = MultigraphTopology::from_network(&net, &profile, 5);
+//! let result = simulate(&mut ours, &net, &profile, 6400);
+//! println!("mean cycle time: {:.1} ms", result.mean_cycle_ms);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod delay;
+pub mod fl;
+pub mod graph;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod simtime;
+pub mod topo;
+pub mod util;
+
+/// Build every Table 1 topology for a (network, profile) pair, in the
+/// paper's column order.
+pub fn all_topologies(
+    net: &net::NetworkSpec,
+    profile: &net::DatasetProfile,
+    t: u32,
+    seed: u64,
+) -> Vec<Box<dyn topo::TopologyDesign>> {
+    vec![
+        Box::new(topo::star::StarTopology::new(net, profile)),
+        Box::new(topo::matcha::MatchaTopology::new(net, profile, topo::matcha::DEFAULT_BUDGET, seed)),
+        Box::new(topo::matcha::MatchaTopology::plus(net, profile, seed)),
+        Box::new(topo::mst::MstTopology::new(net, profile)),
+        Box::new(topo::delta_mbst::DeltaMbstTopology::new(net, profile, topo::delta_mbst::DEFAULT_DELTA)),
+        Box::new(topo::ring::RingTopology::new(net, profile)),
+        Box::new(topo::MultigraphTopology::from_network(net, profile, t)),
+    ]
+}

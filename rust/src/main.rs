@@ -1,0 +1,514 @@
+//! `mgfl` — CLI for the multigraph cross-silo FL framework.
+//!
+//! Subcommands regenerate each paper table/figure (see DESIGN.md §6) or
+//! run ad-hoc simulations and real training.
+
+use anyhow::Result;
+
+use mgfl::config::{ExperimentConfig, TopologyKind, TrainConfig};
+use mgfl::metrics::render_table;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::simulate;
+use mgfl::topo::{MultigraphTopology, TopologyDesign};
+use mgfl::util::args::Args;
+
+const USAGE: &str = "\
+mgfl — multigraph topology for cross-silo federated learning
+
+USAGE: mgfl <subcommand> [--flag value ...]
+
+SUBCOMMANDS
+  simulate  --network gaia --profile femnist --topology multigraph --t 5 --rounds 6400 --seed 17
+  train     <config.toml> [--eval-every 10] [--csv out.csv]
+  table1    [--rounds 6400] [--t 5] [--profile femnist]
+  table2
+  table3    [--rounds 6400] [--t 5]
+  table4    [--rounds 6400] [--train-rounds 0]
+  table5    [--rounds 40] [--model femnist_mlp] [--network gaia]
+  table6    [--rounds 6400] [--train-rounds 0]
+  fig1      [--rounds 6400] [--train-rounds 30] [--model femnist_mlp]
+  fig4      [--t 3]
+  fig5      [--rounds 40] [--model femnist_mlp] [--network exodus] [--out results]
+";
+
+fn resolve_profile(name: &str) -> Result<DatasetProfile> {
+    match name {
+        "femnist" => Ok(DatasetProfile::femnist()),
+        "sentiment140" => Ok(DatasetProfile::sentiment140()),
+        "inaturalist" => Ok(DatasetProfile::inaturalist()),
+        other => Err(anyhow::anyhow!("unknown profile {other}")),
+    }
+}
+
+fn main() -> Result<()> {
+    // Die quietly when stdout is a closed pipe (`mgfl table1 | head`),
+    // like every other unix CLI.
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let args = Args::from_env();
+    if args.has("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    run(args)
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.require_sub(USAGE)? {
+        "simulate" => {
+            let network = args.get_str("network", "gaia");
+            let profile = args.get_str("profile", "femnist");
+            let topology: TopologyKind = args.get_str("topology", "multigraph").parse()?;
+            let t: u32 = args.get("t", 5)?;
+            let rounds: usize = args.get("rounds", 6400)?;
+            let seed: u64 = args.get("seed", 17)?;
+            let cfg = ExperimentConfig {
+                network,
+                profile,
+                topology,
+                t,
+                sim_rounds: rounds,
+                seed,
+                train: None,
+            };
+            cfg.validate()?;
+            let net = cfg.resolve_network();
+            let prof = cfg.resolve_profile()?;
+            let mut topo = cfg.build_topology();
+            let res = simulate(topo.as_mut(), &net, &prof, rounds);
+            println!(
+                "{} / {} / {}: mean cycle {:.1} ms over {} rounds ({} rounds with isolated nodes, total {:.1} s)",
+                res.topology,
+                res.network,
+                res.profile,
+                res.mean_cycle_ms,
+                res.rounds,
+                res.rounds_with_isolated,
+                res.total_ms / 1e3,
+            );
+        }
+        "train" => {
+            let config = args
+                .positional
+                .first()
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("train requires a config path\n{USAGE}"))?;
+            let eval_every: usize = args.get("eval-every", 10)?;
+            let csv = args.flag("csv").map(String::from);
+            let cfg = ExperimentConfig::from_toml_file(&config)?;
+            let mut trainer = mgfl::coordinator::Trainer::from_config(&cfg)?;
+            eprintln!(
+                "training {} on {} ({} silos, topology {})",
+                cfg.train.as_ref().unwrap().model,
+                cfg.network,
+                trainer.num_silos(),
+                trainer.topology_name()
+            );
+            let trace = trainer.run(eval_every)?;
+            println!(
+                "final: acc {:.2}% | train loss {:.4} | sim time {:.1} s | host {:.1} s",
+                trace.final_accuracy().unwrap_or(f64::NAN) * 100.0,
+                trace.final_train_loss().unwrap_or(f64::NAN),
+                trace.total_sim_ms() / 1e3,
+                trace.host_elapsed_ms / 1e3,
+            );
+            if let Some(path) = csv {
+                trace.write_csv(&path)?;
+                eprintln!("trace -> {path}");
+            }
+        }
+        "table1" => {
+            let rounds: usize = args.get("rounds", 6400)?;
+            let t: u32 = args.get("t", 5)?;
+            let profile = args.flag("profile").map(String::from);
+            let profiles = match profile {
+                Some(p) => vec![resolve_profile(&p)?],
+                None => DatasetProfile::all(),
+            };
+            for prof in profiles {
+                println!("\n== Table 1 — {} (cycle time, ms; {} rounds) ==", prof.name, rounds);
+                let mut rows = Vec::new();
+                for net in zoo::all_networks() {
+                    let mut row = vec![net.name.clone()];
+                    for mut topo in mgfl::all_topologies(&net, &prof, t, 17) {
+                        let res = simulate(topo.as_mut(), &net, &prof, rounds);
+                        row.push(format!("{:.1}", res.mean_cycle_ms));
+                    }
+                    rows.push(row);
+                }
+                let headers = [
+                    "network", "STAR", "MATCHA", "MATCHA+", "MST", "d-MBST", "RING", "OURS",
+                ];
+                print!("{}", render_table(&headers, &rows));
+            }
+        }
+        "table2" => {
+            let manifest = mgfl::runtime::Manifest::load(mgfl::runtime::default_artifacts_dir())?;
+            let mut rows = Vec::new();
+            for (name, e) in &manifest.models {
+                rows.push(vec![
+                    name.clone(),
+                    format!("{}", e.param_count),
+                    format!("{:.2}", e.model_size_mb),
+                    format!("{}", e.train_batch),
+                    format!("{}", e.num_classes),
+                ]);
+            }
+            println!("== Table 2 — model statistics (from artifacts/manifest.json) ==");
+            print!("{}", render_table(&["model", "#params", "size MB", "batch", "classes"], &rows));
+        }
+        "table3" => {
+            let rounds: usize = args.get("rounds", 6400)?;
+            let t: u32 = args.get("t", 5)?;
+            let prof = DatasetProfile::femnist();
+            println!("== Table 3 — isolated nodes (FEMNIST, {} rounds, t={}) ==", rounds, t);
+            let mut rows = Vec::new();
+            for net in zoo::all_networks() {
+                let topo = MultigraphTopology::from_network(&net, &prof, t);
+                let s_max = topo.s_max();
+                let iso_states = topo.states_with_isolated(10_000).len();
+                let mut mtopo = MultigraphTopology::from_network(&net, &prof, t);
+                let res = simulate(&mut mtopo, &net, &prof, rounds);
+                let mut ring = mgfl::topo::ring::RingTopology::new(&net, &prof);
+                let ring_res = simulate(&mut ring, &net, &prof, rounds);
+                rows.push(vec![
+                    net.name.clone(),
+                    format!("{}", net.n()),
+                    format!("{}/{}", res.rounds_with_isolated, rounds),
+                    format!(
+                        "{}/{} ({:.1}%)",
+                        iso_states,
+                        s_max,
+                        100.0 * iso_states as f64 / s_max as f64
+                    ),
+                    format!("{:.1} (ring {:.1})", res.mean_cycle_ms, ring_res.mean_cycle_ms),
+                ]);
+            }
+            print!(
+                "{}",
+                render_table(
+                    &["network", "silos", "#rounds iso", "#states iso", "cycle ms"],
+                    &rows
+                )
+            );
+        }
+        "table4" => table4(args.get("rounds", 6400)?, args.get("train-rounds", 0)?)?,
+        "table5" => table5(
+            args.get("rounds", 40)?,
+            &args.get_str("model", "femnist_mlp"),
+            &args.get_str("network", "gaia"),
+        )?,
+        "table6" => table6(args.get("rounds", 6400)?, args.get("train-rounds", 0)?)?,
+        "fig1" => fig1(
+            args.get("rounds", 6400)?,
+            args.get("train-rounds", 30)?,
+            &args.get_str("model", "femnist_mlp"),
+        )?,
+        "fig4" => fig4(args.get("t", 3)?),
+        "fig5" => fig5(
+            args.get("rounds", 40)?,
+            &args.get_str("model", "femnist_mlp"),
+            &args.get_str("network", "exodus"),
+            &args.get_str("out", "results"),
+        )?,
+        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Table 4: remove silos from the RING overlay (randomly / most
+/// inefficient) vs the multigraph.
+fn table4(rounds: usize, train_rounds: usize) -> Result<()> {
+    use mgfl::topo::ring::RingTopology;
+    let net = zoo::exodus();
+    let prof = DatasetProfile::femnist();
+    println!("== Table 4 — silo removal vs multigraph (Exodus, FEMNIST) ==");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    let mut base = RingTopology::new(&net, &prof);
+    let base_res = simulate(&mut base, &net, &prof, rounds);
+    let acc = |topo_kind: &str, removed: usize| -> String {
+        if train_rounds == 0 {
+            return String::new();
+        }
+        train_removed_acc(topo_kind, removed, train_rounds)
+            .map_or(String::new(), |a| format!("{:.2}", a * 100.0))
+    };
+    rows.push(vec![
+        "RING baseline".into(),
+        "-".into(),
+        format!("{:.1}", base_res.mean_cycle_ms),
+        acc("ring", 0),
+    ]);
+
+    for criterion in ["random", "inefficient"] {
+        for removed in [1usize, 5, 10, 20] {
+            let overlay = RingTopology::new(&net, &prof);
+            let reduced = remove_silos(overlay.overlay(), &net, &prof, criterion, removed);
+            let mut topo = RingTopology::from_overlay(reduced);
+            let res = simulate(&mut topo, &net, &prof, rounds);
+            rows.push(vec![
+                format!("RING {criterion} remove"),
+                format!("{removed}"),
+                format!("{:.1}", res.mean_cycle_ms),
+                acc(criterion, removed),
+            ]);
+        }
+    }
+
+    let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
+    let ours_res = simulate(&mut ours, &net, &prof, rounds);
+    rows.push(vec![
+        "Multigraph (ours)".into(),
+        "-".into(),
+        format!("{:.1}", ours_res.mean_cycle_ms),
+        acc("multigraph", 0),
+    ]);
+    print!("{}", render_table(&["method", "#removed", "cycle ms", "acc %"], &rows));
+    Ok(())
+}
+
+/// Rebuild a ring overlay over the retained silos (removed silos keep
+/// training locally but are cut from the ring).
+fn remove_silos(
+    overlay: &mgfl::graph::Graph,
+    net: &mgfl::net::NetworkSpec,
+    prof: &DatasetProfile,
+    criterion: &str,
+    count: usize,
+) -> mgfl::graph::Graph {
+    let n = overlay.n();
+    let victims: Vec<usize> = match criterion {
+        "random" => {
+            let mut rng = mgfl::util::Rng64::seed_from_u64(99);
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            idx.into_iter().take(count).collect()
+        }
+        _ => {
+            // most inefficient = largest incident Eq. 3 overlay delay
+            let mut scored: Vec<(f64, usize)> = (0..n)
+                .map(|i| {
+                    let worst = overlay
+                        .neighbors(i)
+                        .map(|(j, _)| mgfl::delay::eq3_delay_ms(net, prof, i, j, 2, 2))
+                        .fold(0.0, f64::max);
+                    (worst, i)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+            scored.into_iter().take(count).map(|(_, i)| i).collect()
+        }
+    };
+    let keep: Vec<usize> = (0..n).filter(|i| !victims.contains(i)).collect();
+    let conn = net.connectivity_graph(prof);
+    let sub = mgfl::graph::Graph::complete(keep.len(), |a, b| {
+        conn.edge_weight(keep[a], keep[b]).unwrap()
+    });
+    let cycle = mgfl::graph::christofides_cycle(&sub);
+    let mut g = mgfl::graph::Graph::new(n);
+    for w in 0..cycle.len() {
+        let a = keep[cycle[w]];
+        let b = keep[cycle[(w + 1) % cycle.len()]];
+        g.add_edge(a, b, conn.edge_weight(a, b).unwrap());
+    }
+    g
+}
+
+/// Short real-training accuracy for Table 4's accuracy column (run on
+/// Gaia so the real-compute cost stays tractable; the paper's point —
+/// removal hurts accuracy, multigraph does not — is scale-free).
+fn train_removed_acc(kind: &str, removed: usize, rounds: usize) -> Result<f64> {
+    let net = zoo::gaia();
+    let prof = DatasetProfile::femnist();
+    let cfg = TrainConfig { rounds, model: "femnist_mlp".into(), ..Default::default() };
+    let runtime = mgfl::runtime::ModelRuntime::load_default(&cfg.model)?;
+    let topo: Box<dyn TopologyDesign> = match kind {
+        "multigraph" => Box::new(MultigraphTopology::from_network(&net, &prof, 5)),
+        "ring" => Box::new(mgfl::topo::ring::RingTopology::new(&net, &prof)),
+        criterion => {
+            let overlay = mgfl::topo::ring::RingTopology::new(&net, &prof);
+            let reduced = remove_silos(
+                overlay.overlay(),
+                &net,
+                &prof,
+                criterion,
+                removed.min(net.n() - 3),
+            );
+            Box::new(mgfl::topo::ring::RingTopology::from_overlay(reduced))
+        }
+    };
+    let mut trainer = mgfl::coordinator::Trainer::new(runtime, topo, net, prof, cfg)?;
+    let trace = trainer.run(0)?;
+    Ok(trace.final_accuracy().unwrap_or(0.0))
+}
+
+/// Table 5: accuracy per topology via real training.
+fn table5(rounds: usize, model: &str, network: &str) -> Result<()> {
+    let net = zoo::by_name(network).ok_or_else(|| anyhow::anyhow!("unknown network"))?;
+    println!(
+        "== Table 5 — accuracy after {rounds} rounds ({} silos, model {model}) ==",
+        net.n()
+    );
+    let mut rows = Vec::new();
+    for kind in TopologyKind::all() {
+        let cfg = ExperimentConfig {
+            network: network.into(),
+            profile: "femnist".into(),
+            topology: kind,
+            t: 5,
+            sim_rounds: rounds,
+            seed: 17,
+            train: Some(TrainConfig { rounds, model: model.into(), ..Default::default() }),
+        };
+        let mut trainer = mgfl::coordinator::Trainer::from_config(&cfg)?;
+        let trace = trainer.run(0)?;
+        rows.push(vec![
+            kind.as_str().into(),
+            format!("{:.2}", trace.final_accuracy().unwrap_or(f64::NAN) * 100.0),
+            format!("{:.4}", trace.final_train_loss().unwrap_or(f64::NAN)),
+            format!("{:.1}", trace.total_sim_ms() / 1e3),
+        ]);
+        eprintln!("  {} done", kind.as_str());
+    }
+    print!("{}", render_table(&["topology", "acc %", "train loss", "sim time s"], &rows));
+    Ok(())
+}
+
+/// Table 6: t sweep on Exodus/FEMNIST.
+fn table6(rounds: usize, train_rounds: usize) -> Result<()> {
+    let net = zoo::exodus();
+    let prof = DatasetProfile::femnist();
+    println!("== Table 6 — cycle time vs t (Exodus, FEMNIST) ==");
+    let mut ring = mgfl::topo::ring::RingTopology::new(&net, &prof);
+    let ring_res = simulate(&mut ring, &net, &prof, rounds);
+    let mut rows = vec![vec![
+        "RING".into(),
+        "-".into(),
+        format!("{:.1}", ring_res.mean_cycle_ms),
+        String::new(),
+    ]];
+    for t in [1u32, 3, 5, 8, 10, 20, 30] {
+        let mut topo = MultigraphTopology::from_network(&net, &prof, t);
+        let res = simulate(&mut topo, &net, &prof, rounds);
+        let acc = if train_rounds > 0 {
+            format!("{:.2}", train_t_acc(t, train_rounds)? * 100.0)
+        } else {
+            String::new()
+        };
+        rows.push(vec![
+            "Multigraph".into(),
+            format!("{t}"),
+            format!("{:.1}", res.mean_cycle_ms),
+            acc,
+        ]);
+    }
+    print!("{}", render_table(&["topology", "t", "cycle ms", "acc %"], &rows));
+    Ok(())
+}
+
+fn train_t_acc(t: u32, rounds: usize) -> Result<f64> {
+    let net = zoo::gaia();
+    let prof = DatasetProfile::femnist();
+    let cfg = TrainConfig { rounds, model: "femnist_mlp".into(), ..Default::default() };
+    let runtime = mgfl::runtime::ModelRuntime::load_default(&cfg.model)?;
+    let topo = Box::new(MultigraphTopology::from_network(&net, &prof, t));
+    let mut trainer = mgfl::coordinator::Trainer::new(runtime, topo, net, prof, cfg)?;
+    Ok(trainer.run(0)?.final_accuracy().unwrap_or(0.0))
+}
+
+/// Fig. 1: accuracy vs total training time per topology.
+fn fig1(rounds: usize, train_rounds: usize, model: &str) -> Result<()> {
+    let net = zoo::exodus();
+    let prof = DatasetProfile::femnist();
+    println!("== Fig. 1 — accuracy vs overhead time (Exodus cycle time x Gaia-trained accuracy) ==");
+    let mut rows = Vec::new();
+    for kind in TopologyKind::all() {
+        let cfg = ExperimentConfig {
+            network: "exodus".into(),
+            profile: "femnist".into(),
+            topology: kind,
+            t: 5,
+            sim_rounds: rounds,
+            seed: 17,
+            train: None,
+        };
+        let mut topo = cfg.build_topology();
+        let sim = simulate(topo.as_mut(), &net, &prof, rounds);
+        let tcfg = ExperimentConfig {
+            network: "gaia".into(),
+            profile: "femnist".into(),
+            topology: kind,
+            t: 5,
+            sim_rounds: train_rounds,
+            seed: 17,
+            train: Some(TrainConfig {
+                rounds: train_rounds,
+                model: model.into(),
+                ..Default::default()
+            }),
+        };
+        let mut trainer = mgfl::coordinator::Trainer::from_config(&tcfg)?;
+        let trace = trainer.run(0)?;
+        rows.push(vec![
+            kind.as_str().into(),
+            format!("{:.1}", sim.total_ms / 1e3),
+            format!("{:.2}", trace.final_accuracy().unwrap_or(f64::NAN) * 100.0),
+        ]);
+        eprintln!("  {} done", kind.as_str());
+    }
+    print!("{}", render_table(&["topology", "total time s", "acc %"], &rows));
+    Ok(())
+}
+
+/// Fig. 4: dump per-state topology with isolated nodes (Gaia, t=3).
+fn fig4(t: u32) {
+    let net = zoo::gaia();
+    let prof = DatasetProfile::femnist();
+    let topo = MultigraphTopology::from_network(&net, &prof, t);
+    println!("== Fig. 4 — multigraph states on Gaia (t={t}, s_max={}) ==", topo.s_max());
+    for s in 0..topo.s_max().min(8) {
+        let plan = topo.plan_for_state(s);
+        let iso = plan.isolated_nodes();
+        let strong: Vec<String> = plan
+            .strong_edges()
+            .map(|(u, v)| format!("{}–{}", net.silos[u].name, net.silos[v].name))
+            .collect();
+        println!(
+            "state {s}: {} strong edges [{}], isolated: [{}]",
+            strong.len(),
+            strong.join(", "),
+            iso.iter().map(|&i| net.silos[i].name.clone()).collect::<Vec<_>>().join(", ")
+        );
+    }
+}
+
+/// Fig. 5: per-round loss curves (vs rounds and vs simulated time).
+fn fig5(rounds: usize, model: &str, network: &str, out: &str) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    println!("== Fig. 5 — convergence curves ({network}, model {model}) ==");
+    for kind in TopologyKind::all() {
+        let cfg = ExperimentConfig {
+            network: network.into(),
+            profile: "femnist".into(),
+            topology: kind,
+            t: 5,
+            sim_rounds: rounds,
+            seed: 17,
+            train: Some(TrainConfig { rounds, model: model.into(), ..Default::default() }),
+        };
+        let mut trainer = mgfl::coordinator::Trainer::from_config(&cfg)?;
+        let trace = trainer.run((rounds / 10).max(1))?;
+        let path = format!("{out}/fig5_{}_{}.csv", network, kind.as_str());
+        trace.write_csv(&path)?;
+        println!(
+            "{:<12} final loss {:.4} acc {:.2}% sim {:.1}s -> {path}",
+            kind.as_str(),
+            trace.final_train_loss().unwrap_or(f64::NAN),
+            trace.final_accuracy().unwrap_or(f64::NAN) * 100.0,
+            trace.total_sim_ms() / 1e3
+        );
+    }
+    Ok(())
+}

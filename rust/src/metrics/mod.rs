@@ -1,0 +1,232 @@
+//! Metrics: per-round training records, loss curves, CSV/JSON writers.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// One communication round of a real training run.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated cycle time of this round, ms (Eq. 5 term).
+    pub cycle_ms: f64,
+    /// Simulated cumulative wall-clock, ms.
+    pub sim_elapsed_ms: f64,
+    /// Mean local training loss across silos.
+    pub train_loss: f64,
+    /// Isolated-node count this round.
+    pub isolated: usize,
+    /// Eval metrics, present on eval rounds.
+    pub eval_loss: Option<f64>,
+    pub eval_acc: Option<f64>,
+}
+
+/// A full training trace.
+#[derive(Debug, Clone, Default)]
+pub struct TrainTrace {
+    pub topology: String,
+    pub network: String,
+    pub model: String,
+    pub records: Vec<RoundRecord>,
+    /// Real (host) wall-clock of the whole run, ms — for §Perf.
+    pub host_elapsed_ms: f64,
+}
+
+impl TrainTrace {
+    pub fn new(topology: &str, network: &str, model: &str) -> Self {
+        TrainTrace {
+            topology: topology.into(),
+            network: network.into(),
+            model: model.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.eval_acc)
+    }
+
+    pub fn final_train_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.train_loss)
+    }
+
+    pub fn total_sim_ms(&self) -> f64 {
+        self.records.last().map(|r| r.sim_elapsed_ms).unwrap_or(0.0)
+    }
+
+    pub fn mean_cycle_ms(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.cycle_ms).sum::<f64>() / self.records.len() as f64
+    }
+
+    /// Write a CSV with one row per round (Fig. 5 raw data).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        writeln!(f, "round,cycle_ms,sim_elapsed_ms,train_loss,isolated,eval_loss,eval_acc")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{:.4},{:.4},{:.6},{},{},{}",
+                r.round,
+                r.cycle_ms,
+                r.sim_elapsed_ms,
+                r.train_loss,
+                r.isolated,
+                r.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+                r.eval_acc.map(|v| format!("{v:.4}")).unwrap_or_default(),
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let recs: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("round".into(), Json::Num(r.round as f64));
+                m.insert("cycle_ms".into(), Json::Num(r.cycle_ms));
+                m.insert("sim_elapsed_ms".into(), Json::Num(r.sim_elapsed_ms));
+                m.insert("train_loss".into(), Json::Num(r.train_loss));
+                m.insert("isolated".into(), Json::Num(r.isolated as f64));
+                m.insert(
+                    "eval_loss".into(),
+                    r.eval_loss.map(Json::Num).unwrap_or(Json::Null),
+                );
+                m.insert("eval_acc".into(), r.eval_acc.map(Json::Num).unwrap_or(Json::Null));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("topology".into(), Json::Str(self.topology.clone()));
+        top.insert("network".into(), Json::Str(self.network.clone()));
+        top.insert("model".into(), Json::Str(self.model.clone()));
+        top.insert("host_elapsed_ms".into(), Json::Num(self.host_elapsed_ms));
+        top.insert("records".into(), Json::Arr(recs));
+        Json::Obj(top)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+}
+
+/// Render an aligned text table (CLI output for the paper tables).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> TrainTrace {
+        let mut t = TrainTrace::new("multigraph", "gaia", "femnist_mlp");
+        t.push(RoundRecord {
+            round: 0,
+            cycle_ms: 50.0,
+            sim_elapsed_ms: 50.0,
+            train_loss: 4.0,
+            isolated: 0,
+            eval_loss: None,
+            eval_acc: None,
+        });
+        t.push(RoundRecord {
+            round: 1,
+            cycle_ms: 10.0,
+            sim_elapsed_ms: 60.0,
+            train_loss: 3.0,
+            isolated: 2,
+            eval_loss: Some(3.1),
+            eval_acc: Some(0.42),
+        });
+        t
+    }
+
+    #[test]
+    fn summary_stats() {
+        let t = trace();
+        assert_eq!(t.final_accuracy(), Some(0.42));
+        assert_eq!(t.final_train_loss(), Some(3.0));
+        assert_eq!(t.total_sim_ms(), 60.0);
+        assert!((t.mean_cycle_ms() - 30.0).abs() < 1e-12);
+    }
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("mgfl_test_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let t = trace();
+        let path = temp_path("trace.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[2].contains("0.4200"));
+    }
+
+    #[test]
+    fn json_writes_parseable_trace() {
+        let t = trace();
+        let path = temp_path("trace.json");
+        t.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("topology").unwrap().as_str().unwrap(), "multigraph");
+        assert_eq!(j.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let s = render_table(
+            &["net", "ours", "ring"],
+            &[vec!["gaia".into(), "15.7".into(), "57.2".into()]],
+        );
+        assert!(s.contains("gaia"));
+        assert!(s.lines().count() == 3);
+    }
+}

@@ -1,0 +1,81 @@
+//! Geographic latency model: haversine distance → propagation delay.
+//!
+//! Silo-to-silo link latency is modelled as light-in-fiber propagation
+//! over the great-circle distance plus a fixed per-link processing
+//! overhead — the standard model for geo-distributed testbeds (Gaia,
+//! NSDI'17 uses the same construction for its synthetic networks).
+
+/// Mean Earth radius, km.
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+/// Speed of light in fiber, km/s (~2/3 c).
+pub const FIBER_KM_PER_S: f64 = 200_000.0;
+/// Fixed per-link overhead (routing/serialization), ms.
+pub const LINK_OVERHEAD_MS: f64 = 0.3;
+/// Fiber paths are not great circles; typical route-stretch factor.
+pub const ROUTE_STRETCH: f64 = 1.4;
+
+/// Great-circle distance between two (lat, lon) points in degrees, km.
+pub fn haversine_km(lat1: f64, lon1: f64, lat2: f64, lon2: f64) -> f64 {
+    let (la1, lo1, la2, lo2) = (
+        lat1.to_radians(),
+        lon1.to_radians(),
+        lat2.to_radians(),
+        lon2.to_radians(),
+    );
+    let dlat = la2 - la1;
+    let dlon = lo2 - lo1;
+    let a = (dlat / 2.0).sin().powi(2) + la1.cos() * la2.cos() * (dlon / 2.0).sin().powi(2);
+    2.0 * EARTH_RADIUS_KM * a.sqrt().atan2((1.0 - a).sqrt())
+}
+
+/// One-way link latency in milliseconds between two geo points.
+pub fn link_latency_ms(lat1: f64, lon1: f64, lat2: f64, lon2: f64) -> f64 {
+    let km = haversine_km(lat1, lon1, lat2, lon2) * ROUTE_STRETCH;
+    km / FIBER_KM_PER_S * 1000.0 + LINK_OVERHEAD_MS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_distance_to_self() {
+        assert!(haversine_km(48.85, 2.35, 48.85, 2.35) < 1e-9);
+    }
+
+    #[test]
+    fn paris_to_nyc_about_5800km() {
+        let d = haversine_km(48.8566, 2.3522, 40.7128, -74.0060);
+        assert!((5500.0..6100.0).contains(&d), "{d}");
+    }
+
+    #[test]
+    fn sydney_to_london_is_far() {
+        let d = haversine_km(-33.87, 151.21, 51.51, -0.13);
+        assert!((16500.0..17500.0).contains(&d), "{d}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = haversine_km(1.0, 2.0, 50.0, -120.0);
+        let b = haversine_km(50.0, -120.0, 1.0, 2.0);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_has_floor_and_scales() {
+        let near = link_latency_ms(37.0, -122.0, 37.1, -122.1);
+        let far = link_latency_ms(37.0, -122.0, 51.5, -0.1);
+        assert!(near >= LINK_OVERHEAD_MS);
+        assert!(near < 1.0);
+        // SF <-> London ~ 8600 km * 1.4 / 200k km/s ≈ 60 ms one-way.
+        assert!((40.0..90.0).contains(&far), "{far}");
+        assert!(far > near);
+    }
+
+    #[test]
+    fn antipodal_bounded_by_half_circumference() {
+        let d = haversine_km(0.0, 0.0, 0.0, 180.0);
+        assert!((d - std::f64::consts::PI * EARTH_RADIUS_KM).abs() < 1.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Network substrate: geographic latency model, silo/network specs, and
+//! the five embedded evaluation networks (Gaia, Amazon, Géant, Exodus,
+//! Ebone).
+
+pub mod geo;
+pub mod spec;
+pub mod zoo;
+
+pub use spec::{DatasetProfile, NetworkSpec, Silo};

@@ -1,0 +1,189 @@
+//! Artifact manifest: the JSON contract written by `python -m compile.aot`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpecEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model's artifact set (see aot.py::export_model).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub model: String,
+    pub param_count: usize,
+    pub model_size_mbits: f64,
+    pub model_size_mb: f64,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub input_dtype: String,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub k_max: usize,
+    /// suffix -> filename, suffixes: train/eval/init/agg.
+    pub artifacts: BTreeMap<String, String>,
+    pub param_specs: Vec<ParamSpecEntry>,
+}
+
+impl ModelEntry {
+    fn from_json(j: &Json) -> Result<ModelEntry> {
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), v.as_str()?.to_string());
+        }
+        let mut param_specs = Vec::new();
+        for s in j.get("param_specs")?.as_arr()? {
+            let shape = s
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            param_specs.push(ParamSpecEntry { name: s.get("name")?.as_str()?.to_string(), shape });
+        }
+        Ok(ModelEntry {
+            model: j.get("model")?.as_str()?.to_string(),
+            param_count: j.get("param_count")?.as_usize()?,
+            model_size_mbits: j.get("model_size_mbits")?.as_f64()?,
+            model_size_mb: j.get("model_size_mb")?.as_f64()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            input_shape: j
+                .get("input_shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            input_dtype: j.get("input_dtype")?.as_str()?.to_string(),
+            train_batch: j.get("train_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            k_max: j.get("k_max")?.as_usize()?,
+            artifacts,
+            param_specs,
+        })
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn artifact_path(&self, dir: &Path, suffix: &str) -> Result<PathBuf> {
+        let name = self
+            .artifacts
+            .get(suffix)
+            .ok_or_else(|| anyhow!("model {} has no '{suffix}' artifact", self.model))?;
+        Ok(dir.join(name))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub fingerprint: String,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to build the AOT artifacts first",
+                path.display()
+            )
+        })?;
+        let m = Self::from_json(&text).context("parsing manifest.json")?;
+        ensure!(m.version == 1, "unsupported manifest version {}", m.version);
+        Ok(m)
+    }
+
+    /// Parse the manifest JSON (in-tree parser; no serde offline).
+    pub fn from_json(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in j.get("models")?.as_obj()? {
+            models.insert(name.clone(), ModelEntry::from_json(entry)?);
+        }
+        Ok(Manifest {
+            version: j.get("version")?.as_usize()? as u32,
+            fingerprint: j.get("fingerprint")?.as_str()?.to_string(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model '{name}' not in manifest (have: {:?}); re-run `make artifacts`",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+/// Default artifacts dir: $MGFL_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("MGFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entry() -> ModelEntry {
+        let j = Json::parse(
+            r#"{
+            "model": "m",
+            "param_count": 10,
+            "model_size_mbits": 0.32,
+            "model_size_mb": 0.04,
+            "num_classes": 2,
+            "input_shape": [4, 4, 1],
+            "input_dtype": "f32",
+            "train_batch": 8,
+            "eval_batch": 8,
+            "k_max": 16,
+            "artifacts": {"train": "m_train.hlo.txt"},
+            "param_specs": [{"name": "w", "shape": [10]}]
+        }"#,
+        )
+        .unwrap();
+        ModelEntry::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn manifest_from_json_full() {
+        let text = r#"{"version": 1, "fingerprint": "ff", "models": {}}"#;
+        let m = Manifest::from_json(text).unwrap();
+        assert_eq!(m.version, 1);
+        assert!(m.models.is_empty());
+        assert!(Manifest::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn input_len_is_product() {
+        assert_eq!(sample_entry().input_len(), 16);
+    }
+
+    #[test]
+    fn artifact_path_lookup() {
+        let e = sample_entry();
+        let p = e.artifact_path(Path::new("/a"), "train").unwrap();
+        assert_eq!(p, PathBuf::from("/a/m_train.hlo.txt"));
+        assert!(e.artifact_path(Path::new("/a"), "missing").is_err());
+    }
+
+    #[test]
+    fn manifest_load_missing_dir_is_helpful() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

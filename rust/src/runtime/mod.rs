@@ -1,0 +1,308 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! rust round path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Interchange is HLO *text* because
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's
+//! proto path rejects; the text parser reassigns ids.
+//!
+//! The `xla` crate's client is `Rc`-based (not `Send`), so a process
+//! hosts the runtime on one thread; the coordinator serializes silo
+//! compute through it (simulated time is independent of host wall-time).
+
+pub mod manifest;
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+pub use manifest::{default_artifacts_dir, Manifest, ModelEntry};
+
+use crate::data::Batch;
+
+/// A loaded model: the four compiled executables + manifest metadata.
+pub struct ModelRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    init: xla::PjRtLoadedExecutable,
+    agg: xla::PjRtLoadedExecutable,
+    pub entry: ModelEntry,
+    /// Cumulative host-time spent in each executable (perf accounting).
+    pub timings: std::cell::RefCell<RuntimeTimings>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeTimings {
+    pub train_ms: f64,
+    pub train_calls: u64,
+    pub eval_ms: f64,
+    pub eval_calls: u64,
+    pub agg_ms: f64,
+    pub agg_calls: u64,
+}
+
+impl RuntimeTimings {
+    pub fn mean_train_ms(&self) -> f64 {
+        if self.train_calls == 0 {
+            0.0
+        } else {
+            self.train_ms / self.train_calls as f64
+        }
+    }
+
+    pub fn mean_agg_ms(&self) -> f64 {
+        if self.agg_calls == 0 {
+            0.0
+        } else {
+            self.agg_ms / self.agg_calls as f64
+        }
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+}
+
+impl ModelRuntime {
+    /// Load and compile all artifacts of `model` from `dir`.
+    pub fn load(dir: impl AsRef<Path>, model: &str) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let entry = manifest.model(model)?.clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let load = |suffix: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = entry.artifact_path(dir, suffix)?;
+            compile(&client, &path).with_context(|| format!("artifact '{suffix}'"))
+        };
+        Ok(ModelRuntime {
+            train: load("train")?,
+            eval: load("eval")?,
+            init: load("init")?,
+            agg: load("agg")?,
+            client,
+            entry,
+            timings: Default::default(),
+        })
+    }
+
+    /// Load from the default artifacts dir ($MGFL_ARTIFACTS or ./artifacts).
+    pub fn load_default(model: &str) -> Result<Self> {
+        Self::load(default_artifacts_dir(), model)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    fn params_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+        ensure!(
+            params.len() == self.entry.param_count,
+            "params length {} != P {}",
+            params.len(),
+            self.entry.param_count
+        );
+        Ok(xla::Literal::vec1(params))
+    }
+
+    fn batch_literal(&self, batch: &Batch, expect_b: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let mut dims: Vec<i64> = vec![expect_b as i64];
+        dims.extend(self.entry.input_shape.iter().map(|&d| d as i64));
+        let x = match self.entry.input_dtype.as_str() {
+            "f32" => {
+                ensure!(
+                    batch.x_f32.len() == expect_b * self.entry.input_len(),
+                    "f32 batch len {} != {}x{}",
+                    batch.x_f32.len(),
+                    expect_b,
+                    self.entry.input_len()
+                );
+                xla::Literal::vec1(batch.x_f32.as_slice()).reshape(&dims)?
+            }
+            "i32" => {
+                ensure!(
+                    batch.x_i32.len() == expect_b * self.entry.input_len(),
+                    "i32 batch len {} != {}x{}",
+                    batch.x_i32.len(),
+                    expect_b,
+                    self.entry.input_len()
+                );
+                xla::Literal::vec1(batch.x_i32.as_slice()).reshape(&dims)?
+            }
+            other => return Err(anyhow!("unknown input dtype {other}")),
+        };
+        ensure!(batch.y.len() == expect_b, "label batch {} != {expect_b}", batch.y.len());
+        let y = xla::Literal::vec1(batch.y.as_slice());
+        Ok((x, y))
+    }
+
+    /// (seed) -> flat params.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let out = self.init.execute::<xla::Literal>(&[xla::Literal::scalar(seed)])?[0][0]
+            .to_literal_sync()?;
+        let params = out.to_tuple1()?.to_vec::<f32>()?;
+        ensure!(params.len() == self.entry.param_count, "init returned wrong P");
+        Ok(params)
+    }
+
+    /// One local SGD step: (params, batch, lr) -> (params', loss).
+    /// `batch` must match the manifest's train_batch.
+    pub fn train_step(&self, params: &[f32], batch: &Batch, lr: f32) -> Result<(Vec<f32>, f32)> {
+        let t0 = Instant::now();
+        let p = self.params_literal(params)?;
+        let (x, y) = self.batch_literal(batch, self.entry.train_batch)?;
+        let out = self
+            .train
+            .execute::<xla::Literal>(&[p, x, y, xla::Literal::scalar(lr)])?[0][0]
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        ensure!(parts.len() == 2, "train artifact must return (params, loss)");
+        let new_params = parts[0].to_vec::<f32>()?;
+        let loss = parts[1].get_first_element::<f32>()?;
+        let mut t = self.timings.borrow_mut();
+        t.train_ms += t0.elapsed().as_secs_f64() * 1e3;
+        t.train_calls += 1;
+        Ok((new_params, loss))
+    }
+
+    /// (params, batch) -> (loss, correct_count). Batch = eval_batch.
+    pub fn eval_step(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let t0 = Instant::now();
+        let p = self.params_literal(params)?;
+        let (x, y) = self.batch_literal(batch, self.entry.eval_batch)?;
+        let out = self.eval.execute::<xla::Literal>(&[p, x, y])?[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        ensure!(parts.len() == 2, "eval artifact must return (loss, correct)");
+        let loss = parts[0].get_first_element::<f32>()?;
+        let correct = parts[1].get_first_element::<f32>()?;
+        let mut t = self.timings.borrow_mut();
+        t.eval_ms += t0.elapsed().as_secs_f64() * 1e3;
+        t.eval_calls += 1;
+        Ok((loss, correct))
+    }
+
+    /// Consensus aggregation via the compiled Pallas kernel:
+    /// out = Σ_k w_k · models_k. Up to k_max models; shorter lists are
+    /// zero-padded (zero weights are exact no-ops, tested at L1).
+    pub fn aggregate(&self, weights: &[f32], models: &[&[f32]]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let k_max = self.entry.k_max;
+        let p_count = self.entry.param_count;
+        ensure!(weights.len() == models.len(), "weights/models length mismatch");
+        ensure!(models.len() <= k_max, "{} models > k_max {k_max}", models.len());
+        for m in models {
+            ensure!(m.len() == p_count, "model length {} != P {p_count}", m.len());
+        }
+        let mut w = vec![0.0f32; k_max];
+        w[..weights.len()].copy_from_slice(weights);
+        let mut stack = vec![0.0f32; k_max * p_count];
+        for (k, m) in models.iter().enumerate() {
+            stack[k * p_count..(k + 1) * p_count].copy_from_slice(m);
+        }
+        let wl = xla::Literal::vec1(&w);
+        let sl = xla::Literal::vec1(&stack).reshape(&[k_max as i64, p_count as i64])?;
+        let out = self.agg.execute::<xla::Literal>(&[wl, sl])?[0][0].to_literal_sync()?;
+        let result = out.to_tuple1()?.to_vec::<f32>()?;
+        let mut t = self.timings.borrow_mut();
+        t.agg_ms += t0.elapsed().as_secs_f64() * 1e3;
+        t.agg_calls += 1;
+        Ok(result)
+    }
+
+    /// Aggregate via the configured backend (§Perf: native by default
+    /// on CPU; the compiled kernel path for accelerator deployments).
+    pub fn aggregate_with(
+        &self,
+        backend: crate::config::AggBackend,
+        weights: &[f32],
+        models: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        match backend {
+            crate::config::AggBackend::Kernel => self.aggregate(weights, models),
+            crate::config::AggBackend::Native => {
+                ensure!(weights.len() == models.len(), "weights/models length mismatch");
+                ensure!(!models.is_empty(), "empty aggregation");
+                let t0 = Instant::now();
+                let out = aggregate_native(weights, models);
+                let mut t = self.timings.borrow_mut();
+                t.agg_ms += t0.elapsed().as_secs_f64() * 1e3;
+                t.agg_calls += 1;
+                Ok(out)
+            }
+        }
+    }
+
+    /// Measure the real host train-step time (ms) — feeds T_c into
+    /// profiles derived from artifacts instead of the paper's P100 value.
+    pub fn measure_t_c_ms(&self, batch: &Batch, reps: usize) -> Result<f64> {
+        let params = self.init_params(0)?;
+        // warmup (first call pays any lazy initialization)
+        let _ = self.train_step(&params, batch, 0.01)?;
+        let t0 = Instant::now();
+        let mut p = params;
+        for _ in 0..reps.max(1) {
+            p = self.train_step(&p, batch, 0.01)?.0;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1e3 / reps.max(1) as f64)
+    }
+}
+
+/// Native-rust weighted aggregation — the fallback/ablation backend the
+/// `hotpath` bench compares against the compiled kernel.
+pub fn aggregate_native(weights: &[f32], models: &[&[f32]]) -> Vec<f32> {
+    assert_eq!(weights.len(), models.len());
+    assert!(!models.is_empty());
+    let p = models[0].len();
+    let mut out = vec![0.0f32; p];
+    for (&w, m) in weights.iter().zip(models) {
+        assert_eq!(m.len(), p);
+        if w == 0.0 {
+            continue;
+        }
+        for (o, &x) in out.iter_mut().zip(m.iter()) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Are artifacts built? Tests/examples use this to skip gracefully with
+/// an actionable message instead of failing obscurely.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_native_weighted_sum() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let out = aggregate_native(&[0.25, 0.75], &[&a, &b]);
+        assert_eq!(out, vec![0.25 + 2.25, 0.5 + 3.0]);
+    }
+
+    #[test]
+    fn aggregate_native_skips_zero_weight_rows() {
+        let a = vec![1.0f32; 4];
+        let garbage = vec![f32::NAN; 4];
+        let out = aggregate_native(&[1.0, 0.0], &[&a, &garbage]);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    #[should_panic]
+    fn aggregate_native_length_mismatch() {
+        aggregate_native(&[1.0], &[&[1.0][..], &[2.0][..]]);
+    }
+}

@@ -1,0 +1,74 @@
+//! δ-MBST baseline (Marfoq et al.): degree-bounded minimum spanning tree.
+//! Bounding the degree caps the Eq. 3 capacity division at hot nodes,
+//! trading tree weight for per-link throughput.
+
+use super::{RoundPlan, TopologyDesign};
+use crate::graph::{degree_bounded_mst, Graph};
+use crate::net::{DatasetProfile, NetworkSpec};
+
+/// Paper/Marfoq default degree bound.
+pub const DEFAULT_DELTA: usize = 3;
+
+pub struct DeltaMbstTopology {
+    overlay: Graph,
+    delta: usize,
+}
+
+impl DeltaMbstTopology {
+    pub fn new(net: &NetworkSpec, profile: &DatasetProfile, delta: usize) -> Self {
+        let conn = net.connectivity_graph(profile);
+        DeltaMbstTopology { overlay: degree_bounded_mst(&conn, delta), delta }
+    }
+
+    pub fn delta(&self) -> usize {
+        self.delta
+    }
+}
+
+impl TopologyDesign for DeltaMbstTopology {
+    fn name(&self) -> &str {
+        "delta_mbst"
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, _k: usize) -> RoundPlan {
+        RoundPlan::all_strong(&self.overlay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+
+    #[test]
+    fn degree_bound_holds_on_all_networks() {
+        let p = DatasetProfile::femnist();
+        for net in zoo::all_networks() {
+            let t = DeltaMbstTopology::new(&net, &p, DEFAULT_DELTA);
+            assert!(t.overlay().is_connected(), "{}", net.name);
+            assert_eq!(t.overlay().edges().len(), net.n() - 1);
+            for i in 0..net.n() {
+                assert!(
+                    t.overlay().degree(i) <= DEFAULT_DELTA,
+                    "{}: deg({i}) = {}",
+                    net.name,
+                    t.overlay().degree(i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_degree_below_plain_mst_hub() {
+        // On Gaia the plain MST concentrates at a hub; δ-MBST must not.
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let mbst = DeltaMbstTopology::new(&net, &p, DEFAULT_DELTA);
+        let max_deg = (0..net.n()).map(|i| mbst.overlay().degree(i)).max().unwrap();
+        assert!(max_deg <= DEFAULT_DELTA);
+    }
+}

@@ -1,0 +1,159 @@
+//! MATCHA baseline (Wang et al.): decompose the communication graph into
+//! matchings; every round, activate each matching independently so the
+//! expected communication fraction equals a budget C_b.
+//!
+//! Interpretation notes (DESIGN.md §Substitutions): the original MATCHA
+//! assumes a given base topology; following Marfoq et al.'s cross-silo
+//! adaptation we build the base graph as MST ∪ Christofides-ring (a
+//! sparse connected backbone with chordal diversity). `MATCHA(+)` is the
+//! convergence-preserving variant that activates a *superset* fraction
+//! (C_b = 1 reproduces the "wait for every matching" behaviour whose
+//! cycle times Table 1 reports as MATCHA(+) ≥ MATCHA).
+
+use super::{RoundPlan, TopologyDesign};
+use crate::delay::EdgeType;
+use crate::graph::{matching_decomposition, prim_mst, ring_overlay, Graph, NodeId};
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::util::Rng64;
+
+/// Default MATCHA communication budget.
+pub const DEFAULT_BUDGET: f64 = 0.5;
+
+pub struct MatchaTopology {
+    name: String,
+    overlay: Graph,
+    matchings: Vec<Vec<(NodeId, NodeId, f64)>>,
+    /// Per-round activation probability of each matching.
+    budget: f64,
+    rng: Rng64,
+}
+
+impl MatchaTopology {
+    pub fn new(net: &NetworkSpec, profile: &DatasetProfile, budget: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&budget), "budget must be in [0,1]");
+        let conn = net.connectivity_graph(profile);
+        // Base graph: MST ∪ ring — connected, sparse, with enough edge
+        // diversity for the decomposition to matter.
+        let mst = prim_mst(&conn);
+        let ring = ring_overlay(&conn);
+        let mut overlay = Graph::new(net.n());
+        let mut seen = std::collections::BTreeSet::new();
+        for e in mst.edges().iter().chain(ring.edges()) {
+            if seen.insert(e.pair()) {
+                overlay.add_edge(e.u, e.v, e.w);
+            }
+        }
+        let edge_list: Vec<_> = overlay.edges().iter().map(|e| (e.u, e.v, e.w)).collect();
+        let matchings = matching_decomposition(&edge_list);
+        let name = if budget >= 1.0 { "matcha_plus" } else { "matcha" };
+        MatchaTopology {
+            name: name.to_string(),
+            overlay,
+            matchings,
+            budget,
+            rng: Rng64::seed_from_u64(seed),
+        }
+    }
+
+    /// The convergence-preserving full-activation variant.
+    pub fn plus(net: &NetworkSpec, profile: &DatasetProfile, seed: u64) -> Self {
+        Self::new(net, profile, 1.0, seed)
+    }
+
+    pub fn num_matchings(&self) -> usize {
+        self.matchings.len()
+    }
+}
+
+impl TopologyDesign for MatchaTopology {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, _k: usize) -> RoundPlan {
+        let mut edges = Vec::new();
+        for m in &self.matchings {
+            if self.budget >= 1.0 || self.rng.gen_f64() < self.budget {
+                edges.extend(m.iter().map(|&(u, v, _)| (u, v, EdgeType::Strong)));
+            }
+        }
+        RoundPlan { n: self.overlay.n(), edges }
+    }
+
+    fn period(&self) -> Option<u64> {
+        if self.budget >= 1.0 {
+            Some(1)
+        } else {
+            None // stochastic
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+
+    #[test]
+    fn matchings_partition_overlay() {
+        let net = zoo::gaia();
+        let m = MatchaTopology::new(&net, &DatasetProfile::femnist(), 0.5, 0);
+        let total: usize = m.matchings.iter().map(|x| x.len()).sum();
+        assert_eq!(total, m.overlay().edges().len());
+        assert!(m.num_matchings() >= 2);
+    }
+
+    #[test]
+    fn plan_respects_budget_in_expectation() {
+        let net = zoo::gaia();
+        let mut m = MatchaTopology::new(&net, &DatasetProfile::femnist(), 0.5, 42);
+        let total_edges = m.overlay().edges().len();
+        let rounds = 400;
+        let mut active = 0usize;
+        for k in 0..rounds {
+            active += m.plan(k).edges.len();
+        }
+        let frac = active as f64 / (rounds * total_edges) as f64;
+        assert!((0.4..0.6).contains(&frac), "activation fraction {frac}");
+    }
+
+    #[test]
+    fn matcha_plus_activates_everything() {
+        let net = zoo::gaia();
+        let mut m = MatchaTopology::plus(&net, &DatasetProfile::femnist(), 0);
+        let plan = m.plan(0);
+        assert_eq!(plan.edges.len(), m.overlay().edges().len());
+        assert_eq!(m.name(), "matcha_plus");
+        assert_eq!(m.period(), Some(1));
+    }
+
+    #[test]
+    fn every_plan_is_a_union_of_matchings() {
+        // No node may appear twice within a single activated matching;
+        // across matchings the node can repeat — check per-round degree
+        // bounded by number of matchings.
+        let net = zoo::amazon();
+        let mut m = MatchaTopology::new(&net, &DatasetProfile::femnist(), 0.7, 7);
+        let bound = m.num_matchings();
+        for k in 0..50 {
+            let plan = m.plan(k);
+            let deg = plan.degrees();
+            assert!(deg.iter().all(|&d| d <= bound));
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let mut a = MatchaTopology::new(&net, &p, 0.5, 9);
+        let mut b = MatchaTopology::new(&net, &p, 0.5, 9);
+        for k in 0..20 {
+            assert_eq!(a.plan(k).edges.len(), b.plan(k).edges.len());
+        }
+    }
+}

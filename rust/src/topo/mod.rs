@@ -1,0 +1,124 @@
+//! Topology designs: the paper's multigraph plus every baseline from
+//! Table 1 (STAR, MATCHA, MATCHA+, MST, δ-MBST, RING).
+//!
+//! A design produces a [`RoundPlan`] per communication round: the set of
+//! undirected silo pairs that communicate, each marked strong (both ends
+//! wait) or weak (asynchronous, nobody waits). Static baselines emit the
+//! same all-strong plan every round; MATCHA samples matchings; the
+//! multigraph cycles through its parsed states.
+
+pub mod delta_mbst;
+pub mod matcha;
+pub mod mst;
+pub mod multigraph;
+pub mod ring;
+pub mod star;
+pub mod states;
+
+use crate::delay::EdgeType;
+use crate::graph::{Graph, NodeId};
+
+pub use multigraph::Multigraph;
+pub use states::{GraphState, MultigraphTopology};
+
+/// The communication plan for one round.
+#[derive(Debug, Clone)]
+pub struct RoundPlan {
+    pub n: usize,
+    /// Undirected pairs (u < v) with their connection type; communication
+    /// happens in both directions over a pair.
+    pub edges: Vec<(NodeId, NodeId, EdgeType)>,
+}
+
+impl RoundPlan {
+    pub fn all_strong(g: &Graph) -> Self {
+        RoundPlan {
+            n: g.n(),
+            edges: g.edges().iter().map(|e| (e.u, e.v, EdgeType::Strong)).collect(),
+        }
+    }
+
+    /// Per-node degree over *all* planned edges (strong + weak) — the
+    /// concurrency that divides access capacity in Eq. 3.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.n];
+        for &(u, v, _) in &self.edges {
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+        deg
+    }
+
+    /// Nodes participating in no strong edge this round. For the
+    /// multigraph these are exactly the paper's *isolated nodes* (all
+    /// incident connections weak); for baselines, nodes the design simply
+    /// leaves out this round (e.g. MATCHA non-matched nodes).
+    pub fn isolated_nodes(&self) -> Vec<NodeId> {
+        let mut has_strong = vec![false; self.n];
+        let mut has_edge = vec![false; self.n];
+        for &(u, v, t) in &self.edges {
+            has_edge[u] = true;
+            has_edge[v] = true;
+            if t == EdgeType::Strong {
+                has_strong[u] = true;
+                has_strong[v] = true;
+            }
+        }
+        (0..self.n).filter(|&i| has_edge[i] && !has_strong[i]).collect()
+    }
+
+    pub fn strong_edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.edges
+            .iter()
+            .filter(|&&(_, _, t)| t == EdgeType::Strong)
+            .map(|&(u, v, _)| (u, v))
+    }
+}
+
+/// A topology design consumed by the time simulator and the training
+/// coordinator.
+pub trait TopologyDesign {
+    fn name(&self) -> &str;
+
+    /// The overlay graph: which pairs may ever communicate.
+    fn overlay(&self) -> &Graph;
+
+    /// The plan for round `k`. `&mut self` because stochastic designs
+    /// (MATCHA) carry an RNG.
+    fn plan(&mut self, k: usize) -> RoundPlan;
+
+    /// Schedule period, if the design is periodic (multigraph: s_max;
+    /// static designs: 1; stochastic: None).
+    fn period(&self) -> Option<u64> {
+        Some(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_plan_degrees_and_isolated() {
+        let plan = RoundPlan {
+            n: 4,
+            edges: vec![
+                (0, 1, EdgeType::Strong),
+                (1, 2, EdgeType::Weak),
+                (2, 3, EdgeType::Weak),
+            ],
+        };
+        assert_eq!(plan.degrees(), vec![1, 2, 2, 1]);
+        // 2 and 3 touch only weak edges -> isolated; 0,1 have strong.
+        assert_eq!(plan.isolated_nodes(), vec![2, 3]);
+        assert_eq!(plan.strong_edges().count(), 1);
+    }
+
+    #[test]
+    fn all_strong_plan_has_no_isolated() {
+        let g = Graph::from_edges(3, [(0, 1, 1.0), (1, 2, 1.0)]);
+        let plan = RoundPlan::all_strong(&g);
+        assert!(plan.isolated_nodes().is_empty());
+        assert_eq!(plan.edges.len(), 2);
+    }
+}

@@ -1,0 +1,55 @@
+//! MST baseline (Prim 1957 — paper Table 1 "MST [72]"): the minimum
+//! spanning tree of the delay-weighted connectivity graph, static.
+
+use super::{RoundPlan, TopologyDesign};
+use crate::graph::{prim_mst, Graph};
+use crate::net::{DatasetProfile, NetworkSpec};
+
+pub struct MstTopology {
+    overlay: Graph,
+}
+
+impl MstTopology {
+    pub fn new(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        let conn = net.connectivity_graph(profile);
+        MstTopology { overlay: prim_mst(&conn) }
+    }
+}
+
+impl TopologyDesign for MstTopology {
+    fn name(&self) -> &str {
+        "mst"
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, _k: usize) -> RoundPlan {
+        RoundPlan::all_strong(&self.overlay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+
+    #[test]
+    fn mst_spans_with_n_minus_1_edges() {
+        let net = zoo::geant();
+        let t = MstTopology::new(&net, &DatasetProfile::femnist());
+        assert_eq!(t.overlay().edges().len(), net.n() - 1);
+        assert!(t.overlay().is_connected());
+    }
+
+    #[test]
+    fn mst_total_weight_below_ring() {
+        // MST is the lightest spanning structure; the ring must be heavier.
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let mst = MstTopology::new(&net, &p);
+        let ring = super::super::ring::RingTopology::new(&net, &p);
+        assert!(mst.overlay().total_weight() <= ring.overlay().total_weight() + 1e-9);
+    }
+}

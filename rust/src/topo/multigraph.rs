@@ -1,0 +1,206 @@
+//! Algorithm 1 — Multigraph Construction (the paper's §4.1).
+//!
+//! From the RING overlay, each silo pair (i,j) is expanded into
+//! `n(i,j) = min(t, round(d(i,j) / d_min))` parallel edges: exactly one
+//! strongly-connected edge plus `n(i,j) - 1` weakly-connected edges.
+//! Long-delay pairs therefore spend most states on weak edges, which is
+//! what generates isolated nodes and cuts the Eq. 5 cycle time.
+
+use crate::delay::eq3_delay_ms;
+use crate::graph::{Graph, NodeId};
+use crate::net::{DatasetProfile, NetworkSpec};
+
+/// One overlay pair in the multigraph with its edge multiplicity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MultiEdge {
+    pub u: NodeId,
+    pub v: NodeId,
+    /// Symmetrized Eq. 3 overlay delay for this pair, ms.
+    pub delay_ms: f64,
+    /// n(i,j): total parallel edges (1 strong + n-1 weak).
+    pub n_edges: u32,
+}
+
+/// The multigraph \(\mathcal{G}_m\) = overlay pairs + multiplicities
+/// (the track list \(\mathcal{L}\) of Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct Multigraph {
+    pub n: usize,
+    pub edges: Vec<MultiEdge>,
+    /// The maximum-edges parameter t of Algorithm 1.
+    pub t: u32,
+    /// min delay over overlay pairs (d_min), ms.
+    pub d_min_ms: f64,
+}
+
+impl Multigraph {
+    /// Algorithm 1. `overlay` must be connected; delays are computed with
+    /// Eq. 3 using the overlay degrees (the paper's "delay computation
+    /// for overlay" step). `t >= 1`.
+    pub fn construct(
+        overlay: &Graph,
+        net: &NetworkSpec,
+        profile: &DatasetProfile,
+        t: u32,
+    ) -> Self {
+        assert!(t >= 1, "t must be >= 1 (t=1 degenerates to the overlay)");
+        assert!(overlay.is_connected(), "overlay must be connected");
+        assert_eq!(overlay.n(), net.n(), "overlay/network size mismatch");
+
+        // Lines 1-4: delays for every overlay pair. The pair delay is the
+        // max of the two directions (identical when capacities are
+        // uniform, as in the paper's 10 Gbps setting).
+        let delays: Vec<f64> = overlay
+            .edges()
+            .iter()
+            .map(|e| {
+                let d_uv =
+                    eq3_delay_ms(net, profile, e.u, e.v, overlay.degree(e.u), overlay.degree(e.v));
+                let d_vu =
+                    eq3_delay_ms(net, profile, e.v, e.u, overlay.degree(e.v), overlay.degree(e.u));
+                d_uv.max(d_vu)
+            })
+            .collect();
+
+        // Line 5: d_min.
+        let d_min_ms = delays.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(d_min_ms > 0.0 && d_min_ms.is_finite());
+
+        // Lines 8-15: n(i,j) = min(t, round(d/d_min)), floored at 1 so
+        // every pair keeps its strongly-connected edge.
+        let edges = overlay
+            .edges()
+            .iter()
+            .zip(&delays)
+            .map(|(e, &d)| MultiEdge {
+                u: e.u,
+                v: e.v,
+                delay_ms: d,
+                n_edges: ((d / d_min_ms).round() as u32).clamp(1, t),
+            })
+            .collect();
+
+        Multigraph { n: overlay.n(), edges, t, d_min_ms }
+    }
+
+    /// Total edges in the multiset \(\mathcal{E}_m\) (strong + weak).
+    pub fn total_edges(&self) -> u64 {
+        self.edges.iter().map(|e| e.n_edges as u64).sum()
+    }
+
+    /// Count of weakly-connected edges.
+    pub fn weak_edges(&self) -> u64 {
+        self.edges.iter().map(|e| (e.n_edges - 1) as u64).sum()
+    }
+
+    /// s_max: least common multiple of all n(i,j) (Algorithm 2 line 1).
+    pub fn s_max(&self) -> u64 {
+        self.edges
+            .iter()
+            .map(|e| e.n_edges as u64)
+            .fold(1u64, crate::util::lcm)
+    }
+
+    /// Neighbour multiplicities per node: (neighbor, n_edges) lists.
+    pub fn node_pairs(&self) -> Vec<Vec<(NodeId, u32)>> {
+        let mut out = vec![Vec::new(); self.n];
+        for e in &self.edges {
+            out[e.u].push((e.v, e.n_edges));
+            out[e.v].push((e.u, e.n_edges));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ring_overlay;
+    use crate::net::zoo;
+
+    fn gaia_multigraph(t: u32) -> Multigraph {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let overlay = ring_overlay(&net.connectivity_graph(&p));
+        Multigraph::construct(&overlay, &net, &p, t)
+    }
+
+    #[test]
+    fn every_pair_has_one_strong_edge() {
+        let mg = gaia_multigraph(5);
+        for e in &mg.edges {
+            assert!(e.n_edges >= 1, "pair ({},{}) lost its strong edge", e.u, e.v);
+            assert!(e.n_edges <= 5);
+        }
+    }
+
+    #[test]
+    fn t_equals_one_degenerates_to_overlay() {
+        // Paper Table 6: t=1 means no weak connections — pure RING.
+        let mg = gaia_multigraph(1);
+        assert!(mg.edges.iter().all(|e| e.n_edges == 1));
+        assert_eq!(mg.weak_edges(), 0);
+        assert_eq!(mg.s_max(), 1);
+    }
+
+    #[test]
+    fn longer_delay_more_edges() {
+        let mg = gaia_multigraph(5);
+        let min_pair = mg.edges.iter().min_by(|a, b| a.delay_ms.total_cmp(&b.delay_ms)).unwrap();
+        let max_pair = mg.edges.iter().max_by(|a, b| a.delay_ms.total_cmp(&b.delay_ms)).unwrap();
+        assert_eq!(min_pair.n_edges, 1, "d_min pair must round to 1 edge");
+        assert!(max_pair.n_edges >= min_pair.n_edges);
+        // Gaia has >5x delay spread on its ring -> the max pair saturates t.
+        assert_eq!(max_pair.n_edges, 5, "max-delay pair should hit t");
+    }
+
+    #[test]
+    fn multiplicity_monotone_in_t() {
+        let m3 = gaia_multigraph(3);
+        let m8 = gaia_multigraph(8);
+        for (a, b) in m3.edges.iter().zip(&m8.edges) {
+            assert!(b.n_edges >= a.n_edges);
+        }
+        assert!(m8.weak_edges() >= m3.weak_edges());
+    }
+
+    #[test]
+    fn s_max_divisible_by_all_multiplicities() {
+        let mg = gaia_multigraph(5);
+        let s = mg.s_max();
+        for e in &mg.edges {
+            assert_eq!(s % e.n_edges as u64, 0);
+        }
+        assert!(s <= 60, "LCM(1..=5) = 60 bound");
+    }
+
+    #[test]
+    fn d_min_is_minimum() {
+        let mg = gaia_multigraph(5);
+        for e in &mg.edges {
+            assert!(e.delay_ms >= mg.d_min_ms - 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "connected")]
+    fn rejects_disconnected_overlay() {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let g = Graph::new(net.n()); // no edges
+        Multigraph::construct(&g, &net, &p, 5);
+    }
+
+    #[test]
+    fn metro_clustered_networks_have_high_multiplicity() {
+        // Exodus: sub-ms intra-metro pairs next to ~60ms cross-country
+        // pairs -> many pairs saturate t (drives Table 3's isolated rate).
+        let net = zoo::exodus();
+        let p = DatasetProfile::femnist();
+        let overlay = ring_overlay(&net.connectivity_graph(&p));
+        let mg = Multigraph::construct(&overlay, &net, &p, 5);
+        let saturated = mg.edges.iter().filter(|e| e.n_edges == 5).count();
+        assert!(saturated > 0, "expected saturated pairs on exodus");
+        assert!(mg.weak_edges() > 0);
+    }
+}

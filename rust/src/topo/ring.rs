@@ -1,0 +1,72 @@
+//! RING baseline (Marfoq et al., NeurIPS'20): the Christofides ring over
+//! the delay-weighted connectivity graph, used identically every round.
+//! This is also the overlay the paper's multigraph is constructed from.
+
+use super::{RoundPlan, TopologyDesign};
+use crate::graph::{ring_overlay, Graph};
+use crate::net::{DatasetProfile, NetworkSpec};
+
+pub struct RingTopology {
+    overlay: Graph,
+}
+
+impl RingTopology {
+    pub fn new(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        let conn = net.connectivity_graph(profile);
+        RingTopology { overlay: ring_overlay(&conn) }
+    }
+
+    /// Build from an existing overlay (used by ablations that remove
+    /// silos from the RING overlay — paper Table 4).
+    pub fn from_overlay(overlay: Graph) -> Self {
+        RingTopology { overlay }
+    }
+}
+
+impl TopologyDesign for RingTopology {
+    fn name(&self) -> &str {
+        "ring"
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, _k: usize) -> RoundPlan {
+        RoundPlan::all_strong(&self.overlay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+
+    #[test]
+    fn ring_degree_two_everywhere() {
+        for net in [zoo::gaia(), zoo::amazon()] {
+            let r = RingTopology::new(&net, &DatasetProfile::femnist());
+            assert_eq!(r.overlay().edges().len(), net.n());
+            for i in 0..net.n() {
+                assert_eq!(r.overlay().degree(i), 2, "{} node {i}", net.name);
+            }
+            assert!(r.overlay().is_connected());
+        }
+    }
+
+    #[test]
+    fn ring_prefers_short_geo_hops() {
+        // The Christofides ring over Gaia should be much shorter than a
+        // random order: compare against the worst-case "zigzag" bound.
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let r = RingTopology::new(&net, &p);
+        let conn = net.connectivity_graph(&p);
+        let ring_len = r.overlay().total_weight();
+        let max_edge = conn.edges().iter().map(|e| e.w).fold(0.0, f64::max);
+        assert!(
+            ring_len < max_edge * net.n() as f64 * 0.6,
+            "ring {ring_len} not better than zigzag bound"
+        );
+    }
+}

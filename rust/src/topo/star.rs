@@ -1,0 +1,96 @@
+//! STAR baseline: a central orchestrator averages all models every round
+//! (client-server FedAvg topology). The hub is chosen to minimize the
+//! worst silo↔hub delay (the betweenness-flavoured choice of [3]).
+
+use super::{RoundPlan, TopologyDesign};
+use crate::graph::Graph;
+use crate::net::{DatasetProfile, NetworkSpec};
+
+pub struct StarTopology {
+    overlay: Graph,
+    hub: usize,
+}
+
+impl StarTopology {
+    /// Hub = argmin over candidates of max one-way latency to any silo.
+    pub fn new(net: &NetworkSpec, _profile: &DatasetProfile) -> Self {
+        let n = net.n();
+        assert!(n >= 2);
+        let hub = (0..n)
+            .min_by(|&a, &b| {
+                let worst = |h: usize| {
+                    (0..n)
+                        .filter(|&i| i != h)
+                        .map(|i| net.latency_ms(i, h))
+                        .fold(0.0, f64::max)
+                };
+                worst(a).total_cmp(&worst(b))
+            })
+            .unwrap();
+        let mut overlay = Graph::new(n);
+        for i in 0..n {
+            if i != hub {
+                overlay.add_edge(hub, i, net.latency_ms(hub, i));
+            }
+        }
+        StarTopology { overlay, hub }
+    }
+
+    pub fn hub(&self) -> usize {
+        self.hub
+    }
+}
+
+impl TopologyDesign for StarTopology {
+    fn name(&self) -> &str {
+        "star"
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, _k: usize) -> RoundPlan {
+        RoundPlan::all_strong(&self.overlay)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+
+    #[test]
+    fn star_has_n_minus_1_edges_through_hub() {
+        let net = zoo::gaia();
+        let s = StarTopology::new(&net, &DatasetProfile::femnist());
+        assert_eq!(s.overlay().edges().len(), net.n() - 1);
+        assert_eq!(s.overlay().degree(s.hub()), net.n() - 1);
+        for i in 0..net.n() {
+            if i != s.hub() {
+                assert_eq!(s.overlay().degree(i), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn hub_is_centrally_located() {
+        // For Gaia's region set the minimax hub must be a northern-
+        // hemisphere site, not Sydney or São Paulo.
+        let net = zoo::gaia();
+        let s = StarTopology::new(&net, &DatasetProfile::femnist());
+        let name = &net.silos[s.hub()].name;
+        assert!(name != "sydney" && name != "sao_paulo", "hub = {name}");
+    }
+
+    #[test]
+    fn plan_is_static_all_strong() {
+        let net = zoo::gaia();
+        let mut s = StarTopology::new(&net, &DatasetProfile::femnist());
+        let p0 = s.plan(0);
+        let p9 = s.plan(9);
+        assert_eq!(p0.edges.len(), p9.edges.len());
+        assert!(p0.isolated_nodes().is_empty());
+        assert_eq!(s.period(), Some(1));
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser: subcommand + `--flag value` pairs + `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: a subcommand, positional args, and flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.flags.get(name) {
+            Some(v) => v.parse::<T>().with_context(|| format!("--{name} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn require_sub(&self, usage: &str) -> Result<&str> {
+        match &self.subcommand {
+            Some(s) => Ok(s),
+            None => bail!("missing subcommand\n{usage}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table1 --rounds 640 --t=5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.get::<usize>("rounds", 0).unwrap(), 640);
+        assert_eq!(a.get::<u32>("t", 0).unwrap(), 5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_positional() {
+        let a = parse("train cfg.toml --csv out.csv");
+        assert_eq!(a.positional, vec!["cfg.toml"]);
+        assert_eq!(a.get_str("csv", ""), "out.csv");
+        assert_eq!(a.get::<usize>("rounds", 99).unwrap(), 99);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("x --n abc");
+        assert!(a.get::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("x --flag");
+        assert!(a.has("flag"));
+        assert_eq!(a.flag("flag"), None);
+    }
+}

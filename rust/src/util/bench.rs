@@ -1,0 +1,75 @@
+//! Micro-bench harness for `cargo bench` targets (`harness = false`):
+//! warmup + timed iterations with mean/σ/min, plus simple table output.
+//! Criterion is unavailable offline; this keeps the same discipline
+//! (warmup, multiple samples, report spread) at a fraction of the size.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter  (±{:.3}, min {:.3}, n={})",
+            self.name, self.mean_ms, self.std_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs + `iters` measured runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / iters as f64;
+    let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        std_ms: var.sqrt(),
+        min_ms: min,
+    };
+    println!("{}", m.report());
+    m
+}
+
+/// Standard bench header so all bench binaries look alike.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = bench("noop-ish", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_ms >= 0.0);
+        assert!(m.min_ms <= m.mean_ms + 1e-9);
+        assert_eq!(m.iters, 5);
+    }
+}

@@ -1,0 +1,56 @@
+//! In-tree substrates for the offline build: PRNG, JSON, number theory,
+//! CLI argument parsing, and the micro-bench harness used by
+//! `rust/benches/` (the environment vendors only the `xla` closure; see
+//! DESIGN.md §Substitutions).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng64;
+
+/// Greatest common divisor (Euclid).
+pub fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Least common multiple; saturates instead of overflowing (schedules
+/// with astronomically long periods are handled lazily anyway).
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).saturating_mul(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(1, 9), 9);
+        assert_eq!(lcm(0, 9), 0);
+    }
+
+    #[test]
+    fn lcm_of_1_to_5_is_60() {
+        let l = (1..=5u64).fold(1, lcm);
+        assert_eq!(l, 60);
+    }
+
+    #[test]
+    fn lcm_saturates() {
+        assert_eq!(lcm(u64::MAX, u64::MAX - 1), u64::MAX);
+    }
+}

@@ -1,0 +1,198 @@
+//! Integration: AOT artifacts -> PJRT runtime -> numerics.
+//!
+//! These tests exercise the exact artifact path the coordinator uses:
+//! load HLO text, compile on the CPU PJRT client, execute train / eval /
+//! init / aggregate, and check the numbers behave like the L2 model
+//! (loss ~ log C at init, decreases under SGD, aggregation is convex).
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message)
+//! when artifacts are missing so `cargo test` stays runnable pre-build.
+
+use mgfl::data::{Batch, SyntheticTask};
+use mgfl::fl::Partition;
+use mgfl::runtime::{aggregate_native, artifacts_available, Manifest, ModelRuntime};
+use mgfl::util::Rng64;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // cargo test runs from the workspace root.
+    mgfl::runtime::default_artifacts_dir()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+fn mlp() -> ModelRuntime {
+    ModelRuntime::load(artifacts_dir(), "femnist_mlp").expect("load femnist_mlp artifacts")
+}
+
+fn train_batch(rt: &ModelRuntime, seed: u64) -> Batch {
+    let task = SyntheticTask::image(rt.entry.input_len(), rt.entry.num_classes, 7);
+    let part = Partition::iid(1, rt.entry.num_classes);
+    task.batch(&part, 0, rt.entry.train_batch, &mut Rng64::seed_from_u64(seed))
+}
+
+fn eval_batch(rt: &ModelRuntime, seed: u64) -> Batch {
+    let task = SyntheticTask::image(rt.entry.input_len(), rt.entry.num_classes, 7);
+    task.eval_batch(rt.entry.eval_batch, &mut Rng64::seed_from_u64(seed))
+}
+
+#[test]
+fn manifest_loads_and_lists_models() {
+    require_artifacts!();
+    let m = Manifest::load(artifacts_dir()).unwrap();
+    assert!(m.models.contains_key("femnist_mlp"), "{:?}", m.models.keys());
+    assert!(m.models.contains_key("femnist_cnn"));
+    let e = &m.models["femnist_mlp"];
+    assert_eq!(e.input_shape, vec![28, 28, 1]);
+    assert_eq!(e.num_classes, 62);
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    require_artifacts!();
+    let rt = mlp();
+    let a = rt.init_params(3).unwrap();
+    let b = rt.init_params(3).unwrap();
+    let c = rt.init_params(4).unwrap();
+    assert_eq!(a.len(), rt.param_count());
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    // He init: finite, zero-mean-ish, nonzero spread.
+    assert!(a.iter().all(|x| x.is_finite()));
+    let mean: f32 = a.iter().sum::<f32>() / a.len() as f32;
+    assert!(mean.abs() < 0.01, "{mean}");
+}
+
+#[test]
+fn initial_loss_near_log_c_and_training_reduces_it() {
+    require_artifacts!();
+    let rt = mlp();
+    let mut params = rt.init_params(0).unwrap();
+    let batch = train_batch(&rt, 1);
+    let (_, loss0) = rt.train_step(&params, &batch, 0.0).unwrap();
+    // softmax over 62 classes at init: loss ~ ln(62) = 4.127
+    assert!((loss0 - 62f32.ln()).abs() < 1.0, "init loss {loss0}");
+
+    let mut last = loss0;
+    for step in 0..20 {
+        let (p, l) = rt.train_step(&params, &batch, 0.1).unwrap();
+        params = p;
+        last = l;
+        assert!(l.is_finite(), "step {step} loss {l}");
+    }
+    assert!(last < 0.6 * loss0, "loss did not decrease: {loss0} -> {last}");
+}
+
+#[test]
+fn zero_lr_step_is_identity_on_params() {
+    require_artifacts!();
+    let rt = mlp();
+    let params = rt.init_params(5).unwrap();
+    let batch = train_batch(&rt, 2);
+    let (p2, _) = rt.train_step(&params, &batch, 0.0).unwrap();
+    assert_eq!(params, p2, "lr=0 must not move parameters");
+}
+
+#[test]
+fn eval_counts_are_sane_and_improve() {
+    require_artifacts!();
+    let rt = mlp();
+    let mut params = rt.init_params(1).unwrap();
+    let eb = eval_batch(&rt, 3);
+    let (loss_init, correct_init) = rt.eval_step(&params, &eb).unwrap();
+    assert!(correct_init >= 0.0 && correct_init <= rt.entry.eval_batch as f32);
+    assert!(loss_init.is_finite());
+
+    // Train on the same distribution; eval loss must drop.
+    let tb = train_batch(&rt, 4);
+    for _ in 0..30 {
+        params = rt.train_step(&params, &tb, 0.1).unwrap().0;
+    }
+    let (loss_after, _) = rt.eval_step(&params, &eb).unwrap();
+    assert!(loss_after < loss_init, "{loss_init} -> {loss_after}");
+}
+
+#[test]
+fn aggregate_matches_native_and_handles_padding() {
+    require_artifacts!();
+    let rt = mlp();
+    let a = rt.init_params(10).unwrap();
+    let b = rt.init_params(11).unwrap();
+    let c = rt.init_params(12).unwrap();
+    let weights = [0.5f32, 0.3, 0.2];
+    let models = [a.as_slice(), b.as_slice(), c.as_slice()];
+    let kernel = rt.aggregate(&weights, &models).unwrap();
+    let native = aggregate_native(&weights, &models);
+    assert_eq!(kernel.len(), native.len());
+    let max_err = kernel
+        .iter()
+        .zip(&native)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-5, "kernel vs native max err {max_err}");
+}
+
+#[test]
+fn aggregate_identity_on_single_model() {
+    require_artifacts!();
+    let rt = mlp();
+    let a = rt.init_params(20).unwrap();
+    let out = rt.aggregate(&[1.0], &[a.as_slice()]).unwrap();
+    let max_err = out.iter().zip(&a).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-6, "{max_err}");
+}
+
+#[test]
+fn aggregate_rejects_overflow_and_mismatch() {
+    require_artifacts!();
+    let rt = mlp();
+    let a = rt.init_params(0).unwrap();
+    let too_many: Vec<&[f32]> = (0..rt.entry.k_max + 1).map(|_| a.as_slice()).collect();
+    let w = vec![0.1f32; rt.entry.k_max + 1];
+    assert!(rt.aggregate(&w, &too_many).is_err());
+    assert!(rt.aggregate(&[0.5, 0.5], &[a.as_slice()]).is_err());
+    let short = vec![0.0f32; 3];
+    assert!(rt.aggregate(&[1.0], &[short.as_slice()]).is_err());
+}
+
+#[test]
+fn train_step_rejects_wrong_batch_shape() {
+    require_artifacts!();
+    let rt = mlp();
+    let params = rt.init_params(0).unwrap();
+    let bad = Batch { x_f32: vec![0.0; 10], x_i32: vec![], y: vec![0; 2] };
+    assert!(rt.train_step(&params, &bad, 0.1).is_err());
+}
+
+#[test]
+fn lstm_token_model_runs() {
+    require_artifacts!();
+    let rt = ModelRuntime::load(artifacts_dir(), "sentiment_lstm").expect("load lstm");
+    let task = SyntheticTask::tokens(rt.entry.input_len(), rt.entry.num_classes, 7);
+    let part = Partition::iid(1, rt.entry.num_classes);
+    let mut rng = Rng64::seed_from_u64(0);
+    let batch = task.batch(&part, 0, rt.entry.train_batch, &mut rng);
+    let mut params = rt.init_params(0).unwrap();
+    let (_, loss0) = rt.train_step(&params, &batch, 0.0).unwrap();
+    assert!((loss0 - 2f32.ln()).abs() < 0.5, "binary init loss {loss0}");
+    for _ in 0..15 {
+        params = rt.train_step(&params, &batch, 0.2).unwrap().0;
+    }
+    let (_, loss1) = rt.train_step(&params, &batch, 0.0).unwrap();
+    assert!(loss1 < loss0, "{loss0} -> {loss1}");
+}
+
+#[test]
+fn measured_t_c_is_positive() {
+    require_artifacts!();
+    let rt = mlp();
+    let batch = train_batch(&rt, 9);
+    let t_c = rt.measure_t_c_ms(&batch, 3).unwrap();
+    assert!(t_c > 0.0 && t_c < 60_000.0, "{t_c}");
+}

@@ -1,0 +1,188 @@
+//! Integration: topology designs x networks x delay simulator — the
+//! paper's qualitative claims as executable assertions, across all five
+//! evaluation networks and all three dataset profiles.
+
+use mgfl::config::{ExperimentConfig, TopologyKind};
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::simulate;
+use mgfl::topo::{ring::RingTopology, MultigraphTopology, TopologyDesign};
+
+const ROUNDS: usize = 640;
+
+/// Table 1's headline: the multigraph beats RING on every network and
+/// every dataset profile.
+#[test]
+fn ours_beats_ring_everywhere() {
+    for prof in DatasetProfile::all() {
+        for net in zoo::all_networks() {
+            let mut ring = RingTopology::new(&net, &prof);
+            let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
+            let r = simulate(&mut ring, &net, &prof, ROUNDS);
+            let o = simulate(&mut ours, &net, &prof, ROUNDS);
+            assert!(
+                o.mean_cycle_ms <= r.mean_cycle_ms + 1e-9,
+                "{}/{}: ours {:.1} vs ring {:.1}",
+                net.name,
+                prof.name,
+                o.mean_cycle_ms,
+                r.mean_cycle_ms
+            );
+        }
+    }
+}
+
+/// STAR is the slowest design on every network (server congestion).
+#[test]
+fn star_is_slowest_on_femnist() {
+    let prof = DatasetProfile::femnist();
+    for net in zoo::all_networks() {
+        let cfgs: Vec<(TopologyKind, f64)> = TopologyKind::all()
+            .into_iter()
+            .map(|kind| {
+                let cfg = ExperimentConfig {
+                    network: net.name.clone(),
+                    topology: kind,
+                    sim_rounds: ROUNDS,
+                    ..Default::default()
+                };
+                let mut topo = cfg.build_topology();
+                (kind, simulate(topo.as_mut(), &net, &prof, ROUNDS).mean_cycle_ms)
+            })
+            .collect();
+        let star = cfgs.iter().find(|(k, _)| *k == TopologyKind::Star).unwrap().1;
+        for (k, v) in &cfgs {
+            assert!(star >= *v - 1e-9, "{}: star {star:.1} < {k:?} {v:.1}", net.name);
+        }
+    }
+}
+
+/// MATCHA(+) waits for every matching, so it can never beat MATCHA.
+#[test]
+fn matcha_plus_not_faster_than_matcha() {
+    let prof = DatasetProfile::femnist();
+    for net in zoo::all_networks() {
+        let mut m = mgfl::topo::matcha::MatchaTopology::new(&net, &prof, 0.5, 17);
+        let mut mp = mgfl::topo::matcha::MatchaTopology::plus(&net, &prof, 17);
+        let rm = simulate(&mut m, &net, &prof, ROUNDS);
+        let rmp = simulate(&mut mp, &net, &prof, ROUNDS);
+        assert!(
+            rmp.mean_cycle_ms >= rm.mean_cycle_ms - 1e-9,
+            "{}: matcha+ {:.1} < matcha {:.1}",
+            net.name,
+            rmp.mean_cycle_ms,
+            rm.mean_cycle_ms
+        );
+    }
+}
+
+/// Table 6's monotonicity: cycle time is non-increasing in t (more weak
+/// edges -> more isolation -> shorter rounds), and t=1 equals RING.
+#[test]
+fn cycle_time_monotone_in_t_and_t1_is_ring() {
+    let prof = DatasetProfile::femnist();
+    let net = zoo::exodus();
+    let mut ring = RingTopology::new(&net, &prof);
+    let ring_ms = simulate(&mut ring, &net, &prof, ROUNDS).mean_cycle_ms;
+
+    let mut last = f64::MAX;
+    for t in [1u32, 3, 5, 8, 10] {
+        let mut ours = MultigraphTopology::from_network(&net, &prof, t);
+        let ms = simulate(&mut ours, &net, &prof, ROUNDS).mean_cycle_ms;
+        assert!(ms <= last * 1.05, "t={t}: {ms:.1} not <= {last:.1}");
+        last = ms;
+        if t == 1 {
+            assert!((ms - ring_ms).abs() < 1e-6, "t=1 {ms:.3} != ring {ring_ms:.3}");
+        }
+    }
+}
+
+/// Table 3's correlation: networks where more states isolate see larger
+/// cycle-time reductions vs RING.
+#[test]
+fn isolation_rate_correlates_with_speedup() {
+    let prof = DatasetProfile::femnist();
+    let mut rows = Vec::new();
+    for net in zoo::all_networks() {
+        let topo = MultigraphTopology::from_network(&net, &prof, 5);
+        let iso_frac =
+            topo.states_with_isolated(10_000).len() as f64 / topo.s_max().min(10_000) as f64;
+        let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
+        let mut ring = RingTopology::new(&net, &prof);
+        let o = simulate(&mut ours, &net, &prof, ROUNDS).mean_cycle_ms;
+        let r = simulate(&mut ring, &net, &prof, ROUNDS).mean_cycle_ms;
+        rows.push((net.name.clone(), iso_frac, r / o));
+    }
+    // Spearman-ish sanity: the max-isolation network must speed up more
+    // than the min-isolation network.
+    let max_iso = rows.iter().cloned().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    let min_iso = rows.iter().cloned().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    assert!(
+        max_iso.2 >= min_iso.2 * 0.8,
+        "isolation/speedup inversion: {rows:?}"
+    );
+    // And every network must actually have isolating states at t=5.
+    for (name, iso, _) in &rows {
+        assert!(*iso > 0.0, "{name} produced no isolated states");
+    }
+}
+
+/// The simulator agrees with the topology's own period: repeating the
+/// schedule produces a periodic cycle-time sequence after warmup.
+#[test]
+fn multigraph_cycle_times_are_periodic_after_warmup() {
+    let prof = DatasetProfile::femnist();
+    let net = zoo::gaia();
+    let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
+    let period = ours.s_max() as usize;
+    let res = simulate(&mut ours, &net, &prof, period * 4);
+    let a = &res.per_round_ms[period * 2..period * 3];
+    let b = &res.per_round_ms[period * 3..period * 4];
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < 1e-9, "offset {i}: {x} vs {y}");
+    }
+}
+
+/// Every design yields a connected overlay spanning all silos (isolated
+/// *rounds* are fine; a disconnected *overlay* would break consensus).
+#[test]
+fn all_overlays_connected_on_all_networks() {
+    let prof = DatasetProfile::femnist();
+    for net in zoo::all_networks() {
+        for kind in TopologyKind::all() {
+            let cfg = ExperimentConfig {
+                network: net.name.clone(),
+                topology: kind,
+                ..Default::default()
+            };
+            let topo = cfg.build_topology();
+            assert!(
+                topo.overlay().is_connected(),
+                "{} overlay disconnected on {}",
+                kind.as_str(),
+                net.name
+            );
+            assert_eq!(topo.overlay().n(), net.n());
+        }
+    }
+}
+
+/// Cross-profile consistency: heavier models (iNaturalist) produce
+/// longer cycle times than lighter ones (FEMNIST) for every topology.
+#[test]
+fn heavier_profiles_cost_more() {
+    let net = zoo::gaia();
+    for kind in TopologyKind::all() {
+        let run = |prof: &DatasetProfile| {
+            let cfg = ExperimentConfig {
+                network: "gaia".into(),
+                topology: kind,
+                ..Default::default()
+            };
+            let mut topo = cfg.build_topology();
+            simulate(topo.as_mut(), &net, prof, 120).mean_cycle_ms
+        };
+        let f = run(&DatasetProfile::femnist());
+        let i = run(&DatasetProfile::inaturalist());
+        assert!(i > f, "{}: inaturalist {i:.1} <= femnist {f:.1}", kind.as_str());
+    }
+}

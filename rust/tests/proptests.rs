@@ -1,0 +1,315 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state management). The offline build has no proptest crate, so
+//! randomized cases are driven by the in-tree xoshiro generator with a
+//! fixed seed per test (failures print the case index; reproduce by
+//! re-running — generation is fully deterministic).
+
+use mgfl::config::IsolatedPolicy;
+use mgfl::delay::{EdgeDelayState, EdgeType};
+use mgfl::fl::{round_actions, ConsensusMatrix, SiloAction};
+use mgfl::graph::{
+    christofides_cycle, degree_bounded_mst, eulerian_circuit, greedy_min_weight_matching,
+    matching_decomposition, prim_mst, Graph,
+};
+use mgfl::net::DatasetProfile;
+use mgfl::topo::{multigraph::Multigraph, states::parse_states_explicit, MultigraphTopology, RoundPlan};
+use mgfl::util::{lcm, Rng64};
+
+const CASES: usize = 60;
+
+/// Random connected metric-ish graph: complete with random point weights.
+fn random_complete(rng: &mut Rng64, n: usize) -> Graph {
+    let pts: Vec<(f64, f64)> =
+        (0..n).map(|_| (rng.gen_f64() * 100.0, rng.gen_f64() * 100.0)).collect();
+    Graph::complete(n, |u, v| {
+        let (x1, y1) = pts[u];
+        let (x2, y2) = pts[v];
+        ((x1 - x2).powi(2) + (y1 - y2).powi(2)).sqrt().max(0.1)
+    })
+}
+
+/// Random synthetic network spec over random geo coordinates.
+fn random_network(rng: &mut Rng64, n: usize) -> mgfl::net::NetworkSpec {
+    mgfl::net::NetworkSpec {
+        name: "prop".into(),
+        silos: (0..n)
+            .map(|i| {
+                mgfl::net::Silo::new(
+                    &format!("s{i}"),
+                    rng.gen_f64() * 120.0 - 60.0,
+                    rng.gen_f64() * 360.0 - 180.0,
+                )
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_mst_has_n_minus_1_edges_and_spans() {
+    let mut rng = Rng64::seed_from_u64(101);
+    for case in 0..CASES {
+        let n = rng.gen_range(2, 40);
+        let g = random_complete(&mut rng, n);
+        let t = prim_mst(&g);
+        assert_eq!(t.edges().len(), n - 1, "case {case}");
+        assert!(t.is_connected(), "case {case}");
+        // MST weight <= any spanning tree; spot-check vs a star.
+        let star: f64 = (1..n).map(|v| g.edge_weight(0, v).unwrap()).sum();
+        assert!(t.total_weight() <= star + 1e-9, "case {case}");
+    }
+}
+
+#[test]
+fn prop_degree_bounded_mst_respects_bound() {
+    let mut rng = Rng64::seed_from_u64(102);
+    for case in 0..CASES {
+        let n = rng.gen_range(3, 30);
+        let delta = rng.gen_range(2, 6);
+        let g = random_complete(&mut rng, n);
+        let t = degree_bounded_mst(&g, delta);
+        assert!(t.is_connected(), "case {case}");
+        // The fallback may relax the bound by 1 on adversarial inputs.
+        for u in 0..n {
+            assert!(t.degree(u) <= delta + 1, "case {case}: deg {u} = {}", t.degree(u));
+        }
+    }
+}
+
+#[test]
+fn prop_christofides_visits_every_node_once() {
+    let mut rng = Rng64::seed_from_u64(103);
+    for case in 0..CASES {
+        let n = rng.gen_range(2, 35);
+        let g = random_complete(&mut rng, n);
+        let cycle = christofides_cycle(&g);
+        assert_eq!(cycle.len(), n, "case {case}");
+        let set: std::collections::BTreeSet<_> = cycle.iter().collect();
+        assert_eq!(set.len(), n, "case {case}: repeated node");
+    }
+}
+
+#[test]
+fn prop_matching_is_perfect_and_disjoint() {
+    let mut rng = Rng64::seed_from_u64(104);
+    for case in 0..CASES {
+        let n = rng.gen_range(1, 15) * 2;
+        let nodes: Vec<usize> = (0..n).collect();
+        let pts: Vec<f64> = (0..n).map(|_| rng.gen_f64()).collect();
+        let m = greedy_min_weight_matching(&nodes, |u, v| (pts[u] - pts[v]).abs());
+        assert_eq!(m.len(), n / 2, "case {case}");
+        let mut seen = std::collections::BTreeSet::new();
+        for (u, v) in m {
+            assert!(seen.insert(u) && seen.insert(v), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_matching_decomposition_partitions_edges() {
+    let mut rng = Rng64::seed_from_u64(105);
+    for case in 0..CASES {
+        let n = rng.gen_range(3, 20);
+        let g = random_complete(&mut rng, n);
+        // Random sparse subset of edges.
+        let edges: Vec<(usize, usize, f64)> = g
+            .edges()
+            .iter()
+            .filter(|_| rng.gen_f64() < 0.4)
+            .map(|e| (e.u, e.v, e.w))
+            .collect();
+        let parts = matching_decomposition(&edges);
+        let total: usize = parts.iter().map(|m| m.len()).sum();
+        assert_eq!(total, edges.len(), "case {case}");
+        for m in &parts {
+            let mut seen = std::collections::BTreeSet::new();
+            for &(u, v, _) in m {
+                assert!(seen.insert(u) && seen.insert(v), "case {case}");
+            }
+        }
+        // Vizing-style bound: Δ+1 matchings suffice; greedy may use a
+        // bit more but never more than 2Δ (sanity ceiling).
+        let max_deg = edges
+            .iter()
+            .flat_map(|&(u, v, _)| [u, v])
+            .fold(std::collections::BTreeMap::<usize, usize>::new(), |mut m, x| {
+                *m.entry(x).or_default() += 1;
+                m
+            })
+            .into_values()
+            .max()
+            .unwrap_or(0);
+        assert!(parts.len() <= (2 * max_deg).max(1), "case {case}");
+    }
+}
+
+#[test]
+fn prop_euler_circuit_covers_every_edge_exactly_once() {
+    let mut rng = Rng64::seed_from_u64(106);
+    for case in 0..CASES {
+        // Build an even multigraph: union of 1-3 random cycles over n nodes.
+        let n = rng.gen_range(3, 12);
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for _ in 0..rng.gen_range(1, 4) {
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            for i in 0..n {
+                edges.push((order[i], order[(i + 1) % n]));
+            }
+        }
+        let circuit = eulerian_circuit(n, &edges);
+        assert_eq!(circuit.len(), edges.len() + 1, "case {case}");
+        assert_eq!(circuit.first(), circuit.last(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_multigraph_construction_invariants() {
+    let mut rng = Rng64::seed_from_u64(107);
+    for case in 0..CASES {
+        let n = rng.gen_range(3, 25);
+        let t = rng.gen_range(1, 9) as u32;
+        let net = random_network(&mut rng, n);
+        let prof = DatasetProfile::femnist();
+        let conn = net.connectivity_graph(&prof);
+        let overlay = mgfl::graph::ring_overlay(&conn);
+        let mg = Multigraph::construct(&overlay, &net, &prof, t);
+
+        // Multiplicities in [1, t]; d_min pair at multiplicity 1.
+        assert!(mg.edges.iter().all(|e| (1..=t).contains(&e.n_edges)), "case {case}");
+        let min_e = mg.edges.iter().min_by(|a, b| a.delay_ms.total_cmp(&b.delay_ms)).unwrap();
+        assert_eq!(min_e.n_edges, 1, "case {case}");
+        // s_max = LCM of multiplicities.
+        let want = mg.edges.iter().map(|e| e.n_edges as u64).fold(1, lcm);
+        assert_eq!(mg.s_max(), want, "case {case}");
+    }
+}
+
+#[test]
+fn prop_states_closed_form_equals_algorithm2() {
+    let mut rng = Rng64::seed_from_u64(108);
+    for case in 0..30 {
+        let n = rng.gen_range(3, 15);
+        let t = rng.gen_range(1, 6) as u32;
+        let net = random_network(&mut rng, n);
+        let prof = DatasetProfile::femnist();
+        let topo = MultigraphTopology::from_network(&net, &prof, t);
+        let explicit = parse_states_explicit(topo.multigraph(), 120);
+        for st in &explicit {
+            let plan = topo.plan_for_state(st.index);
+            assert_eq!(plan.edges, st.edges, "case {case} state {}", st.index);
+            assert_eq!(plan.isolated_nodes(), st.isolated, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_round_actions_weights_always_sum_to_one() {
+    let mut rng = Rng64::seed_from_u64(109);
+    for case in 0..CASES {
+        let n = rng.gen_range(3, 20);
+        let net = random_network(&mut rng, n);
+        let prof = DatasetProfile::femnist();
+        let t = rng.gen_range(2, 7) as u32;
+        let mut topo = MultigraphTopology::from_network(&net, &prof, t);
+        let consensus = ConsensusMatrix::metropolis(
+            mgfl::topo::TopologyDesign::overlay(&topo),
+        );
+        for k in 0..topo.s_max().min(20) as usize {
+            let plan = mgfl::topo::TopologyDesign::plan(&mut topo, k);
+            for policy in [IsolatedPolicy::StaleAggregate, IsolatedPolicy::Skip] {
+                let actions = round_actions(&plan, &consensus, policy);
+                assert_eq!(actions.len(), n);
+                for (i, a) in actions.iter().enumerate() {
+                    if let SiloAction::Aggregate { row, .. } = a {
+                        let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+                        assert!((sum - 1.0).abs() < 1e-9, "case {case} round {k} silo {i}");
+                        // Self must participate.
+                        assert!(row.iter().any(|&(j, _)| j == i), "case {case}");
+                        // All weights non-negative.
+                        assert!(row.iter().all(|&(_, w)| w >= -1e-12), "case {case}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_isolated_nodes_never_wait() {
+    let mut rng = Rng64::seed_from_u64(110);
+    for case in 0..CASES {
+        let n = rng.gen_range(3, 18);
+        let net = random_network(&mut rng, n);
+        let prof = DatasetProfile::femnist();
+        let mut topo = MultigraphTopology::from_network(&net, &prof, 5);
+        let consensus =
+            ConsensusMatrix::metropolis(mgfl::topo::TopologyDesign::overlay(&topo));
+        for k in 0..topo.s_max().min(30) as usize {
+            let plan = mgfl::topo::TopologyDesign::plan(&mut topo, k);
+            let isolated: std::collections::BTreeSet<_> =
+                plan.isolated_nodes().into_iter().collect();
+            let actions = round_actions(&plan, &consensus, IsolatedPolicy::StaleAggregate);
+            for (i, a) in actions.iter().enumerate() {
+                if let SiloAction::Aggregate { wait, .. } = a {
+                    if isolated.contains(&i) {
+                        assert!(!wait, "case {case}: isolated {i} waits at round {k}");
+                    } else {
+                        assert!(wait, "case {case}: strong node {i} not waiting");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_delay_state_bounded_by_d0() {
+    let mut rng = Rng64::seed_from_u64(111);
+    let prof = DatasetProfile::femnist();
+    for case in 0..CASES {
+        let d0 = 1.0 + rng.gen_f64() * 200.0;
+        let mut st = EdgeDelayState::new(d0);
+        for step in 0..500 {
+            let ty = if rng.gen_f64() < 0.4 { EdgeType::Strong } else { EdgeType::Weak };
+            let tau = rng.gen_f64() * 100.0;
+            let d = st.strong_delay_ms(&prof);
+            assert!(
+                d <= d0 + 1e-9 && d >= prof.t_c_ms * prof.u as f64 - 1e-9,
+                "case {case} step {step}: {d} not in [T_c, {d0}]"
+            );
+            st.advance(ty, tau, &prof);
+        }
+    }
+}
+
+#[test]
+fn prop_round_plan_isolated_consistency() {
+    // isolated_nodes() must be exactly the nodes with edges but no
+    // strong edges, for arbitrary random plans.
+    let mut rng = Rng64::seed_from_u64(112);
+    for case in 0..CASES {
+        let n = rng.gen_range(2, 25);
+        let mut edges = Vec::new();
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if rng.gen_f64() < 0.3 {
+                    let ty = if rng.gen_f64() < 0.5 { EdgeType::Strong } else { EdgeType::Weak };
+                    edges.push((u, v, ty));
+                }
+            }
+        }
+        let plan = RoundPlan { n, edges: edges.clone() };
+        let iso = plan.isolated_nodes();
+        for i in 0..n {
+            let has_edge = edges.iter().any(|&(u, v, _)| u == i || v == i);
+            let has_strong = edges
+                .iter()
+                .any(|&(u, v, ty)| (u == i || v == i) && ty == EdgeType::Strong);
+            assert_eq!(
+                iso.contains(&i),
+                has_edge && !has_strong,
+                "case {case} node {i}"
+            );
+        }
+    }
+}
