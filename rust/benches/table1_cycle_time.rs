@@ -1,47 +1,58 @@
 //! Bench: regenerate paper Table 1 — cycle time (ms) for every topology
-//! x network x dataset at 6400 rounds — and time the simulator itself.
+//! x network x dataset — through the parallel sweep engine, report the
+//! serial-vs-parallel wall-clock speedup, and time the simulator hot
+//! loop.
 //!
-//! Run: `cargo bench --bench table1_cycle_time`
-//! Override rounds: `MGFL_BENCH_ROUNDS=640 cargo bench ...`
+//! Run: `cargo bench --bench table1_cycle_time -- --rounds 50 --threads 0`
+//! (`MGFL_BENCH_ROUNDS` is honored when no `--rounds` flag is given;
+//! default 6400, the paper's setting.)
 
-use mgfl::metrics::render_table;
 use mgfl::net::{zoo, DatasetProfile};
 use mgfl::simtime::simulate;
+use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
+use mgfl::util::args::Args;
 use mgfl::util::bench;
 
-fn rounds() -> usize {
+fn env_rounds() -> usize {
     std::env::var("MGFL_BENCH_ROUNDS").ok().and_then(|s| s.parse().ok()).unwrap_or(6400)
 }
 
 fn main() {
-    let rounds = rounds();
+    // `cargo bench` may forward a bare `--bench` flag; Args treats it as
+    // an ignored boolean.
+    let args = Args::from_env();
+    let rounds: usize = args.get("rounds", env_rounds()).expect("--rounds takes an integer");
+    let threads: usize = args.get("threads", 0).expect("--threads takes an integer");
     bench::header(&format!("Table 1 — cycle time, {rounds} rounds (paper: 6400)"));
 
-    for prof in DatasetProfile::all() {
-        let mut rows = Vec::new();
-        for net in zoo::all_networks() {
-            let mut row = vec![net.name.clone()];
-            let mut ring = f64::NAN;
-            for mut topo in mgfl::all_topologies(&net, &prof, 5, 17) {
-                let res = simulate(topo.as_mut(), &net, &prof, rounds);
-                if topo.name() == "ring" {
-                    ring = res.mean_cycle_ms;
-                }
-                row.push(format!("{:.1}", res.mean_cycle_ms));
-            }
-            let ours: f64 = row.last().unwrap().parse().unwrap();
-            row.push(format!("(v{:.1})", ring / ours));
-            rows.push(row);
-        }
-        println!("\n--- {} ---", prof.name);
+    let profiles: Vec<String> = DatasetProfile::all().iter().map(|p| p.name.clone()).collect();
+    let spec = SweepSpec::table1(profiles, 5, rounds);
+
+    // Parallel sweep: the path `mgfl table1` takes.
+    let par = sweep::run(&spec, &RunOptions { threads, progress: false }).expect("sweep run");
+    for prof in &spec.profiles {
+        println!("\n--- {prof} ---");
         print!(
             "{}",
-            render_table(
-                &["network", "STAR", "MATCHA", "MATCHA+", "MST", "d-MBST", "RING", "OURS", "vsRING"],
-                &rows
-            )
+            par.report.render_slice(Axis::Network, Axis::Topology, |c| &c.profile == prof)
         );
     }
+
+    // Serial reference over the identical grid: the engine's wall-clock
+    // speedup is this bench's headline number, and byte-identical
+    // artifacts across thread counts are re-checked for free.
+    let ser = sweep::run(&spec, &RunOptions { threads: 1, progress: false }).expect("sweep run");
+    let identical = ser.report.to_json().to_string() == par.report.to_json().to_string();
+    println!(
+        "\nsweep engine: {} cells | serial {:.2} s | parallel {:.2} s on {} threads \
+         | speedup {:.2}x | artifacts identical: {identical}",
+        par.report.cells.len(),
+        ser.host_elapsed_ms / 1e3,
+        par.host_elapsed_ms / 1e3,
+        par.threads,
+        ser.host_elapsed_ms / par.host_elapsed_ms.max(1e-9),
+    );
+    assert!(identical, "sweep artifacts must not depend on thread count");
 
     // Simulator throughput (the L3 hot loop without PJRT).
     bench::header("simulator throughput");

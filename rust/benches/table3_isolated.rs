@@ -29,8 +29,17 @@ fn main() {
             net.name.clone(),
             format!("{}", net.n()),
             format!("{}/{}", res.rounds_with_isolated, rounds),
-            format!("{}/{} ({:.1}%)", iso_states, s_max, 100.0 * iso_states as f64 / s_max as f64),
-            format!("{:.1} (v{:.1})", res.mean_cycle_ms, ring_res.mean_cycle_ms / res.mean_cycle_ms),
+            format!(
+                "{}/{} ({:.1}%)",
+                iso_states,
+                s_max,
+                100.0 * iso_states as f64 / s_max as f64
+            ),
+            format!(
+                "{:.1} (v{:.1})",
+                res.mean_cycle_ms,
+                ring_res.mean_cycle_ms / res.mean_cycle_ms
+            ),
         ]);
     }
     print!(

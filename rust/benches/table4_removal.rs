@@ -62,7 +62,9 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(6400);
-    bench::header(&format!("Table 4 — silo removal vs multigraph (Exodus, FEMNIST, {rounds} rounds)"));
+    bench::header(&format!(
+        "Table 4 — silo removal vs multigraph (Exodus, FEMNIST, {rounds} rounds)"
+    ));
 
     let net = zoo::exodus();
     let prof = DatasetProfile::femnist();

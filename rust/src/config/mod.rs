@@ -236,7 +236,9 @@ impl ExperimentConfig {
                         other => bail!("line {}: unknown [train] key '{other}'", lineno + 1),
                     }
                 }
-                (sec, other) => bail!("line {}: unknown key '{other}' in section '[{sec}]'", lineno + 1),
+                (sec, other) => {
+                    bail!("line {}: unknown key '{other}' in section '[{sec}]'", lineno + 1)
+                }
             }
         }
         Ok(cfg)
@@ -303,12 +305,8 @@ impl ExperimentConfig {
     }
 
     pub fn resolve_profile(&self) -> Result<crate::net::DatasetProfile> {
-        match self.profile.as_str() {
-            "femnist" => Ok(crate::net::DatasetProfile::femnist()),
-            "sentiment140" => Ok(crate::net::DatasetProfile::sentiment140()),
-            "inaturalist" => Ok(crate::net::DatasetProfile::inaturalist()),
-            other => bail!("unknown profile '{other}'"),
-        }
+        crate::net::DatasetProfile::by_name(&self.profile)
+            .ok_or_else(|| anyhow::anyhow!("unknown profile '{}'", self.profile))
     }
 
     /// Build the configured topology design.

@@ -104,7 +104,18 @@ impl Trainer {
             })
             .collect();
 
-        Ok(Trainer { runtime, topo, net, profile, consensus, task, partition, cfg, silos, round: 0 })
+        Ok(Trainer {
+            runtime,
+            topo,
+            net,
+            profile,
+            consensus,
+            task,
+            partition,
+            cfg,
+            silos,
+            round: 0,
+        })
     }
 
     pub fn num_silos(&self) -> usize {

@@ -31,6 +31,21 @@
 //! let result = simulate(&mut ours, &net, &profile, 6400);
 //! println!("mean cycle time: {:.1} ms", result.mean_cycle_ms);
 //! ```
+//!
+//! ## Sweeps
+//!
+//! Paper tables are grids of independent simulations; the [`sweep`]
+//! engine runs any such grid across threads and writes deterministic
+//! JSON/CSV artifacts (`mgfl sweep spec.toml` from the CLI):
+//!
+//! ```no_run
+//! use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
+//!
+//! let spec = SweepSpec::table1(vec!["femnist".into()], 5, 6400);
+//! let outcome = sweep::run(&spec, &RunOptions { threads: 0, progress: true }).unwrap();
+//! outcome.report.write_artifacts("results").unwrap();
+//! print!("{}", outcome.report.render_slice(Axis::Network, Axis::Topology, |_| true));
+//! ```
 
 pub mod config;
 pub mod coordinator;
@@ -42,6 +57,7 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod simtime;
+pub mod sweep;
 pub mod topo;
 pub mod util;
 
@@ -53,12 +69,14 @@ pub fn all_topologies(
     t: u32,
     seed: u64,
 ) -> Vec<Box<dyn topo::TopologyDesign>> {
+    use topo::delta_mbst::{DeltaMbstTopology, DEFAULT_DELTA};
+    use topo::matcha::{MatchaTopology, DEFAULT_BUDGET};
     vec![
         Box::new(topo::star::StarTopology::new(net, profile)),
-        Box::new(topo::matcha::MatchaTopology::new(net, profile, topo::matcha::DEFAULT_BUDGET, seed)),
-        Box::new(topo::matcha::MatchaTopology::plus(net, profile, seed)),
+        Box::new(MatchaTopology::new(net, profile, DEFAULT_BUDGET, seed)),
+        Box::new(MatchaTopology::plus(net, profile, seed)),
         Box::new(topo::mst::MstTopology::new(net, profile)),
-        Box::new(topo::delta_mbst::DeltaMbstTopology::new(net, profile, topo::delta_mbst::DEFAULT_DELTA)),
+        Box::new(DeltaMbstTopology::new(net, profile, DEFAULT_DELTA)),
         Box::new(topo::ring::RingTopology::new(net, profile)),
         Box::new(topo::MultigraphTopology::from_network(net, profile, t)),
     ]

@@ -1,14 +1,18 @@
 //! `mgfl` — CLI for the multigraph cross-silo FL framework.
 //!
 //! Subcommands regenerate each paper table/figure (see DESIGN.md §6) or
-//! run ad-hoc simulations and real training.
+//! run ad-hoc simulations and real training. Every simulation-grid
+//! subcommand (`table1/3/4/6`, `sweep`) is a thin adapter over the
+//! parallel sweep engine ([`mgfl::sweep`]): it expands a grid, runs the
+//! cells across threads, and renders slices of the report.
 
 use anyhow::Result;
 
 use mgfl::config::{ExperimentConfig, TopologyKind, TrainConfig};
 use mgfl::metrics::render_table;
 use mgfl::net::{zoo, DatasetProfile};
-use mgfl::simtime::simulate;
+use mgfl::simtime::{simulate, simulate_summary};
+use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
 use mgfl::topo::{MultigraphTopology, TopologyDesign};
 use mgfl::util::args::Args;
 
@@ -19,25 +23,26 @@ USAGE: mgfl <subcommand> [--flag value ...]
 
 SUBCOMMANDS
   simulate  --network gaia --profile femnist --topology multigraph --t 5 --rounds 6400 --seed 17
+  sweep     [spec.toml] [--threads 0] [--out results] [--name sweep] [--rounds 6400]
+            [--topologies all|a,b] [--networks all|a,b] [--profiles all|a,b]
+            [--t 1,3,5] [--seeds 17,18]
   train     <config.toml> [--eval-every 10] [--csv out.csv]
-  table1    [--rounds 6400] [--t 5] [--profile femnist]
+  table1    [--rounds 6400] [--t 5] [--profile femnist] [--threads 0]
   table2
-  table3    [--rounds 6400] [--t 5]
-  table4    [--rounds 6400] [--train-rounds 0]
+  table3    [--rounds 6400] [--t 5] [--threads 0]
+  table4    [--rounds 6400] [--train-rounds 0] [--threads 0]
   table5    [--rounds 40] [--model femnist_mlp] [--network gaia]
-  table6    [--rounds 6400] [--train-rounds 0]
+  table6    [--rounds 6400] [--train-rounds 0] [--threads 0]
   fig1      [--rounds 6400] [--train-rounds 30] [--model femnist_mlp]
   fig4      [--t 3]
   fig5      [--rounds 40] [--model femnist_mlp] [--network exodus] [--out results]
+
+`--threads 0` means one worker per core; sweep artifacts are
+byte-identical for any thread count.
 ";
 
 fn resolve_profile(name: &str) -> Result<DatasetProfile> {
-    match name {
-        "femnist" => Ok(DatasetProfile::femnist()),
-        "sentiment140" => Ok(DatasetProfile::sentiment140()),
-        "inaturalist" => Ok(DatasetProfile::inaturalist()),
-        other => Err(anyhow::anyhow!("unknown profile {other}")),
-    }
+    DatasetProfile::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))
 }
 
 fn main() -> Result<()> {
@@ -88,6 +93,7 @@ fn run(args: Args) -> Result<()> {
                 res.total_ms / 1e3,
             );
         }
+        "sweep" => sweep_cmd(&args)?,
         "train" => {
             let config = args
                 .positional
@@ -118,31 +124,12 @@ fn run(args: Args) -> Result<()> {
                 eprintln!("trace -> {path}");
             }
         }
-        "table1" => {
-            let rounds: usize = args.get("rounds", 6400)?;
-            let t: u32 = args.get("t", 5)?;
-            let profile = args.flag("profile").map(String::from);
-            let profiles = match profile {
-                Some(p) => vec![resolve_profile(&p)?],
-                None => DatasetProfile::all(),
-            };
-            for prof in profiles {
-                println!("\n== Table 1 — {} (cycle time, ms; {} rounds) ==", prof.name, rounds);
-                let mut rows = Vec::new();
-                for net in zoo::all_networks() {
-                    let mut row = vec![net.name.clone()];
-                    for mut topo in mgfl::all_topologies(&net, &prof, t, 17) {
-                        let res = simulate(topo.as_mut(), &net, &prof, rounds);
-                        row.push(format!("{:.1}", res.mean_cycle_ms));
-                    }
-                    rows.push(row);
-                }
-                let headers = [
-                    "network", "STAR", "MATCHA", "MATCHA+", "MST", "d-MBST", "RING", "OURS",
-                ];
-                print!("{}", render_table(&headers, &rows));
-            }
-        }
+        "table1" => table1(
+            args.get("rounds", 6400)?,
+            args.get("t", 5)?,
+            args.flag("profile").map(String::from),
+            args.get("threads", 0)?,
+        )?,
         "table2" => {
             let manifest = mgfl::runtime::Manifest::load(mgfl::runtime::default_artifacts_dir())?;
             let mut rows = Vec::new();
@@ -156,50 +143,27 @@ fn run(args: Args) -> Result<()> {
                 ]);
             }
             println!("== Table 2 — model statistics (from artifacts/manifest.json) ==");
-            print!("{}", render_table(&["model", "#params", "size MB", "batch", "classes"], &rows));
-        }
-        "table3" => {
-            let rounds: usize = args.get("rounds", 6400)?;
-            let t: u32 = args.get("t", 5)?;
-            let prof = DatasetProfile::femnist();
-            println!("== Table 3 — isolated nodes (FEMNIST, {} rounds, t={}) ==", rounds, t);
-            let mut rows = Vec::new();
-            for net in zoo::all_networks() {
-                let topo = MultigraphTopology::from_network(&net, &prof, t);
-                let s_max = topo.s_max();
-                let iso_states = topo.states_with_isolated(10_000).len();
-                let mut mtopo = MultigraphTopology::from_network(&net, &prof, t);
-                let res = simulate(&mut mtopo, &net, &prof, rounds);
-                let mut ring = mgfl::topo::ring::RingTopology::new(&net, &prof);
-                let ring_res = simulate(&mut ring, &net, &prof, rounds);
-                rows.push(vec![
-                    net.name.clone(),
-                    format!("{}", net.n()),
-                    format!("{}/{}", res.rounds_with_isolated, rounds),
-                    format!(
-                        "{}/{} ({:.1}%)",
-                        iso_states,
-                        s_max,
-                        100.0 * iso_states as f64 / s_max as f64
-                    ),
-                    format!("{:.1} (ring {:.1})", res.mean_cycle_ms, ring_res.mean_cycle_ms),
-                ]);
-            }
             print!(
                 "{}",
-                render_table(
-                    &["network", "silos", "#rounds iso", "#states iso", "cycle ms"],
-                    &rows
-                )
+                render_table(&["model", "#params", "size MB", "batch", "classes"], &rows)
             );
         }
-        "table4" => table4(args.get("rounds", 6400)?, args.get("train-rounds", 0)?)?,
+        "table3" => table3(args.get("rounds", 6400)?, args.get("t", 5)?, args.get("threads", 0)?)?,
+        "table4" => table4(
+            args.get("rounds", 6400)?,
+            args.get("train-rounds", 0)?,
+            args.get("threads", 0)?,
+        )?,
         "table5" => table5(
             args.get("rounds", 40)?,
             &args.get_str("model", "femnist_mlp"),
             &args.get_str("network", "gaia"),
         )?,
-        "table6" => table6(args.get("rounds", 6400)?, args.get("train-rounds", 0)?)?,
+        "table6" => table6(
+            args.get("rounds", 6400)?,
+            args.get("train-rounds", 0)?,
+            args.get("threads", 0)?,
+        )?,
         "fig1" => fig1(
             args.get("rounds", 6400)?,
             args.get("train-rounds", 30)?,
@@ -217,55 +181,233 @@ fn run(args: Args) -> Result<()> {
     Ok(())
 }
 
+/// `mgfl sweep`: run an arbitrary grid — from a TOML spec file, from
+/// axis flags, or both (flags override the file) — and write JSON/CSV
+/// artifacts.
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let defaults = SweepSpec::default();
+    let mut spec = match args.positional.first() {
+        Some(path) => SweepSpec::from_toml_file(path)?,
+        None => defaults.clone(),
+    };
+    if let Some(name) = args.flag("name") {
+        spec.name = name.to_string();
+    }
+    spec.rounds = args.get("rounds", spec.rounds)?;
+    if let Some(items) = args.get_list("topologies") {
+        spec.topologies = SweepSpec::parse_topologies(&items)?;
+    }
+    if let Some(items) = args.get_list("networks") {
+        spec.networks = SweepSpec::axis_or_all(items, &defaults.networks);
+    }
+    if let Some(items) = args.get_list("profiles") {
+        spec.profiles = SweepSpec::axis_or_all(items, &defaults.profiles);
+    }
+    if let Some(ts) = args.get_parsed_list::<u32>("t")? {
+        spec.t_values = ts;
+    }
+    if let Some(seeds) = args.get_parsed_list::<u64>("seeds")? {
+        spec.seeds = seeds;
+    }
+    // Canonicalize here too (not just inside sweep::run) so the slice
+    // filters below compare against the same names the report carries.
+    spec.canonicalize()?;
+    spec.validate()?;
+
+    let threads: usize = args.get("threads", 0)?;
+    eprintln!(
+        "sweep '{}': {} cells ({} topologies x {} networks x {} profiles x {} t x {} seeds, {} rounds)",
+        spec.name,
+        spec.cell_count(),
+        spec.topologies.len(),
+        spec.networks.len(),
+        spec.profiles.len(),
+        spec.t_values.len(),
+        spec.seeds.len(),
+        spec.rounds,
+    );
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    let (json_path, csv_path) = outcome.report.write_artifacts(args.get_str("out", "results"))?;
+
+    // One table per (profile, t) pair: a slice must only ever average
+    // over the seed axis, so multi-t specs get one grid per t instead of
+    // a silently t-averaged table.
+    for prof in &spec.profiles {
+        for &t in &spec.t_values {
+            let t_label =
+                if spec.t_values.len() > 1 { format!(", t={t}") } else { String::new() };
+            println!(
+                "\n== sweep '{}' — {}{} (mean cycle ms over seeds; {} rounds) ==",
+                spec.name, prof, t_label, spec.rounds
+            );
+            print!(
+                "{}",
+                outcome.report.render_slice(Axis::Network, Axis::Topology, |c| {
+                    &c.profile == prof && c.t == t
+                })
+            );
+        }
+    }
+    println!(
+        "\n{} cells in {:.2} s on {} threads ({:.1} cells/s)",
+        outcome.report.cells.len(),
+        outcome.host_elapsed_ms / 1e3,
+        outcome.threads,
+        outcome.cells_per_sec(),
+    );
+    println!("artifacts: {} | {}", json_path.display(), csv_path.display());
+    Ok(())
+}
+
+/// Table 1: the full (topology × network) cycle-time grid per profile,
+/// now one parallel sweep instead of a serial double loop.
+fn table1(rounds: usize, t: u32, profile: Option<String>, threads: usize) -> Result<()> {
+    let profiles = match profile {
+        Some(p) => vec![resolve_profile(&p)?.name],
+        None => DatasetProfile::all().iter().map(|p| p.name.clone()).collect(),
+    };
+    let spec = SweepSpec::table1(profiles, t, rounds);
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    for prof in &spec.profiles {
+        println!("\n== Table 1 — {prof} (cycle time, ms; {rounds} rounds) ==");
+        print!(
+            "{}",
+            outcome.report.render_slice(Axis::Network, Axis::Topology, |c| &c.profile == prof)
+        );
+    }
+    eprintln!(
+        "({} cells in {:.2} s on {} threads)",
+        outcome.report.cells.len(),
+        outcome.host_elapsed_ms / 1e3,
+        outcome.threads,
+    );
+    Ok(())
+}
+
+/// Table 3: isolated-node statistics per network. The multigraph/ring
+/// simulations run as a parallel sweep; the per-network state analysis
+/// (s_max, states with isolated nodes) is cheap and stays serial.
+fn table3(rounds: usize, t: u32, threads: usize) -> Result<()> {
+    let spec = SweepSpec {
+        name: "table3".into(),
+        topologies: vec![TopologyKind::Multigraph, TopologyKind::Ring],
+        profiles: vec!["femnist".into()],
+        t_values: vec![t],
+        rounds,
+        ..Default::default()
+    };
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    let prof = DatasetProfile::femnist();
+    println!("== Table 3 — isolated nodes (FEMNIST, {rounds} rounds, t={t}) ==");
+    let mut rows = Vec::new();
+    for net in zoo::all_networks() {
+        let res = outcome.report.cell("multigraph", &net.name, "femnist").expect("grid cell");
+        let ring = outcome.report.cell("ring", &net.name, "femnist").expect("grid cell");
+        let topo = MultigraphTopology::from_network(&net, &prof, t);
+        let s_max = topo.s_max();
+        let iso_states = topo.states_with_isolated(10_000).len();
+        rows.push(vec![
+            net.name.clone(),
+            format!("{}", net.n()),
+            format!("{}/{}", res.rounds_with_isolated, rounds),
+            format!(
+                "{}/{} ({:.1}%)",
+                iso_states,
+                s_max,
+                100.0 * iso_states as f64 / s_max as f64
+            ),
+            format!("{:.1} (ring {:.1})", res.mean_cycle_ms, ring.mean_cycle_ms),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &["network", "silos", "#rounds iso", "#states iso", "cycle ms"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+/// One Table 4 row to simulate: which overlay variant, built in-worker.
+struct RemovalCell {
+    method: String,
+    removed: String,
+    /// "ring" | "multigraph" | a removal criterion.
+    kind: String,
+    count: usize,
+}
+
 /// Table 4: remove silos from the RING overlay (randomly / most
-/// inefficient) vs the multigraph.
-fn table4(rounds: usize, train_rounds: usize) -> Result<()> {
+/// inefficient) vs the multigraph. All ten overlay variants simulate
+/// concurrently via the sweep engine's generic cell API; the optional
+/// accuracy column (real training) stays serial.
+fn table4(rounds: usize, train_rounds: usize, threads: usize) -> Result<()> {
     use mgfl::topo::ring::RingTopology;
     let net = zoo::exodus();
     let prof = DatasetProfile::femnist();
     println!("== Table 4 — silo removal vs multigraph (Exodus, FEMNIST) ==");
-    let mut rows: Vec<Vec<String>> = Vec::new();
 
-    let mut base = RingTopology::new(&net, &prof);
-    let base_res = simulate(&mut base, &net, &prof, rounds);
-    let acc = |topo_kind: &str, removed: usize| -> String {
+    let mut cells = vec![RemovalCell {
+        method: "RING baseline".into(),
+        removed: "-".into(),
+        kind: "ring".into(),
+        count: 0,
+    }];
+    for criterion in ["random", "inefficient"] {
+        for removed in [1usize, 5, 10, 20] {
+            cells.push(RemovalCell {
+                method: format!("RING {criterion} remove"),
+                removed: removed.to_string(),
+                kind: criterion.into(),
+                count: removed,
+            });
+        }
+    }
+    cells.push(RemovalCell {
+        method: "Multigraph (ours)".into(),
+        removed: "-".into(),
+        kind: "multigraph".into(),
+        count: 0,
+    });
+
+    let opts = RunOptions { threads, progress: true };
+    let summaries = sweep::run_cells(&cells, &opts, |_, cell| {
+        let mut topo: Box<dyn TopologyDesign> = match cell.kind.as_str() {
+            "ring" => Box::new(RingTopology::new(&net, &prof)),
+            "multigraph" => Box::new(MultigraphTopology::from_network(&net, &prof, 5)),
+            criterion => {
+                let overlay = RingTopology::new(&net, &prof);
+                let reduced = remove_silos(overlay.overlay(), &net, &prof, criterion, cell.count);
+                Box::new(RingTopology::from_overlay(reduced))
+            }
+        };
+        simulate_summary(topo.as_mut(), &net, &prof, rounds)
+    });
+
+    let acc = |kind: &str, removed: usize| -> String {
         if train_rounds == 0 {
             return String::new();
         }
-        train_removed_acc(topo_kind, removed, train_rounds)
+        train_removed_acc(kind, removed, train_rounds)
             .map_or(String::new(), |a| format!("{:.2}", a * 100.0))
     };
-    rows.push(vec![
-        "RING baseline".into(),
-        "-".into(),
-        format!("{:.1}", base_res.mean_cycle_ms),
-        acc("ring", 0),
-    ]);
-
-    for criterion in ["random", "inefficient"] {
-        for removed in [1usize, 5, 10, 20] {
-            let overlay = RingTopology::new(&net, &prof);
-            let reduced = remove_silos(overlay.overlay(), &net, &prof, criterion, removed);
-            let mut topo = RingTopology::from_overlay(reduced);
-            let res = simulate(&mut topo, &net, &prof, rounds);
-            rows.push(vec![
-                format!("RING {criterion} remove"),
-                format!("{removed}"),
-                format!("{:.1}", res.mean_cycle_ms),
-                acc(criterion, removed),
-            ]);
-        }
-    }
-
-    let mut ours = MultigraphTopology::from_network(&net, &prof, 5);
-    let ours_res = simulate(&mut ours, &net, &prof, rounds);
-    rows.push(vec![
-        "Multigraph (ours)".into(),
-        "-".into(),
-        format!("{:.1}", ours_res.mean_cycle_ms),
-        acc("multigraph", 0),
-    ]);
-    print!("{}", render_table(&["method", "#removed", "cycle ms", "acc %"], &rows));
+    let rows: Vec<Vec<String>> = cells
+        .iter()
+        .zip(&summaries)
+        .map(|(cell, s)| {
+            vec![
+                cell.method.clone(),
+                cell.removed.clone(),
+                format!("{:.1}", s.mean_cycle_ms),
+                acc(&cell.kind, cell.count),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        render_table(&["method", "#removed", "cycle ms", "acc %"], &rows)
+    );
     Ok(())
 }
 
@@ -376,22 +518,37 @@ fn table5(rounds: usize, model: &str, network: &str) -> Result<()> {
     Ok(())
 }
 
-/// Table 6: t sweep on Exodus/FEMNIST.
-fn table6(rounds: usize, train_rounds: usize) -> Result<()> {
+/// Table 6: t sweep on Exodus/FEMNIST — the multigraph grid runs as a
+/// parallel sweep over the t axis.
+fn table6(rounds: usize, train_rounds: usize, threads: usize) -> Result<()> {
     let net = zoo::exodus();
     let prof = DatasetProfile::femnist();
     println!("== Table 6 — cycle time vs t (Exodus, FEMNIST) ==");
     let mut ring = mgfl::topo::ring::RingTopology::new(&net, &prof);
-    let ring_res = simulate(&mut ring, &net, &prof, rounds);
+    let ring_res = simulate_summary(&mut ring, &net, &prof, rounds);
     let mut rows = vec![vec![
         "RING".into(),
         "-".into(),
         format!("{:.1}", ring_res.mean_cycle_ms),
         String::new(),
     ]];
-    for t in [1u32, 3, 5, 8, 10, 20, 30] {
-        let mut topo = MultigraphTopology::from_network(&net, &prof, t);
-        let res = simulate(&mut topo, &net, &prof, rounds);
+    let spec = SweepSpec {
+        name: "table6".into(),
+        topologies: vec![TopologyKind::Multigraph],
+        networks: vec!["exodus".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![1, 3, 5, 8, 10, 20, 30],
+        seeds: vec![17],
+        rounds,
+    };
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    for &t in &spec.t_values {
+        let res = outcome
+            .report
+            .cells
+            .iter()
+            .find(|c| c.t == t)
+            .expect("grid cell");
         let acc = if train_rounds > 0 {
             format!("{:.2}", train_t_acc(t, train_rounds)? * 100.0)
         } else {
@@ -422,7 +579,9 @@ fn train_t_acc(t: u32, rounds: usize) -> Result<f64> {
 fn fig1(rounds: usize, train_rounds: usize, model: &str) -> Result<()> {
     let net = zoo::exodus();
     let prof = DatasetProfile::femnist();
-    println!("== Fig. 1 — accuracy vs overhead time (Exodus cycle time x Gaia-trained accuracy) ==");
+    println!(
+        "== Fig. 1 — accuracy vs overhead time (Exodus cycle time x Gaia-trained accuracy) =="
+    );
     let mut rows = Vec::new();
     for kind in TopologyKind::all() {
         let cfg = ExperimentConfig {

@@ -156,6 +156,30 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     out
 }
 
+/// Render a pivot grid: one row per `row_keys` entry, one column per
+/// `col_keys` entry, the corner labelled `corner`, and every body cell
+/// produced by `cell(row, col)`. This is how sweep-report slices become
+/// paper-style tables (rows = networks, cols = topologies, …) without
+/// the caller hand-assembling string matrices.
+pub fn render_pivot(
+    corner: &str,
+    row_keys: &[String],
+    col_keys: &[String],
+    cell: impl Fn(&str, &str) -> String,
+) -> String {
+    let mut headers: Vec<&str> = vec![corner];
+    headers.extend(col_keys.iter().map(String::as_str));
+    let rows: Vec<Vec<String>> = row_keys
+        .iter()
+        .map(|r| {
+            let mut row = vec![r.clone()];
+            row.extend(col_keys.iter().map(|c| cell(r, c)));
+            row
+        })
+        .collect();
+    render_table(&headers, &rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +242,17 @@ mod tests {
         let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("topology").unwrap().as_str().unwrap(), "multigraph");
         assert_eq!(j.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn pivot_renders_every_cell() {
+        let rows = vec!["gaia".to_string(), "amazon".to_string()];
+        let cols = vec!["ring".to_string(), "multigraph".to_string()];
+        let s = render_pivot("network", &rows, &cols, |r, c| format!("{r}:{c}"));
+        assert!(s.contains("network"));
+        assert!(s.contains("gaia:ring"));
+        assert!(s.contains("amazon:multigraph"));
+        assert_eq!(s.lines().count(), 4);
     }
 
     #[test]

@@ -137,9 +137,26 @@ impl DatasetProfile {
         vec![Self::femnist(), Self::sentiment140(), Self::inaturalist()]
     }
 
+    /// Lookup by (case-insensitive) Table 2 name — the single resolver
+    /// shared by the config layer, the CLI, and the sweep engine.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "femnist" => Some(Self::femnist()),
+            "sentiment140" => Some(Self::sentiment140()),
+            "inaturalist" => Some(Self::inaturalist()),
+            _ => None,
+        }
+    }
+
     /// Profile from a built artifact manifest entry (real model, measured
     /// or default T_c) — used by the end-to-end training driver.
-    pub fn from_artifact(name: &str, param_count: usize, t_c_ms: f64, u: u32, batch: usize) -> Self {
+    pub fn from_artifact(
+        name: &str,
+        param_count: usize,
+        t_c_ms: f64,
+        u: u32,
+        batch: usize,
+    ) -> Self {
         DatasetProfile {
             name: name.into(),
             model_size_mbits: param_count as f64 * 32.0 / 1e6,

@@ -13,6 +13,17 @@
 
 pub mod manifest;
 
+// The `xla` PJRT bindings and their xla_extension C++ closure are
+// vendored in accelerator deployments, not fetchable from crates.io.
+// Default builds compile the API-compatible in-tree stub (fails at
+// client creation with a clear message; simulation/sweep paths never
+// touch it). `--features pjrt` compiles the stub out — add the vendored
+// `xla` crate to Cargo.toml alongside it.
+#[cfg(not(feature = "pjrt"))]
+mod xla_stub;
+#[cfg(not(feature = "pjrt"))]
+use xla_stub as xla;
+
 use std::path::Path;
 use std::time::Instant;
 
@@ -113,7 +124,11 @@ impl ModelRuntime {
         Ok(xla::Literal::vec1(params))
     }
 
-    fn batch_literal(&self, batch: &Batch, expect_b: usize) -> Result<(xla::Literal, xla::Literal)> {
+    fn batch_literal(
+        &self,
+        batch: &Batch,
+        expect_b: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
         let mut dims: Vec<i64> = vec![expect_b as i64];
         dims.extend(self.entry.input_shape.iter().map(|&d| d as i64));
         let x = match self.entry.input_dtype.as_str() {

@@ -120,6 +120,62 @@ impl DelayTracker {
     }
 }
 
+/// Compact simulation output: everything [`SimResult`] carries except the
+/// per-round trace. The sweep engine runs thousands of cells at 6400
+/// rounds each; dropping the per-round `Vec` keeps a full paper-grid
+/// sweep's resident set flat.
+#[derive(Debug, Clone)]
+pub struct SimSummary {
+    pub topology: String,
+    pub network: String,
+    pub profile: String,
+    pub rounds: usize,
+    pub mean_cycle_ms: f64,
+    pub total_ms: f64,
+    pub rounds_with_isolated: usize,
+    pub max_isolated: usize,
+}
+
+/// Like [`simulate`] but without recording the per-round trace.
+///
+/// Summation order over rounds is fixed (sequential accumulation), so for
+/// a given (topology, network, profile, rounds, seed) the result is
+/// bit-identical wherever it runs — the property the sweep determinism
+/// test pins down.
+pub fn simulate_summary(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> SimSummary {
+    assert!(rounds > 0);
+    let mut tracker = DelayTracker::new(net, profile);
+    let mut total_ms = 0.0;
+    let mut rounds_with_isolated = 0;
+    let mut max_isolated = 0;
+
+    for k in 0..rounds {
+        let plan = topo.plan(k);
+        let rt = tracker.step(&plan);
+        total_ms += rt.cycle_ms;
+        if rt.isolated > 0 {
+            rounds_with_isolated += 1;
+            max_isolated = max_isolated.max(rt.isolated);
+        }
+    }
+
+    SimSummary {
+        topology: topo.name().to_string(),
+        network: net.name.clone(),
+        profile: profile.name.clone(),
+        rounds,
+        mean_cycle_ms: total_ms / rounds as f64,
+        total_ms,
+        rounds_with_isolated,
+        max_isolated,
+    }
+}
+
 /// Simulate `rounds` communication rounds of `topo` on `net`/`profile`.
 ///
 /// Static all-strong designs reduce to the constant Eq. 3 max; the
@@ -220,7 +276,27 @@ mod tests {
         let mut ring = RingTopology::new(&net, &p);
         let s = simulate(&mut star, &net, &p, 20);
         let r = simulate(&mut ring, &net, &p, 20);
-        assert!(s.mean_cycle_ms > r.mean_cycle_ms, "star {} ring {}", s.mean_cycle_ms, r.mean_cycle_ms);
+        assert!(
+            s.mean_cycle_ms > r.mean_cycle_ms,
+            "star {} ring {}",
+            s.mean_cycle_ms,
+            r.mean_cycle_ms
+        );
+    }
+
+    #[test]
+    fn summary_matches_full_simulation_bitwise() {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let mut a = MultigraphTopology::from_network(&net, &p, 5);
+        let mut b = MultigraphTopology::from_network(&net, &p, 5);
+        let full = simulate(&mut a, &net, &p, 120);
+        let summary = simulate_summary(&mut b, &net, &p, 120);
+        assert_eq!(full.total_ms.to_bits(), summary.total_ms.to_bits());
+        assert_eq!(full.mean_cycle_ms.to_bits(), summary.mean_cycle_ms.to_bits());
+        assert_eq!(full.rounds_with_isolated, summary.rounds_with_isolated);
+        assert_eq!(full.max_isolated, summary.max_isolated);
+        assert_eq!(summary.topology, "multigraph");
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Parallel experiment-sweep engine.
+//!
+//! The paper's results (Tables 1–6, Fig. 5) are grids of
+//! (topology × network × profile × seed × t) simulations. Each grid cell
+//! owns its topology and [`crate::simtime::DelayTracker`], so cells are
+//! embarrassingly parallel: this module expands a [`SweepSpec`] into
+//! independent [`CellSpec`]s and maps them across a thread pool,
+//! preserving grid order in the output.
+//!
+//! Two pool implementations sit behind one order-preserving API:
+//! an in-tree scoped-thread pool (default — the offline build has no
+//! rayon) and rayon's work-stealing pool (`--features rayon`). Results
+//! are byte-identical across pools and thread counts because every cell
+//! seeds its own RNG stream from (base seed, cell coordinates) via
+//! [`crate::util::rng::derive_stream`] — never from execution order.
+
+pub mod report;
+pub mod spec;
+
+pub use report::{Axis, CellResult, SweepReport};
+pub use spec::{CellSpec, SweepSpec};
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::simtime::simulate_summary;
+
+/// How to execute a sweep (host-side knobs; never part of the artifact).
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Print `done/total` progress to stderr while running.
+    pub progress: bool,
+}
+
+/// Resolve the worker count: `0` means all available cores, and there is
+/// never a reason to spawn more workers than cells.
+pub fn effective_threads(requested: usize, cells: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 { hw } else { requested };
+    t.clamp(1, cells.max(1))
+}
+
+fn print_progress(done: usize, total: usize) {
+    let mut err = std::io::stderr().lock();
+    let _ = write!(err, "\r  sweep: {done}/{total} cells");
+    if done == total {
+        let _ = writeln!(err);
+    }
+    let _ = err.flush();
+}
+
+/// Order-preserving parallel map: `out[i] == f(i, &cells[i])` for every
+/// `i`, regardless of which worker ran which cell. This is the engine's
+/// core primitive; [`run`] feeds it grid cells, and adapters with
+/// non-grid work (e.g. Table 4's silo-removal variants) feed it their
+/// own cell types.
+pub fn run_cells<T, R, F>(cells: &[T], opts: &RunOptions, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let total = cells.len();
+    let threads = effective_threads(opts.threads, total);
+    if threads <= 1 {
+        return cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let r = f(i, c);
+                if opts.progress {
+                    print_progress(i + 1, total);
+                }
+                r
+            })
+            .collect();
+    }
+    run_parallel(cells, threads, opts.progress, f)
+}
+
+/// Work-stealing pool (enabled with `--features rayon`).
+#[cfg(feature = "rayon")]
+fn run_parallel<T, R, F>(cells: &[T], threads: usize, progress: bool, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    use rayon::prelude::*;
+    let pool = rayon::ThreadPoolBuilder::new()
+        .num_threads(threads)
+        .build()
+        .expect("building rayon pool");
+    let done = AtomicUsize::new(0);
+    pool.install(|| {
+        cells
+            .par_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let r = f(i, c);
+                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if progress {
+                    print_progress(finished, cells.len());
+                }
+                r
+            })
+            .collect()
+    })
+}
+
+/// In-tree scoped-thread pool: workers pull the next cell index off a
+/// shared atomic counter and write results into per-cell slots, so
+/// output order is the input order whatever the scheduling.
+#[cfg(not(feature = "rayon"))]
+fn run_parallel<T, R, F>(cells: &[T], threads: usize, progress: bool, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    use std::sync::Mutex;
+    let total = cells.len();
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let r = f(i, &cells[i]);
+                *slots[i].lock().expect("cell slot lock") = Some(r);
+                let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if progress {
+                    print_progress(finished, total);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("cell slot lock").expect("worker filled every slot"))
+        .collect()
+}
+
+/// Simulate one grid cell. Pure in the cell spec: builds the topology
+/// (seeded from the cell's derived stream) and its own delay tracker, so
+/// concurrent cells share no mutable state.
+pub fn run_cell(cell: &CellSpec) -> CellResult {
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    let mut topo = cfg.build_topology();
+    let s = simulate_summary(topo.as_mut(), &net, &prof, cell.rounds);
+    CellResult {
+        topology: s.topology,
+        network: s.network,
+        profile: s.profile,
+        t: cell.t,
+        seed: cell.base_seed,
+        cell_seed: cell.cell_seed,
+        rounds: s.rounds,
+        mean_cycle_ms: s.mean_cycle_ms,
+        total_ms: s.total_ms,
+        rounds_with_isolated: s.rounds_with_isolated,
+        max_isolated: s.max_isolated,
+    }
+}
+
+/// A finished sweep: the deterministic report plus host-side execution
+/// stats (which deliberately stay out of the artifacts).
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub report: SweepReport,
+    pub host_elapsed_ms: f64,
+    pub threads: usize,
+}
+
+impl SweepOutcome {
+    /// Cells simulated per host second (throughput summary line).
+    pub fn cells_per_sec(&self) -> f64 {
+        if self.host_elapsed_ms <= 0.0 {
+            return 0.0;
+        }
+        self.report.cells.len() as f64 / (self.host_elapsed_ms / 1e3)
+    }
+}
+
+/// Run the full grid of `spec` in parallel and collect the report in
+/// grid order.
+pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
+    // Canonicalize a local copy so coordinates (and the cell seeds
+    // derived from them) are case-stable no matter how the caller
+    // spelled the axes.
+    let spec = {
+        let mut s = spec.clone();
+        s.canonicalize()?;
+        s
+    };
+    spec.validate()?;
+    let cells = spec.expand();
+    let threads = effective_threads(opts.threads, cells.len());
+    let t0 = Instant::now();
+    let results = run_cells(
+        &cells,
+        &RunOptions { threads, progress: opts.progress },
+        |_, c| run_cell(c),
+    );
+    Ok(SweepOutcome {
+        report: SweepReport { name: spec.name.clone(), rounds: spec.rounds, cells: results },
+        host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+        threads,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(4, 100), 4);
+        assert_eq!(effective_threads(8, 3), 3);
+        assert_eq!(effective_threads(3, 0), 1);
+        assert!(effective_threads(0, 100) >= 1);
+    }
+
+    #[test]
+    fn run_cells_preserves_input_order() {
+        let cells: Vec<usize> = (0..64).collect();
+        let one = RunOptions { threads: 1, progress: false };
+        let four = RunOptions { threads: 4, progress: false };
+        let serial = run_cells(&cells, &one, |i, &c| (i, c * 3));
+        let parallel = run_cells(&cells, &four, |i, &c| (i, c * 3));
+        assert_eq!(serial, parallel);
+        assert!(serial.iter().enumerate().all(|(i, &(j, v))| i == j && v == i * 3));
+    }
+
+    #[test]
+    fn run_cells_handles_empty_and_single() {
+        let none: Vec<u32> = vec![];
+        assert!(run_cells(&none, &RunOptions::default(), |_, &c| c).is_empty());
+        let one = vec![7u32];
+        assert_eq!(run_cells(&one, &RunOptions::default(), |_, &c| c + 1), vec![8]);
+    }
+
+    #[test]
+    fn engine_reproduces_the_paper_ordering_on_gaia() {
+        let spec = SweepSpec {
+            name: "smoke".into(),
+            topologies: vec![TopologyKind::Ring, TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![17],
+            rounds: 200,
+        };
+        let outcome = run(&spec, &RunOptions { threads: 2, progress: false }).unwrap();
+        assert_eq!(outcome.threads, 2, "explicit thread request is honored");
+        let report = &outcome.report;
+        assert_eq!(report.cells.len(), 2);
+        // Grid order: ring first, multigraph second.
+        assert_eq!(report.cells[0].topology, "ring");
+        assert_eq!(report.cells[1].topology, "multigraph");
+        let ring = report.cell("ring", "gaia", "femnist").unwrap();
+        let ours = report.cell("multigraph", "gaia", "femnist").unwrap();
+        assert!(
+            ours.mean_cycle_ms < ring.mean_cycle_ms,
+            "ours {} vs ring {}",
+            ours.mean_cycle_ms,
+            ring.mean_cycle_ms
+        );
+        assert!(ours.rounds_with_isolated > 0);
+        assert_eq!(ring.rounds_with_isolated, 0);
+    }
+
+    #[test]
+    fn engine_cell_matches_direct_simulation() {
+        // A sweep cell must equal running the same experiment by hand:
+        // same derived seed, same simulator, bit-identical numbers.
+        let spec = SweepSpec {
+            name: "oracle".into(),
+            topologies: vec![TopologyKind::Matcha],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![23],
+            rounds: 120,
+        };
+        let outcome = run(&spec, &RunOptions { threads: 2, progress: false }).unwrap();
+        let got = &outcome.report.cells[0];
+
+        let cells = spec.expand();
+        let cfg = cells[0].to_experiment();
+        let net = cfg.resolve_network();
+        let prof = cfg.resolve_profile().unwrap();
+        let mut topo = cfg.build_topology();
+        let want = crate::simtime::simulate(topo.as_mut(), &net, &prof, cells[0].rounds);
+        assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits());
+        assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+        assert_eq!(got.seed, 23, "reports carry the base seed, not the derived stream");
+    }
+}

@@ -1,0 +1,298 @@
+//! Structured sweep output: per-cell results, JSON/CSV artifact writers,
+//! and axis slicing into paper-style tables.
+//!
+//! Artifacts are deliberately free of wall-clock or thread-count fields:
+//! a report is a pure function of its [`super::SweepSpec`], so the same
+//! spec produces byte-identical artifacts on 1 thread and N threads
+//! (pinned by `tests/sweep_determinism.rs`). Host-side timing lives in
+//! [`super::SweepOutcome`] instead.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::render_pivot;
+use crate::util::Json;
+
+/// Simulation result of one grid cell, tagged with its coordinates.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub topology: String,
+    pub network: String,
+    pub profile: String,
+    pub t: u32,
+    /// The spec-level base seed (what the user wrote in the spec;
+    /// reports and slices key on it).
+    pub seed: u64,
+    /// The derived stream the topology actually consumed
+    /// ([`super::spec::cell_stream`]); exported so any single cell can
+    /// be reproduced with `mgfl simulate --seed <cell_seed>`.
+    pub cell_seed: u64,
+    pub rounds: usize,
+    pub mean_cycle_ms: f64,
+    pub total_ms: f64,
+    pub rounds_with_isolated: usize,
+    pub max_isolated: usize,
+}
+
+/// A sweep grid axis, for slicing reports into 2-D tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    Topology,
+    Network,
+    Profile,
+    T,
+    Seed,
+}
+
+impl Axis {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Axis::Topology => "topology",
+            Axis::Network => "network",
+            Axis::Profile => "profile",
+            Axis::T => "t",
+            Axis::Seed => "seed",
+        }
+    }
+
+    fn key(&self, c: &CellResult) -> String {
+        match self {
+            Axis::Topology => c.topology.clone(),
+            Axis::Network => c.network.clone(),
+            Axis::Profile => c.profile.clone(),
+            Axis::T => c.t.to_string(),
+            Axis::Seed => c.seed.to_string(),
+        }
+    }
+}
+
+/// The full result set of one sweep run, in grid order.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub name: String,
+    pub rounds: usize,
+    pub cells: Vec<CellResult>,
+}
+
+/// Distinct `axis` values over `cells`, in first-appearance order — the
+/// single source of row/column ordering for full reports and slices.
+fn distinct_values<'a>(cells: impl Iterator<Item = &'a CellResult>, axis: Axis) -> Vec<String> {
+    let mut out = Vec::new();
+    for c in cells {
+        let k = axis.key(c);
+        if !out.contains(&k) {
+            out.push(k);
+        }
+    }
+    out
+}
+
+impl SweepReport {
+    /// Distinct values of `axis`, in first-appearance (grid) order.
+    pub fn axis_values(&self, axis: Axis) -> Vec<String> {
+        distinct_values(self.cells.iter(), axis)
+    }
+
+    /// Render any slice of the grid as a table: rows × cols over the two
+    /// axes, cells showing mean cycle time (ms) averaged over every
+    /// matching result (e.g. over seeds), `-` where the slice is empty.
+    pub fn render_slice(
+        &self,
+        rows: Axis,
+        cols: Axis,
+        filter: impl Fn(&CellResult) -> bool,
+    ) -> String {
+        let kept: Vec<&CellResult> = self.cells.iter().filter(|c| filter(c)).collect();
+        let row_keys = distinct_values(kept.iter().copied(), rows);
+        let col_keys = distinct_values(kept.iter().copied(), cols);
+        render_pivot(rows.label(), &row_keys, &col_keys, |r, c| {
+            let matching: Vec<f64> = kept
+                .iter()
+                .filter(|cell| rows.key(cell) == r && cols.key(cell) == c)
+                .map(|cell| cell.mean_cycle_ms)
+                .collect();
+            if matching.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{:.1}", matching.iter().sum::<f64>() / matching.len() as f64)
+            }
+        })
+    }
+
+    /// Look up a single cell by coordinates (first match).
+    pub fn cell(&self, topology: &str, network: &str, profile: &str) -> Option<&CellResult> {
+        self.cells
+            .iter()
+            .find(|c| c.topology == topology && c.network == network && c.profile == profile)
+    }
+
+    /// JSON artifact (deterministic: BTreeMap keys, grid-ordered cells,
+    /// no host timing).
+    pub fn to_json(&self) -> Json {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("topology".into(), Json::Str(c.topology.clone()));
+                m.insert("network".into(), Json::Str(c.network.clone()));
+                m.insert("profile".into(), Json::Str(c.profile.clone()));
+                m.insert("t".into(), Json::Num(c.t as f64));
+                // Base seeds are validated to fit a JSON number exactly
+                // (< 2^53); the derived stream is a full 64-bit value,
+                // so it travels as a decimal string.
+                m.insert("seed".into(), Json::Num(c.seed as f64));
+                m.insert("cell_seed".into(), Json::Str(c.cell_seed.to_string()));
+                m.insert("rounds".into(), Json::Num(c.rounds as f64));
+                m.insert("mean_cycle_ms".into(), Json::Num(c.mean_cycle_ms));
+                m.insert("total_ms".into(), Json::Num(c.total_ms));
+                m.insert(
+                    "rounds_with_isolated".into(),
+                    Json::Num(c.rounds_with_isolated as f64),
+                );
+                m.insert("max_isolated".into(), Json::Num(c.max_isolated as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("name".into(), Json::Str(self.name.clone()));
+        top.insert("rounds".into(), Json::Num(self.rounds as f64));
+        top.insert("cells".into(), Json::Arr(cells));
+        Json::Obj(top)
+    }
+
+    /// CSV artifact, one row per cell in grid order (deterministic).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "topology,network,profile,t,seed,cell_seed,rounds,mean_cycle_ms,total_ms,rounds_with_isolated,max_isolated\n",
+        );
+        for c in &self.cells {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{},{},{:.6},{:.6},{},{}",
+                c.topology,
+                c.network,
+                c.profile,
+                c.t,
+                c.seed,
+                c.cell_seed,
+                c.rounds,
+                c.mean_cycle_ms,
+                c.total_ms,
+                c.rounds_with_isolated,
+                c.max_isolated,
+            );
+        }
+        out
+    }
+
+    /// Write `<dir>/sweep_<name>.json` + `.csv`; returns the two paths.
+    pub fn write_artifacts(&self, dir: impl AsRef<Path>) -> Result<(PathBuf, PathBuf)> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let json_path = dir.join(format!("sweep_{}.json", self.name));
+        let csv_path = dir.join(format!("sweep_{}.csv", self.name));
+        std::fs::write(&json_path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", json_path.display()))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .with_context(|| format!("writing {}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(topology: &str, network: &str, profile: &str, mean: f64, seed: u64) -> CellResult {
+        CellResult {
+            topology: topology.into(),
+            network: network.into(),
+            profile: profile.into(),
+            t: 5,
+            seed,
+            cell_seed: seed.wrapping_mul(0x9E3779B97F4A7C15),
+            rounds: 10,
+            mean_cycle_ms: mean,
+            total_ms: mean * 10.0,
+            rounds_with_isolated: 3,
+            max_isolated: 2,
+        }
+    }
+
+    fn report() -> SweepReport {
+        SweepReport {
+            name: "test".into(),
+            rounds: 10,
+            cells: vec![
+                cell("ring", "gaia", "femnist", 50.0, 1),
+                cell("ring", "gaia", "femnist", 70.0, 2),
+                cell("multigraph", "gaia", "femnist", 20.0, 1),
+                cell("ring", "amazon", "femnist", 80.0, 1),
+            ],
+        }
+    }
+
+    #[test]
+    fn slice_averages_over_hidden_axes() {
+        let r = report();
+        let table = r.render_slice(Axis::Network, Axis::Topology, |_| true);
+        // gaia/ring averages the two seeds: (50 + 70) / 2 = 60.0.
+        assert!(table.contains("60.0"), "{table}");
+        assert!(table.contains("20.0"), "{table}");
+        // amazon has no multigraph cell -> "-".
+        assert!(table.contains('-'), "{table}");
+        assert_eq!(r.axis_values(Axis::Network), vec!["gaia", "amazon"]);
+    }
+
+    #[test]
+    fn filter_narrows_the_slice() {
+        let r = report();
+        let table = r.render_slice(Axis::Network, Axis::Topology, |c| c.seed == 1);
+        assert!(table.contains("50.0"), "{table}");
+        assert!(!table.contains("60.0"), "{table}");
+    }
+
+    #[test]
+    fn json_and_csv_are_grid_ordered_and_parseable() {
+        let r = report();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "test");
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].get("topology").unwrap().as_str().unwrap(), "ring");
+        // The derived stream survives JSON exactly (as a decimal string).
+        assert_eq!(
+            cells[0].get("cell_seed").unwrap().as_str().unwrap(),
+            "11400714819323198485"
+        );
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        let row = csv.lines().nth(1).unwrap();
+        assert!(
+            row.starts_with("ring,gaia,femnist,5,1,11400714819323198485,10,50.000000"),
+            "{row}"
+        );
+    }
+
+    #[test]
+    fn artifacts_round_trip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("mgfl_sweep_report_{}", std::process::id()));
+        let r = report();
+        let (json_path, csv_path) = r.write_artifacts(&dir).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 4);
+        assert!(std::fs::read_to_string(&csv_path).unwrap().starts_with("topology,"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cell_lookup_finds_first_match() {
+        let r = report();
+        assert_eq!(r.cell("ring", "gaia", "femnist").unwrap().seed, 1);
+        assert!(r.cell("star", "gaia", "femnist").is_none());
+    }
+}

@@ -1,0 +1,449 @@
+//! Sweep specifications: the (topology × network × profile × t × seed)
+//! grid behind every paper table, as a typed value with a TOML-subset
+//! loader (same dialect as [`crate::config`], plus `[list]` values).
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{ExperimentConfig, TopologyKind};
+use crate::net::{zoo, DatasetProfile};
+use crate::util::rng::{derive_stream, fnv1a};
+
+/// A full experiment grid. Expanding it yields one [`CellSpec`] per
+/// combination; every cell is independent, which is what makes the
+/// sweep embarrassingly parallel.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Artifact stem (`sweep_<name>.json` / `.csv`).
+    pub name: String,
+    pub topologies: Vec<TopologyKind>,
+    pub networks: Vec<String>,
+    pub profiles: Vec<String>,
+    /// Algorithm 1's t (max edges between two nodes); multigraph only,
+    /// other designs carry it through for bookkeeping.
+    pub t_values: Vec<u32>,
+    /// Base seeds; each cell derives its own stream from (seed, cell id).
+    pub seeds: Vec<u64>,
+    /// Simulated communication rounds per cell (paper: 6400).
+    pub rounds: usize,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            name: "sweep".into(),
+            topologies: TopologyKind::all().to_vec(),
+            networks: zoo::all_networks().iter().map(|n| n.name.clone()).collect(),
+            profiles: DatasetProfile::all().iter().map(|p| p.name.clone()).collect(),
+            t_values: vec![5],
+            seeds: vec![17],
+            rounds: 6400,
+        }
+    }
+}
+
+/// One fully-resolved grid cell, ready to simulate. Pure data (no trait
+/// objects), so it crosses threads freely; the topology is built inside
+/// the worker that runs the cell.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    /// Position in the expanded grid (artifact ordering).
+    pub index: usize,
+    pub topology: TopologyKind,
+    pub network: String,
+    pub profile: String,
+    pub t: u32,
+    /// The spec-level seed this cell descends from (reported).
+    pub base_seed: u64,
+    /// The derived per-cell stream (what the topology actually consumes):
+    /// a function of (base seed, cell coordinates) only — never of
+    /// execution order or thread count.
+    pub cell_seed: u64,
+    pub rounds: usize,
+}
+
+impl CellSpec {
+    /// The equivalent single-experiment config (simulation-only).
+    pub fn to_experiment(&self) -> ExperimentConfig {
+        ExperimentConfig {
+            network: self.network.clone(),
+            profile: self.profile.clone(),
+            topology: self.topology,
+            t: self.t,
+            sim_rounds: self.rounds,
+            seed: self.cell_seed,
+            train: None,
+        }
+    }
+}
+
+/// Derive the per-cell RNG stream from the base seed and the cell's
+/// grid coordinates (not its index, so adding an axis value does not
+/// reseed unrelated cells).
+pub fn cell_stream(
+    base_seed: u64,
+    topology: TopologyKind,
+    network: &str,
+    profile: &str,
+    t: u32,
+) -> u64 {
+    let coord = format!("{}/{network}/{profile}/t{t}", topology.as_str());
+    derive_stream(base_seed, fnv1a(coord.as_bytes()))
+}
+
+impl SweepSpec {
+    /// The paper's Table 1 grid: all 7 topologies × all 5 networks for
+    /// the selected profiles.
+    pub fn table1(profiles: Vec<String>, t: u32, rounds: usize) -> Self {
+        SweepSpec {
+            name: "table1".into(),
+            profiles,
+            t_values: vec![t],
+            rounds,
+            ..Default::default()
+        }
+    }
+
+    /// Rewrite network/profile names to their canonical (lowercase zoo /
+    /// Table 2) spelling. `zoo::by_name` accepts any case, so without
+    /// this two equivalent specs spelled differently would derive
+    /// different cell seeds and render empty slices; canonicalizing at
+    /// every spec entry point (TOML loader, CLI flags, [`super::run`])
+    /// keeps coordinates case-stable. Errors on unknown names.
+    pub fn canonicalize(&mut self) -> Result<()> {
+        for n in &mut self.networks {
+            *n = zoo::by_name(n).ok_or_else(|| anyhow::anyhow!("unknown network '{n}'"))?.name;
+        }
+        for p in &mut self.profiles {
+            *p = DatasetProfile::by_name(p)
+                .ok_or_else(|| anyhow::anyhow!("unknown profile '{p}'"))?
+                .name;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "sweep name must be non-empty");
+        ensure!(self.rounds >= 1, "rounds must be >= 1");
+        for (axis, empty) in [
+            ("topologies", self.topologies.is_empty()),
+            ("networks", self.networks.is_empty()),
+            ("profiles", self.profiles.is_empty()),
+            ("t", self.t_values.is_empty()),
+            ("seeds", self.seeds.is_empty()),
+        ] {
+            ensure!(!empty, "sweep axis '{axis}' must be non-empty");
+        }
+        for net in &self.networks {
+            ensure!(zoo::by_name(net).is_some(), "unknown network '{net}'");
+        }
+        for prof in &self.profiles {
+            ensure!(DatasetProfile::by_name(prof).is_some(), "unknown profile '{prof}'");
+        }
+        for &t in &self.t_values {
+            ensure!(t >= 1, "t must be >= 1 (got {t})");
+        }
+        for &seed in &self.seeds {
+            // Keep the base seed exactly representable in the JSON
+            // artifact (Json::Num is f64-backed); derived cell streams
+            // use the full 64 bits and travel as strings.
+            ensure!(
+                seed < (1u64 << 53),
+                "base seed {seed} exceeds 2^53 and would lose precision in JSON artifacts"
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand the `"all"` sugar for a string axis: `["all"]` means the
+    /// full default axis, anything else passes through. Shared by the
+    /// TOML loader and the CLI flag parser so the two dialects cannot
+    /// drift.
+    pub fn axis_or_all(items: Vec<String>, full: &[String]) -> Vec<String> {
+        if items == ["all"] {
+            full.to_vec()
+        } else {
+            items
+        }
+    }
+
+    /// Parse a topology axis, honoring the `"all"` sugar.
+    pub fn parse_topologies(items: &[String]) -> Result<Vec<TopologyKind>> {
+        if items == ["all"] {
+            Ok(TopologyKind::all().to_vec())
+        } else {
+            items.iter().map(|s| s.parse()).collect()
+        }
+    }
+
+    /// Number of cells the grid expands to.
+    pub fn cell_count(&self) -> usize {
+        self.profiles.len()
+            * self.networks.len()
+            * self.topologies.len()
+            * self.t_values.len()
+            * self.seeds.len()
+    }
+
+    /// Expand the grid into independent cells, in presentation order
+    /// (profile, network, topology, t, seed) — the artifact order.
+    pub fn expand(&self) -> Vec<CellSpec> {
+        let mut cells = Vec::with_capacity(self.cell_count());
+        for profile in &self.profiles {
+            for network in &self.networks {
+                for &topology in &self.topologies {
+                    for &t in &self.t_values {
+                        for &base_seed in &self.seeds {
+                            cells.push(CellSpec {
+                                index: cells.len(),
+                                topology,
+                                network: network.clone(),
+                                profile: profile.clone(),
+                                t,
+                                base_seed,
+                                cell_seed: cell_stream(base_seed, topology, network, profile, t),
+                                rounds: self.rounds,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading sweep spec {}", path.as_ref().display()))?;
+        let mut spec = Self::from_toml_str(&text)?;
+        spec.canonicalize()?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the TOML subset: comments, flat `key = value`, where value
+    /// is a scalar or a `[a, b, c]` list. `"all"` is sugar for the full
+    /// axis on `topologies` / `networks` / `profiles`.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let defaults = SweepSpec::default();
+        let mut spec = defaults.clone();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                bail!("line {}: sweep specs have no sections (got '{line}')", lineno + 1);
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let items = split_values(value);
+            let ctx = |k: &str| format!("line {}: key '{k}'", lineno + 1);
+            match key {
+                "name" => spec.name = one(&items, key, lineno)?,
+                "rounds" => {
+                    spec.rounds = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "topologies" => {
+                    spec.topologies = Self::parse_topologies(&items).with_context(|| ctx(key))?
+                }
+                "networks" => spec.networks = Self::axis_or_all(items, &defaults.networks),
+                "profiles" => spec.profiles = Self::axis_or_all(items, &defaults.profiles),
+                "t" => {
+                    spec.t_values = items
+                        .iter()
+                        .map(|s| s.parse::<u32>())
+                        .collect::<Result<_, _>>()
+                        .with_context(|| ctx(key))?
+                }
+                "seeds" => {
+                    spec.seeds = items
+                        .iter()
+                        .map(|s| s.parse::<u64>())
+                        .collect::<Result<_, _>>()
+                        .with_context(|| ctx(key))?
+                }
+                other => bail!("line {}: unknown sweep key '{other}'", lineno + 1),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Serialize back to the TOML subset (for shipped example specs).
+    pub fn to_toml_string(&self) -> String {
+        let quote_list = |items: &[String]| -> String {
+            let quoted: Vec<String> = items.iter().map(|s| format!("\"{s}\"")).collect();
+            format!("[{}]", quoted.join(", "))
+        };
+        let topo_names: Vec<String> =
+            self.topologies.iter().map(|k| k.as_str().to_string()).collect();
+        let t_list: Vec<String> = self.t_values.iter().map(|t| t.to_string()).collect();
+        let seed_list: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
+        format!(
+            "name = \"{}\"\nrounds = {}\ntopologies = {}\nnetworks = {}\nprofiles = {}\nt = [{}]\nseeds = [{}]\n",
+            self.name,
+            self.rounds,
+            quote_list(&topo_names),
+            quote_list(&self.networks),
+            quote_list(&self.profiles),
+            t_list.join(", "),
+            seed_list.join(", "),
+        )
+    }
+}
+
+/// Split a TOML-subset value into its items: `[a, "b", c]` lists or a
+/// single scalar; quotes stripped, empties dropped.
+fn split_values(value: &str) -> Vec<String> {
+    let v = value.trim();
+    let inner = v.strip_prefix('[').and_then(|s| s.strip_suffix(']'));
+    let raw: Vec<&str> = match inner {
+        Some(list) => list.split(',').collect(),
+        None => vec![v],
+    };
+    raw.iter()
+        .map(|s| s.trim().trim_matches('"').to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn one(items: &[String], key: &str, lineno: usize) -> Result<String> {
+    match items {
+        [single] => Ok(single.clone()),
+        _ => bail!("line {}: key '{key}' takes a single value", lineno + 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_the_full_paper_grid() {
+        let spec = SweepSpec::default();
+        spec.validate().unwrap();
+        // 7 topologies x 5 networks x 3 profiles x 1 t x 1 seed.
+        assert_eq!(spec.cell_count(), 7 * 5 * 3);
+        let cells = spec.expand();
+        assert_eq!(cells.len(), spec.cell_count());
+        assert!(cells.iter().enumerate().all(|(i, c)| c.index == i));
+    }
+
+    #[test]
+    fn cell_seeds_depend_on_coordinates_not_order() {
+        let spec = SweepSpec::default();
+        let cells = spec.expand();
+        // Same coordinates => same stream, across any two expansions.
+        let again = spec.expand();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.cell_seed, b.cell_seed);
+        }
+        // Distinct coordinates => distinct streams (no collisions here).
+        let seeds: std::collections::BTreeSet<u64> = cells.iter().map(|c| c.cell_seed).collect();
+        assert_eq!(seeds.len(), cells.len());
+        // Removing an axis value must not reseed the survivors.
+        let mut narrowed = spec.clone();
+        narrowed.networks.retain(|n| n != "amazon");
+        let kept: Vec<u64> = narrowed.expand().iter().map(|c| c.cell_seed).collect();
+        let expect: Vec<u64> = cells
+            .iter()
+            .filter(|c| c.network != "amazon")
+            .map(|c| c.cell_seed)
+            .collect();
+        assert_eq!(kept, expect);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let spec = SweepSpec {
+            name: "custom".into(),
+            topologies: vec![TopologyKind::Ring, TopologyKind::Multigraph],
+            networks: vec!["gaia".into(), "exodus".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![3, 5],
+            seeds: vec![1, 2, 3],
+            rounds: 640,
+        };
+        let text = spec.to_toml_string();
+        let back = SweepSpec::from_toml_str(&text).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.name, "custom");
+        assert_eq!(back.topologies, vec![TopologyKind::Ring, TopologyKind::Multigraph]);
+        assert_eq!(back.networks, vec!["gaia", "exodus"]);
+        assert_eq!(back.t_values, vec![3, 5]);
+        assert_eq!(back.seeds, vec![1, 2, 3]);
+        assert_eq!(back.rounds, 640);
+        assert_eq!(back.cell_count(), 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn parses_all_sugar_scalars_and_comments() {
+        let text = r#"
+# the full grid at smoke rounds
+name = "smoke"       # artifact stem
+rounds = 50
+topologies = "all"
+networks = [gaia, amazon]
+profiles = "femnist"
+t = 5
+seeds = [17]
+"#;
+        let spec = SweepSpec::from_toml_str(text).unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.topologies.len(), 7);
+        assert_eq!(spec.networks, vec!["gaia", "amazon"]);
+        assert_eq!(spec.profiles, vec!["femnist"]);
+        assert_eq!(spec.t_values, vec![5]);
+        assert_eq!(spec.rounds, 50);
+    }
+
+    #[test]
+    fn canonicalize_makes_specs_case_stable() {
+        let mut shouty = SweepSpec {
+            networks: vec!["GAIA".into()],
+            profiles: vec!["FEMNIST".into()],
+            ..Default::default()
+        };
+        shouty.canonicalize().unwrap();
+        assert_eq!(shouty.networks, vec!["gaia"]);
+        assert_eq!(shouty.profiles, vec!["femnist"]);
+        // Equivalent spellings derive identical cell seeds after
+        // canonicalization — the sweep determinism contract.
+        let lower = SweepSpec {
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            ..Default::default()
+        };
+        let a: Vec<u64> = shouty.expand().iter().map(|c| c.cell_seed).collect();
+        let b: Vec<u64> = lower.expand().iter().map(|c| c.cell_seed).collect();
+        assert_eq!(a, b);
+        let mut unknown = SweepSpec::default();
+        unknown.networks = vec!["nowhere".into()];
+        assert!(unknown.canonicalize().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(SweepSpec::from_toml_str("bogus = 1").is_err());
+        assert!(SweepSpec::from_toml_str("[section]").is_err());
+        assert!(SweepSpec::from_toml_str("t = [0").is_err()); // unparsed '[0'
+        let mut empty_axis = SweepSpec::default();
+        empty_axis.networks.clear();
+        assert!(empty_axis.validate().is_err());
+        let mut bad_net = SweepSpec::default();
+        bad_net.networks = vec!["nowhere".into()];
+        assert!(bad_net.validate().is_err());
+        let mut bad_t = SweepSpec::default();
+        bad_t.t_values = vec![0];
+        assert!(bad_t.validate().is_err());
+        let mut big_seed = SweepSpec::default();
+        big_seed.seeds = vec![1u64 << 53];
+        assert!(big_seed.validate().is_err(), "seeds must stay JSON-exact");
+        big_seed.seeds = vec![(1u64 << 53) - 1];
+        big_seed.validate().unwrap();
+        assert!(SweepSpec::from_toml_file("/nonexistent.toml").is_err());
+    }
+}

@@ -62,6 +62,29 @@ impl Args {
         self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Comma-separated list flag (`--networks gaia,amazon`); `None` when
+    /// absent, empty entries dropped.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.flags.get(name).map(|v| {
+            v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+        })
+    }
+
+    /// Comma-separated list flag parsed into `T` (`--t 1,3,5`).
+    pub fn get_parsed_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get_list(name) {
+            None => Ok(None),
+            Some(items) => items
+                .iter()
+                .map(|s| s.parse::<T>().with_context(|| format!("--{name} {s}")))
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
     pub fn require_sub(&self, usage: &str) -> Result<&str> {
         match &self.subcommand {
             Some(s) => Ok(s),
@@ -100,6 +123,15 @@ mod tests {
     fn bad_value_errors() {
         let a = parse("x --n abc");
         assert!(a.get::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = parse("sweep --networks gaia,amazon --t 1,3,5");
+        assert_eq!(a.get_list("networks").unwrap(), vec!["gaia", "amazon"]);
+        assert_eq!(a.get_parsed_list::<u32>("t").unwrap().unwrap(), vec![1, 3, 5]);
+        assert!(a.get_list("profiles").is_none());
+        assert!(parse("x --t 1,zap").get_parsed_list::<u32>("t").is_err());
     }
 
     #[test]

@@ -6,7 +6,6 @@
 //! (KBs) and traces (MBs), not a general-purpose speed demon.
 
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -78,67 +77,66 @@ impl Json {
         Ok(x as usize)
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
-    fn write(&self, out: &mut String) {
+    fn write<W: std::fmt::Write>(&self, out: &mut W) -> std::fmt::Result {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Null => out.write_str("null"),
+            Json::Bool(b) => out.write_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 1e15 {
-                    let _ = write!(out, "{}", *x as i64);
+                    write!(out, "{}", *x as i64)
                 } else {
-                    let _ = write!(out, "{x}");
+                    write!(out, "{x}")
                 }
             }
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
-                out.push('[');
+                out.write_char('[')?;
                 for (i, x) in v.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    x.write(out);
+                    x.write(out)?;
                 }
-                out.push(']');
+                out.write_char(']')
             }
             Json::Obj(m) => {
-                out.push('{');
+                out.write_char('{')?;
                 for (i, (k, v)) in m.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        out.write_char(',')?;
                     }
-                    write_escaped(out, k);
-                    out.push(':');
-                    v.write(out);
+                    write_escaped(out, k)?;
+                    out.write_char(':')?;
+                    v.write(out)?;
                 }
-                out.push('}');
+                out.write_char('}')
             }
         }
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
-    out.push('"');
+/// Compact serialization, streamed straight into the formatter
+/// (`Json::to_string()` comes from this impl).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.write(f)
+    }
+}
+
+fn write_escaped<W: std::fmt::Write>(out: &mut W, s: &str) -> std::fmt::Result {
+    out.write_char('"')?;
     for c in s.chars() {
         match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\r' => out.write_str("\\r")?,
+            '\t' => out.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => out.write_char(c)?,
         }
     }
-    out.push('"');
+    out.write_char('"')
 }
 
 struct Parser<'a> {

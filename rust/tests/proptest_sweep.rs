@@ -1,0 +1,62 @@
+//! Property tests for the sweep spec layer, backed by the real proptest
+//! crate. Gated behind `--features proptest` so the offline build (which
+//! vendors no proptest) still passes `cargo test`; CI runs them with the
+//! feature on. The in-tree xoshiro-driven property tests in
+//! `tests/proptests.rs` cover the coordinator invariants regardless.
+#![cfg(feature = "proptest")]
+
+use mgfl::config::TopologyKind;
+use mgfl::sweep::SweepSpec;
+use proptest::prelude::*;
+
+fn kind_from(i: usize) -> TopologyKind {
+    TopologyKind::all()[i % 7]
+}
+
+proptest! {
+    #[test]
+    fn sweep_spec_toml_roundtrip(
+        kinds in prop::collection::vec(0usize..7, 1..5),
+        raw_nets in prop::collection::vec("[a-z]{1,8}", 1..4),
+        raw_profs in prop::collection::vec("[a-z]{1,8}", 1..3),
+        ts in prop::collection::vec(1u32..64, 1..4),
+        seeds in prop::collection::vec(0u64..(1 << 53), 1..4),
+        rounds in 1usize..100_000,
+    ) {
+        let topologies: Vec<TopologyKind> = kinds.iter().map(|&i| kind_from(i)).collect();
+        // Prefix with 'x' so no axis value collides with the "all" sugar.
+        let nets: Vec<String> = raw_nets.iter().map(|s| format!("x{s}")).collect();
+        let profs: Vec<String> = raw_profs.iter().map(|s| format!("x{s}")).collect();
+        let spec = SweepSpec {
+            name: "prop".into(),
+            topologies: topologies.clone(),
+            networks: nets.clone(),
+            profiles: profs.clone(),
+            t_values: ts.clone(),
+            seeds: seeds.clone(),
+            rounds,
+        };
+        let back = SweepSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+        prop_assert_eq!(back.topologies, topologies);
+        prop_assert_eq!(back.networks, nets);
+        prop_assert_eq!(back.profiles, profs);
+        prop_assert_eq!(back.t_values, ts);
+        prop_assert_eq!(back.seeds, seeds);
+        prop_assert_eq!(back.rounds, rounds);
+    }
+
+    #[test]
+    fn expansion_is_complete_and_seed_stable(
+        ts in prop::collection::vec(1u32..16, 1..3),
+        seeds in prop::collection::vec(0u64..(1 << 53), 1..3),
+    ) {
+        let spec = SweepSpec { t_values: ts, seeds, rounds: 10, ..Default::default() };
+        let cells = spec.expand();
+        prop_assert_eq!(cells.len(), spec.cell_count());
+        let again = spec.expand();
+        for (a, b) in cells.iter().zip(&again) {
+            prop_assert_eq!(a.cell_seed, b.cell_seed);
+            prop_assert_eq!(a.index, b.index);
+        }
+    }
+}

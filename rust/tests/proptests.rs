@@ -12,7 +12,9 @@ use mgfl::graph::{
     matching_decomposition, prim_mst, Graph,
 };
 use mgfl::net::DatasetProfile;
-use mgfl::topo::{multigraph::Multigraph, states::parse_states_explicit, MultigraphTopology, RoundPlan};
+use mgfl::topo::{
+    multigraph::Multigraph, states::parse_states_explicit, MultigraphTopology, RoundPlan,
+};
 use mgfl::util::{lcm, Rng64};
 
 const CASES: usize = 60;
