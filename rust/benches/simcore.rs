@@ -1,0 +1,164 @@
+//! Bench: the compiled zero-allocation simulation engine vs the naive
+//! `DelayTracker` reference path.
+//!
+//! Two jobs in one binary:
+//!
+//! 1. **Oracle gate** — for every (topology × network) cell of the smoke
+//!    grid (FEMNIST profile), assert the compiled `simulate_summary` is
+//!    bit-identical to `simulate_summary_naive`. CI runs this at small
+//!    rounds and fails the build on any disagreement.
+//! 2. **Headline measurement** — time both engines on the paper's
+//!    6400-round Gaia/FEMNIST multigraph (t = 5) cell plus a large-
+//!    network streaming cell, and write the numbers to
+//!    `BENCH_simcore.json` (the committed baseline).
+//!
+//! Run: `cargo bench --bench simcore -- --rounds 6400 --out BENCH_simcore.json`
+//! (CI smoke: `cargo bench --bench simcore -- --rounds 200`.)
+
+use std::collections::BTreeMap;
+
+use mgfl::config::{ExperimentConfig, TopologyKind};
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::{
+    simulate_summary, simulate_summary_compiled_with_stats, simulate_summary_naive,
+};
+use mgfl::topo::MultigraphTopology;
+use mgfl::util::args::Args;
+use mgfl::util::bench;
+use mgfl::util::json::Json;
+
+fn cell_config(kind: TopologyKind, network: &str, t: u32, rounds: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        network: network.into(),
+        profile: "femnist".into(),
+        topology: kind,
+        t,
+        sim_rounds: rounds,
+        ..Default::default()
+    }
+}
+
+/// Assert compiled == naive bitwise on one cell.
+fn check_cell(kind: TopologyKind, network: &str, t: u32, rounds: usize) {
+    let cfg = cell_config(kind, network, t, rounds);
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("profile");
+    let mut a = cfg.build_topology();
+    let mut b = cfg.build_topology();
+    let naive = simulate_summary_naive(a.as_mut(), &net, &prof, rounds);
+    let fast = simulate_summary(b.as_mut(), &net, &prof, rounds);
+    assert_eq!(
+        naive.total_ms.to_bits(),
+        fast.total_ms.to_bits(),
+        "compiled/naive total_ms disagree on {}/{network} (naive {} vs compiled {})",
+        kind.as_str(),
+        naive.total_ms,
+        fast.total_ms,
+    );
+    assert_eq!(naive.mean_cycle_ms.to_bits(), fast.mean_cycle_ms.to_bits());
+    assert_eq!(naive.rounds_with_isolated, fast.rounds_with_isolated);
+    assert_eq!(naive.max_isolated, fast.max_isolated);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rounds: usize = args.get("rounds", 6400).expect("--rounds takes an integer");
+    let out = args.get_str("out", "BENCH_simcore.json");
+    let smoke_rounds = rounds.min(200);
+
+    // --- 1. oracle gate ---------------------------------------------
+    bench::header(&format!(
+        "simcore oracle gate — compiled vs naive, {smoke_rounds} rounds, all designs x networks"
+    ));
+    let mut checked = 0usize;
+    for net in zoo::all_networks() {
+        for kind in TopologyKind::all() {
+            check_cell(kind, &net.name, 5, smoke_rounds);
+            checked += 1;
+        }
+    }
+    println!("{checked} cells bit-identical across engines");
+
+    // --- 2. headline: the paper's Gaia/FEMNIST multigraph cell ------
+    bench::header(&format!("compiled engine throughput — {rounds} rounds (paper: 6400)"));
+    let gaia = zoo::gaia();
+    let prof = DatasetProfile::femnist();
+
+    let naive_m = bench::bench(&format!("naive   multigraph gaia x{rounds}"), 2, 10, || {
+        let mut topo = MultigraphTopology::from_network(&gaia, &prof, 5);
+        let s = simulate_summary_naive(&mut topo, &gaia, &prof, rounds);
+        std::hint::black_box(s.total_ms);
+    });
+    let compiled_m = bench::bench(&format!("compiled multigraph gaia x{rounds}"), 2, 10, || {
+        let mut topo = MultigraphTopology::from_network(&gaia, &prof, 5);
+        let s = simulate_summary(&mut topo, &gaia, &prof, rounds);
+        std::hint::black_box(s.total_ms);
+    });
+    let speedup = naive_m.mean_ms / compiled_m.mean_ms.max(1e-9);
+
+    let mut topo = MultigraphTopology::from_network(&gaia, &prof, 5);
+    let (_, stats) = simulate_summary_compiled_with_stats(&mut topo, &gaia, &prof, rounds);
+    println!(
+        "cycle fast path: simulated {} of {rounds} rounds (period {:?}, cycle len {:?}) \
+         | speedup {speedup:.1}x",
+        stats.simulated_rounds, stats.period, stats.cycle_len,
+    );
+    // Note: both timed closures rebuild the topology (Alg. 1 + 2), so
+    // the measured speedup understates the pure per-round win.
+    if rounds >= 6400 {
+        assert!(
+            speedup >= 5.0,
+            "acceptance: compiled path must be >= 5x on the 6400-round \
+             Gaia/FEMNIST cell (got {speedup:.2}x)"
+        );
+    }
+
+    // --- 3. streaming engine on the largest network ------------------
+    bench::header("streaming engine (stochastic / unmaterializable periods), ebone");
+    let ebone = zoo::ebone();
+    let stream_rounds = rounds.min(1000);
+    let naive_s = bench::bench(&format!("naive   matcha ebone x{stream_rounds}"), 2, 10, || {
+        let cfg = cell_config(TopologyKind::Matcha, "ebone", 5, stream_rounds);
+        let mut topo = cfg.build_topology();
+        let s = simulate_summary_naive(topo.as_mut(), &ebone, &prof, stream_rounds);
+        std::hint::black_box(s.total_ms);
+    });
+    let compiled_s = bench::bench(&format!("compiled matcha ebone x{stream_rounds}"), 2, 10, || {
+        let cfg = cell_config(TopologyKind::Matcha, "ebone", 5, stream_rounds);
+        let mut topo = cfg.build_topology();
+        let s = simulate_summary(topo.as_mut(), &ebone, &prof, stream_rounds);
+        std::hint::black_box(s.total_ms);
+    });
+    let stream_speedup = naive_s.mean_ms / compiled_s.mean_ms.max(1e-9);
+
+    // --- 4. baseline artifact ----------------------------------------
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("simcore".into()));
+    let provenance = "measured by `cargo bench --bench simcore` (oracle gate passed first)";
+    obj.insert("provenance".to_string(), Json::Str(provenance.into()));
+    obj.insert("rounds".to_string(), Json::Num(rounds as f64));
+    obj.insert("oracle_cells_checked".to_string(), Json::Num(checked as f64));
+    obj.insert("oracle_bit_identical".to_string(), Json::Bool(true));
+    obj.insert(
+        "gaia_multigraph".to_string(),
+        Json::Obj(BTreeMap::from([
+            ("naive_ms_per_cell".to_string(), Json::Num(naive_m.mean_ms)),
+            ("compiled_ms_per_cell".to_string(), Json::Num(compiled_m.mean_ms)),
+            ("speedup".to_string(), Json::Num(speedup)),
+            ("simulated_rounds".to_string(), Json::Num(stats.simulated_rounds as f64)),
+            ("cycle_len".to_string(), stats.cycle_len.map_or(Json::Null, |l| Json::Num(l as f64))),
+        ])),
+    );
+    obj.insert(
+        "ebone_matcha_streaming".to_string(),
+        Json::Obj(BTreeMap::from([
+            ("rounds".to_string(), Json::Num(stream_rounds as f64)),
+            ("naive_ms_per_cell".to_string(), Json::Num(naive_s.mean_ms)),
+            ("compiled_ms_per_cell".to_string(), Json::Num(compiled_s.mean_ms)),
+            ("speedup".to_string(), Json::Num(stream_speedup)),
+        ])),
+    );
+    let json = Json::Obj(obj).to_string();
+    std::fs::write(&out, format!("{json}\n")).expect("writing bench baseline");
+    println!("\nbaseline -> {out}");
+}

@@ -37,6 +37,27 @@ pub fn eq3_delay_ms(
     profile.u as f64 * profile.t_c_ms + net.latency_ms(i, j) + profile.model_size_mbits / capacity
 }
 
+/// Symmetrized pair delay: the max of the two directed Eq. 3 delays,
+/// which is what seeds an [`EdgeDelayState`] when a pair first enters the
+/// schedule. Degrees are floored at 1 (a planned edge always implies at
+/// least one concurrent transfer at each endpoint).
+///
+/// Both the reference [`crate::simtime::DelayTracker`] and the compiled
+/// engine ([`crate::simtime::compiled`]) seed d_0 through this one
+/// function, so the two paths stay bit-identical by construction.
+pub fn pair_d0_ms(
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    u: usize,
+    v: usize,
+    deg_u: usize,
+    deg_v: usize,
+) -> f64 {
+    let du = eq3_delay_ms(net, profile, u, v, deg_u.max(1), deg_v.max(1));
+    let dv = eq3_delay_ms(net, profile, v, u, deg_v.max(1), deg_u.max(1));
+    du.max(dv)
+}
+
 /// Per-edge state for the Eq. 4 delay recurrence.
 ///
 /// ## Deviation from the literal Eq. 4 (DESIGN.md §Substitutions)
@@ -144,6 +165,18 @@ mod tests {
     fn eq3_rejects_zero_degree() {
         let (net, p) = setup();
         eq3_delay_ms(&net, &p, 0, 1, 0, 1);
+    }
+
+    #[test]
+    fn pair_d0_is_direction_symmetric_max() {
+        let (net, p) = setup();
+        let a = pair_d0_ms(&net, &p, 0, 1, 2, 3);
+        let b = pair_d0_ms(&net, &p, 1, 0, 3, 2);
+        assert_eq!(a.to_bits(), b.to_bits());
+        let expect = eq3_delay_ms(&net, &p, 0, 1, 2, 3).max(eq3_delay_ms(&net, &p, 1, 0, 3, 2));
+        assert_eq!(a.to_bits(), expect.to_bits());
+        // Zero degrees are floored at 1, not rejected.
+        assert!(pair_d0_ms(&net, &p, 0, 1, 0, 0) > 0.0);
     }
 
     #[test]

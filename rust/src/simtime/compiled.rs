@@ -1,0 +1,506 @@
+//! Compiled zero-allocation simulation engine + exact cycle-detection
+//! fast path.
+//!
+//! The naive path ([`super::simulate_summary_naive`]) pays, per round:
+//! a fresh `RoundPlan` vec, a degrees vec, a strong-delays vec, and two
+//! `HashMap<(usize, usize)>` probes per edge. This module compiles a
+//! [`TopologyDesign`] into a **dense edge arena** — stable edge ids, a
+//! flat `d0`/`backlog` slab, per-state (edge id, type) tables and
+//! isolation counts — so the per-round step is a plain walk over edge
+//! ids with zero allocation and zero hashing.
+//!
+//! On top of that sits an **exact cycle-detection fast path**: periodic
+//! schedules ([`TopologyDesign::period`]) drive a finite-state system —
+//! [`crate::delay::EdgeDelayState`] resets to `d0` on every strong
+//! round, so the full simulator state (state index + backlog
+//! bit-patterns) recurs exactly. The engine snapshots backlog bits at
+//! period boundaries, detects the first recurrence, and replays the
+//! recorded τ sequence with the same sequential f64 accumulation — a
+//! 6400-round cell costs roughly one period of real per-edge work while
+//! every artifact stays byte-identical to the naive path. (Schedules
+//! with an all-strong state 0 — the overlay state every in-tree periodic
+//! design starts with — are guaranteed to recur by round `2·period`.)
+//! While the detector is live it does pay for itself: one τ push per
+//! round plus an O(edges) snapshot per period boundary, until the
+//! recurrence fires or the detector gives up after `MAX_SNAPSHOTS`
+//! boundaries; "zero allocation" describes the steady per-round edge
+//! walk, not the bounded detector bookkeeping.
+//!
+//! Designs that are stochastic (MATCHA with a budget < 1) or whose
+//! period is too large to materialize (multigraph at t = 30 has
+//! s_max ≈ 2.3e9) run on the **streaming engine**: the same arena and
+//! scratch buffers, fed by [`TopologyDesign::plan_into`] each round —
+//! still zero hashing and zero steady-state allocation, just no replay.
+//!
+//! Bit-identity with the reference path is not best-effort: both paths
+//! seed d_0 through [`pair_d0_ms`], apply the same Eq. 4 update in the
+//! same per-round order, and accumulate `total_ms` in round order. The
+//! simcore bench, `tests/sweep_determinism.rs`, and the proptest suite
+//! (`tests/proptest_simcore.rs`) all pin `SimSummary` equality down to
+//! the bits.
+
+use crate::delay::{pair_d0_ms, EdgeType};
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::topo::{RoundPlan, TopologyDesign};
+
+use super::SimSummary;
+
+/// Largest period the engine will materialize per-state tables for.
+/// Beyond this (e.g. multigraph s_max at t ≥ 20) the streaming engine
+/// runs instead; the fast path would never fire inside a realistic
+/// round budget anyway.
+pub const MAX_COMPILED_STATES: u64 = 1 << 16;
+
+/// Snapshots the cycle detector retains before giving up. Every in-tree
+/// periodic schedule recurs by the second period boundary (state 0 is
+/// all-strong), so this is pure insurance against exotic third-party
+/// designs — it bounds detector memory, never correctness.
+const MAX_SNAPSHOTS: usize = 64;
+
+/// How a simulation was executed (introspection for tests/benches —
+/// never part of the artifact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Per-state tables were materialized (periodic engine). `false`
+    /// means the streaming engine ran.
+    pub compiled: bool,
+    /// The materialized period, if periodic.
+    pub period: Option<usize>,
+    /// Round at which the cycle detector fired, if it did.
+    pub cycle_detected_at: Option<usize>,
+    /// Length of the detected cycle.
+    pub cycle_len: Option<usize>,
+    /// Rounds that did real per-edge work (the rest were replayed).
+    pub simulated_rounds: usize,
+}
+
+/// Dense per-pair delay state: stable edge ids assigned on first
+/// appearance, O(1) pair→id lookup without hashing.
+struct EdgeArena {
+    n: usize,
+    /// Row-major (min, max) pair → edge id; `u32::MAX` = unassigned.
+    pair_id: Vec<u32>,
+    /// Static Eq. 3 pair delay (fresh-transfer cost) per edge id.
+    d0: Vec<f64>,
+    /// Eq. 4 backlog per edge id.
+    backlog: Vec<f64>,
+}
+
+impl EdgeArena {
+    fn new(n: usize) -> Self {
+        EdgeArena { n, pair_id: vec![u32::MAX; n * n], d0: Vec::new(), backlog: Vec::new() }
+    }
+
+    #[inline]
+    fn id(&self, u: usize, v: usize) -> u32 {
+        let (a, b) = if u <= v { (u, v) } else { (v, u) };
+        self.pair_id[a * self.n + b]
+    }
+
+    fn insert(&mut self, u: usize, v: usize, d0: f64) -> u32 {
+        let (a, b) = if u <= v { (u, v) } else { (v, u) };
+        let id = self.d0.len() as u32;
+        self.pair_id[a * self.n + b] = id;
+        self.d0.push(d0);
+        // Alg. 1 seeds edge delays from the overlay (all strong):
+        // mirrors `EdgeDelayState::new`.
+        self.backlog.push(d0);
+        id
+    }
+}
+
+/// One compiled schedule state: edge ids with their connection type, in
+/// plan order (the advance pass must run in the exact order the naive
+/// tracker walks `plan.edges`, or a plan listing the same pair twice
+/// with mixed types would diverge), plus the precomputed isolated-node
+/// count (isolation depends only on the plan, never on delays).
+struct StateTable {
+    edges: Vec<(u32, EdgeType)>,
+    isolated: usize,
+}
+
+/// One simulated round over arena-resident edges: the Eq. 5 inner max
+/// (mirroring `strong_delay_ms` + the fold in `round_cycle_time_ms`;
+/// f64::max is order-insensitive here, all delays positive and non-NaN)
+/// followed by the Eq. 4 advance (mirroring `EdgeDelayState::advance`)
+/// **in plan order** — the same per-edge order the naive tracker uses,
+/// which keeps plans listing a pair twice with mixed types bit-exact.
+/// Shared by the periodic and streaming engines so the bit-identity-
+/// critical inner loop exists exactly once. Returns τ_k.
+#[inline]
+fn step_edges(arena: &mut EdgeArena, edges: &[(u32, EdgeType)], floor: f64) -> f64 {
+    let mut tau = floor;
+    for &(id, ty) in edges {
+        if ty == EdgeType::Strong {
+            tau = tau.max(floor.max(arena.backlog[id as usize]));
+        }
+    }
+    for &(id, ty) in edges {
+        match ty {
+            EdgeType::Strong => arena.backlog[id as usize] = arena.d0[id as usize],
+            EdgeType::Weak => {
+                let b = &mut arena.backlog[id as usize];
+                *b = (*b - tau).max(floor);
+            }
+        }
+    }
+    tau
+}
+
+/// Enumerate states `0..period` once and build the arena + tables.
+/// Returns `None` when the design is stochastic or the period is too
+/// large to materialize profitably.
+fn compile_periodic(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> Option<(EdgeArena, Vec<StateTable>)> {
+    let p = topo.period()?;
+    if p == 0 || p > MAX_COMPILED_STATES || p > rounds as u64 {
+        return None;
+    }
+    let p = p as usize;
+    let n = net.n();
+    let mut arena = EdgeArena::new(n);
+    let mut plan = RoundPlan::empty(n);
+    let mut degrees: Vec<usize> = Vec::new();
+    let mut states = Vec::with_capacity(p);
+    for s in 0..p {
+        topo.plan_into(s, &mut plan);
+        let mut st = StateTable { edges: Vec::new(), isolated: plan.isolated_nodes().len() };
+        let mut degrees_ready = false;
+        for &(u, v, ty) in &plan.edges {
+            let mut id = arena.id(u, v);
+            if id == u32::MAX {
+                // A pair entering the schedule seeds d_0 from the degrees
+                // of the plan it first appears in — exactly when (and
+                // with what) the naive tracker would insert it, because
+                // rounds 0..p visit states 0..p in order.
+                if !degrees_ready {
+                    plan.degrees_into(&mut degrees);
+                    degrees_ready = true;
+                }
+                id = arena.insert(u, v, pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]));
+            }
+            st.edges.push((id, ty));
+        }
+        states.push(st);
+    }
+    Some((arena, states))
+}
+
+/// Periodic engine: per-round step over precomputed state tables, with
+/// exact cycle detection + sequential replay.
+fn run_periodic(
+    name: &str,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    mut arena: EdgeArena,
+    states: Vec<StateTable>,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    let p = states.len();
+    let floor = profile.u as f64 * profile.t_c_ms;
+    let mut total_ms = 0.0;
+    let mut rounds_with_isolated = 0usize;
+    let mut max_isolated = 0usize;
+
+    // Cycle detector: recording τ is only worthwhile if a recurrence can
+    // fire before the run ends.
+    let mut detecting = p < rounds;
+    let mut rec_tau: Vec<f64> = Vec::new();
+    let mut snapshots: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut cycle: Option<(usize, usize)> = None; // (start round, length)
+
+    let mut k = 0usize;
+    while k < rounds {
+        let s = k % p;
+        if detecting && s == 0 {
+            // The simulator state entering round k is (s, backlog bits);
+            // an exact repeat means the τ/isolation future repeats too.
+            let snap: Vec<u64> = arena.backlog.iter().map(|b| b.to_bits()).collect();
+            if let Some(&(k0, _)) = snapshots.iter().find(|(_, old)| *old == snap) {
+                cycle = Some((k0, k - k0));
+                break;
+            }
+            if snapshots.len() >= MAX_SNAPSHOTS {
+                // Give up: stop paying for snapshots and τ recording.
+                detecting = false;
+                rec_tau = Vec::new();
+                snapshots = Vec::new();
+            } else {
+                snapshots.push((k, snap));
+            }
+        }
+
+        let st = &states[s];
+        let tau = step_edges(&mut arena, &st.edges, floor);
+
+        total_ms += tau;
+        if st.isolated > 0 {
+            rounds_with_isolated += 1;
+            max_isolated = max_isolated.max(st.isolated);
+        }
+        if detecting {
+            rec_tau.push(tau);
+        }
+        k += 1;
+    }
+
+    let simulated_rounds = k;
+    if let Some((k0, len)) = cycle {
+        // Replay: the τ sequence from the cycle repeats verbatim, so the
+        // remaining rounds are pure sequential adds of recorded values —
+        // identical accumulation order, identical bits, ~zero work.
+        for j in k..rounds {
+            total_ms += rec_tau[k0 + (j - k0) % len];
+            let iso = states[j % p].isolated;
+            if iso > 0 {
+                rounds_with_isolated += 1;
+                max_isolated = max_isolated.max(iso);
+            }
+        }
+    }
+
+    let summary = SimSummary {
+        topology: name.to_string(),
+        network: net.name.clone(),
+        profile: profile.name.clone(),
+        rounds,
+        mean_cycle_ms: total_ms / rounds as f64,
+        total_ms,
+        rounds_with_isolated,
+        max_isolated,
+    };
+    let stats = EngineStats {
+        compiled: true,
+        period: Some(p),
+        cycle_detected_at: cycle.map(|_| simulated_rounds),
+        cycle_len: cycle.map(|(_, len)| len),
+        simulated_rounds,
+    };
+    (summary, stats)
+}
+
+/// Streaming engine: arena-backed stepping for stochastic or
+/// unmaterializably-periodic designs. Zero hashing, zero steady-state
+/// allocation — plans, ids, degrees, and isolation scratch are reused.
+fn run_streaming(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    let n = net.n();
+    let floor = profile.u as f64 * profile.t_c_ms;
+    let mut arena = EdgeArena::new(n);
+    let mut plan = RoundPlan::empty(n);
+    let mut ids: Vec<(u32, EdgeType)> = Vec::new();
+    let mut degrees: Vec<usize> = Vec::new();
+    let mut has_edge = vec![false; n];
+    let mut has_strong = vec![false; n];
+
+    let mut total_ms = 0.0;
+    let mut rounds_with_isolated = 0usize;
+    let mut max_isolated = 0usize;
+
+    for k in 0..rounds {
+        topo.plan_into(k, &mut plan);
+        ids.clear();
+        let mut degrees_ready = false;
+        for &(u, v, ty) in &plan.edges {
+            let mut id = arena.id(u, v);
+            if id == u32::MAX {
+                if !degrees_ready {
+                    plan.degrees_into(&mut degrees);
+                    degrees_ready = true;
+                }
+                id = arena.insert(u, v, pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]));
+            }
+            ids.push((id, ty));
+        }
+
+        let tau = step_edges(&mut arena, &ids, floor);
+        let isolated = plan.isolated_count_into(&mut has_edge, &mut has_strong);
+
+        total_ms += tau;
+        if isolated > 0 {
+            rounds_with_isolated += 1;
+            max_isolated = max_isolated.max(isolated);
+        }
+    }
+
+    let summary = SimSummary {
+        topology: topo.name().to_string(),
+        network: net.name.clone(),
+        profile: profile.name.clone(),
+        rounds,
+        mean_cycle_ms: total_ms / rounds as f64,
+        total_ms,
+        rounds_with_isolated,
+        max_isolated,
+    };
+    let stats = EngineStats {
+        compiled: false,
+        period: None,
+        cycle_detected_at: None,
+        cycle_len: None,
+        simulated_rounds: rounds,
+    };
+    (summary, stats)
+}
+
+/// Compiled-engine equivalent of [`super::simulate_summary_naive`]:
+/// bit-identical `SimSummary`, a fraction of the work.
+pub fn simulate_summary_compiled(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> SimSummary {
+    simulate_summary_compiled_with_stats(topo, net, profile, rounds).0
+}
+
+/// Like [`simulate_summary_compiled`] but also reporting how the engine
+/// executed (which path, whether the cycle fast path fired).
+pub fn simulate_summary_compiled_with_stats(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    assert!(rounds > 0);
+    match compile_periodic(topo, net, profile, rounds) {
+        Some((arena, states)) => run_periodic(topo.name(), net, profile, arena, states, rounds),
+        None => run_streaming(topo, net, profile, rounds),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, TopologyKind};
+    use crate::net::zoo;
+    use crate::simtime::simulate_summary_naive;
+    use crate::topo::MultigraphTopology;
+
+    fn assert_bitwise_equal(a: &SimSummary, b: &SimSummary) {
+        assert_eq!(a.topology, b.topology);
+        assert_eq!(a.network, b.network);
+        assert_eq!(a.profile, b.profile);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(
+            a.total_ms.to_bits(),
+            b.total_ms.to_bits(),
+            "total_ms {} vs {} ({}/{}/{})",
+            a.total_ms,
+            b.total_ms,
+            a.topology,
+            a.network,
+            a.profile
+        );
+        assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits());
+        assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated);
+        assert_eq!(a.max_isolated, b.max_isolated);
+    }
+
+    fn compare(kind: TopologyKind, network: &str, t: u32, rounds: usize) -> EngineStats {
+        let cfg = ExperimentConfig {
+            network: network.into(),
+            topology: kind,
+            t,
+            sim_rounds: rounds,
+            ..Default::default()
+        };
+        let net = cfg.resolve_network();
+        let prof = cfg.resolve_profile().unwrap();
+        let mut a = cfg.build_topology();
+        let mut b = cfg.build_topology();
+        let naive = simulate_summary_naive(a.as_mut(), &net, &prof, rounds);
+        let (fast, stats) = simulate_summary_compiled_with_stats(b.as_mut(), &net, &prof, rounds);
+        assert_bitwise_equal(&naive, &fast);
+        stats
+    }
+
+    #[test]
+    fn every_design_matches_naive_on_every_network() {
+        for net in zoo::all_networks() {
+            for kind in TopologyKind::all() {
+                compare(kind, &net.name, 5, 130);
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_fast_path_fires_on_multigraph_and_stays_exact() {
+        // Gaia t=5: state 0 is all-strong, so the simulator state must
+        // recur within two periods. A 6400-round cell then does at most
+        // 2·s_max rounds of real work — the rest is replay — and still
+        // matches the naive path bitwise (checked inside `compare`).
+        // The bitwise assert doubles as the replay-is-sequential guard:
+        // a `cycle_sum × repeats` replay diverges from the naive sum in
+        // the low bits at this round count and would fail `compare`.
+        let net = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        let p = MultigraphTopology::from_network(&net, &prof, 5).s_max() as usize;
+        assert!(p >= 2 && p <= 6400, "test premise: periodic schedule shorter than the run");
+        let stats = compare(TopologyKind::Multigraph, "gaia", 5, 6400);
+        assert!(stats.compiled);
+        assert_eq!(stats.period, Some(p));
+        let detected = stats.cycle_detected_at.expect("cycle must be detected");
+        assert!(detected <= 2 * p, "detected at {detected}, period {p}");
+        assert_eq!(stats.simulated_rounds, detected);
+        let len = stats.cycle_len.expect("cycle length");
+        assert!(len % p == 0 && len <= 2 * p, "cycle length {len} vs period {p}");
+        // The acceptance bar: ≥ 5× less real work on the paper's cell.
+        assert!(stats.simulated_rounds * 5 <= 6400, "fast path saved < 5x");
+    }
+
+    #[test]
+    fn static_designs_detect_a_length_one_cycle() {
+        for kind in [TopologyKind::Ring, TopologyKind::Star, TopologyKind::Mst] {
+            let stats = compare(kind, "gaia", 5, 500);
+            assert!(stats.compiled);
+            assert_eq!(stats.period, Some(1));
+            assert_eq!(stats.cycle_len, Some(1));
+            assert_eq!(stats.simulated_rounds, 1, "{kind:?} should replay after round 0");
+        }
+    }
+
+    #[test]
+    fn stochastic_matcha_streams_and_matches() {
+        let stats = compare(TopologyKind::Matcha, "gaia", 5, 300);
+        assert!(!stats.compiled, "stochastic MATCHA must take the streaming engine");
+        assert_eq!(stats.simulated_rounds, 300);
+    }
+
+    #[test]
+    fn large_period_falls_back_to_streaming() {
+        // High-t multigraphs (paper Table 6 goes to t = 30) can have an
+        // s_max far beyond any round budget; those cells must stream —
+        // and still match the oracle (checked inside `compare`).
+        let net = zoo::exodus();
+        let prof = crate::net::DatasetProfile::femnist();
+        for t in [20u32, 30] {
+            let s_max = MultigraphTopology::from_network(&net, &prof, t).s_max();
+            let stats = compare(TopologyKind::Multigraph, "exodus", t, 90);
+            if s_max > 90 {
+                assert!(!stats.compiled, "t={t}: s_max={s_max} must take the streaming engine");
+            }
+            assert_eq!(stats.simulated_rounds, 90);
+        }
+    }
+
+    #[test]
+    fn period_longer_than_run_still_matches() {
+        // Gaia t=5 has s_max > 2; at rounds = 2 the periodic compile is
+        // skipped (no replay could fire) and streaming must still match.
+        let net = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        assert!(MultigraphTopology::from_network(&net, &prof, 5).s_max() > 2);
+        let stats = compare(TopologyKind::Multigraph, "gaia", 5, 2);
+        assert!(!stats.compiled);
+    }
+
+}

@@ -7,11 +7,15 @@
 //! long the local hardware takes, which is exactly how the paper's
 //! cycle-time tables are produced.
 
+pub mod compiled;
+
 use std::collections::HashMap;
 
-use crate::delay::{eq3_delay_ms, round_cycle_time_ms, EdgeDelayState, EdgeType};
+use crate::delay::{pair_d0_ms, round_cycle_time_ms, EdgeDelayState, EdgeType};
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::topo::TopologyDesign;
+
+pub use compiled::{simulate_summary_compiled, simulate_summary_compiled_with_stats, EngineStats};
 
 /// Simulation output for one (topology, network, profile) cell.
 #[derive(Debug, Clone)]
@@ -83,26 +87,15 @@ impl DelayTracker {
         // Delays for this round: persistent Eq. 4 state for pairs we have
         // seen; fresh Eq. 3 for pairs entering the schedule (their d_0 is
         // the current-plan-degree delay, matching Alg. 1's overlay seed).
+        // Keys are normalized u <= v — the same normalization as
+        // `pair_delay_ms` — so a design emitting (v, u) cannot silently
+        // fork a pair into two delay states.
         let mut strong_delays = Vec::new();
         for &(u, v, ty) in &plan.edges {
-            let st = self.edge_state.entry((u, v)).or_insert_with(|| {
-                let du = eq3_delay_ms(
-                    &self.net,
-                    &self.profile,
-                    u,
-                    v,
-                    degrees[u].max(1),
-                    degrees[v].max(1),
-                );
-                let dv = eq3_delay_ms(
-                    &self.net,
-                    &self.profile,
-                    v,
-                    u,
-                    degrees[v].max(1),
-                    degrees[u].max(1),
-                );
-                EdgeDelayState::new(du.max(dv))
+            let key = if u <= v { (u, v) } else { (v, u) };
+            let st = self.edge_state.entry(key).or_insert_with(|| {
+                let d0 = pair_d0_ms(&self.net, &self.profile, u, v, degrees[u], degrees[v]);
+                EdgeDelayState::new(d0)
             });
             if ty == EdgeType::Strong {
                 strong_delays.push(st.strong_delay_ms(&self.profile));
@@ -113,7 +106,8 @@ impl DelayTracker {
 
         // Advance Eq. 4 for every pair present this round.
         for &(u, v, ty) in &plan.edges {
-            self.edge_state.get_mut(&(u, v)).unwrap().advance(ty, tau, &self.profile);
+            let key = if u <= v { (u, v) } else { (v, u) };
+            self.edge_state.get_mut(&key).unwrap().advance(ty, tau, &self.profile);
         }
 
         RoundTime { cycle_ms: tau, isolated: plan.isolated_nodes().len() }
@@ -142,7 +136,26 @@ pub struct SimSummary {
 /// a given (topology, network, profile, rounds, seed) the result is
 /// bit-identical wherever it runs — the property the sweep determinism
 /// test pins down.
+///
+/// Since PR 2 this runs on the compiled zero-allocation engine
+/// ([`compiled`]): a dense edge arena plus an exact cycle-detection fast
+/// path for periodic schedules. The engine is pinned bit-identical to
+/// the [`DelayTracker`] reference path ([`simulate_summary_naive`]) by
+/// the simcore bench, unit tests, and the proptest suite.
 pub fn simulate_summary(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> SimSummary {
+    compiled::simulate_summary_compiled(topo, net, profile, rounds)
+}
+
+/// The reference implementation of [`simulate_summary`]: one
+/// [`DelayTracker`] step per round, allocating plans and hashing pair
+/// keys. Kept as the oracle the compiled engine is verified against —
+/// never deleted, never optimized.
+pub fn simulate_summary_naive(
     topo: &mut dyn TopologyDesign,
     net: &NetworkSpec,
     profile: &DatasetProfile,
@@ -221,6 +234,7 @@ pub fn simulate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::delay::eq3_delay_ms;
     use crate::net::zoo;
     use crate::topo::ring::RingTopology;
     use crate::topo::star::StarTopology;

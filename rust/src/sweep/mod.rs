@@ -22,7 +22,8 @@ pub use spec::{CellSpec, SweepSpec};
 
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::Instant;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -45,13 +46,57 @@ pub fn effective_threads(requested: usize, cells: usize) -> usize {
     t.clamp(1, cells.max(1))
 }
 
-fn print_progress(done: usize, total: usize) {
-    let mut err = std::io::stderr().lock();
-    let _ = write!(err, "\r  sweep: {done}/{total} cells");
-    if done == total {
-        let _ = writeln!(err);
+/// Throttled progress meter. The old per-cell `stderr` lock + flush
+/// measurably serialized short-cell sweeps (thousands of cells finishing
+/// in microseconds all contending on one syscall); this prints only when
+/// the integer percentage moves or ≥ 100 ms passed since the last line,
+/// and always for the final cell.
+struct Progress {
+    total: usize,
+    state: Mutex<(usize, Instant)>, // (last printed done count, last print time)
+}
+
+const PROGRESS_INTERVAL: Duration = Duration::from_millis(100);
+
+impl Progress {
+    fn new(total: usize) -> Self {
+        // Seed last-print in the past so the first tick always prints
+        // (checked_sub: an Instant cannot go before the clock's origin).
+        let now = Instant::now();
+        let seed = now.checked_sub(PROGRESS_INTERVAL).unwrap_or(now);
+        Progress { total, state: Mutex::new((0, seed)) }
     }
-    let _ = err.flush();
+
+    fn tick(&self, done: usize) {
+        let finishing = done >= self.total;
+        // Non-final ticks bail if another worker holds the lock — it is
+        // already printing fresher progress than ours.
+        let mut state = if finishing {
+            self.state.lock().expect("progress lock")
+        } else {
+            match self.state.try_lock() {
+                Ok(guard) => guard,
+                Err(_) => return,
+            }
+        };
+        // Monotonic: a straggler that observed an older count must not
+        // print a regressing line (or anything after the final line).
+        if done <= state.0 {
+            return;
+        }
+        let pct = done * 100 / self.total.max(1);
+        let last_pct = state.0 * 100 / self.total.max(1);
+        if !finishing && pct == last_pct && state.1.elapsed() < PROGRESS_INTERVAL {
+            return;
+        }
+        *state = (done, Instant::now());
+        let mut err = std::io::stderr().lock();
+        let _ = write!(err, "\r  sweep: {done}/{} cells", self.total);
+        if finishing {
+            let _ = writeln!(err);
+        }
+        let _ = err.flush();
+    }
 }
 
 /// Order-preserving parallel map: `out[i] == f(i, &cells[i])` for every
@@ -67,25 +112,30 @@ where
 {
     let total = cells.len();
     let threads = effective_threads(opts.threads, total);
+    let progress = if opts.progress && total > 0 {
+        Some(Progress::new(total))
+    } else {
+        None
+    };
     if threads <= 1 {
         return cells
             .iter()
             .enumerate()
             .map(|(i, c)| {
                 let r = f(i, c);
-                if opts.progress {
-                    print_progress(i + 1, total);
+                if let Some(p) = &progress {
+                    p.tick(i + 1);
                 }
                 r
             })
             .collect();
     }
-    run_parallel(cells, threads, opts.progress, f)
+    run_parallel(cells, threads, progress.as_ref(), f)
 }
 
 /// Work-stealing pool (enabled with `--features rayon`).
 #[cfg(feature = "rayon")]
-fn run_parallel<T, R, F>(cells: &[T], threads: usize, progress: bool, f: F) -> Vec<R>
+fn run_parallel<T, R, F>(cells: &[T], threads: usize, progress: Option<&Progress>, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
@@ -104,8 +154,8 @@ where
             .map(|(i, c)| {
                 let r = f(i, c);
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
-                if progress {
-                    print_progress(finished, cells.len());
+                if let Some(p) = progress {
+                    p.tick(finished);
                 }
                 r
             })
@@ -117,13 +167,12 @@ where
 /// shared atomic counter and write results into per-cell slots, so
 /// output order is the input order whatever the scheduling.
 #[cfg(not(feature = "rayon"))]
-fn run_parallel<T, R, F>(cells: &[T], threads: usize, progress: bool, f: F) -> Vec<R>
+fn run_parallel<T, R, F>(cells: &[T], threads: usize, progress: Option<&Progress>, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    use std::sync::Mutex;
     let total = cells.len();
     let next = AtomicUsize::new(0);
     let done = AtomicUsize::new(0);
@@ -138,8 +187,8 @@ where
                 let r = f(i, &cells[i]);
                 *slots[i].lock().expect("cell slot lock") = Some(r);
                 let finished = done.fetch_add(1, Ordering::Relaxed) + 1;
-                if progress {
-                    print_progress(finished, total);
+                if let Some(p) = progress {
+                    p.tick(finished);
                 }
             });
         }
@@ -151,8 +200,10 @@ where
 }
 
 /// Simulate one grid cell. Pure in the cell spec: builds the topology
-/// (seeded from the cell's derived stream) and its own delay tracker, so
-/// concurrent cells share no mutable state.
+/// (seeded from the cell's derived stream) and its own simulation state,
+/// so concurrent cells share nothing mutable. Cells run on the compiled
+/// zero-allocation engine ([`crate::simtime::compiled`]); periodic cells
+/// additionally take its cycle-detection fast path.
 pub fn run_cell(cell: &CellSpec) -> CellResult {
     let cfg = cell.to_experiment();
     let net = cfg.resolve_network();

@@ -74,14 +74,21 @@ impl TopologyDesign for MatchaTopology {
         &self.overlay
     }
 
-    fn plan(&mut self, _k: usize) -> RoundPlan {
-        let mut edges = Vec::new();
+    fn plan(&mut self, k: usize) -> RoundPlan {
+        let mut plan = RoundPlan::empty(self.overlay.n());
+        self.plan_into(k, &mut plan);
+        plan
+    }
+
+    fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
+        out.reset(self.overlay.n());
         for m in &self.matchings {
             if self.budget >= 1.0 || self.rng.gen_f64() < self.budget {
-                edges.extend(m.iter().map(|&(u, v, _)| (u, v, EdgeType::Strong)));
+                for &(u, v, _) in m {
+                    out.push(u, v, EdgeType::Strong);
+                }
             }
         }
-        RoundPlan { n: self.overlay.n(), edges }
     }
 
     fn period(&self) -> Option<u64> {

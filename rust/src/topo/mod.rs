@@ -31,22 +31,68 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
+    /// Build a plan, checking (in debug builds) that every pair is
+    /// normalized `u < v` — the invariant the delay tracker's pair keys
+    /// and the compiled engine's edge arena both rely on.
+    pub fn new(n: usize, edges: Vec<(NodeId, NodeId, EdgeType)>) -> Self {
+        if cfg!(debug_assertions) {
+            for &(u, v, _) in &edges {
+                debug_assert!(u < v, "RoundPlan pair must be normalized u < v, got ({u}, {v})");
+            }
+        }
+        RoundPlan { n, edges }
+    }
+
+    /// An empty plan over `n` nodes, for reuse via [`Self::reset`] and
+    /// [`Self::push`] (the `plan_into` zero-allocation path).
+    pub fn empty(n: usize) -> Self {
+        RoundPlan { n, edges: Vec::new() }
+    }
+
+    /// Clear the edge list (keeping its capacity) and retarget `n`.
+    pub fn reset(&mut self, n: usize) {
+        self.n = n;
+        self.edges.clear();
+    }
+
+    /// Append one pair, asserting normalization in debug builds.
+    #[inline]
+    pub fn push(&mut self, u: NodeId, v: NodeId, ty: EdgeType) {
+        debug_assert!(u < v, "RoundPlan pair must be normalized u < v, got ({u}, {v})");
+        self.edges.push((u, v, ty));
+    }
+
     pub fn all_strong(g: &Graph) -> Self {
-        RoundPlan {
-            n: g.n(),
-            edges: g.edges().iter().map(|e| (e.u, e.v, EdgeType::Strong)).collect(),
+        let mut plan = RoundPlan::empty(g.n());
+        Self::all_strong_into(g, &mut plan);
+        plan
+    }
+
+    /// Fill `out` with every edge of `g` marked strong, reusing its
+    /// allocation.
+    pub fn all_strong_into(g: &Graph, out: &mut RoundPlan) {
+        out.reset(g.n());
+        for e in g.edges() {
+            out.push(e.u, e.v, EdgeType::Strong);
         }
     }
 
     /// Per-node degree over *all* planned edges (strong + weak) — the
     /// concurrency that divides access capacity in Eq. 3.
     pub fn degrees(&self) -> Vec<usize> {
-        let mut deg = vec![0usize; self.n];
-        for &(u, v, _) in &self.edges {
-            deg[u] += 1;
-            deg[v] += 1;
-        }
+        let mut deg = Vec::new();
+        self.degrees_into(&mut deg);
         deg
+    }
+
+    /// Like [`Self::degrees`] but reusing `out` (no per-round allocation).
+    pub fn degrees_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.resize(self.n, 0);
+        for &(u, v, _) in &self.edges {
+            out[u] += 1;
+            out[v] += 1;
+        }
     }
 
     /// Nodes participating in no strong edge this round. For the
@@ -54,8 +100,21 @@ impl RoundPlan {
     /// incident connections weak); for baselines, nodes the design simply
     /// leaves out this round (e.g. MATCHA non-matched nodes).
     pub fn isolated_nodes(&self) -> Vec<NodeId> {
-        let mut has_strong = vec![false; self.n];
-        let mut has_edge = vec![false; self.n];
+        let mut has_edge = Vec::new();
+        let mut has_strong = Vec::new();
+        self.mark_participation(&mut has_edge, &mut has_strong);
+        (0..self.n).filter(|&i| has_edge[i] && !has_strong[i]).collect()
+    }
+
+    /// Mark, per node, whether it touches any planned edge / any strong
+    /// edge. This is the single definition of the isolation rule —
+    /// [`Self::isolated_nodes`], [`Self::isolated_count_into`], and
+    /// through them both simulation engines all derive from it.
+    pub fn mark_participation(&self, has_edge: &mut Vec<bool>, has_strong: &mut Vec<bool>) {
+        has_edge.clear();
+        has_edge.resize(self.n, false);
+        has_strong.clear();
+        has_strong.resize(self.n, false);
         for &(u, v, t) in &self.edges {
             has_edge[u] = true;
             has_edge[v] = true;
@@ -64,7 +123,17 @@ impl RoundPlan {
                 has_strong[v] = true;
             }
         }
-        (0..self.n).filter(|&i| has_edge[i] && !has_strong[i]).collect()
+    }
+
+    /// `isolated_nodes().len()` without the id vec, into caller scratch
+    /// (the compiled engine's per-round isolation count).
+    pub fn isolated_count_into(
+        &self,
+        has_edge: &mut Vec<bool>,
+        has_strong: &mut Vec<bool>,
+    ) -> usize {
+        self.mark_participation(has_edge, has_strong);
+        (0..self.n).filter(|&i| has_edge[i] && !has_strong[i]).count()
     }
 
     pub fn strong_edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
@@ -87,8 +156,22 @@ pub trait TopologyDesign {
     /// (MATCHA) carry an RNG.
     fn plan(&mut self, k: usize) -> RoundPlan;
 
+    /// Fill `out` with the plan for round `k`, reusing its allocation.
+    /// This is the compiled engine's per-round entry point; every
+    /// in-tree design overrides it allocation-free, and the default
+    /// delegates to [`Self::plan`] for third-party designs.
+    fn plan_into(&mut self, k: usize, out: &mut RoundPlan) {
+        *out = self.plan(k);
+    }
+
     /// Schedule period, if the design is periodic (multigraph: s_max;
     /// static designs: 1; stochastic: None).
+    ///
+    /// Contract: returning `Some(p)` asserts `plan(k)` depends only on
+    /// `k % p` and consumes no randomness — the compiled engine
+    /// enumerates states `0..p` once and replays them, and its cycle
+    /// detector assumes the schedule recurs exactly. Stochastic designs
+    /// must return `None`.
     fn period(&self) -> Option<u64> {
         Some(1)
     }
@@ -112,6 +195,23 @@ mod tests {
         // 2 and 3 touch only weak edges -> isolated; 0,1 have strong.
         assert_eq!(plan.isolated_nodes(), vec![2, 3]);
         assert_eq!(plan.strong_edges().count(), 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "normalized")]
+    fn push_rejects_unnormalized_pairs() {
+        let mut plan = RoundPlan::empty(3);
+        plan.push(2, 1, EdgeType::Strong);
+    }
+
+    #[test]
+    fn degrees_into_reuses_buffer() {
+        let plan = RoundPlan::new(3, vec![(0, 1, EdgeType::Strong), (1, 2, EdgeType::Weak)]);
+        let mut buf = vec![9usize; 17]; // stale, oversized
+        plan.degrees_into(&mut buf);
+        assert_eq!(buf, vec![1, 2, 1]);
+        assert_eq!(buf, plan.degrees());
     }
 
     #[test]

@@ -62,9 +62,16 @@ impl Multigraph {
             })
             .collect();
 
-        // Line 5: d_min.
-        let d_min_ms = delays.iter().cloned().fold(f64::MAX, f64::min);
-        assert!(d_min_ms > 0.0 && d_min_ms.is_finite());
+        // Line 5: d_min. Seed with +inf (not f64::MAX) so an empty edge
+        // set can never masquerade as a real delay.
+        let d_min_ms = delays.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            d_min_ms > 0.0 && d_min_ms.is_finite(),
+            "d_min must be positive and finite on network '{}' (got {} over {} overlay pairs)",
+            net.name,
+            d_min_ms,
+            delays.len()
+        );
 
         // Lines 8-15: n(i,j) = min(t, round(d/d_min)), floored at 1 so
         // every pair keeps its strongly-connected edge.

@@ -35,6 +35,10 @@ impl TopologyDesign for RingTopology {
     fn plan(&mut self, _k: usize) -> RoundPlan {
         RoundPlan::all_strong(&self.overlay)
     }
+
+    fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
+        RoundPlan::all_strong_into(&self.overlay, out);
+    }
 }
 
 #[cfg(test)]

@@ -53,6 +53,10 @@ impl TopologyDesign for StarTopology {
     fn plan(&mut self, _k: usize) -> RoundPlan {
         RoundPlan::all_strong(&self.overlay)
     }
+
+    fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
+        RoundPlan::all_strong_into(&self.overlay, out);
+    }
 }
 
 #[cfg(test)]

@@ -54,7 +54,7 @@ pub fn parse_states_explicit(mg: &Multigraph, cap: u64) -> Vec<GraphState> {
                 bar_l[idx] -= 1; // decrement (line 14)
             }
         }
-        let plan = RoundPlan { n: mg.n, edges: edges.clone() };
+        let plan = RoundPlan::new(mg.n, edges.clone());
         out.push(GraphState { index: s, edges, isolated: plan.isolated_nodes() });
     }
     out
@@ -101,13 +101,19 @@ impl MultigraphTopology {
 
     /// Plan for an explicit state index (used by state-analysis tools).
     pub fn plan_for_state(&self, s: u64) -> RoundPlan {
-        let edges = self
-            .mg
-            .edges
-            .iter()
-            .map(|e| (e.u, e.v, edge_type_in_state(e.n_edges, s)))
-            .collect();
-        RoundPlan { n: self.mg.n, edges }
+        let mut plan = RoundPlan::empty(self.mg.n);
+        self.plan_for_state_into(s, &mut plan);
+        plan
+    }
+
+    /// Like [`Self::plan_for_state`] but reusing `out` — the per-edge
+    /// closed-form pattern evaluated with zero allocation (the compiled
+    /// engine's streaming path when s_max is too large to materialize).
+    pub fn plan_for_state_into(&self, s: u64, out: &mut RoundPlan) {
+        out.reset(self.mg.n);
+        for e in &self.mg.edges {
+            out.push(e.u, e.v, edge_type_in_state(e.n_edges, s));
+        }
     }
 
     /// Indices of states (within one period, capped) containing at least
@@ -130,6 +136,10 @@ impl TopologyDesign for MultigraphTopology {
 
     fn plan(&mut self, k: usize) -> RoundPlan {
         self.plan_for_state(self.state_index(k))
+    }
+
+    fn plan_into(&mut self, k: usize, out: &mut RoundPlan) {
+        self.plan_for_state_into(self.state_index(k), out);
     }
 
     fn period(&self) -> Option<u64> {

@@ -1,0 +1,71 @@
+//! Property tests for the compiled simulation engine, backed by the
+//! real proptest crate (gated behind `--features proptest` like
+//! `tests/proptest_sweep.rs`; the offline build vendors no proptest).
+//!
+//! The property is the engine's entire contract: for ANY cell —
+//! random network, any of the topology designs (stochastic MATCHA
+//! included), t ∈ 1..=10, arbitrary seed and round count — the compiled
+//! `simulate_summary` must be **bitwise** equal to the naive
+//! `DelayTracker` reference, counters included.
+
+#![cfg(feature = "proptest")]
+
+use mgfl::config::{ExperimentConfig, TopologyKind};
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::{simulate_summary, simulate_summary_naive};
+use proptest::prelude::*;
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(48))]
+
+    #[test]
+    fn compiled_engine_is_bitwise_equal_to_naive(
+        net_i in 0usize..64,
+        kind_i in 0usize..64,
+        prof_i in 0usize..64,
+        t in 1u32..=10,
+        seed in 0u64..(1 << 48),
+        rounds in 1usize..220,
+    ) {
+        let nets = zoo::all_networks();
+        let net_name = nets[net_i % nets.len()].name.clone();
+        let profiles = DatasetProfile::all();
+        let prof_name = profiles[prof_i % profiles.len()].name.clone();
+        let kinds = TopologyKind::all();
+        let kind = kinds[kind_i % kinds.len()];
+
+        let cfg = ExperimentConfig {
+            network: net_name,
+            profile: prof_name,
+            topology: kind,
+            t,
+            sim_rounds: rounds,
+            seed,
+            train: None,
+        };
+        cfg.validate().unwrap();
+        let net = cfg.resolve_network();
+        let prof = cfg.resolve_profile().unwrap();
+
+        // Two independent instances: stochastic designs consume RNG, so
+        // each engine needs its own identically-seeded topology.
+        let mut naive_topo = cfg.build_topology();
+        let mut fast_topo = cfg.build_topology();
+        let naive = simulate_summary_naive(naive_topo.as_mut(), &net, &prof, rounds);
+        let fast = simulate_summary(fast_topo.as_mut(), &net, &prof, rounds);
+
+        prop_assert_eq!(&naive.topology, &fast.topology);
+        prop_assert_eq!(&naive.network, &fast.network);
+        prop_assert_eq!(&naive.profile, &fast.profile);
+        prop_assert_eq!(naive.rounds, fast.rounds);
+        prop_assert_eq!(
+            naive.total_ms.to_bits(),
+            fast.total_ms.to_bits(),
+            "total_ms: naive {} vs compiled {} on {:?}/{}/{} t={} rounds={}",
+            naive.total_ms, fast.total_ms, kind, net.name, prof.name, t, rounds
+        );
+        prop_assert_eq!(naive.mean_cycle_ms.to_bits(), fast.mean_cycle_ms.to_bits());
+        prop_assert_eq!(naive.rounds_with_isolated, fast.rounds_with_isolated);
+        prop_assert_eq!(naive.max_isolated, fast.max_isolated);
+    }
+}

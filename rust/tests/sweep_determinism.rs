@@ -6,6 +6,7 @@
 //! like MATCHA whose schedules consume randomness.
 
 use mgfl::config::TopologyKind;
+use mgfl::simtime::simulate_summary_naive;
 use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
 
 /// A small but adversarial grid: two networks of very different sizes
@@ -94,6 +95,37 @@ fn report_is_grid_ordered_and_complete() {
         report.axis_values(Axis::Topology),
         vec!["star", "matcha", "matcha_plus", "ring", "multigraph"]
     );
+}
+
+#[test]
+fn compiled_engine_cells_match_the_naive_oracle_bitwise() {
+    // Since PR 2 every sweep cell runs on the compiled simulation
+    // engine; at 400 rounds the multigraph cells (period = s_max) go
+    // through the cycle-detection fast path (state recurrence within
+    // two periods, then τ-sequence replay). The sweep artifact must
+    // nevertheless be bit-identical to simulating each cell by hand on
+    // the naive DelayTracker reference path — the invariant that lets
+    // the fast path exist at all.
+    let mut spec = spec();
+    spec.rounds = 400;
+    let outcome = sweep::run(&spec, &RunOptions { threads: 4, progress: false }).unwrap();
+    assert_eq!(outcome.report.cells.len(), spec.cell_count());
+    for (got, cell) in outcome.report.cells.iter().zip(spec.expand()) {
+        let cfg = cell.to_experiment();
+        let net = cfg.resolve_network();
+        let prof = cfg.resolve_profile().unwrap();
+        let mut topo = cfg.build_topology();
+        let want = simulate_summary_naive(topo.as_mut(), &net, &prof, cell.rounds);
+        let ctx = format!("{}/{}/{} t={}", got.topology, got.network, got.profile, got.t);
+        assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits(), "total_ms differs: {ctx}");
+        assert_eq!(
+            got.mean_cycle_ms.to_bits(),
+            want.mean_cycle_ms.to_bits(),
+            "mean_cycle_ms differs: {ctx}"
+        );
+        assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated, "{ctx}");
+        assert_eq!(got.max_isolated, want.max_isolated, "{ctx}");
+    }
 }
 
 #[test]
