@@ -29,7 +29,7 @@ fn main() {
     let spec = SweepSpec::table1(profiles, 5, rounds);
 
     // Parallel sweep: the path `mgfl table1` takes.
-    let par = sweep::run(&spec, &RunOptions { threads, progress: false }).expect("sweep run");
+    let par = sweep::run(&spec, &RunOptions { threads, ..Default::default() }).expect("sweep run");
     for prof in &spec.profiles {
         println!("\n--- {prof} ---");
         print!(
@@ -41,7 +41,7 @@ fn main() {
     // Serial reference over the identical grid: the engine's wall-clock
     // speedup is this bench's headline number, and byte-identical
     // artifacts across thread counts are re-checked for free.
-    let ser = sweep::run(&spec, &RunOptions { threads: 1, progress: false }).expect("sweep run");
+    let ser = sweep::run(&spec, &RunOptions { threads: 1, ..Default::default() }).expect("sweep run");
     let identical = ser.report.to_json().to_string() == par.report.to_json().to_string();
     println!(
         "\nsweep engine: {} cells | serial {:.2} s | parallel {:.2} s on {} threads \

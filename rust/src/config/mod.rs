@@ -8,7 +8,7 @@ use std::str::FromStr;
 use anyhow::{bail, ensure, Context, Result};
 
 /// Which topology design to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum TopologyKind {
     Star,
     Matcha,
@@ -23,6 +23,27 @@ impl TopologyKind {
     pub fn all() -> [TopologyKind; 7] {
         use TopologyKind::*;
         [Star, Matcha, MatchaPlus, Mst, DeltaMbst, Ring, Multigraph]
+    }
+
+    /// Whether the experiment seed influences the design this kind
+    /// builds ([`ExperimentConfig::build_topology`]). Kind-level mirror
+    /// of [`crate::topo::TopologyDesign::seed_sensitive`] — the sweep
+    /// scheduler consults it *before* building anything, to decide
+    /// whether cells differing only in seed are the same work item.
+    /// Only budget-limited MATCHA draws randomness; MATCHA+ activates
+    /// every matching unconditionally and all other designs are pure
+    /// functions of (network, profile, t). Pinned equal to the built
+    /// designs' own answer by `kind_contracts_match_built_designs`.
+    pub fn seed_sensitive(&self) -> bool {
+        matches!(self, TopologyKind::Matcha)
+    }
+
+    /// Whether Algorithm 1's `t` parameter reaches the design this kind
+    /// builds. Every cell carries `t` for bookkeeping, but only the
+    /// multigraph consumes it — the sweep compile cache collapses the
+    /// `t` axis for every other kind.
+    pub fn t_sensitive(&self) -> bool {
+        matches!(self, TopologyKind::Multigraph)
     }
 
     pub fn as_str(&self) -> &'static str {
@@ -421,6 +442,44 @@ isolated_policy = "skip"
             let topo = cfg.build_topology();
             assert_eq!(topo.name(), kind.as_str());
         }
+    }
+
+    #[test]
+    fn kind_contracts_match_built_designs() {
+        // The sweep scheduler trusts the kind-level determinism contract
+        // before any design exists; it must agree with what the built
+        // design itself reports, for every kind.
+        for kind in TopologyKind::all() {
+            let cfg = ExperimentConfig { topology: kind, ..ExperimentConfig::default() };
+            let topo = cfg.build_topology();
+            assert_eq!(
+                topo.seed_sensitive(),
+                kind.seed_sensitive(),
+                "kind/design seed_sensitive mismatch for {kind:?}"
+            );
+            if kind.seed_sensitive() {
+                assert!(topo.period().is_none(), "{kind:?}: stochastic designs have no period");
+            }
+            // The compile cache collapses the t axis for !t_sensitive
+            // kinds, so a wrong `false` would silently serve one t's
+            // schedule for every t: require plan equality across t.
+            if !kind.t_sensitive() {
+                let build = |t: u32| {
+                    ExperimentConfig { topology: kind, t, ..ExperimentConfig::default() }
+                        .build_topology()
+                };
+                let (mut a, mut b) = (build(3), build(7));
+                for k in 0..4 {
+                    assert_eq!(
+                        a.plan(k).edges,
+                        b.plan(k).edges,
+                        "{kind:?} claims t-insensitivity but t changes its round-{k} plan"
+                    );
+                }
+            }
+        }
+        assert!(TopologyKind::Multigraph.t_sensitive());
+        assert!(!TopologyKind::Ring.t_sensitive());
     }
 
     #[test]

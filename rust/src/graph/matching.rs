@@ -19,19 +19,25 @@ pub fn greedy_min_weight_matching(
     mut w: impl FnMut(NodeId, NodeId) -> f64,
 ) -> Vec<(NodeId, NodeId)> {
     assert!(nodes.len() % 2 == 0, "perfect matching needs an even node set");
-    let mut pairs: Vec<(f64, NodeId, NodeId)> = Vec::new();
+    let mut pairs: Vec<(f64, NodeId, NodeId)> =
+        Vec::with_capacity(nodes.len() * nodes.len().saturating_sub(1) / 2);
     for (i, &u) in nodes.iter().enumerate() {
         for &v in &nodes[i + 1..] {
             pairs.push((w(u, v), u, v));
         }
     }
     pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
-    let mut used = std::collections::BTreeSet::new();
+    // Flat marker pass over the sorted pairs: node ids are dense graph
+    // indices, so they index `used` directly — O(1) per probe with one
+    // allocation total, where the old BTreeSet paid O(log k) plus a
+    // node allocation per insert on a path that construction caching
+    // has made hot.
+    let mut used = vec![false; nodes.iter().map(|&u| u + 1).max().unwrap_or(0)];
     let mut matching = Vec::with_capacity(nodes.len() / 2);
     for (_, u, v) in pairs {
-        if !used.contains(&u) && !used.contains(&v) {
-            used.insert(u);
-            used.insert(v);
+        if !used[u] && !used[v] {
+            used[u] = true;
+            used[v] = true;
             matching.push((u, v));
         }
     }
@@ -68,12 +74,13 @@ fn improve_matching(m: &mut [(NodeId, NodeId)], w: &mut impl FnMut(NodeId, NodeI
 pub fn maximal_matching(edges: &[(NodeId, NodeId, f64)]) -> Vec<(NodeId, NodeId, f64)> {
     let mut sorted: Vec<_> = edges.to_vec();
     sorted.sort_by(|a, b| a.2.total_cmp(&b.2));
-    let mut used = std::collections::BTreeSet::new();
+    // Same flat marker pass as `greedy_min_weight_matching`.
+    let mut used = vec![false; edges.iter().map(|&(u, v, _)| u.max(v) + 1).max().unwrap_or(0)];
     let mut out = Vec::new();
     for (u, v, w) in sorted {
-        if !used.contains(&u) && !used.contains(&v) {
-            used.insert(u);
-            used.insert(v);
+        if !used[u] && !used[v] {
+            used[u] = true;
+            used[v] = true;
             out.push((u, v, w));
         }
     }
@@ -145,6 +152,21 @@ mod tests {
     #[should_panic(expected = "even")]
     fn rejects_odd_node_set() {
         greedy_min_weight_matching(&[0, 1, 2], |_, _| 1.0);
+    }
+
+    #[test]
+    fn marker_pass_handles_sparse_node_ids() {
+        // Odd-degree vertex sets are arbitrary subsets of 0..n, so the
+        // flat `used` vec must be sized by the max id, not the count.
+        let m = greedy_min_weight_matching(&[3, 10, 21, 4], |u, v| (u as f64 - v as f64).abs());
+        let mut pairs: Vec<(NodeId, NodeId)> =
+            m.iter().map(|&(u, v)| (u.min(v), u.max(v))).collect();
+        pairs.sort();
+        assert_eq!(pairs, vec![(3, 4), (10, 21)]);
+        let mm = maximal_matching(&[(9, 2, 1.0), (2, 5, 0.5), (9, 30, 2.0)]);
+        assert_eq!(mm, vec![(2, 5, 0.5), (9, 30, 2.0)]);
+        assert!(maximal_matching(&[]).is_empty());
+        assert!(greedy_min_weight_matching(&[], |_, _| 0.0).is_empty());
     }
 
     #[test]

@@ -35,14 +35,15 @@
 //! ## Sweeps
 //!
 //! Paper tables are grids of independent simulations; the [`sweep`]
-//! engine runs any such grid across threads and writes deterministic
-//! JSON/CSV artifacts (`mgfl sweep spec.toml` from the CLI):
+//! engine deduplicates any such grid into its unique work items, runs
+//! those across threads, and writes deterministic JSON/CSV artifacts
+//! (`mgfl sweep spec.toml` from the CLI):
 //!
 //! ```no_run
 //! use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
 //!
 //! let spec = SweepSpec::table1(vec!["femnist".into()], 5, 6400);
-//! let outcome = sweep::run(&spec, &RunOptions { threads: 0, progress: true }).unwrap();
+//! let outcome = sweep::run(&spec, &RunOptions::default()).unwrap();
 //! outcome.report.write_artifacts("results").unwrap();
 //! print!("{}", outcome.report.render_slice(Axis::Network, Axis::Topology, |_| true));
 //! ```

@@ -25,7 +25,7 @@ SUBCOMMANDS
   simulate  --network gaia --profile femnist --topology multigraph --t 5 --rounds 6400 --seed 17
   sweep     [spec.toml] [--threads 0] [--out results] [--name sweep] [--rounds 6400]
             [--topologies all|a,b] [--networks all|a,b] [--profiles all|a,b]
-            [--t 1,3,5] [--seeds 17,18]
+            [--t 1,3,5] [--seeds 17,18] [--no-dedup]
   train     <config.toml> [--eval-every 10] [--csv out.csv]
   table1    [--rounds 6400] [--t 5] [--profile femnist] [--threads 0]
   table2
@@ -38,7 +38,10 @@ SUBCOMMANDS
   fig5      [--rounds 40] [--model femnist_mlp] [--network exodus] [--out results]
 
 `--threads 0` means one worker per core; sweep artifacts are
-byte-identical for any thread count.
+byte-identical for any thread count. Sweeps deduplicate cells that are
+provably identical (deterministic topologies replicated across seeds)
+and fan the results out; `--no-dedup` forces every cell to simulate —
+the artifacts are byte-identical either way.
 ";
 
 fn resolve_profile(name: &str) -> Result<DatasetProfile> {
@@ -215,6 +218,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
     spec.validate()?;
 
     let threads: usize = args.get("threads", 0)?;
+    let dedup = !args.has("no-dedup");
     eprintln!(
         "sweep '{}': {} cells ({} topologies x {} networks x {} profiles x {} t x {} seeds, {} rounds)",
         spec.name,
@@ -226,7 +230,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         spec.seeds.len(),
         spec.rounds,
     );
-    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup })?;
     let (json_path, csv_path) = outcome.report.write_artifacts(args.get_str("out", "results"))?;
 
     // One table per (profile, t) pair: a slice must only ever average
@@ -249,8 +253,10 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "\n{} cells in {:.2} s on {} threads ({:.1} cells/s)",
+        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s)",
         outcome.report.cells.len(),
+        outcome.unique_cells,
+        outcome.dedup_ratio(),
         outcome.host_elapsed_ms / 1e3,
         outcome.threads,
         outcome.cells_per_sec(),
@@ -267,7 +273,7 @@ fn table1(rounds: usize, t: u32, profile: Option<String>, threads: usize) -> Res
         None => DatasetProfile::all().iter().map(|p| p.name.clone()).collect(),
     };
     let spec = SweepSpec::table1(profiles, t, rounds);
-    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup: true })?;
     for prof in &spec.profiles {
         println!("\n== Table 1 — {prof} (cycle time, ms; {rounds} rounds) ==");
         print!(
@@ -296,7 +302,7 @@ fn table3(rounds: usize, t: u32, threads: usize) -> Result<()> {
         rounds,
         ..Default::default()
     };
-    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup: true })?;
     let prof = DatasetProfile::femnist();
     println!("== Table 3 — isolated nodes (FEMNIST, {rounds} rounds, t={t}) ==");
     let mut rows = Vec::new();
@@ -371,7 +377,7 @@ fn table4(rounds: usize, train_rounds: usize, threads: usize) -> Result<()> {
         count: 0,
     });
 
-    let opts = RunOptions { threads, progress: true };
+    let opts = RunOptions { threads, progress: true, dedup: true };
     let summaries = sweep::run_cells(&cells, &opts, |_, cell| {
         let mut topo: Box<dyn TopologyDesign> = match cell.kind.as_str() {
             "ring" => Box::new(RingTopology::new(&net, &prof)),
@@ -541,7 +547,7 @@ fn table6(rounds: usize, train_rounds: usize, threads: usize) -> Result<()> {
         seeds: vec![17],
         rounds,
     };
-    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true })?;
+    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup: true })?;
     for &t in &spec.t_values {
         let res = outcome
             .report

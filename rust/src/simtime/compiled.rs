@@ -9,6 +9,20 @@
 //! isolation counts — so the per-round step is a plain walk over edge
 //! ids with zero allocation and zero hashing.
 //!
+//! Since PR 3 the compilation product is split into two layers:
+//!
+//! * [`CompiledTopology`] — the **immutable, shareable** part: stable
+//!   edge ids with the (pair, first-appearance degrees) needed to seed
+//!   delays, per-state edge tables, and precomputed isolation counts.
+//!   It holds no network- or profile-resolved numbers, so one compile
+//!   can be wrapped in an `Arc` and simulated under any delay inputs
+//!   and round budget (the sweep engine's build-once cache does exactly
+//!   this; see `crate::sweep::cache`).
+//! * [`DelaySlab`] — the **per-cell, mutable** part: the `d0` slab
+//!   resolved against a concrete (network, profile) plus the Eq. 4
+//!   `backlog` slab the round loop mutates. Cheap to build, never
+//!   shared.
+//!
 //! On top of that sits an **exact cycle-detection fast path**: periodic
 //! schedules ([`TopologyDesign::period`]) drive a finite-state system —
 //! [`crate::delay::EdgeDelayState`] resets to `d0` on every strong
@@ -74,8 +88,295 @@ pub struct EngineStats {
     pub simulated_rounds: usize,
 }
 
-/// Dense per-pair delay state: stable edge ids assigned on first
-/// appearance, O(1) pair→id lookup without hashing.
+/// One stable edge id's identity: the normalized pair plus the plan
+/// degrees of the state it first appeared in — everything [`DelaySlab`]
+/// needs to resolve the pair's d_0 under a concrete (network, profile),
+/// and nothing that depends on one.
+#[derive(Debug, Clone, Copy)]
+pub struct CompiledEdge {
+    pub u: u32,
+    pub v: u32,
+    pub deg_u: u32,
+    pub deg_v: u32,
+}
+
+/// One compiled schedule state: edge ids with their connection type, in
+/// plan order (the advance pass must run in the exact order the naive
+/// tracker walks `plan.edges`, or a plan listing the same pair twice
+/// with mixed types would diverge), plus the precomputed isolated-node
+/// count (isolation depends only on the plan, never on delays).
+#[derive(Debug, Clone)]
+struct StateTable {
+    edges: Vec<(u32, EdgeType)>,
+    isolated: usize,
+}
+
+/// The immutable product of compiling a periodic [`TopologyDesign`]:
+/// stable edge ids, per-state edge tables, isolation counts. Contains
+/// no delay numbers — those live in the per-cell [`DelaySlab`] — so a
+/// single compile is `Send + Sync` plain data, shareable via `Arc`
+/// across every simulation of the same schedule.
+#[derive(Debug, Clone)]
+pub struct CompiledTopology {
+    name: String,
+    n: usize,
+    edges: Vec<CompiledEdge>,
+    states: Vec<StateTable>,
+}
+
+impl CompiledTopology {
+    /// Enumerate states `0..period` once and build the edge/state
+    /// tables. Returns `None` when the design is stochastic or the
+    /// period is too large to materialize profitably within `rounds`
+    /// (those cells run the streaming engine instead).
+    pub fn compile(topo: &mut dyn TopologyDesign, rounds: usize) -> Option<Self> {
+        let p = topo.period()?;
+        if p == 0 || p > MAX_COMPILED_STATES || p > rounds as u64 {
+            return None;
+        }
+        let p = p as usize;
+        let n = topo.overlay().n();
+        // Row-major (min, max) pair → edge id; `u32::MAX` = unassigned.
+        // Only needed while compiling — the run loop walks edge ids.
+        let mut pair_id = vec![u32::MAX; n * n];
+        let mut edges: Vec<CompiledEdge> = Vec::new();
+        let mut plan = RoundPlan::empty(n);
+        let mut degrees: Vec<usize> = Vec::new();
+        let mut states = Vec::with_capacity(p);
+        for s in 0..p {
+            topo.plan_into(s, &mut plan);
+            let mut st = StateTable { edges: Vec::new(), isolated: plan.isolated_nodes().len() };
+            let mut degrees_ready = false;
+            for &(u, v, ty) in &plan.edges {
+                let (a, b) = if u <= v { (u, v) } else { (v, u) };
+                let mut id = pair_id[a * n + b];
+                if id == u32::MAX {
+                    // A pair entering the schedule records the degrees
+                    // of the plan it first appears in — exactly when
+                    // (and with what) the naive tracker would seed its
+                    // d_0, because rounds 0..p visit states 0..p in
+                    // order.
+                    if !degrees_ready {
+                        plan.degrees_into(&mut degrees);
+                        degrees_ready = true;
+                    }
+                    id = edges.len() as u32;
+                    pair_id[a * n + b] = id;
+                    edges.push(CompiledEdge {
+                        u: u as u32,
+                        v: v as u32,
+                        deg_u: degrees[u] as u32,
+                        deg_v: degrees[v] as u32,
+                    });
+                }
+                st.edges.push((id, ty));
+            }
+            states.push(st);
+        }
+        Some(CompiledTopology { name: topo.name().to_string(), n, edges, states })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Silo count the schedule was compiled over (must match the
+    /// network a [`DelaySlab`] is resolved against).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The materialized schedule period.
+    pub fn period(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Distinct pairs the schedule ever plans.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// The per-cell mutable layer over a shared [`CompiledTopology`]: the
+/// d_0 slab resolved against one (network, profile) plus the Eq. 4
+/// backlog slab the round loop mutates.
+#[derive(Debug, Clone)]
+pub struct DelaySlab {
+    d0: Vec<f64>,
+    backlog: Vec<f64>,
+}
+
+impl DelaySlab {
+    /// Resolve `ct`'s edges against a concrete network and profile.
+    ///
+    /// `net` must be the network the design behind `ct` was built for
+    /// (same silo count, same silos) — the compiled structure encodes
+    /// that network's schedule, only the delay numbers are resolved
+    /// here.
+    pub fn new(ct: &CompiledTopology, net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        assert_eq!(
+            ct.n,
+            net.n(),
+            "compiled topology '{}' has {} silos but network '{}' has {}",
+            ct.name,
+            ct.n,
+            net.name,
+            net.n()
+        );
+        let d0: Vec<f64> = ct
+            .edges
+            .iter()
+            .map(|e| {
+                pair_d0_ms(
+                    net,
+                    profile,
+                    e.u as usize,
+                    e.v as usize,
+                    e.deg_u as usize,
+                    e.deg_v as usize,
+                )
+            })
+            .collect();
+        // The backlog slab is materialized by `reset()` at run entry
+        // (run_compiled always resets), so a fresh slab skips one copy.
+        DelaySlab { d0, backlog: Vec::new() }
+    }
+
+    /// (Re)seed the backlog to the fresh-transfer state — Alg. 1 seeds
+    /// edge delays from the overlay (all strong), mirroring
+    /// `EdgeDelayState::new` — making the slab reusable across runs.
+    pub fn reset(&mut self) {
+        self.backlog.clear();
+        self.backlog.extend_from_slice(&self.d0);
+    }
+}
+
+/// One simulated round over slab-resident edges: the Eq. 5 inner max
+/// (mirroring `strong_delay_ms` + the fold in `round_cycle_time_ms`;
+/// f64::max is order-insensitive here, all delays positive and non-NaN)
+/// followed by the Eq. 4 advance (mirroring `EdgeDelayState::advance`)
+/// **in plan order** — the same per-edge order the naive tracker uses,
+/// which keeps plans listing a pair twice with mixed types bit-exact.
+/// Shared by the periodic and streaming engines so the bit-identity-
+/// critical inner loop exists exactly once. Returns τ_k.
+#[inline]
+fn step_edges(d0: &[f64], backlog: &mut [f64], edges: &[(u32, EdgeType)], floor: f64) -> f64 {
+    let mut tau = floor;
+    for &(id, ty) in edges {
+        if ty == EdgeType::Strong {
+            tau = tau.max(floor.max(backlog[id as usize]));
+        }
+    }
+    for &(id, ty) in edges {
+        match ty {
+            EdgeType::Strong => backlog[id as usize] = d0[id as usize],
+            EdgeType::Weak => {
+                let b = &mut backlog[id as usize];
+                *b = (*b - tau).max(floor);
+            }
+        }
+    }
+    tau
+}
+
+/// Periodic engine: per-round step over a (possibly `Arc`-shared)
+/// [`CompiledTopology`] and a per-cell [`DelaySlab`], with exact cycle
+/// detection + sequential replay. Resets the slab on entry, so one slab
+/// may be reused across runs.
+pub fn run_compiled(
+    ct: &CompiledTopology,
+    slab: &mut DelaySlab,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    assert!(rounds > 0);
+    slab.reset();
+    let p = ct.states.len();
+    let floor = profile.u as f64 * profile.t_c_ms;
+    let mut total_ms = 0.0;
+    let mut rounds_with_isolated = 0usize;
+    let mut max_isolated = 0usize;
+
+    // Cycle detector: recording τ is only worthwhile if a recurrence can
+    // fire before the run ends.
+    let mut detecting = p < rounds;
+    let mut rec_tau: Vec<f64> = Vec::new();
+    let mut snapshots: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut cycle: Option<(usize, usize)> = None; // (start round, length)
+
+    let mut k = 0usize;
+    while k < rounds {
+        let s = k % p;
+        if detecting && s == 0 {
+            // The simulator state entering round k is (s, backlog bits);
+            // an exact repeat means the τ/isolation future repeats too.
+            let snap: Vec<u64> = slab.backlog.iter().map(|b| b.to_bits()).collect();
+            if let Some(&(k0, _)) = snapshots.iter().find(|(_, old)| *old == snap) {
+                cycle = Some((k0, k - k0));
+                break;
+            }
+            if snapshots.len() >= MAX_SNAPSHOTS {
+                // Give up: stop paying for snapshots and τ recording.
+                detecting = false;
+                rec_tau = Vec::new();
+                snapshots = Vec::new();
+            } else {
+                snapshots.push((k, snap));
+            }
+        }
+
+        let st = &ct.states[s];
+        let tau = step_edges(&slab.d0, &mut slab.backlog, &st.edges, floor);
+
+        total_ms += tau;
+        if st.isolated > 0 {
+            rounds_with_isolated += 1;
+            max_isolated = max_isolated.max(st.isolated);
+        }
+        if detecting {
+            rec_tau.push(tau);
+        }
+        k += 1;
+    }
+
+    let simulated_rounds = k;
+    if let Some((k0, len)) = cycle {
+        // Replay: the τ sequence from the cycle repeats verbatim, so the
+        // remaining rounds are pure sequential adds of recorded values —
+        // identical accumulation order, identical bits, ~zero work.
+        for j in k..rounds {
+            total_ms += rec_tau[k0 + (j - k0) % len];
+            let iso = ct.states[j % p].isolated;
+            if iso > 0 {
+                rounds_with_isolated += 1;
+                max_isolated = max_isolated.max(iso);
+            }
+        }
+    }
+
+    let summary = SimSummary {
+        topology: ct.name.clone(),
+        network: net.name.clone(),
+        profile: profile.name.clone(),
+        rounds,
+        mean_cycle_ms: total_ms / rounds as f64,
+        total_ms,
+        rounds_with_isolated,
+        max_isolated,
+    };
+    let stats = EngineStats {
+        compiled: true,
+        period: Some(p),
+        cycle_detected_at: cycle.map(|_| simulated_rounds),
+        cycle_len: cycle.map(|(_, len)| len),
+        simulated_rounds,
+    };
+    (summary, stats)
+}
+
+/// Dense per-pair delay state for the streaming engine: stable edge ids
+/// assigned on first appearance, O(1) pair→id lookup without hashing.
 struct EdgeArena {
     n: usize,
     /// Row-major (min, max) pair → edge id; `u32::MAX` = unassigned.
@@ -107,180 +408,6 @@ impl EdgeArena {
         self.backlog.push(d0);
         id
     }
-}
-
-/// One compiled schedule state: edge ids with their connection type, in
-/// plan order (the advance pass must run in the exact order the naive
-/// tracker walks `plan.edges`, or a plan listing the same pair twice
-/// with mixed types would diverge), plus the precomputed isolated-node
-/// count (isolation depends only on the plan, never on delays).
-struct StateTable {
-    edges: Vec<(u32, EdgeType)>,
-    isolated: usize,
-}
-
-/// One simulated round over arena-resident edges: the Eq. 5 inner max
-/// (mirroring `strong_delay_ms` + the fold in `round_cycle_time_ms`;
-/// f64::max is order-insensitive here, all delays positive and non-NaN)
-/// followed by the Eq. 4 advance (mirroring `EdgeDelayState::advance`)
-/// **in plan order** — the same per-edge order the naive tracker uses,
-/// which keeps plans listing a pair twice with mixed types bit-exact.
-/// Shared by the periodic and streaming engines so the bit-identity-
-/// critical inner loop exists exactly once. Returns τ_k.
-#[inline]
-fn step_edges(arena: &mut EdgeArena, edges: &[(u32, EdgeType)], floor: f64) -> f64 {
-    let mut tau = floor;
-    for &(id, ty) in edges {
-        if ty == EdgeType::Strong {
-            tau = tau.max(floor.max(arena.backlog[id as usize]));
-        }
-    }
-    for &(id, ty) in edges {
-        match ty {
-            EdgeType::Strong => arena.backlog[id as usize] = arena.d0[id as usize],
-            EdgeType::Weak => {
-                let b = &mut arena.backlog[id as usize];
-                *b = (*b - tau).max(floor);
-            }
-        }
-    }
-    tau
-}
-
-/// Enumerate states `0..period` once and build the arena + tables.
-/// Returns `None` when the design is stochastic or the period is too
-/// large to materialize profitably.
-fn compile_periodic(
-    topo: &mut dyn TopologyDesign,
-    net: &NetworkSpec,
-    profile: &DatasetProfile,
-    rounds: usize,
-) -> Option<(EdgeArena, Vec<StateTable>)> {
-    let p = topo.period()?;
-    if p == 0 || p > MAX_COMPILED_STATES || p > rounds as u64 {
-        return None;
-    }
-    let p = p as usize;
-    let n = net.n();
-    let mut arena = EdgeArena::new(n);
-    let mut plan = RoundPlan::empty(n);
-    let mut degrees: Vec<usize> = Vec::new();
-    let mut states = Vec::with_capacity(p);
-    for s in 0..p {
-        topo.plan_into(s, &mut plan);
-        let mut st = StateTable { edges: Vec::new(), isolated: plan.isolated_nodes().len() };
-        let mut degrees_ready = false;
-        for &(u, v, ty) in &plan.edges {
-            let mut id = arena.id(u, v);
-            if id == u32::MAX {
-                // A pair entering the schedule seeds d_0 from the degrees
-                // of the plan it first appears in — exactly when (and
-                // with what) the naive tracker would insert it, because
-                // rounds 0..p visit states 0..p in order.
-                if !degrees_ready {
-                    plan.degrees_into(&mut degrees);
-                    degrees_ready = true;
-                }
-                id = arena.insert(u, v, pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]));
-            }
-            st.edges.push((id, ty));
-        }
-        states.push(st);
-    }
-    Some((arena, states))
-}
-
-/// Periodic engine: per-round step over precomputed state tables, with
-/// exact cycle detection + sequential replay.
-fn run_periodic(
-    name: &str,
-    net: &NetworkSpec,
-    profile: &DatasetProfile,
-    mut arena: EdgeArena,
-    states: Vec<StateTable>,
-    rounds: usize,
-) -> (SimSummary, EngineStats) {
-    let p = states.len();
-    let floor = profile.u as f64 * profile.t_c_ms;
-    let mut total_ms = 0.0;
-    let mut rounds_with_isolated = 0usize;
-    let mut max_isolated = 0usize;
-
-    // Cycle detector: recording τ is only worthwhile if a recurrence can
-    // fire before the run ends.
-    let mut detecting = p < rounds;
-    let mut rec_tau: Vec<f64> = Vec::new();
-    let mut snapshots: Vec<(usize, Vec<u64>)> = Vec::new();
-    let mut cycle: Option<(usize, usize)> = None; // (start round, length)
-
-    let mut k = 0usize;
-    while k < rounds {
-        let s = k % p;
-        if detecting && s == 0 {
-            // The simulator state entering round k is (s, backlog bits);
-            // an exact repeat means the τ/isolation future repeats too.
-            let snap: Vec<u64> = arena.backlog.iter().map(|b| b.to_bits()).collect();
-            if let Some(&(k0, _)) = snapshots.iter().find(|(_, old)| *old == snap) {
-                cycle = Some((k0, k - k0));
-                break;
-            }
-            if snapshots.len() >= MAX_SNAPSHOTS {
-                // Give up: stop paying for snapshots and τ recording.
-                detecting = false;
-                rec_tau = Vec::new();
-                snapshots = Vec::new();
-            } else {
-                snapshots.push((k, snap));
-            }
-        }
-
-        let st = &states[s];
-        let tau = step_edges(&mut arena, &st.edges, floor);
-
-        total_ms += tau;
-        if st.isolated > 0 {
-            rounds_with_isolated += 1;
-            max_isolated = max_isolated.max(st.isolated);
-        }
-        if detecting {
-            rec_tau.push(tau);
-        }
-        k += 1;
-    }
-
-    let simulated_rounds = k;
-    if let Some((k0, len)) = cycle {
-        // Replay: the τ sequence from the cycle repeats verbatim, so the
-        // remaining rounds are pure sequential adds of recorded values —
-        // identical accumulation order, identical bits, ~zero work.
-        for j in k..rounds {
-            total_ms += rec_tau[k0 + (j - k0) % len];
-            let iso = states[j % p].isolated;
-            if iso > 0 {
-                rounds_with_isolated += 1;
-                max_isolated = max_isolated.max(iso);
-            }
-        }
-    }
-
-    let summary = SimSummary {
-        topology: name.to_string(),
-        network: net.name.clone(),
-        profile: profile.name.clone(),
-        rounds,
-        mean_cycle_ms: total_ms / rounds as f64,
-        total_ms,
-        rounds_with_isolated,
-        max_isolated,
-    };
-    let stats = EngineStats {
-        compiled: true,
-        period: Some(p),
-        cycle_detected_at: cycle.map(|_| simulated_rounds),
-        cycle_len: cycle.map(|(_, len)| len),
-        simulated_rounds,
-    };
-    (summary, stats)
 }
 
 /// Streaming engine: arena-backed stepping for stochastic or
@@ -321,7 +448,7 @@ fn run_streaming(
             ids.push((id, ty));
         }
 
-        let tau = step_edges(&mut arena, &ids, floor);
+        let tau = step_edges(&arena.d0, &mut arena.backlog, &ids, floor);
         let isolated = plan.isolated_count_into(&mut has_edge, &mut has_strong);
 
         total_ms += tau;
@@ -371,8 +498,11 @@ pub fn simulate_summary_compiled_with_stats(
     rounds: usize,
 ) -> (SimSummary, EngineStats) {
     assert!(rounds > 0);
-    match compile_periodic(topo, net, profile, rounds) {
-        Some((arena, states)) => run_periodic(topo.name(), net, profile, arena, states, rounds),
+    match CompiledTopology::compile(topo, rounds) {
+        Some(ct) => {
+            let mut slab = DelaySlab::new(&ct, net, profile);
+            run_compiled(&ct, &mut slab, net, profile, rounds)
+        }
         None => run_streaming(topo, net, profile, rounds),
     }
 }
@@ -503,4 +633,54 @@ mod tests {
         assert!(!stats.compiled);
     }
 
+    #[test]
+    fn shared_compiled_topology_matches_fresh_compiles() {
+        // One compile, many simulations: the Arc-shareable half must be
+        // reusable across round budgets and across runs of one slab,
+        // each bit-identical to a fresh end-to-end simulation.
+        let net = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        let mut topo = MultigraphTopology::from_network(&net, &prof, 5);
+        let ct = CompiledTopology::compile(&mut topo, 500).expect("gaia t=5 is materializable");
+        assert_eq!(ct.name(), "multigraph");
+        assert_eq!(ct.n(), net.n());
+        assert_eq!(ct.period(), topo.s_max() as usize);
+        assert!(ct.num_edges() > 0);
+
+        let mut slab = DelaySlab::new(&ct, &net, &prof);
+        for rounds in [130usize, 500, 130] {
+            let (got, stats) = run_compiled(&ct, &mut slab, &net, &prof, rounds);
+            assert!(stats.compiled);
+            let mut fresh = MultigraphTopology::from_network(&net, &prof, 5);
+            let want = simulate_summary_naive(&mut fresh, &net, &prof, rounds);
+            assert_bitwise_equal(&want, &got);
+        }
+    }
+
+    #[test]
+    fn split_compile_is_exact_on_every_profile() {
+        // The compiled structure holds no profile-resolved numbers —
+        // delay resolution happens entirely in DelaySlab::new. Pin that
+        // split against the naive oracle for each Table 2 profile.
+        let net = zoo::gaia();
+        for prof in crate::net::DatasetProfile::all() {
+            let mut topo = MultigraphTopology::from_network(&net, &prof, 5);
+            let ct = CompiledTopology::compile(&mut topo, 200).expect("materializable");
+            let mut slab = DelaySlab::new(&ct, &net, &prof);
+            let (got, _) = run_compiled(&ct, &mut slab, &net, &prof, 200);
+            let mut fresh = MultigraphTopology::from_network(&net, &prof, 5);
+            let want = simulate_summary_naive(&mut fresh, &net, &prof, 200);
+            assert_bitwise_equal(&want, &got);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "silos")]
+    fn delay_slab_rejects_mismatched_network() {
+        let gaia = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        let mut topo = MultigraphTopology::from_network(&gaia, &prof, 5);
+        let ct = CompiledTopology::compile(&mut topo, 200).unwrap();
+        let _ = DelaySlab::new(&ct, &zoo::exodus(), &prof);
+    }
 }

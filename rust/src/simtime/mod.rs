@@ -15,7 +15,10 @@ use crate::delay::{pair_d0_ms, round_cycle_time_ms, EdgeDelayState, EdgeType};
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::topo::TopologyDesign;
 
-pub use compiled::{simulate_summary_compiled, simulate_summary_compiled_with_stats, EngineStats};
+pub use compiled::{
+    run_compiled, simulate_summary_compiled, simulate_summary_compiled_with_stats,
+    CompiledTopology, DelaySlab, EngineStats,
+};
 
 /// Simulation output for one (topology, network, profile) cell.
 #[derive(Debug, Clone)]

@@ -1,0 +1,348 @@
+//! Cross-cell memoization for the sweep engine: semantic cell
+//! fingerprints, the grid→unique-work partition, and a concurrent
+//! build-once cache for shared construction/compilation artifacts.
+//!
+//! The paper's grids are heavily redundant: deterministic designs
+//! (STAR, MATCHA+, MST, δ-MBST, RING, multigraph) are pure functions of
+//! (network, profile, t), so a seed axis of N values replicates the
+//! exact same simulation N times, bit for bit. This module makes that
+//! redundancy explicit:
+//!
+//! * [`CellFingerprint`] — the semantic identity of a cell's result:
+//!   (topology, network, profile, t, rounds), plus the derived cell
+//!   seed **only** when the design is stochastic
+//!   ([`TopologyKind::seed_sensitive`]). Equal fingerprints ⇒
+//!   bit-identical `SimSummary`s, because every input of
+//!   [`CellSpec::to_experiment`] → `simulate_summary` is either in the
+//!   fingerprint or provably unused.
+//! * [`DedupPlan`] — partitions an expanded grid into unique work items
+//!   (first appearance wins) plus a fan-out assignment, so the
+//!   scheduler simulates O(unique) cells and copies summaries to every
+//!   duplicate coordinate. Reports stay grid-ordered and byte-identical
+//!   to the undeduplicated engine: the per-cell `seed`/`cell_seed`
+//!   report fields come from each cell's own spec, never from the
+//!   representative.
+//! * [`SweepCache`] — a [`BuildOnce`] map per artifact kind: shared
+//!   [`CompiledTopology`]s (`Arc`ed across cells that differ only in
+//!   rounds — or in `t`, for designs that ignore it) and shared
+//!   [`MatchaCore`]s (a stochastic seed axis pays for one
+//!   Christofides/MST/decomposition build, not N). Workers that race on
+//!   a key block on one `OnceLock`, so a construction never runs twice.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::TopologyKind;
+use crate::simtime::{run_compiled, simulate_summary, CompiledTopology, DelaySlab, SimSummary};
+use crate::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
+use crate::topo::TopologyDesign;
+
+use super::spec::CellSpec;
+
+/// Semantic identity of one grid cell's simulation result. Two cells
+/// with equal fingerprints produce bit-identical [`SimSummary`]s, so
+/// the scheduler simulates one and fans the summary out to both.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CellFingerprint {
+    pub topology: TopologyKind,
+    pub network: String,
+    pub profile: String,
+    pub t: u32,
+    pub rounds: usize,
+    /// The derived per-cell stream — present **only** when the design
+    /// consumes randomness, so stochastic cells with distinct seeds are
+    /// never merged while deterministic cells collapse across the whole
+    /// seed axis.
+    pub seed: Option<u64>,
+}
+
+impl CellSpec {
+    /// This cell's [`CellFingerprint`] (see the module docs for the
+    /// dedup contract it encodes).
+    pub fn fingerprint(&self) -> CellFingerprint {
+        CellFingerprint {
+            topology: self.topology,
+            network: self.network.clone(),
+            profile: self.profile.clone(),
+            t: self.t,
+            rounds: self.rounds,
+            seed: if self.topology.seed_sensitive() { Some(self.cell_seed) } else { None },
+        }
+    }
+}
+
+/// The grid→unique-work partition: which cells to actually simulate and
+/// where every grid coordinate's result comes from.
+#[derive(Debug, Clone)]
+pub struct DedupPlan {
+    /// Indices into the expanded grid of the representative cells, in
+    /// grid (first-appearance) order.
+    pub unique: Vec<usize>,
+    /// For every grid cell, the position in `unique` of its
+    /// representative (`assignment[i] == j` ⇒ cell `i`'s summary is
+    /// `unique[j]`'s).
+    pub assignment: Vec<usize>,
+}
+
+impl DedupPlan {
+    /// Group `cells` by fingerprint, first appearance representative.
+    pub fn partition(cells: &[CellSpec]) -> Self {
+        let mut by_fp: HashMap<CellFingerprint, usize> = HashMap::with_capacity(cells.len());
+        let mut unique = Vec::new();
+        let mut assignment = Vec::with_capacity(cells.len());
+        for (i, cell) in cells.iter().enumerate() {
+            let slot = *by_fp.entry(cell.fingerprint()).or_insert_with(|| {
+                unique.push(i);
+                unique.len() - 1
+            });
+            assignment.push(slot);
+        }
+        DedupPlan { unique, assignment }
+    }
+
+    /// No dedup: every cell is its own work item (the pre-cache
+    /// engine's schedule).
+    pub fn identity(n: usize) -> Self {
+        DedupPlan { unique: (0..n).collect(), assignment: (0..n).collect() }
+    }
+}
+
+/// A concurrent build-once map: the first caller of a key runs the
+/// build closure, concurrent callers of the same key block on its
+/// `OnceLock` and then share the (cheaply cloned, e.g. `Arc`ed) value.
+/// Distinct keys never contend beyond the brief map-entry lock.
+pub struct BuildOnce<K, V> {
+    map: Mutex<HashMap<K, Arc<OnceLock<V>>>>,
+}
+
+impl<K, V> Default for BuildOnce<K, V> {
+    fn default() -> Self {
+        BuildOnce { map: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> BuildOnce<K, V> {
+    pub fn get_or_build(&self, key: &K, build: impl FnOnce() -> V) -> V {
+        let slot = {
+            let mut map = self.map.lock().expect("build-once map lock");
+            map.entry(key.clone()).or_default().clone()
+        };
+        // Outside the map lock: building one key never blocks others.
+        slot.get_or_init(build).clone()
+    }
+
+    /// Number of distinct keys ever requested (diagnostics/tests).
+    pub fn entries(&self) -> usize {
+        self.map.lock().expect("build-once map lock").len()
+    }
+}
+
+/// Key of a shared [`CompiledTopology`]: the construction inputs plus
+/// the round budget the compile was gated on. `t` is collapsed to 0 for
+/// designs that never consume it ([`TopologyKind::t_sensitive`]), so a
+/// multi-`t` sweep compiles e.g. RING once, not once per `t`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CompiledKey {
+    topology: TopologyKind,
+    network: String,
+    profile: String,
+    t: u32,
+    rounds: usize,
+}
+
+impl CompiledKey {
+    fn for_cell(cell: &CellSpec) -> Self {
+        CompiledKey {
+            topology: cell.topology,
+            network: cell.network.clone(),
+            profile: cell.profile.clone(),
+            t: if cell.topology.t_sensitive() { cell.t } else { 0 },
+            rounds: cell.rounds,
+        }
+    }
+}
+
+/// Shared artifacts for one sweep run. Create one per [`super::run`]
+/// invocation (or hold one across invocations to share compiles between
+/// sweeps of the same process — everything inside is immutable once
+/// built).
+#[derive(Default)]
+pub struct SweepCache {
+    /// (construction inputs, rounds) → compiled schedule; `None` caches
+    /// the "streaming engine required" verdict so doomed compiles are
+    /// not re-attempted.
+    compiled: BuildOnce<CompiledKey, Option<Arc<CompiledTopology>>>,
+    /// (network, profile) → shared MATCHA construction.
+    matcha_cores: BuildOnce<(String, String), Arc<MatchaCore>>,
+}
+
+impl SweepCache {
+    /// Distinct compiled-topology keys built so far (tests/benches).
+    pub fn compiled_entries(&self) -> usize {
+        self.compiled.entries()
+    }
+
+    /// Distinct MATCHA cores built so far (tests/benches).
+    pub fn matcha_entries(&self) -> usize {
+        self.matcha_cores.entries()
+    }
+}
+
+/// Simulate one unique cell through the shared caches. Byte-identical
+/// to [`super::run_cell_summary`]: the cached paths factor work, they
+/// never change what is computed —
+///
+/// * deterministic periodic designs run on an `Arc`-shared
+///   [`CompiledTopology`] with a private [`DelaySlab`] (same compile
+///   the per-cell engine would produce, pinned by
+///   `simtime::compiled` tests);
+/// * MATCHA variants instantiate over a shared [`MatchaCore`] with the
+///   cell's own RNG stream (pinned by `topo::matcha` tests);
+/// * everything else (e.g. unmaterializably-periodic multigraphs)
+///   falls through to the uncached per-cell engine.
+pub fn run_cell_cached(cell: &CellSpec, cache: &SweepCache) -> SimSummary {
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    match cell.topology {
+        TopologyKind::Matcha | TopologyKind::MatchaPlus => {
+            let core = cache.matcha_cores.get_or_build(
+                &(cell.network.clone(), cell.profile.clone()),
+                || Arc::new(MatchaCore::build(&net, &prof)),
+            );
+            let budget =
+                if cell.topology == TopologyKind::MatchaPlus { 1.0 } else { DEFAULT_BUDGET };
+            let mut topo = MatchaTopology::from_core(core, budget, cell.cell_seed);
+            simulate_summary(&mut topo, &net, &prof, cell.rounds)
+        }
+        _ => {
+            let key = CompiledKey::for_cell(cell);
+            // If this worker loses the compile (the design turns out to
+            // stream), keep its built topology for the fallback below
+            // rather than constructing it a second time.
+            let mut built: Option<Box<dyn TopologyDesign>> = None;
+            let compiled = cache.compiled.get_or_build(&key, || {
+                let mut topo = cfg.build_topology();
+                let ct = CompiledTopology::compile(topo.as_mut(), cell.rounds).map(Arc::new);
+                if ct.is_none() {
+                    built = Some(topo);
+                }
+                ct
+            });
+            match compiled {
+                Some(ct) => {
+                    let mut slab = DelaySlab::new(&ct, &net, &prof);
+                    run_compiled(&ct, &mut slab, &net, &prof, cell.rounds).0
+                }
+                // Streaming-engine cells (huge-period multigraphs): the
+                // design is consumed mutably per cell, so cache hits
+                // still rebuild — same work as the pre-cache engine.
+                None => {
+                    let mut topo = built.unwrap_or_else(|| cfg.build_topology());
+                    simulate_summary(topo.as_mut(), &net, &prof, cell.rounds)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::run_cell_summary;
+    use crate::sweep::spec::SweepSpec;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn spec() -> SweepSpec {
+        SweepSpec {
+            name: "cache".into(),
+            topologies: vec![TopologyKind::Ring, TopologyKind::Matcha, TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![3, 5],
+            seeds: vec![11, 23],
+            rounds: 60,
+        }
+    }
+
+    #[test]
+    fn fingerprint_includes_seed_only_for_stochastic_kinds() {
+        let cells = spec().expand();
+        for pair in cells.chunks(2) {
+            // Innermost axis is the seed: each chunk is one coordinate
+            // under two base seeds.
+            let (a, b) = (&pair[0], &pair[1]);
+            assert_ne!(a.cell_seed, b.cell_seed);
+            if a.topology.seed_sensitive() {
+                assert_ne!(a.fingerprint(), b.fingerprint(), "stochastic cells must not merge");
+                assert_eq!(a.fingerprint().seed, Some(a.cell_seed));
+            } else {
+                assert_eq!(a.fingerprint(), b.fingerprint(), "deterministic cells must merge");
+                assert_eq!(a.fingerprint().seed, None);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_order_preserving_and_complete() {
+        let cells = spec().expand();
+        let plan = DedupPlan::partition(&cells);
+        assert_eq!(plan.assignment.len(), cells.len());
+        // 3 topologies x 2 t x 2 seeds = 12 cells; matcha keeps all 4
+        // (seed-sensitive), ring and multigraph keep one per t.
+        assert_eq!(plan.unique.len(), 4 + 2 + 2);
+        // Representatives appear in grid order and map to themselves.
+        assert!(plan.unique.windows(2).all(|w| w[0] < w[1]));
+        for (i, &slot) in plan.assignment.iter().enumerate() {
+            let rep = plan.unique[slot];
+            assert!(rep <= i);
+            assert_eq!(cells[rep].fingerprint(), cells[i].fingerprint());
+        }
+        let id = DedupPlan::identity(cells.len());
+        assert_eq!(id.unique.len(), cells.len());
+        assert_eq!(id.assignment, (0..cells.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn build_once_builds_each_key_exactly_once_under_contention() {
+        let cache: BuildOnce<u32, u64> = BuildOnce::default();
+        let builds = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for k in 0..16u32 {
+                        let v = cache.get_or_build(&k, || {
+                            builds.fetch_add(1, Ordering::Relaxed);
+                            k as u64 * 3
+                        });
+                        assert_eq!(v, k as u64 * 3);
+                    }
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::Relaxed), 16, "each key must build exactly once");
+        assert_eq!(cache.entries(), 16);
+    }
+
+    #[test]
+    fn cached_cells_match_the_uncached_engine_bitwise() {
+        let cells = spec().expand();
+        let cache = SweepCache::default();
+        for cell in &cells {
+            let got = run_cell_cached(cell, &cache);
+            let want = run_cell_summary(cell);
+            let ctx = format!("{}/t{}/seed{}", cell.topology.as_str(), cell.t, cell.base_seed);
+            assert_eq!(got.topology, want.topology, "{ctx}");
+            assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits(), "{ctx}");
+            assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits(), "{ctx}");
+            assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated, "{ctx}");
+            assert_eq!(got.max_isolated, want.max_isolated, "{ctx}");
+        }
+        // Shared-artifact accounting: one MATCHA core for the single
+        // (network, profile); ring collapses its t axis into one
+        // compile, the multigraph keeps one per t.
+        assert_eq!(cache.matcha_entries(), 1);
+        assert_eq!(cache.compiled_entries(), 1 + 2);
+    }
+}

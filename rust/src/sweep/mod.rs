@@ -13,10 +13,22 @@
 //! are byte-identical across pools and thread counts because every cell
 //! seeds its own RNG stream from (base seed, cell coordinates) via
 //! [`crate::util::rng::derive_stream`] — never from execution order.
+//!
+//! Since PR 3 the scheduler additionally **deduplicates** the grid
+//! before it reaches the pool: deterministic designs are bit-identical
+//! across the seed axis, so [`run`] partitions cells by semantic
+//! [`CellFingerprint`], simulates only the unique work items (through
+//! the shared-construction [`SweepCache`]), and fans each summary out
+//! to every duplicate grid coordinate. Artifacts stay grid-ordered and
+//! byte-identical to the pre-dedup engine ([`RunOptions::dedup`] =
+//! `false`), which `tests/sweep_determinism.rs` and the `sweep_cache`
+//! bench pin down.
 
+pub mod cache;
 pub mod report;
 pub mod spec;
 
+pub use cache::{run_cell_cached, BuildOnce, CellFingerprint, DedupPlan, SweepCache};
 pub use report::{Axis, CellResult, SweepReport};
 pub use spec::{CellSpec, SweepSpec};
 
@@ -27,15 +39,26 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::simtime::simulate_summary;
+use crate::simtime::{simulate_summary, SimSummary};
 
 /// How to execute a sweep (host-side knobs; never part of the artifact).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct RunOptions {
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
     /// Print `done/total` progress to stderr while running.
     pub progress: bool,
+    /// Partition the grid by [`CellFingerprint`] and simulate only the
+    /// unique cells (default). `false` runs every cell independently —
+    /// the pre-cache engine, kept as the dedup layer's byte-identity
+    /// oracle (artifacts are identical either way).
+    pub dedup: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { threads: 0, progress: false, dedup: true }
+    }
 }
 
 /// Resolve the worker count: `0` means all available cores, and there is
@@ -199,30 +222,23 @@ where
         .collect()
 }
 
-/// Simulate one grid cell. Pure in the cell spec: builds the topology
-/// (seeded from the cell's derived stream) and its own simulation state,
-/// so concurrent cells share nothing mutable. Cells run on the compiled
-/// zero-allocation engine ([`crate::simtime::compiled`]); periodic cells
-/// additionally take its cycle-detection fast path.
-pub fn run_cell(cell: &CellSpec) -> CellResult {
+/// Simulate one grid cell with nothing shared: builds the topology
+/// (seeded from the cell's derived stream) and its own simulation state.
+/// Cells run on the compiled zero-allocation engine
+/// ([`crate::simtime::compiled`]); periodic cells additionally take its
+/// cycle-detection fast path. This is the pre-cache engine — the
+/// byte-identity oracle for [`run_cell_cached`].
+pub fn run_cell_summary(cell: &CellSpec) -> SimSummary {
     let cfg = cell.to_experiment();
     let net = cfg.resolve_network();
     let prof = cfg.resolve_profile().expect("validated profile");
     let mut topo = cfg.build_topology();
-    let s = simulate_summary(topo.as_mut(), &net, &prof, cell.rounds);
-    CellResult {
-        topology: s.topology,
-        network: s.network,
-        profile: s.profile,
-        t: cell.t,
-        seed: cell.base_seed,
-        cell_seed: cell.cell_seed,
-        rounds: s.rounds,
-        mean_cycle_ms: s.mean_cycle_ms,
-        total_ms: s.total_ms,
-        rounds_with_isolated: s.rounds_with_isolated,
-        max_isolated: s.max_isolated,
-    }
+    simulate_summary(topo.as_mut(), &net, &prof, cell.rounds)
+}
+
+/// [`run_cell_summary`] tagged with the cell's grid coordinates.
+pub fn run_cell(cell: &CellSpec) -> CellResult {
+    CellResult::from_summary(&run_cell_summary(cell), cell)
 }
 
 /// A finished sweep: the deterministic report plus host-side execution
@@ -232,24 +248,40 @@ pub struct SweepOutcome {
     pub report: SweepReport,
     pub host_elapsed_ms: f64,
     pub threads: usize,
+    /// Cells actually simulated after fingerprint dedup; the remaining
+    /// `report.cells.len() - unique_cells` results were fanned out from
+    /// representatives. Equals the grid size with dedup off or when the
+    /// grid has no duplicate work.
+    pub unique_cells: usize,
 }
 
 impl SweepOutcome {
-    /// Cells simulated per host second (throughput summary line).
+    /// Cells simulated per host second (throughput summary line). Counts
+    /// grid cells, not unique cells — fan-out is part of the engine.
     pub fn cells_per_sec(&self) -> f64 {
         if self.host_elapsed_ms <= 0.0 {
             return 0.0;
         }
         self.report.cells.len() as f64 / (self.host_elapsed_ms / 1e3)
     }
+
+    /// Grid cells per simulated cell (1.0 = no duplicate work).
+    pub fn dedup_ratio(&self) -> f64 {
+        self.report.cells.len() as f64 / self.unique_cells.max(1) as f64
+    }
 }
 
 /// Run the full grid of `spec` in parallel and collect the report in
-/// grid order.
+/// grid order. With [`RunOptions::dedup`] (the default) the grid is
+/// first partitioned into unique work items by [`CellFingerprint`];
+/// only those are simulated (through a per-run [`SweepCache`]) and the
+/// summaries are fanned out to every duplicate coordinate — the report
+/// is byte-identical to the undeduplicated engine either way.
 pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     // Canonicalize a local copy so coordinates (and the cell seeds
     // derived from them) are case-stable no matter how the caller
-    // spelled the axes.
+    // spelled the axes. This also dedupes duplicate axis values (with a
+    // warning), so an axis typo cannot inflate the grid.
     let spec = {
         let mut s = spec.clone();
         s.canonicalize()?;
@@ -257,17 +289,31 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     };
     spec.validate()?;
     let cells = spec.expand();
-    let threads = effective_threads(opts.threads, cells.len());
+    let plan = if opts.dedup {
+        DedupPlan::partition(&cells)
+    } else {
+        DedupPlan::identity(cells.len())
+    };
+    let work: Vec<&CellSpec> = plan.unique.iter().map(|&i| &cells[i]).collect();
+    let threads = effective_threads(opts.threads, work.len());
+    let inner = RunOptions { threads, progress: opts.progress, dedup: opts.dedup };
     let t0 = Instant::now();
-    let results = run_cells(
-        &cells,
-        &RunOptions { threads, progress: opts.progress },
-        |_, c| run_cell(c),
-    );
+    let summaries = if opts.dedup {
+        let shared = SweepCache::default();
+        run_cells(&work, &inner, |_, c| run_cell_cached(c, &shared))
+    } else {
+        run_cells(&work, &inner, |_, c| run_cell_summary(c))
+    };
+    let results: Vec<CellResult> = cells
+        .iter()
+        .zip(&plan.assignment)
+        .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot], cell))
+        .collect();
     Ok(SweepOutcome {
         report: SweepReport { name: spec.name.clone(), rounds: spec.rounds, cells: results },
         host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
         threads,
+        unique_cells: work.len(),
     })
 }
 
@@ -287,8 +333,8 @@ mod tests {
     #[test]
     fn run_cells_preserves_input_order() {
         let cells: Vec<usize> = (0..64).collect();
-        let one = RunOptions { threads: 1, progress: false };
-        let four = RunOptions { threads: 4, progress: false };
+        let one = RunOptions { threads: 1, ..Default::default() };
+        let four = RunOptions { threads: 4, ..Default::default() };
         let serial = run_cells(&cells, &one, |i, &c| (i, c * 3));
         let parallel = run_cells(&cells, &four, |i, &c| (i, c * 3));
         assert_eq!(serial, parallel);
@@ -314,8 +360,9 @@ mod tests {
             seeds: vec![17],
             rounds: 200,
         };
-        let outcome = run(&spec, &RunOptions { threads: 2, progress: false }).unwrap();
+        let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         assert_eq!(outcome.threads, 2, "explicit thread request is honored");
+        assert_eq!(outcome.unique_cells, 2, "no duplicate work in a single-seed grid");
         let report = &outcome.report;
         assert_eq!(report.cells.len(), 2);
         // Grid order: ring first, multigraph second.
@@ -346,7 +393,7 @@ mod tests {
             seeds: vec![23],
             rounds: 120,
         };
-        let outcome = run(&spec, &RunOptions { threads: 2, progress: false }).unwrap();
+        let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         let got = &outcome.report.cells[0];
 
         let cells = spec.expand();
@@ -358,5 +405,56 @@ mod tests {
         assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits());
         assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
         assert_eq!(got.seed, 23, "reports carry the base seed, not the derived stream");
+    }
+
+    #[test]
+    fn dedup_fans_results_out_to_every_duplicate_cell() {
+        // Deterministic-only grid with 3 seeds: one simulation per
+        // topology, three reported cells each — byte-identical to the
+        // pre-cache engine that simulates all nine.
+        let spec = SweepSpec {
+            name: "fanout".into(),
+            topologies: vec![TopologyKind::Ring, TopologyKind::Mst, TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![1, 2, 3],
+            rounds: 40,
+        };
+        let memo = run(&spec, &RunOptions { threads: 3, progress: false, dedup: true }).unwrap();
+        let full = run(&spec, &RunOptions { threads: 3, progress: false, dedup: false }).unwrap();
+        assert_eq!(memo.unique_cells, 3);
+        assert_eq!(full.unique_cells, 9);
+        assert_eq!(memo.report.cells.len(), spec.cell_count());
+        assert!((memo.dedup_ratio() - 3.0).abs() < 1e-12);
+        assert_eq!(
+            memo.report.to_json().to_string(),
+            full.report.to_json().to_string(),
+            "fan-out must be byte-identical to the pre-cache engine"
+        );
+        // Fanned-out duplicates still carry their own seed columns.
+        let seeds: Vec<u64> = memo.report.cells.iter().map(|c| c.seed).collect();
+        assert_eq!(seeds, vec![1, 2, 3, 1, 2, 3, 1, 2, 3]);
+        let streams: std::collections::BTreeSet<u64> =
+            memo.report.cells.iter().map(|c| c.cell_seed).collect();
+        assert_eq!(streams.len(), 9, "derived streams stay per-cell after fan-out");
+    }
+
+    #[test]
+    fn duplicate_axis_values_no_longer_inflate_the_grid() {
+        // run() canonicalizes, which now dedupes duplicated axis values
+        // (with a warning) before expansion.
+        let spec = SweepSpec {
+            name: "dup".into(),
+            topologies: vec![TopologyKind::Ring],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5, 5],
+            seeds: vec![7, 7],
+            rounds: 10,
+        };
+        let outcome = run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
+        assert_eq!(outcome.report.cells.len(), 1, "duplicates must not inflate the grid");
+        assert_eq!(outcome.unique_cells, 1);
     }
 }

@@ -14,7 +14,10 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::metrics::render_pivot;
+use crate::simtime::SimSummary;
 use crate::util::Json;
+
+use super::spec::CellSpec;
 
 /// Simulation result of one grid cell, tagged with its coordinates.
 #[derive(Debug, Clone)]
@@ -35,6 +38,29 @@ pub struct CellResult {
     pub total_ms: f64,
     pub rounds_with_isolated: usize,
     pub max_isolated: usize,
+}
+
+impl CellResult {
+    /// Tag a simulation summary with `cell`'s grid coordinates. The
+    /// summary may come from `cell` itself or from a fingerprint-equal
+    /// representative (the dedup fan-out) — the seed columns always
+    /// come from `cell`'s own spec, so fanned-out rows stay
+    /// coordinate-exact.
+    pub fn from_summary(s: &SimSummary, cell: &CellSpec) -> Self {
+        CellResult {
+            topology: s.topology.clone(),
+            network: s.network.clone(),
+            profile: s.profile.clone(),
+            t: cell.t,
+            seed: cell.base_seed,
+            cell_seed: cell.cell_seed,
+            rounds: s.rounds,
+            mean_cycle_ms: s.mean_cycle_ms,
+            total_ms: s.total_ms,
+            rounds_with_isolated: s.rounds_with_isolated,
+            max_isolated: s.max_isolated,
+        }
+    }
 }
 
 /// A sweep grid axis, for slicing reports into 2-D tables.

@@ -106,11 +106,16 @@ impl SweepSpec {
     }
 
     /// Rewrite network/profile names to their canonical (lowercase zoo /
-    /// Table 2) spelling. `zoo::by_name` accepts any case, so without
-    /// this two equivalent specs spelled differently would derive
-    /// different cell seeds and render empty slices; canonicalizing at
-    /// every spec entry point (TOML loader, CLI flags, [`super::run`])
-    /// keeps coordinates case-stable. Errors on unknown names.
+    /// Table 2) spelling, then drop duplicate axis values. `zoo::by_name`
+    /// accepts any case, so without the rewrite two equivalent specs
+    /// spelled differently would derive different cell seeds and render
+    /// empty slices; canonicalizing at every spec entry point (TOML
+    /// loader, CLI flags, [`super::run`]) keeps coordinates case-stable.
+    /// Duplicate values on any axis (including "GAIA"/"gaia" pairs that
+    /// collapse under the rewrite) would silently inflate the grid with
+    /// identical cells, so they are deduplicated here with a warning —
+    /// [`Self::validate`] rejects them outright for callers that skip
+    /// canonicalization. Errors on unknown names.
     pub fn canonicalize(&mut self) -> Result<()> {
         for n in &mut self.networks {
             *n = zoo::by_name(n).ok_or_else(|| anyhow::anyhow!("unknown network '{n}'"))?.name;
@@ -120,6 +125,11 @@ impl SweepSpec {
                 .ok_or_else(|| anyhow::anyhow!("unknown profile '{p}'"))?
                 .name;
         }
+        dedup_axis("topologies", &mut self.topologies);
+        dedup_axis("networks", &mut self.networks);
+        dedup_axis("profiles", &mut self.profiles);
+        dedup_axis("t", &mut self.t_values);
+        dedup_axis("seeds", &mut self.seeds);
         Ok(())
     }
 
@@ -134,6 +144,19 @@ impl SweepSpec {
             ("seeds", self.seeds.is_empty()),
         ] {
             ensure!(!empty, "sweep axis '{axis}' must be non-empty");
+        }
+        for (axis, dup) in [
+            ("topologies", has_duplicates(&self.topologies)),
+            ("networks", has_duplicates(&self.networks)),
+            ("profiles", has_duplicates(&self.profiles)),
+            ("t", has_duplicates(&self.t_values)),
+            ("seeds", has_duplicates(&self.seeds)),
+        ] {
+            ensure!(
+                !dup,
+                "sweep axis '{axis}' contains duplicate values (they would inflate the grid \
+                 with identical cells; canonicalize() drops them with a warning)"
+            );
         }
         for net in &self.networks {
             ensure!(zoo::by_name(net).is_some(), "unknown network '{net}'");
@@ -295,6 +318,32 @@ impl SweepSpec {
     }
 }
 
+/// Whether `values` lists any value more than once.
+fn has_duplicates<T: PartialEq>(values: &[T]) -> bool {
+    values.iter().enumerate().any(|(i, v)| values[..i].contains(v))
+}
+
+/// Drop repeated axis values, keeping first appearance, with a stderr
+/// warning naming the axis (axes are tiny — O(n²) `contains` beats
+/// hashing here).
+fn dedup_axis<T: PartialEq + Clone>(axis: &str, values: &mut Vec<T>) {
+    if !has_duplicates(values) {
+        return;
+    }
+    let mut kept: Vec<T> = Vec::with_capacity(values.len());
+    for v in values.iter() {
+        if !kept.contains(v) {
+            kept.push(v.clone());
+        }
+    }
+    eprintln!(
+        "warning: sweep axis '{axis}' lists duplicate values; deduplicating ({} -> {})",
+        values.len(),
+        kept.len()
+    );
+    *values = kept;
+}
+
 /// Split a TOML-subset value into its items: `[a, "b", c]` lists or a
 /// single scalar; quotes stripped, empties dropped.
 fn split_values(value: &str) -> Vec<String> {
@@ -445,5 +494,38 @@ seeds = [17]
         big_seed.seeds = vec![(1u64 << 53) - 1];
         big_seed.validate().unwrap();
         assert!(SweepSpec::from_toml_file("/nonexistent.toml").is_err());
+    }
+
+    #[test]
+    fn duplicate_axis_values_are_rejected_then_deduped() {
+        let mut dup = SweepSpec {
+            t_values: vec![5, 3, 5],
+            seeds: vec![17, 17],
+            ..Default::default()
+        };
+        assert!(dup.validate().is_err(), "validate must reject duplicated axes");
+        dup.canonicalize().unwrap();
+        assert_eq!(dup.t_values, vec![5, 3], "first appearance wins");
+        assert_eq!(dup.seeds, vec![17]);
+        dup.validate().unwrap();
+        assert_eq!(dup.cell_count(), 7 * 5 * 3 * 2);
+
+        // Case-variant spellings collapse to one coordinate, then dedupe.
+        let mut shouty = SweepSpec {
+            networks: vec!["GAIA".into(), "gaia".into()],
+            topologies: vec![TopologyKind::Ring, TopologyKind::Ring],
+            ..Default::default()
+        };
+        assert!(shouty.validate().is_err());
+        shouty.canonicalize().unwrap();
+        assert_eq!(shouty.networks, vec!["gaia"]);
+        assert_eq!(shouty.topologies, vec![TopologyKind::Ring]);
+        shouty.validate().unwrap();
+
+        // The TOML loader canonicalizes, so a duplicated spec file
+        // loads as the deduped grid rather than erroring.
+        let text = "name = \"d\"\nseeds = [1, 1, 2]\n";
+        let spec = SweepSpec::from_toml_str(text).unwrap();
+        assert_eq!(spec.seeds, vec![1, 1, 2], "raw parse keeps duplicates");
     }
 }

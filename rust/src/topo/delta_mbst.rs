@@ -41,6 +41,12 @@ impl TopologyDesign for DeltaMbstTopology {
     fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
         RoundPlan::all_strong_into(&self.overlay, out);
     }
+
+    /// The degree-bounded MST heuristic is deterministic in
+    /// (network, profile, δ).
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -9,6 +9,15 @@
 //! convergence-preserving variant that activates a *superset* fraction
 //! (C_b = 1 reproduces the "wait for every matching" behaviour whose
 //! cycle times Table 1 reports as MATCHA(+) ≥ MATCHA).
+//!
+//! Construction is split from sampling: [`MatchaCore`] is the
+//! seed-independent product (base graph + matching decomposition,
+//! deterministic in (network, profile)), shareable via `Arc`;
+//! [`MatchaTopology`] layers the per-experiment activation RNG on top.
+//! The sweep engine's build-once cache exploits this — a seed axis of
+//! N stochastic MATCHA cells pays for one Christofides/MST build, not N.
+
+use std::sync::Arc;
 
 use super::{RoundPlan, TopologyDesign};
 use crate::delay::EdgeType;
@@ -19,18 +28,16 @@ use crate::util::Rng64;
 /// Default MATCHA communication budget.
 pub const DEFAULT_BUDGET: f64 = 0.5;
 
-pub struct MatchaTopology {
-    name: String,
+/// The seed-independent half of MATCHA: the MST ∪ ring base graph and
+/// its matching decomposition. Plain immutable data (`Send + Sync`), so
+/// one build serves every seed of a (network, profile) pair.
+pub struct MatchaCore {
     overlay: Graph,
     matchings: Vec<Vec<(NodeId, NodeId, f64)>>,
-    /// Per-round activation probability of each matching.
-    budget: f64,
-    rng: Rng64,
 }
 
-impl MatchaTopology {
-    pub fn new(net: &NetworkSpec, profile: &DatasetProfile, budget: f64, seed: u64) -> Self {
-        assert!((0.0..=1.0).contains(&budget), "budget must be in [0,1]");
+impl MatchaCore {
+    pub fn build(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
         let conn = net.connectivity_graph(profile);
         // Base graph: MST ∪ ring — connected, sparse, with enough edge
         // diversity for the decomposition to matter.
@@ -45,11 +52,44 @@ impl MatchaTopology {
         }
         let edge_list: Vec<_> = overlay.edges().iter().map(|e| (e.u, e.v, e.w)).collect();
         let matchings = matching_decomposition(&edge_list);
+        MatchaCore { overlay, matchings }
+    }
+
+    pub fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    pub fn matchings(&self) -> &[Vec<(NodeId, NodeId, f64)>] {
+        &self.matchings
+    }
+
+    pub fn num_matchings(&self) -> usize {
+        self.matchings.len()
+    }
+}
+
+pub struct MatchaTopology {
+    name: String,
+    core: Arc<MatchaCore>,
+    /// Per-round activation probability of each matching.
+    budget: f64,
+    rng: Rng64,
+}
+
+impl MatchaTopology {
+    pub fn new(net: &NetworkSpec, profile: &DatasetProfile, budget: f64, seed: u64) -> Self {
+        Self::from_core(Arc::new(MatchaCore::build(net, profile)), budget, seed)
+    }
+
+    /// Instantiate over a shared (possibly cached) core. Bit-identical
+    /// to [`Self::new`] with the core's (network, profile): the only
+    /// per-instance state is the activation RNG.
+    pub fn from_core(core: Arc<MatchaCore>, budget: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&budget), "budget must be in [0,1]");
         let name = if budget >= 1.0 { "matcha_plus" } else { "matcha" };
         MatchaTopology {
             name: name.to_string(),
-            overlay,
-            matchings,
+            core,
             budget,
             rng: Rng64::seed_from_u64(seed),
         }
@@ -61,7 +101,7 @@ impl MatchaTopology {
     }
 
     pub fn num_matchings(&self) -> usize {
-        self.matchings.len()
+        self.core.num_matchings()
     }
 }
 
@@ -71,19 +111,22 @@ impl TopologyDesign for MatchaTopology {
     }
 
     fn overlay(&self) -> &Graph {
-        &self.overlay
+        &self.core.overlay
     }
 
     fn plan(&mut self, k: usize) -> RoundPlan {
-        let mut plan = RoundPlan::empty(self.overlay.n());
+        let mut plan = RoundPlan::empty(self.core.overlay.n());
         self.plan_into(k, &mut plan);
         plan
     }
 
     fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
-        out.reset(self.overlay.n());
-        for m in &self.matchings {
-            if self.budget >= 1.0 || self.rng.gen_f64() < self.budget {
+        out.reset(self.core.overlay.n());
+        // Borrow the core and the RNG disjointly: the matchings are
+        // behind the shared Arc, the RNG is this instance's own.
+        let MatchaTopology { core, budget, rng, .. } = self;
+        for m in core.matchings() {
+            if *budget >= 1.0 || rng.gen_f64() < *budget {
                 for &(u, v, _) in m {
                     out.push(u, v, EdgeType::Strong);
                 }
@@ -98,6 +141,13 @@ impl TopologyDesign for MatchaTopology {
             None // stochastic
         }
     }
+
+    /// Only the budget-limited variant draws randomness: at C_b = 1
+    /// (MATCHA+) every matching activates unconditionally and the RNG
+    /// is never consulted.
+    fn seed_sensitive(&self) -> bool {
+        self.budget < 1.0
+    }
 }
 
 #[cfg(test)]
@@ -109,7 +159,7 @@ mod tests {
     fn matchings_partition_overlay() {
         let net = zoo::gaia();
         let m = MatchaTopology::new(&net, &DatasetProfile::femnist(), 0.5, 0);
-        let total: usize = m.matchings.iter().map(|x| x.len()).sum();
+        let total: usize = m.core.matchings().iter().map(|x| x.len()).sum();
         assert_eq!(total, m.overlay().edges().len());
         assert!(m.num_matchings() >= 2);
     }
@@ -136,6 +186,7 @@ mod tests {
         assert_eq!(plan.edges.len(), m.overlay().edges().len());
         assert_eq!(m.name(), "matcha_plus");
         assert_eq!(m.period(), Some(1));
+        assert!(!m.seed_sensitive(), "MATCHA+ consumes no randomness");
     }
 
     #[test]
@@ -162,5 +213,25 @@ mod tests {
         for k in 0..20 {
             assert_eq!(a.plan(k).edges.len(), b.plan(k).edges.len());
         }
+    }
+
+    #[test]
+    fn shared_core_matches_fresh_construction() {
+        // from_core over one Arc must be indistinguishable from new():
+        // same overlay, same matchings, same sampled schedule per seed —
+        // the invariant that lets the sweep cache share construction
+        // across the seed axis.
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let core = Arc::new(MatchaCore::build(&net, &p));
+        for seed in [3u64, 1234567] {
+            let mut fresh = MatchaTopology::new(&net, &p, 0.5, seed);
+            let mut shared = MatchaTopology::from_core(Arc::clone(&core), 0.5, seed);
+            assert_eq!(fresh.overlay().edges().len(), shared.overlay().edges().len());
+            for k in 0..40 {
+                assert_eq!(fresh.plan(k).edges, shared.plan(k).edges, "seed {seed} round {k}");
+            }
+        }
+        assert!(MatchaTopology::from_core(core, 0.5, 0).seed_sensitive());
     }
 }

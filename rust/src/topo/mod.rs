@@ -175,6 +175,22 @@ pub trait TopologyDesign {
     fn period(&self) -> Option<u64> {
         Some(1)
     }
+
+    /// Whether the experiment seed influences this design's behaviour.
+    ///
+    /// Contract: returning `false` asserts that two instances built
+    /// from the same (network, profile, t) with *different* seeds emit
+    /// identical plans for every round — construction consumes no
+    /// randomness and `plan(k)` draws none. The sweep engine's
+    /// work-deduplication layer merges cells of such designs across the
+    /// seed axis, so a wrong `false` here silently collapses results;
+    /// the default is therefore `true` (third-party designs are never
+    /// merged unless they opt in). Kind-level mirror:
+    /// [`crate::config::TopologyKind::seed_sensitive`], pinned equal to
+    /// this method by a config test.
+    fn seed_sensitive(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

@@ -32,6 +32,11 @@ impl TopologyDesign for MstTopology {
     fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
         RoundPlan::all_strong_into(&self.overlay, out);
     }
+
+    /// Prim's MST is deterministic in (network, profile).
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -39,6 +39,11 @@ impl TopologyDesign for RingTopology {
     fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
         RoundPlan::all_strong_into(&self.overlay, out);
     }
+
+    /// The Christofides ring is deterministic in (network, profile).
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -57,6 +57,11 @@ impl TopologyDesign for StarTopology {
     fn plan_into(&mut self, _k: usize, out: &mut RoundPlan) {
         RoundPlan::all_strong_into(&self.overlay, out);
     }
+
+    /// Hub choice and plans are pure functions of the network.
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -145,6 +145,12 @@ impl TopologyDesign for MultigraphTopology {
     fn period(&self) -> Option<u64> {
         Some(self.s_max)
     }
+
+    /// Algorithms 1 and 2 are deterministic in (network, profile, t);
+    /// the schedule consumes no randomness.
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

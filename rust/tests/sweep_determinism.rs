@@ -3,7 +3,11 @@
 //! byte-identical JSON/CSV artifacts on 1 thread and N threads, across
 //! repeated runs, and (because per-cell seeds derive from cell
 //! coordinates, not execution order) even for stochastic topologies
-//! like MATCHA whose schedules consume randomness.
+//! like MATCHA whose schedules consume randomness. Since PR 3 the same
+//! contract covers the memoization layer: deduplicated sweeps (the
+//! default) must be byte-identical to the pre-cache engine
+//! (`dedup: false`), and stochastic cells with distinct seeds must
+//! never be merged.
 
 use mgfl::config::TopologyKind;
 use mgfl::simtime::simulate_summary_naive;
@@ -33,8 +37,8 @@ fn spec() -> SweepSpec {
 #[test]
 fn one_thread_and_n_threads_produce_identical_artifacts() {
     let spec = spec();
-    let serial = sweep::run(&spec, &RunOptions { threads: 1, progress: false }).unwrap();
-    let parallel = sweep::run(&spec, &RunOptions { threads: 4, progress: false }).unwrap();
+    let serial = sweep::run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
+    let parallel = sweep::run(&spec, &RunOptions { threads: 4, ..Default::default() }).unwrap();
     assert_eq!(serial.threads, 1);
     assert_eq!(parallel.threads, 4);
 
@@ -47,7 +51,7 @@ fn one_thread_and_n_threads_produce_identical_artifacts() {
         "CSV artifact must be byte-identical across thread counts"
     );
     // And across repeated parallel runs (schedule-independence).
-    let again = sweep::run(&spec, &RunOptions { threads: 4, progress: false }).unwrap();
+    let again = sweep::run(&spec, &RunOptions { threads: 4, ..Default::default() }).unwrap();
     assert_eq!(json_b, again.report.to_json().to_string());
 }
 
@@ -57,8 +61,8 @@ fn artifacts_written_to_disk_are_identical_too() {
     let dir = std::env::temp_dir().join(format!("mgfl_sweep_det_{}", std::process::id()));
     let a_dir = dir.join("serial");
     let b_dir = dir.join("parallel");
-    let a = sweep::run(&spec, &RunOptions { threads: 1, progress: false }).unwrap();
-    let b = sweep::run(&spec, &RunOptions { threads: 4, progress: false }).unwrap();
+    let a = sweep::run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
+    let b = sweep::run(&spec, &RunOptions { threads: 4, ..Default::default() }).unwrap();
     let (a_json, a_csv) = a.report.write_artifacts(&a_dir).unwrap();
     let (b_json, b_csv) = b.report.write_artifacts(&b_dir).unwrap();
     assert_eq!(
@@ -77,7 +81,7 @@ fn artifacts_written_to_disk_are_identical_too() {
 #[test]
 fn report_is_grid_ordered_and_complete() {
     let spec = spec();
-    let outcome = sweep::run(&spec, &RunOptions { threads: 4, progress: false }).unwrap();
+    let outcome = sweep::run(&spec, &RunOptions { threads: 4, ..Default::default() }).unwrap();
     let report = &outcome.report;
     assert_eq!(report.cells.len(), spec.cell_count());
     // Output order is exactly expansion order, whatever the scheduling.
@@ -108,7 +112,7 @@ fn compiled_engine_cells_match_the_naive_oracle_bitwise() {
     // the fast path exist at all.
     let mut spec = spec();
     spec.rounds = 400;
-    let outcome = sweep::run(&spec, &RunOptions { threads: 4, progress: false }).unwrap();
+    let outcome = sweep::run(&spec, &RunOptions { threads: 4, ..Default::default() }).unwrap();
     assert_eq!(outcome.report.cells.len(), spec.cell_count());
     for (got, cell) in outcome.report.cells.iter().zip(spec.expand()) {
         let cfg = cell.to_experiment();
@@ -138,7 +142,7 @@ fn stochastic_cells_vary_with_seed_but_not_with_threads() {
     spec.topologies = vec![TopologyKind::Matcha];
     spec.t_values = vec![5];
     spec.networks = vec!["gaia".into()];
-    let outcome = sweep::run(&spec, &RunOptions { threads: 2, progress: false }).unwrap();
+    let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
     let cells = &outcome.report.cells;
     assert_eq!(cells.len(), 2);
     assert_ne!(
@@ -146,4 +150,79 @@ fn stochastic_cells_vary_with_seed_but_not_with_threads() {
         cells[1].mean_cycle_ms.to_bits(),
         "different base seeds should produce different MATCHA schedules"
     );
+}
+
+/// The acceptance grid: the paper's 7 topologies on Gaia/FEMNIST,
+/// replicated across 8 seeds. Only MATCHA (budget < 1) is stochastic,
+/// so the dedup layer must simulate 6 + 8 = 14 of the 56 cells.
+fn seed_replicated_spec(rounds: usize) -> SweepSpec {
+    SweepSpec {
+        name: "seedrep".into(),
+        topologies: TopologyKind::all().to_vec(),
+        networks: vec!["gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![5],
+        seeds: (17..25).collect(),
+        rounds,
+    }
+}
+
+#[test]
+fn memoized_and_unmemoized_sweeps_are_byte_identical() {
+    let spec = seed_replicated_spec(120);
+    assert_eq!(spec.cell_count(), 7 * 8);
+    let reference =
+        sweep::run(&spec, &RunOptions { threads: 1, progress: false, dedup: false }).unwrap();
+    assert_eq!(reference.unique_cells, spec.cell_count(), "dedup off simulates every cell");
+    let ref_json = reference.report.to_json().to_string();
+    let ref_csv = reference.report.to_csv();
+    for threads in [1, 4] {
+        let memo =
+            sweep::run(&spec, &RunOptions { threads, progress: false, dedup: true }).unwrap();
+        assert_eq!(memo.unique_cells, 6 + 8, "6 deterministic designs + 8 MATCHA seeds");
+        assert_eq!(memo.report.cells.len(), spec.cell_count());
+        assert_eq!(
+            memo.report.to_json().to_string(),
+            ref_json,
+            "memoized JSON artifact differs from the pre-cache engine (threads={threads})"
+        );
+        assert_eq!(
+            memo.report.to_csv(),
+            ref_csv,
+            "memoized CSV artifact differs from the pre-cache engine (threads={threads})"
+        );
+    }
+    // The unmemoized engine is itself thread-invariant (the original
+    // determinism contract, re-pinned under the new scheduler).
+    let opts4 = RunOptions { threads: 4, progress: false, dedup: false };
+    let ref4 = sweep::run(&spec, &opts4).unwrap();
+    assert_eq!(ref4.report.to_json().to_string(), ref_json);
+}
+
+#[test]
+fn stochastic_matcha_cells_with_distinct_seeds_are_never_merged() {
+    let mut spec = seed_replicated_spec(60);
+    spec.topologies = vec![TopologyKind::Matcha];
+    spec.seeds = vec![11, 23, 31];
+    let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
+    assert_eq!(outcome.unique_cells, 3, "every stochastic seed is its own work item");
+    let bits: Vec<u64> = outcome.report.cells.iter().map(|c| c.mean_cycle_ms.to_bits()).collect();
+    assert_eq!(bits.len(), 3);
+    assert!(bits[0] != bits[1] && bits[1] != bits[2] && bits[0] != bits[2]);
+
+    // Fingerprint level: MATCHA cells differing only in seed have
+    // distinct fingerprints; a deterministic design's collapse.
+    let cells = spec.expand();
+    assert_ne!(cells[0].fingerprint(), cells[1].fingerprint());
+    let mut det = spec.clone();
+    det.topologies = vec![TopologyKind::MatchaPlus];
+    let det_cells = det.expand();
+    assert_eq!(
+        det_cells[0].fingerprint(),
+        det_cells[1].fingerprint(),
+        "MATCHA+ (budget 1.0) consumes no randomness and must merge"
+    );
+    let plus = sweep::run(&det, &RunOptions { threads: 2, ..Default::default() }).unwrap();
+    assert_eq!(plus.unique_cells, 1);
+    assert_eq!(plus.report.cells.len(), 3);
 }
