@@ -1,0 +1,253 @@
+//! Bench: large-N topology construction — the dense-graph builders vs
+//! the pre-overhaul sparse reference, on synthetic silo networks.
+//!
+//! Three jobs in one binary:
+//!
+//! 1. **Zoo identity gate** — on every paper network
+//!    (Gaia/Amazon/Géant/Exodus/Ebone), each of the six constructions
+//!    (STAR, MATCHA core, MST, δ-MBST, RING, multigraph) built on the
+//!    dense path must produce an overlay byte-identical to the
+//!    pre-overhaul sparse builder, and emit identical round plans
+//!    (same-seed MATCHA included). Aborts (failing CI) on any
+//!    disagreement.
+//! 2. **Synthetic oracle gate** — on a synthetic network at the
+//!    smallest requested size, compiled-engine simulations of
+//!    dense-built designs must match the naive `DelayTracker` oracle
+//!    bitwise: the large-N axis gets the same bit-identity contract the
+//!    paper zoo has.
+//! 3. **Construction throughput** — for each N in `--n` (default
+//!    64,256,1024,4096): wall-clock to build all six designs on the
+//!    dense path; the sparse reference is measured up to N = 1024 (its
+//!    O(N³) matching makes 4096 pointless) and the ≥ 5× bar is
+//!    asserted whenever N = 1024 is measured — i.e. on full runs; the
+//!    CI smoke (`-- --n 128`) runs the gates only.
+//!
+//! Run: `cargo bench --bench scaling` (refreshes `BENCH_scaling.json`);
+//! CI smoke: `-- --n 128`.
+
+use std::collections::BTreeMap;
+
+use mgfl::config::TopologyKind;
+use mgfl::graph::Graph;
+use mgfl::net::synth::{self, SynthVariant};
+use mgfl::net::{zoo, DatasetProfile, NetworkSpec};
+use mgfl::simtime::{simulate_summary, simulate_summary_naive};
+use mgfl::topo::delta_mbst::{DeltaMbstTopology, DEFAULT_DELTA};
+use mgfl::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
+use mgfl::topo::mst::MstTopology;
+use mgfl::topo::ring::RingTopology;
+use mgfl::topo::star::StarTopology;
+use mgfl::topo::{MultigraphTopology, TopologyDesign};
+use mgfl::util::args::Args;
+use mgfl::util::bench;
+use mgfl::util::json::Json;
+
+const T: u32 = 5;
+const SEED: u64 = 17;
+
+/// The six distinct constructions (MATCHA+ shares MATCHA's), production
+/// (dense) path — built through the same [`mgfl::config::build_design`]
+/// dispatch sweeps use, so the bench cannot time a different
+/// construction than production runs.
+const SIX_KINDS: [TopologyKind; 6] = [
+    TopologyKind::Star,
+    TopologyKind::Matcha,
+    TopologyKind::Mst,
+    TopologyKind::DeltaMbst,
+    TopologyKind::Ring,
+    TopologyKind::Multigraph,
+];
+
+fn build_dense(net: &NetworkSpec, prof: &DatasetProfile) -> Vec<Box<dyn TopologyDesign>> {
+    SIX_KINDS
+        .iter()
+        .map(|&kind| mgfl::config::build_design(kind, net, prof, T, SEED))
+        .collect()
+}
+
+/// The same six constructions on the pre-overhaul sparse path.
+fn build_reference(net: &NetworkSpec, prof: &DatasetProfile) -> Vec<Box<dyn TopologyDesign>> {
+    vec![
+        Box::new(StarTopology::new_reference(net, prof)),
+        Box::new(MatchaTopology::from_core(
+            std::sync::Arc::new(MatchaCore::build_reference(net, prof)),
+            DEFAULT_BUDGET,
+            SEED,
+        )),
+        Box::new(MstTopology::new_reference(net, prof)),
+        Box::new(DeltaMbstTopology::new_reference(net, prof, DEFAULT_DELTA)),
+        Box::new(RingTopology::new_reference(net, prof)),
+        Box::new(MultigraphTopology::from_network_reference(net, prof, T)),
+    ]
+}
+
+fn assert_overlays_identical(a: &Graph, b: &Graph, ctx: &str) {
+    assert_eq!(a.edges().len(), b.edges().len(), "{ctx}: overlay edge count differs");
+    for (x, y) in a.edges().iter().zip(b.edges()) {
+        assert_eq!(
+            (x.u, x.v, x.w.to_bits()),
+            (y.u, y.v, y.w.to_bits()),
+            "{ctx}: overlay edge differs"
+        );
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let sizes: Vec<usize> = args
+        .get_parsed_list::<usize>("n")
+        .expect("--n takes comma-separated silo counts")
+        .unwrap_or_else(|| vec![64, 256, 1024, 4096]);
+    assert!(!sizes.is_empty(), "--n must list at least one size");
+    let variant_s = args.get_str("variant", "geo");
+    let variant = SynthVariant::parse(&variant_s).expect("--variant geo|sphere");
+    let out = args.get_str("out", "BENCH_scaling.json");
+    let prof = DatasetProfile::femnist();
+
+    // --- 1. zoo identity gate ---------------------------------------
+    bench::header("scaling identity gate — dense builders vs sparse reference, paper zoo");
+    let mut overlays_checked = 0usize;
+    for net in zoo::all_networks() {
+        let mut dense = build_dense(&net, &prof);
+        let mut reference = build_reference(&net, &prof);
+        assert_eq!(dense.len(), reference.len());
+        for (d, r) in dense.iter_mut().zip(reference.iter_mut()) {
+            let ctx = format!("{}/{}", net.name, d.name());
+            assert_eq!(d.name(), r.name(), "{ctx}: design name");
+            assert_overlays_identical(d.overlay(), r.overlay(), &ctx);
+            for k in 0..6 {
+                assert_eq!(d.plan(k).edges, r.plan(k).edges, "{ctx}: round {k} plan differs");
+            }
+            overlays_checked += 1;
+        }
+    }
+    println!(
+        "{overlays_checked} overlays byte-identical (6 designs x 5 networks), \
+         round plans identical through round 5"
+    );
+
+    // --- 2. synthetic oracle gate -----------------------------------
+    let oracle_n = *sizes.iter().min().unwrap();
+    let oracle_name = synth::name_of(variant, oracle_n, 7);
+    bench::header(&format!(
+        "synthetic oracle gate — compiled vs naive simulation on {oracle_name}"
+    ));
+    let synth_net = synth::by_name(&oracle_name).expect("synthetic size in range");
+    let oracle_rounds = 120;
+    let mut oracle_cells = 0usize;
+    for kind in [
+        TopologyKind::Star,
+        TopologyKind::Matcha,
+        TopologyKind::Ring,
+        TopologyKind::Multigraph,
+    ] {
+        let mut a = mgfl::config::build_design(kind, &synth_net, &prof, T, SEED);
+        let mut b = mgfl::config::build_design(kind, &synth_net, &prof, T, SEED);
+        let fast = simulate_summary(a.as_mut(), &synth_net, &prof, oracle_rounds);
+        let naive = simulate_summary_naive(b.as_mut(), &synth_net, &prof, oracle_rounds);
+        assert_eq!(
+            fast.total_ms.to_bits(),
+            naive.total_ms.to_bits(),
+            "{}: compiled engine diverged from the naive oracle on {oracle_name}",
+            fast.topology
+        );
+        assert_eq!(fast.mean_cycle_ms.to_bits(), naive.mean_cycle_ms.to_bits());
+        assert_eq!(fast.rounds_with_isolated, naive.rounds_with_isolated);
+        assert_eq!(fast.max_isolated, naive.max_isolated);
+        oracle_cells += 1;
+    }
+    println!("{oracle_cells} synthetic cells bit-identical to the oracle ({oracle_rounds} rounds)");
+
+    // --- 3. construction throughput ---------------------------------
+    // The sparse reference is only measured where it is tractable; the
+    // acceptance bar lives at N = 1024.
+    const REFERENCE_CAP: usize = 1024;
+    const BAR_N: usize = 1024;
+    const BAR: f64 = 5.0;
+    let mut per_n: Vec<(usize, f64, Option<f64>)> = Vec::new(); // (n, dense_ms, ref_ms)
+    let mut bar_speedup: Option<f64> = None;
+    for &n in &sizes {
+        bench::header(&format!(
+            "construction throughput — all six designs, synth-{}-n{n}-s7",
+            variant.as_str()
+        ));
+        let net = synth::by_name(&synth::name_of(variant, n, 7)).expect("size in range");
+        let (warmup, iters) = if n >= 2048 {
+            (0, 1)
+        } else if n >= 512 {
+            (0, 2)
+        } else {
+            (1, 3)
+        };
+        let dense_m = bench::bench(&format!("dense builders     N={n}"), warmup, iters, || {
+            std::hint::black_box(build_dense(&net, &prof).len());
+        });
+        let ref_ms = if n <= REFERENCE_CAP {
+            let ref_m =
+                bench::bench(&format!("sparse reference   N={n}"), warmup, iters, || {
+                    std::hint::black_box(build_reference(&net, &prof).len());
+                });
+            let speedup = ref_m.mean_ms / dense_m.mean_ms.max(1e-9);
+            println!("speedup {speedup:.2}x (reference / dense, six-design build)");
+            if n == BAR_N {
+                bar_speedup = Some(speedup);
+            }
+            Some(ref_m.mean_ms)
+        } else {
+            println!("(sparse reference skipped above N={REFERENCE_CAP}: O(N^3) matching)");
+            None
+        };
+        per_n.push((n, dense_m.mean_ms, ref_ms));
+    }
+    if let Some(speedup) = bar_speedup {
+        assert!(
+            speedup >= BAR,
+            "acceptance: dense construction must be >= {BAR}x the pre-overhaul baseline at \
+             N={BAR_N} (got {speedup:.2}x)"
+        );
+        println!("\n>= {BAR}x construction bar at N={BAR_N}: PASS ({speedup:.2}x)");
+    } else {
+        println!("\n(>= {BAR}x bar asserts when N={BAR_N} is measured; this run swept {sizes:?})");
+    }
+
+    // --- 4. baseline artifact ---------------------------------------
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("scaling".into()));
+    obj.insert(
+        "provenance".to_string(),
+        Json::Str(
+            "measured by `cargo bench --bench scaling` (zoo identity gate, synthetic \
+             oracle gate, and the >= 5x N=1024 construction bar passed first)"
+                .into(),
+        ),
+    );
+    obj.insert("variant".to_string(), Json::Str(variant.as_str().into()));
+    obj.insert("overlays_checked".to_string(), Json::Num(overlays_checked as f64));
+    obj.insert("oracle_cells_checked".to_string(), Json::Num(oracle_cells as f64));
+    obj.insert("identity_gates_passed".to_string(), Json::Bool(true));
+    obj.insert(
+        "bar_speedup_n1024".to_string(),
+        bar_speedup.map_or(Json::Null, Json::Num),
+    );
+    let cells: Vec<Json> = per_n
+        .iter()
+        .map(|&(n, dense_ms, ref_ms)| {
+            let mut m = BTreeMap::new();
+            m.insert("n".to_string(), Json::Num(n as f64));
+            m.insert("dense_ms_six_designs".to_string(), Json::Num(dense_ms));
+            m.insert(
+                "reference_ms_six_designs".to_string(),
+                ref_ms.map_or(Json::Null, Json::Num),
+            );
+            m.insert(
+                "speedup".to_string(),
+                ref_ms.map_or(Json::Null, |r| Json::Num(r / dense_ms.max(1e-9))),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    obj.insert("sizes".to_string(), Json::Arr(cells));
+    let json = Json::Obj(obj).to_string();
+    std::fs::write(&out, format!("{json}\n")).expect("writing bench baseline");
+    println!("\nbaseline -> {out}");
+}

@@ -307,8 +307,8 @@ impl ExperimentConfig {
         ensure!(self.t >= 1, "t must be >= 1 (got {})", self.t);
         ensure!(self.sim_rounds >= 1, "sim_rounds must be >= 1");
         ensure!(
-            crate::net::zoo::by_name(&self.network).is_some(),
-            "unknown network '{}'",
+            crate::net::by_name(&self.network).is_some(),
+            "unknown network '{}' (zoo name or synth-<variant>-n<N>-s<seed>)",
             self.network
         );
         self.resolve_profile()?;
@@ -322,7 +322,7 @@ impl ExperimentConfig {
     }
 
     pub fn resolve_network(&self) -> crate::net::NetworkSpec {
-        crate::net::zoo::by_name(&self.network).expect("validated")
+        crate::net::by_name(&self.network).expect("validated")
     }
 
     pub fn resolve_profile(&self) -> Result<crate::net::DatasetProfile> {
@@ -334,28 +334,44 @@ impl ExperimentConfig {
     pub fn build_topology(&self) -> Box<dyn crate::topo::TopologyDesign> {
         let net = self.resolve_network();
         let profile = self.resolve_profile().expect("validated");
-        use crate::topo;
-        match self.topology {
-            TopologyKind::Star => Box::new(topo::star::StarTopology::new(&net, &profile)),
-            TopologyKind::Matcha => Box::new(topo::matcha::MatchaTopology::new(
-                &net,
-                &profile,
-                topo::matcha::DEFAULT_BUDGET,
-                self.seed,
-            )),
-            TopologyKind::MatchaPlus => {
-                Box::new(topo::matcha::MatchaTopology::plus(&net, &profile, self.seed))
-            }
-            TopologyKind::Mst => Box::new(topo::mst::MstTopology::new(&net, &profile)),
-            TopologyKind::DeltaMbst => Box::new(topo::delta_mbst::DeltaMbstTopology::new(
-                &net,
-                &profile,
-                topo::delta_mbst::DEFAULT_DELTA,
-            )),
-            TopologyKind::Ring => Box::new(topo::ring::RingTopology::new(&net, &profile)),
-            TopologyKind::Multigraph => {
-                Box::new(topo::MultigraphTopology::from_network(&net, &profile, self.t))
-            }
+        build_design(self.topology, &net, &profile, self.t, self.seed)
+    }
+}
+
+/// The single kind → constructor dispatch (production/dense builders,
+/// default budget and δ). [`ExperimentConfig::build_topology`], the
+/// `mgfl scale` subcommand, and the scaling bench all build through
+/// here, so they can never time or simulate a different construction
+/// than sweeps actually run. Takes the network by reference — callers
+/// with an in-hand (e.g. synthetic) network pay no name re-resolution.
+pub fn build_design(
+    kind: TopologyKind,
+    net: &crate::net::NetworkSpec,
+    profile: &crate::net::DatasetProfile,
+    t: u32,
+    seed: u64,
+) -> Box<dyn crate::topo::TopologyDesign> {
+    use crate::topo;
+    match kind {
+        TopologyKind::Star => Box::new(topo::star::StarTopology::new(net, profile)),
+        TopologyKind::Matcha => Box::new(topo::matcha::MatchaTopology::new(
+            net,
+            profile,
+            topo::matcha::DEFAULT_BUDGET,
+            seed,
+        )),
+        TopologyKind::MatchaPlus => {
+            Box::new(topo::matcha::MatchaTopology::plus(net, profile, seed))
+        }
+        TopologyKind::Mst => Box::new(topo::mst::MstTopology::new(net, profile)),
+        TopologyKind::DeltaMbst => Box::new(topo::delta_mbst::DeltaMbstTopology::new(
+            net,
+            profile,
+            topo::delta_mbst::DEFAULT_DELTA,
+        )),
+        TopologyKind::Ring => Box::new(topo::ring::RingTopology::new(net, profile)),
+        TopologyKind::Multigraph => {
+            Box::new(topo::MultigraphTopology::from_network(net, profile, t))
         }
     }
 }

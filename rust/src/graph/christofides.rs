@@ -3,10 +3,11 @@
 //! connectivity graph: MST → min-weight matching on odd-degree nodes →
 //! Eulerian circuit → shortcut to a Hamiltonian cycle.
 
+use super::dense::DenseGraph;
 use super::digraph::{Graph, NodeId};
 use super::euler::{eulerian_circuit, shortcut_to_hamiltonian};
 use super::matching::greedy_min_weight_matching;
-use super::mst::prim_mst;
+use super::mst::{prim_mst, prim_mst_dense};
 
 /// Build a Hamiltonian cycle over the nodes of `g` (must be complete or
 /// at least metric-complete on weights; the connectivity graph is).
@@ -48,6 +49,47 @@ pub fn ring_overlay(g: &Graph) -> Graph {
         }
         let w = g.edge_weight(u, v).expect("cycle edge missing from connectivity");
         overlay.add_edge(u, v, w);
+    }
+    overlay
+}
+
+/// [`christofides_cycle`] over the dense slab. The MST is bit-identical
+/// ([`prim_mst_dense`]), the matching oracle reads the same weights in
+/// O(1) instead of an O(N) adjacency walk per probe (the step that made
+/// the sparse path O(N³) at large N), and Euler/shortcut are shared —
+/// so the cycle is byte-identical to the sparse reference.
+pub fn christofides_cycle_dense(g: &DenseGraph) -> Vec<NodeId> {
+    let n = g.n();
+    assert!(n >= 2, "ring needs >= 2 nodes");
+    if n == 2 {
+        return vec![0, 1];
+    }
+    let mst = prim_mst_dense(g);
+    let odd = mst.odd_degree_nodes();
+    let matching = greedy_min_weight_matching(&odd, |u, v| g.weight(u, v));
+    let mut edges: Vec<(NodeId, NodeId)> =
+        mst.edges().iter().map(|e| (e.u, e.v)).collect();
+    edges.extend(matching);
+    let circuit = eulerian_circuit(n, &edges);
+    let cycle = shortcut_to_hamiltonian(&circuit);
+    assert_eq!(cycle.len(), n, "shortcut did not visit every node");
+    cycle
+}
+
+/// [`ring_overlay`] over the dense slab: the overlay itself stays a
+/// sparse [`Graph`] (it has N edges), only the complete substrate is
+/// dense.
+pub fn ring_overlay_dense(g: &DenseGraph) -> Graph {
+    let cycle = christofides_cycle_dense(g);
+    let n = g.n();
+    let mut overlay = Graph::new(n);
+    for i in 0..cycle.len() {
+        let u = cycle[i];
+        let v = cycle[(i + 1) % cycle.len()];
+        if n == 2 && i == 1 {
+            break; // 2-node ring is a single edge, not a double edge
+        }
+        overlay.add_edge(u, v, g.weight(u, v));
     }
     overlay
 }
@@ -138,5 +180,28 @@ mod tests {
     fn deterministic() {
         let g = Graph::complete(10, |u, v| ((u * 31 + v * 17) % 23) as f64 + 1.0);
         assert_eq!(christofides_cycle(&g), christofides_cycle(&g));
+    }
+
+    #[test]
+    fn dense_cycle_is_byte_identical_to_sparse() {
+        for n in [2usize, 3, 7, 12, 25] {
+            let w = |u: usize, v: usize| ((u * 31 + v * 17) % 23) as f64 + 1.0;
+            let sparse = christofides_cycle(&Graph::complete(n, w));
+            let dense = christofides_cycle_dense(&DenseGraph::from_fn(n, w));
+            assert_eq!(dense, sparse, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dense_overlay_is_byte_identical_to_sparse() {
+        for n in [2usize, 9, 14] {
+            let w = |u: usize, v: usize| ((u * 5 + v * 19) % 13) as f64 + 0.25;
+            let a = ring_overlay(&Graph::complete(n, w));
+            let b = ring_overlay_dense(&DenseGraph::from_fn(n, w));
+            assert_eq!(a.edges().len(), b.edges().len(), "n={n}");
+            for (x, y) in a.edges().iter().zip(b.edges()) {
+                assert_eq!((x.u, x.v, x.w.to_bits()), (y.u, y.v, y.w.to_bits()), "n={n}");
+            }
+        }
     }
 }

@@ -1,0 +1,133 @@
+//! Dense complete-graph substrate for large-N topology construction.
+//!
+//! Every overlay builder starts from the paper's *connectivity* graph
+//! \(\mathcal{G}_c\) — complete by definition. The sparse [`Graph`]
+//! represents it as ~N²/2 `Edge` structs plus a `Vec<Vec<usize>>`
+//! adjacency index: at N = 4096 that is ~8.4M 24-byte edges, ~17M
+//! adjacency slots, and N+1 stray vecs, and every `edge_weight(u, v)`
+//! probe walks an O(N) adjacency list (which turns Christofides'
+//! matching step into an O(N³) scan). A [`DenseGraph`] stores the same
+//! information as **one** flat upper-triangular `f64` slab with O(1)
+//! `(u, v)` access; the construction hot paths (Prim, δ-MBST,
+//! Christofides) have dense twins in their own modules that are pinned
+//! byte-identical to the sparse reference builders.
+//!
+//! Sparse [`Graph`] stays the representation for *overlays* (rings,
+//! trees, stars — O(N) edges) and remains the pre-overhaul reference
+//! the dense builders are verified against (`benches/scaling.rs`).
+
+use super::digraph::{Graph, NodeId};
+
+/// Complete weighted graph over `n` nodes: one upper-triangular,
+/// row-major weight slab. Pair `(u, v)` with `u < v` lives at
+/// `u*(2n-u-1)/2 + (v-u-1)`.
+#[derive(Debug, Clone)]
+pub struct DenseGraph {
+    n: usize,
+    w: Vec<f64>,
+}
+
+impl DenseGraph {
+    /// Build from a weight function, visiting pairs in the same
+    /// `(u, v)` row-major order as [`Graph::complete`] — one allocation
+    /// total, against ~N²/2 edge pushes plus 2·N²/2 adjacency pushes
+    /// for the sparse equivalent.
+    pub fn from_fn(n: usize, mut w: impl FnMut(NodeId, NodeId) -> f64) -> Self {
+        let mut slab = Vec::with_capacity(n * n.saturating_sub(1) / 2);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                slab.push(w(u, v));
+            }
+        }
+        DenseGraph { n, w: slab }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of stored pairs: n·(n-1)/2.
+    pub fn num_pairs(&self) -> usize {
+        self.w.len()
+    }
+
+    #[inline]
+    fn idx(&self, u: NodeId, v: NodeId) -> usize {
+        debug_assert!(u < v && v < self.n, "dense pair ({u},{v}) out of range n={}", self.n);
+        // u and (2n-u-1) have opposite parity, so the division is exact.
+        u * (2 * self.n - u - 1) / 2 + (v - u - 1)
+    }
+
+    /// O(1) symmetric weight lookup. Panics on `u == v` (complete
+    /// graphs here carry no self-loops, same as [`Graph::add_edge`]).
+    #[inline]
+    pub fn weight(&self, u: NodeId, v: NodeId) -> f64 {
+        assert_ne!(u, v, "no self-weight in a complete graph");
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.w[self.idx(a, b)]
+    }
+
+    /// Materialize as a sparse [`Graph`] (tests and small-n tooling;
+    /// defeats the point at scale).
+    pub fn to_graph(&self) -> Graph {
+        Graph::complete(self.n, |u, v| self.weight(u, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights(u: NodeId, v: NodeId) -> f64 {
+        ((u * 31 + v * 17) % 23) as f64 + 1.0
+    }
+
+    #[test]
+    fn slab_indexing_covers_every_pair_once() {
+        let n = 7;
+        let g = DenseGraph::from_fn(n, weights);
+        assert_eq!(g.num_pairs(), n * (n - 1) / 2);
+        // Every pair readable, symmetric, and equal to the generator.
+        for u in 0..n {
+            for v in 0..n {
+                if u == v {
+                    continue;
+                }
+                let (a, b) = (u.min(v), u.max(v));
+                assert_eq!(g.weight(u, v).to_bits(), weights(a, b).to_bits(), "({u},{v})");
+                assert_eq!(g.weight(u, v).to_bits(), g.weight(v, u).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn matches_sparse_complete_graph() {
+        let n = 9;
+        let dense = DenseGraph::from_fn(n, weights);
+        let sparse = Graph::complete(n, weights);
+        for e in sparse.edges() {
+            assert_eq!(dense.weight(e.u, e.v).to_bits(), e.w.to_bits());
+        }
+        let back = dense.to_graph();
+        assert_eq!(back.edges().len(), sparse.edges().len());
+        for (a, b) in back.edges().iter().zip(sparse.edges()) {
+            assert_eq!((a.u, a.v, a.w.to_bits()), (b.u, b.v, b.w.to_bits()));
+        }
+    }
+
+    #[test]
+    fn tiny_sizes() {
+        let g0 = DenseGraph::from_fn(0, |_, _| unreachable!());
+        assert_eq!(g0.num_pairs(), 0);
+        let g1 = DenseGraph::from_fn(1, |_, _| unreachable!());
+        assert_eq!(g1.num_pairs(), 0);
+        let g2 = DenseGraph::from_fn(2, |_, _| 3.5);
+        assert_eq!(g2.weight(1, 0), 3.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-weight")]
+    fn rejects_self_pair() {
+        DenseGraph::from_fn(3, |_, _| 1.0).weight(1, 1);
+    }
+}

@@ -12,30 +12,45 @@ pub fn eulerian_circuit(n: usize, edges: &[(NodeId, NodeId)]) -> Vec<NodeId> {
     if edges.is_empty() {
         return Vec::new();
     }
-    // adjacency as (edge index) lists; `used` marks consumed edges.
-    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (i, &(u, v)) in edges.iter().enumerate() {
-        adj[u].push(i);
-        adj[v].push(i);
+    // CSR adjacency (three flat slabs instead of n per-node vecs):
+    // count degrees, prefix-sum offsets, fill in edge order — which
+    // preserves the per-node edge order the old Vec<Vec> construction
+    // produced, so the traversal (and circuit) is identical.
+    let mut deg = vec![0usize; n];
+    for &(u, v) in edges {
+        deg[u] += 1;
+        deg[v] += 1;
     }
-    for (u, a) in adj.iter().enumerate() {
-        assert!(a.len() % 2 == 0, "node {u} has odd degree {}", a.len());
+    for (u, &d) in deg.iter().enumerate() {
+        assert!(d % 2 == 0, "node {u} has odd degree {d}");
+    }
+    let mut offset = vec![0usize; n + 1];
+    for u in 0..n {
+        offset[u + 1] = offset[u] + deg[u];
+    }
+    let mut adj = vec![0usize; 2 * edges.len()];
+    let mut cursor = offset.clone();
+    for (i, &(u, v)) in edges.iter().enumerate() {
+        adj[cursor[u]] = i;
+        cursor[u] += 1;
+        adj[cursor[v]] = i;
+        cursor[v] += 1;
     }
     let mut used = vec![false; edges.len()];
-    let mut ptr = vec![0usize; n]; // per-node cursor into adj
+    let mut ptr = offset.clone(); // per-node cursor into adj
     let start = edges[0].0;
     let mut stack = vec![start];
     let mut circuit = Vec::with_capacity(edges.len() + 1);
     while let Some(&u) = stack.last() {
         // advance cursor past consumed edges
-        while ptr[u] < adj[u].len() && used[adj[u][ptr[u]]] {
+        while ptr[u] < offset[u + 1] && used[adj[ptr[u]]] {
             ptr[u] += 1;
         }
-        if ptr[u] == adj[u].len() {
+        if ptr[u] == offset[u + 1] {
             circuit.push(u);
             stack.pop();
         } else {
-            let ei = adj[u][ptr[u]];
+            let ei = adj[ptr[u]];
             used[ei] = true;
             let (a, b) = edges[ei];
             stack.push(if a == u { b } else { a });
@@ -51,10 +66,15 @@ pub fn eulerian_circuit(n: usize, edges: &[(NodeId, NodeId)]) -> Vec<NodeId> {
 /// Shortcut an Eulerian circuit into a Hamiltonian cycle (skip repeats).
 /// Returns the node order of the cycle (first node NOT repeated at end).
 pub fn shortcut_to_hamiltonian(circuit: &[NodeId]) -> Vec<NodeId> {
-    let mut seen = std::collections::BTreeSet::new();
+    // Flat seen-marker instead of a BTreeSet: node ids are dense graph
+    // indices, and a circuit visits every edge, so the marker is small
+    // relative to the input.
+    let cap = circuit.iter().copied().max().map_or(0, |m| m + 1);
+    let mut seen = vec![false; cap];
     let mut cycle = Vec::new();
     for &u in circuit {
-        if seen.insert(u) {
+        if !seen[u] {
+            seen[u] = true;
             cycle.push(u);
         }
     }

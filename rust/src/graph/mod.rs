@@ -6,13 +6,17 @@
 //! federated-learning semantics.
 
 pub mod christofides;
+pub mod dense;
 pub mod digraph;
 pub mod euler;
 pub mod matching;
 pub mod mst;
 
-pub use christofides::{christofides_cycle, cycle_weight, ring_overlay};
+pub use christofides::{
+    christofides_cycle, christofides_cycle_dense, cycle_weight, ring_overlay, ring_overlay_dense,
+};
+pub use dense::DenseGraph;
 pub use digraph::{Edge, Graph, NodeId};
 pub use euler::{eulerian_circuit, shortcut_to_hamiltonian};
 pub use matching::{greedy_min_weight_matching, matching_decomposition, maximal_matching};
-pub use mst::{degree_bounded_mst, prim_mst};
+pub use mst::{degree_bounded_mst, degree_bounded_mst_dense, prim_mst, prim_mst_dense};

@@ -1,6 +1,14 @@
 //! Prim's minimum spanning tree — the paper's MST baseline (Table 1,
 //! "MST [72]" = Prim 1957) and the first step of Christofides.
+//!
+//! Each builder exists twice: over the sparse [`Graph`] (the
+//! pre-overhaul reference, kept verbatim) and over the flat
+//! [`DenseGraph`] slab (the production path for complete connectivity
+//! graphs). The dense twins replicate the reference's iteration order
+//! and tie-breaking exactly, so they are byte-identical — pinned by the
+//! unit tests here and by `benches/scaling.rs` across the paper zoo.
 
+use super::dense::DenseGraph;
 use super::digraph::{Graph, NodeId};
 
 /// Compute an MST of a connected graph with Prim's algorithm.
@@ -41,6 +49,38 @@ fn merge(cur: Option<(f64, NodeId)>, cand: (f64, NodeId)) -> Option<(f64, NodeId
         Some((w, _)) if w <= cand.0 => cur,
         _ => Some(cand),
     }
+}
+
+/// [`prim_mst`] over the dense slab: same O(N²) algorithm, same
+/// ascending-neighbor iteration order and `merge` tie-breaking (so the
+/// tree is bit-identical to the sparse reference on the equivalent
+/// complete graph), but each weight probe is one slab load instead of
+/// an adjacency-index chase, and no complete `Graph` is ever built.
+pub fn prim_mst_dense(g: &DenseGraph) -> Graph {
+    assert!(g.n() > 0, "MST of empty graph");
+    let n = g.n();
+    let mut in_tree = vec![false; n];
+    let mut best: Vec<Option<(f64, NodeId)>> = vec![None; n];
+    let mut tree = Graph::new(n);
+    in_tree[0] = true;
+    for v in 1..n {
+        best[v] = merge(best[v], (g.weight(0, v), 0));
+    }
+    for _ in 1..n {
+        let u = (0..n)
+            .filter(|&v| !in_tree[v] && best[v].is_some())
+            .min_by(|&a, &b| best[a].unwrap().0.total_cmp(&best[b].unwrap().0))
+            .expect("complete graph frontier cannot be empty");
+        let (w, parent) = best[u].unwrap();
+        tree.add_edge(parent, u, w);
+        in_tree[u] = true;
+        for v in 0..n {
+            if !in_tree[v] {
+                best[v] = merge(best[v], (g.weight(u, v), u));
+            }
+        }
+    }
+    tree
 }
 
 /// Degree-bounded MST approximation for the δ-MBST baseline (Marfoq et
@@ -91,6 +131,96 @@ pub fn degree_bounded_mst(g: &Graph, delta: usize) -> Graph {
         }
     }
     tree
+}
+
+/// [`degree_bounded_mst`] over the dense slab, with cached row minima.
+///
+/// The reference rescans every (eligible tree node, outside node) pair
+/// per step — O(N³) on complete graphs, each probe an adjacency walk.
+/// Here each tree node `u` caches its cheapest outside endpoint
+/// `(w, v)`; the cache goes stale only when that `v` joins the tree
+/// (the outside set only shrinks and weights are static), which is
+/// exactly when the row is rescanned. Selection semantics are the
+/// reference's bit for bit: row minima keep the smallest `v` on ties
+/// (ascending scan, replace only on strictly smaller), the global scan
+/// keeps the earliest eligible `u` on ties — together the same
+/// (u, v)-lexicographic tie-break as the reference's nested scan, so
+/// the tree is byte-identical.
+///
+/// Note the reference's `deg[v] < delta` guard on the outside endpoint
+/// is vacuous on complete graphs (outside nodes always have degree 0),
+/// so the dense twin drops it.
+pub fn degree_bounded_mst_dense(g: &DenseGraph, delta: usize) -> Graph {
+    assert!(delta >= 1, "delta must be >= 1");
+    let n = g.n();
+    if n == 0 {
+        return Graph::new(0);
+    }
+    let mut in_tree = vec![false; n];
+    let mut deg = vec![0usize; n];
+    // Cheapest outside endpoint per tree node (unused once saturated).
+    let mut best_v: Vec<Option<(f64, NodeId)>> = vec![None; n];
+    let mut tree = Graph::new(n);
+    in_tree[0] = true;
+    best_v[0] = dense_row_min(g, 0, &in_tree);
+    let mut count = 1;
+    while count < n {
+        let mut cand: Option<(f64, NodeId, NodeId)> = None;
+        for u in 0..n {
+            if !in_tree[u] || deg[u] >= delta {
+                continue;
+            }
+            if let Some((w, v)) = best_v[u] {
+                cand = match cand {
+                    Some(best) if best.0 <= w => Some(best),
+                    _ => Some((w, u, v)),
+                };
+            }
+        }
+        match cand {
+            Some((w, u, v)) => {
+                tree.add_edge(u, v, w);
+                deg[u] += 1;
+                deg[v] += 1;
+                in_tree[v] = true;
+                count += 1;
+                best_v[v] = dense_row_min(g, v, &in_tree);
+                // Rescan only rows whose cached endpoint just left the
+                // outside set (including u's own row).
+                for x in 0..n {
+                    if x != v && in_tree[x] && deg[x] < delta {
+                        if let Some((_, bv)) = best_v[x] {
+                            if bv == v {
+                                best_v[x] = dense_row_min(g, x, &in_tree);
+                            }
+                        }
+                    }
+                }
+            }
+            // Bound too tight to span: relax (same fallback as the
+            // reference).
+            None => return degree_bounded_mst_dense(g, delta + 1),
+        }
+    }
+    tree
+}
+
+/// Cheapest outside endpoint of `u`'s slab row, smallest index on ties
+/// (ascending scan, replace on strictly smaller — mirroring the
+/// reference's inner loop).
+fn dense_row_min(g: &DenseGraph, u: NodeId, in_tree: &[bool]) -> Option<(f64, NodeId)> {
+    let mut best: Option<(f64, NodeId)> = None;
+    for v in 0..g.n() {
+        if v == u || in_tree[v] {
+            continue;
+        }
+        let w = g.weight(u, v);
+        best = match best {
+            Some(b) if b.0 <= w => best,
+            _ => Some((w, v)),
+        };
+    }
+    best
 }
 
 #[cfg(test)]
@@ -163,5 +293,52 @@ mod tests {
         let g = Graph::complete(4, |_, _| 1.0);
         let t = degree_bounded_mst(&g, 1);
         assert!(t.is_connected());
+    }
+
+    /// Edge-list equality down to the bits, including insertion order —
+    /// the dense twins must be indistinguishable from the reference.
+    fn assert_trees_identical(a: &Graph, b: &Graph, ctx: &str) {
+        assert_eq!(a.edges().len(), b.edges().len(), "{ctx}: edge count");
+        for (x, y) in a.edges().iter().zip(b.edges()) {
+            assert_eq!(
+                (x.u, x.v, x.w.to_bits()),
+                (y.u, y.v, y.w.to_bits()),
+                "{ctx}: edge mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_prim_is_byte_identical_to_sparse() {
+        for n in [2usize, 3, 8, 17] {
+            // Adversarial weights with plenty of exact ties.
+            let w = |u: usize, v: usize| ((u * 7 + v * 13) % 5) as f64 + 1.0;
+            let sparse = prim_mst(&Graph::complete(n, w));
+            let dense = prim_mst_dense(&DenseGraph::from_fn(n, w));
+            assert_trees_identical(&dense, &sparse, &format!("prim n={n}"));
+        }
+    }
+
+    #[test]
+    fn dense_degree_bounded_is_byte_identical_to_sparse() {
+        for n in [2usize, 5, 9, 16] {
+            let w = |u: usize, v: usize| ((u * 11 + v * 3) % 7) as f64 + 0.5;
+            for delta in 1..5 {
+                let sparse = degree_bounded_mst(&Graph::complete(n, w), delta);
+                let dense = degree_bounded_mst_dense(&DenseGraph::from_fn(n, w), delta);
+                assert_trees_identical(&dense, &sparse, &format!("dmbst n={n} delta={delta}"));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_degree_bounded_respects_delta_at_scale() {
+        let g = DenseGraph::from_fn(64, |u, v| ((u * 31 + v * 17) % 23) as f64 + 1.0);
+        let t = degree_bounded_mst_dense(&g, 3);
+        assert!(t.is_connected());
+        assert_eq!(t.edges().len(), 63);
+        for u in 0..64 {
+            assert!(t.degree(u) <= 3);
+        }
     }
 }

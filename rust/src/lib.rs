@@ -63,22 +63,16 @@ pub mod topo;
 pub mod util;
 
 /// Build every Table 1 topology for a (network, profile) pair, in the
-/// paper's column order.
+/// paper's column order — one [`config::build_design`] call per kind,
+/// so this list can never drift from what sweeps construct.
 pub fn all_topologies(
     net: &net::NetworkSpec,
     profile: &net::DatasetProfile,
     t: u32,
     seed: u64,
 ) -> Vec<Box<dyn topo::TopologyDesign>> {
-    use topo::delta_mbst::{DeltaMbstTopology, DEFAULT_DELTA};
-    use topo::matcha::{MatchaTopology, DEFAULT_BUDGET};
-    vec![
-        Box::new(topo::star::StarTopology::new(net, profile)),
-        Box::new(MatchaTopology::new(net, profile, DEFAULT_BUDGET, seed)),
-        Box::new(MatchaTopology::plus(net, profile, seed)),
-        Box::new(topo::mst::MstTopology::new(net, profile)),
-        Box::new(DeltaMbstTopology::new(net, profile, DEFAULT_DELTA)),
-        Box::new(topo::ring::RingTopology::new(net, profile)),
-        Box::new(topo::MultigraphTopology::from_network(net, profile, t)),
-    ]
+    config::TopologyKind::all()
+        .iter()
+        .map(|&kind| config::build_design(kind, net, profile, t, seed))
+        .collect()
 }

@@ -26,6 +26,8 @@ SUBCOMMANDS
   sweep     [spec.toml] [--threads 0] [--out results] [--name sweep] [--rounds 6400]
             [--topologies all|a,b] [--networks all|a,b] [--profiles all|a,b]
             [--t 1,3,5] [--seeds 17,18] [--no-dedup]
+  scale     [--sizes 64,256,1024] [--variant geo|sphere] [--seed 7]
+            [--profile femnist] [--t 5] [--rounds 0]
   train     <config.toml> [--eval-every 10] [--csv out.csv]
   table1    [--rounds 6400] [--t 5] [--profile femnist] [--threads 0]
   table2
@@ -42,6 +44,11 @@ byte-identical for any thread count. Sweeps deduplicate cells that are
 provably identical (deterministic topologies replicated across seeds)
 and fan the results out; `--no-dedup` forces every cell to simulate —
 the artifacts are byte-identical either way.
+
+Network axes accept the five zoo names and synthetic large-N networks
+by name: synth-geo-n1024-s7 / synth-sphere-n256-s17 (variant, silo
+count, generator seed). `scale` times topology construction per design
+across synthetic sizes (add --rounds to also simulate each cell).
 ";
 
 fn resolve_profile(name: &str) -> Result<DatasetProfile> {
@@ -97,6 +104,7 @@ fn run(args: Args) -> Result<()> {
             );
         }
         "sweep" => sweep_cmd(&args)?,
+        "scale" => scale_cmd(&args)?,
         "train" => {
             let config = args
                 .positional
@@ -253,15 +261,70 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s)",
+        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s)",
         outcome.report.cells.len(),
         outcome.unique_cells,
         outcome.dedup_ratio(),
         outcome.host_elapsed_ms / 1e3,
         outcome.threads,
         outcome.cells_per_sec(),
+        outcome.build_ms / 1e3,
+        outcome.sim_ms / 1e3,
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
+    Ok(())
+}
+
+/// `mgfl scale`: construction wall-clock per design across synthetic
+/// network sizes — the CLI view of the large-N axis the scaling bench
+/// gates. `--rounds N` additionally simulates each cell and reports the
+/// mean cycle time next to the build time.
+fn scale_cmd(args: &Args) -> Result<()> {
+    let sizes: Vec<usize> =
+        args.get_parsed_list::<usize>("sizes")?.unwrap_or_else(|| vec![64, 256, 1024]);
+    let variant_s = args.get_str("variant", "geo");
+    let seed: u64 = args.get("seed", 7)?;
+    let profile = args.get_str("profile", "femnist");
+    let t: u32 = args.get("t", 5)?;
+    let rounds: usize = args.get("rounds", 0)?;
+    let prof = resolve_profile(&profile)?;
+    let variant = mgfl::net::synth::SynthVariant::parse(&variant_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown synth variant '{variant_s}' (geo|sphere)"))?;
+    anyhow::ensure!(!sizes.is_empty(), "--sizes must list at least one silo count");
+
+    println!(
+        "== scale — construction ms per design (synth-{} networks, {}, t={t}, seed {seed}) ==",
+        variant.as_str(),
+        prof.name
+    );
+    let kinds = TopologyKind::all();
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        let name = mgfl::net::synth::name_of(variant, n, seed);
+        let net = mgfl::net::by_name(&name)
+            .ok_or_else(|| anyhow::anyhow!("'{name}' out of synthesizable range"))?;
+        let mut row = vec![format!("{n}")];
+        for kind in kinds {
+            let t0 = std::time::Instant::now();
+            let mut topo = mgfl::config::build_design(kind, &net, &prof, t, seed);
+            let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+            std::hint::black_box(topo.overlay().edges().len());
+            row.push(if rounds > 0 {
+                let s = simulate_summary(topo.as_mut(), &net, &prof, rounds);
+                format!("{build_ms:.1} ({:.1})", s.mean_cycle_ms)
+            } else {
+                format!("{build_ms:.1}")
+            });
+        }
+        rows.push(row);
+        eprintln!("  n={n} done");
+    }
+    let mut headers: Vec<&str> = vec!["N"];
+    headers.extend(kinds.iter().map(|k| k.as_str()));
+    print!("{}", render_table(&headers, &rows));
+    if rounds > 0 {
+        println!("(cell format: construction ms (mean cycle ms over {rounds} rounds))");
+    }
     Ok(())
 }
 
@@ -282,10 +345,12 @@ fn table1(rounds: usize, t: u32, profile: Option<String>, threads: usize) -> Res
         );
     }
     eprintln!(
-        "({} cells in {:.2} s on {} threads)",
+        "({} cells in {:.2} s on {} threads; worker time: build {:.2} s + sim {:.2} s)",
         outcome.report.cells.len(),
         outcome.host_elapsed_ms / 1e3,
         outcome.threads,
+        outcome.build_ms / 1e3,
+        outcome.sim_ms / 1e3,
     );
     Ok(())
 }
@@ -450,16 +515,17 @@ fn remove_silos(
         }
     };
     let keep: Vec<usize> = (0..n).filter(|i| !victims.contains(i)).collect();
-    let conn = net.connectivity_graph(prof);
-    let sub = mgfl::graph::Graph::complete(keep.len(), |a, b| {
-        conn.edge_weight(keep[a], keep[b]).unwrap()
-    });
-    let cycle = mgfl::graph::christofides_cycle(&sub);
+    // Dense slab instead of the sparse complete graph: same weights
+    // (`conn_weight` is shared), O(1) lookups instead of O(N) adjacency
+    // walks per probe.
+    let conn = net.connectivity_dense(prof);
+    let sub = mgfl::graph::DenseGraph::from_fn(keep.len(), |a, b| conn.weight(keep[a], keep[b]));
+    let cycle = mgfl::graph::christofides_cycle_dense(&sub);
     let mut g = mgfl::graph::Graph::new(n);
     for w in 0..cycle.len() {
         let a = keep[cycle[w]];
         let b = keep[cycle[(w + 1) % cycle.len()]];
-        g.add_edge(a, b, conn.edge_weight(a, b).unwrap());
+        g.add_edge(a, b, conn.weight(a, b));
     }
     g
 }

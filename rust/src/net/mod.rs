@@ -1,9 +1,31 @@
-//! Network substrate: geographic latency model, silo/network specs, and
-//! the five embedded evaluation networks (Gaia, Amazon, Géant, Exodus,
-//! Ebone).
+//! Network substrate: geographic latency model, silo/network specs, the
+//! five embedded evaluation networks (Gaia, Amazon, Géant, Exodus,
+//! Ebone), and deterministic synthetic large-N networks.
 
 pub mod geo;
 pub mod spec;
+pub mod synth;
 pub mod zoo;
 
-pub use spec::{DatasetProfile, NetworkSpec, Silo};
+pub use spec::{DatasetProfile, LatencyMatrix, NetworkSpec, Silo};
+
+/// The single network resolver behind the config layer, the sweep
+/// engine, and the CLI: the five paper networks by zoo name
+/// ([`zoo::by_name`]), plus parameterized synthetic networks by
+/// `synth-<variant>-n<N>-s<seed>` name ([`synth::by_name`]). Both are
+/// case-insensitive; the returned spec's `name` is the canonical
+/// spelling (what sweep canonicalization rewrites axis values to).
+pub fn by_name(name: &str) -> Option<NetworkSpec> {
+    zoo::by_name(name).or_else(|| synth::by_name(name))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn resolver_covers_zoo_and_synth() {
+        assert_eq!(super::by_name("gaia").unwrap().n(), 11);
+        assert_eq!(super::by_name("synth-geo-n64-s7").unwrap().n(), 64);
+        assert_eq!(super::by_name("SYNTH-SPHERE-N32-S1").unwrap().name, "synth-sphere-n32-s1");
+        assert!(super::by_name("nowhere").is_none());
+    }
+}

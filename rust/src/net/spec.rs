@@ -8,7 +8,7 @@
 //! baseline lands at the paper's magnitude (see DESIGN.md §Substitutions).
 
 use super::geo;
-use crate::graph::Graph;
+use crate::graph::{DenseGraph, Graph};
 
 /// One data silo: a geographic site with symmetric access capacity.
 #[derive(Debug, Clone)]
@@ -26,6 +26,42 @@ impl Silo {
     pub fn new(name: &str, lat: f64, lon: f64) -> Self {
         // Paper §5.3: "all access links have 10 Gbps traffic capacity".
         Silo { name: name.to_string(), lat, lon, up_gbps: 10.0, dn_gbps: 10.0 }
+    }
+
+    /// A silo with symmetric but non-uniform access capacity (synthetic
+    /// networks model a Pareto-ish capacity spread; see
+    /// [`super::synth`]). Keeping up == dn keeps the connectivity-graph
+    /// weights symmetric.
+    pub fn with_capacity(name: &str, lat: f64, lon: f64, gbps: f64) -> Self {
+        assert!(gbps > 0.0, "capacity must be positive");
+        Silo { name: name.to_string(), lat, lon, up_gbps: gbps, dn_gbps: gbps }
+    }
+}
+
+/// Row-major one-way latency slab: `n * n` entries behind an `(i, j)`
+/// accessor. The old `Vec<Vec<f64>>` shape paid n + 1 allocations and a
+/// pointer chase per row — noise at the paper's 87 silos, real money
+/// when large-N scaling rebuilds the matrix per synthetic cell.
+#[derive(Debug, Clone)]
+pub struct LatencyMatrix {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl LatencyMatrix {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One-way latency l(i, j) in ms; the diagonal is 0.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    /// All entries, row-major (diagonal zeros included).
+    pub fn values(&self) -> &[f64] {
+        &self.data
     }
 }
 
@@ -48,31 +84,45 @@ impl NetworkSpec {
         geo::link_latency_ms(a.lat, a.lon, b.lat, b.lon)
     }
 
-    /// Full latency matrix (ms); diagonal is 0.
-    pub fn latency_matrix(&self) -> Vec<Vec<f64>> {
+    /// Full latency matrix (ms) as one row-major slab; diagonal is 0.
+    pub fn latency_matrix(&self) -> LatencyMatrix {
         let n = self.n();
-        let mut m = vec![vec![0.0; n]; n];
+        let mut data = vec![0.0; n * n];
         for i in 0..n {
             for j in 0..n {
                 if i != j {
-                    m[i][j] = self.latency_ms(i, j);
+                    data[i * n + j] = self.latency_ms(i, j);
                 }
             }
         }
-        m
+        LatencyMatrix { n, data }
+    }
+
+    /// The degree-1 Eq. 3 connectivity weight of pair `(u, v)` — the
+    /// single formula behind both [`Self::connectivity_graph`] and
+    /// [`Self::connectivity_dense`], so the two representations are
+    /// bit-identical by construction. With M in Mbit and C in Gbit/s,
+    /// transmission time in ms is exactly M/C.
+    #[inline]
+    pub fn conn_weight(&self, profile: &DatasetProfile, u: usize, v: usize) -> f64 {
+        let cap = self.silos[u].up_gbps.min(self.silos[v].dn_gbps);
+        profile.u as f64 * profile.t_c_ms + self.latency_ms(u, v) + profile.model_size_mbits / cap
     }
 
     /// The *connectivity* graph \(\mathcal{G}_c\): complete, weighted by
     /// the degree-1 Eq. 3 delay under `profile` (the weight the overlay
-    /// builders minimize). With M in Mbit and C in Gbit/s, transmission
-    /// time in ms is exactly M/C.
+    /// builders minimize). This sparse form is the pre-overhaul
+    /// substrate, kept as the dense path's reference; production
+    /// builders use [`Self::connectivity_dense`].
     pub fn connectivity_graph(&self, profile: &DatasetProfile) -> Graph {
-        Graph::complete(self.n(), |u, v| {
-            let cap = self.silos[u].up_gbps.min(self.silos[v].dn_gbps);
-            profile.u as f64 * profile.t_c_ms
-                + self.latency_ms(u, v)
-                + profile.model_size_mbits / cap
-        })
+        Graph::complete(self.n(), |u, v| self.conn_weight(profile, u, v))
+    }
+
+    /// [`Self::connectivity_graph`] as a flat [`DenseGraph`] slab: one
+    /// allocation for the full complete graph (the sparse form at
+    /// N = 4096 pushes ~8.4M edges plus twice that in adjacency slots).
+    pub fn connectivity_dense(&self, profile: &DatasetProfile) -> DenseGraph {
+        DenseGraph::from_fn(self.n(), |u, v| self.conn_weight(profile, u, v))
     }
 }
 
@@ -185,9 +235,42 @@ mod tests {
     fn latency_symmetric_zero_diagonal() {
         let net = two_node_net();
         let m = net.latency_matrix();
-        assert_eq!(m[0][0], 0.0);
-        assert!((m[0][1] - m[1][0]).abs() < 1e-9);
-        assert!(m[0][1] > 20.0, "transatlantic must be tens of ms: {}", m[0][1]);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert!((m.at(0, 1) - m.at(1, 0)).abs() < 1e-9);
+        assert!(m.at(0, 1) > 20.0, "transatlantic must be tens of ms: {}", m.at(0, 1));
+        assert_eq!(m.values().len(), 4);
+    }
+
+    #[test]
+    fn dense_connectivity_matches_sparse_bitwise() {
+        let net = NetworkSpec {
+            name: "test4".into(),
+            silos: vec![
+                Silo::new("paris", 48.8566, 2.3522),
+                Silo::new("nyc", 40.7128, -74.0060),
+                Silo::with_capacity("tokyo", 35.68, 139.69, 25.0),
+                Silo::with_capacity("sydney", -33.87, 151.21, 12.5),
+            ],
+        };
+        let p = DatasetProfile::femnist();
+        let sparse = net.connectivity_graph(&p);
+        let dense = net.connectivity_dense(&p);
+        assert_eq!(dense.num_pairs(), sparse.edges().len());
+        for e in sparse.edges() {
+            assert_eq!(dense.weight(e.u, e.v).to_bits(), e.w.to_bits(), "({}, {})", e.u, e.v);
+        }
+        // Non-uniform (but per-silo symmetric) capacities keep the
+        // weight symmetric: cap(u, v) = min(c_u, c_v) = cap(v, u).
+        for u in 0..net.n() {
+            for v in (u + 1)..net.n() {
+                assert_eq!(
+                    net.conn_weight(&p, u, v).to_bits(),
+                    net.conn_weight(&p, v, u).to_bits()
+                );
+                assert!(net.conn_weight(&p, u, v) > 0.0);
+            }
+        }
     }
 
     #[test]

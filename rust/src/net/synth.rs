@@ -1,0 +1,258 @@
+//! Synthetic silo networks for large-N scaling studies.
+//!
+//! The paper zoo tops out at 87 silos (Ebone); the ROADMAP's
+//! production-scale north star needs networks orders of magnitude
+//! larger. This module generates them deterministically from a
+//! `(variant, n, seed)` triple, addressable *by name* everywhere a zoo
+//! network is — sweep specs, `ExperimentConfig`, the CLI — via
+//! [`crate::net::by_name`]:
+//!
+//! ```text
+//! synth-geo-n1024-s7      geo-clustered, 1024 silos, seed 7
+//! synth-sphere-n256-s17   uniform-sphere, 256 silos, seed 17
+//! ```
+//!
+//! Two variants:
+//!
+//! * **`geo`** — geo-clustered: ~√n metro centers in the populated
+//!   latitude band, silos jittered tens of km around them, with a
+//!   Pareto-ish symmetric access-capacity spread (10–100 Gbps). This
+//!   reproduces the ISP-PoP clustering that drives the paper's
+//!   d(i,j)/d_min ratios (and so the multigraph's isolated states) at
+//!   any scale, plus the heterogeneous access links real cross-silo
+//!   deployments have.
+//! * **`sphere`** — uniform on the sphere with the paper's uniform
+//!   10 Gbps links: a structure-free control where every delay is pure
+//!   geography.
+//!
+//! Determinism contract: the same name yields a byte-identical
+//! [`NetworkSpec`] (names, coordinate bits, capacity bits) in every
+//! process — generation draws from a [`Rng64`] stream derived from the
+//! seed and the variant tag, never from global state. Pinned by
+//! `tests/synth_scale.rs`.
+
+use super::spec::{NetworkSpec, Silo};
+use crate::util::rng::{derive_stream, fnv1a};
+use crate::util::Rng64;
+
+/// Smallest synthesizable network (overlay builders need 2 nodes).
+pub const MIN_SYNTH_N: usize = 2;
+/// Largest synthesizable network: 65 536 silos keeps the dense
+/// connectivity slab (~17 GB of f64 at the cap) an explicit opt-in
+/// rather than a typo.
+pub const MAX_SYNTH_N: usize = 1 << 16;
+
+/// Pareto shape for the geo variant's capacity spread (heavier head,
+/// occasional fat links — capped at 10x the 10 Gbps floor).
+const CAPACITY_ALPHA: f64 = 2.5;
+const CAPACITY_FLOOR_GBPS: f64 = 10.0;
+const CAPACITY_CAP_GBPS: f64 = 100.0;
+
+/// Which generator a synthetic name selects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthVariant {
+    Geo,
+    Sphere,
+}
+
+impl SynthVariant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SynthVariant::Geo => "geo",
+            SynthVariant::Sphere => "sphere",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "geo" => Some(SynthVariant::Geo),
+            "sphere" => Some(SynthVariant::Sphere),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [SynthVariant; 2] {
+        [SynthVariant::Geo, SynthVariant::Sphere]
+    }
+}
+
+/// The canonical name of a synthetic network — what [`by_name`] parses
+/// and what the generated [`NetworkSpec::name`] carries, so sweep-spec
+/// canonicalization is a fixed point.
+pub fn name_of(variant: SynthVariant, n: usize, seed: u64) -> String {
+    format!("synth-{}-n{n}-s{seed}", variant.as_str())
+}
+
+/// Resolve a `synth-<variant>-n<N>-s<seed>` name (case-insensitive).
+/// Returns `None` for non-synthetic names, unknown variants, or N
+/// outside [[`MIN_SYNTH_N`], [`MAX_SYNTH_N`]] — the caller falls back
+/// to its own error path, mirroring [`super::zoo::by_name`].
+pub fn by_name(name: &str) -> Option<NetworkSpec> {
+    let lower = name.to_ascii_lowercase();
+    let rest = lower.strip_prefix("synth-")?;
+    let (variant_s, rest) = rest.split_once("-n")?;
+    let (n_s, seed_s) = rest.split_once("-s")?;
+    let variant = SynthVariant::parse(variant_s)?;
+    let n: usize = n_s.parse().ok()?;
+    let seed: u64 = seed_s.parse().ok()?;
+    if !(MIN_SYNTH_N..=MAX_SYNTH_N).contains(&n) {
+        return None;
+    }
+    Some(generate(variant, n, seed))
+}
+
+/// Generate a synthetic network. Deterministic in `(variant, n, seed)`.
+pub fn generate(variant: SynthVariant, n: usize, seed: u64) -> NetworkSpec {
+    assert!(
+        (MIN_SYNTH_N..=MAX_SYNTH_N).contains(&n),
+        "synthetic networks support {MIN_SYNTH_N}..={MAX_SYNTH_N} silos (got {n})"
+    );
+    match variant {
+        SynthVariant::Geo => geo_clustered(n, seed),
+        SynthVariant::Sphere => uniform_sphere(n, seed),
+    }
+}
+
+/// Geo-clustered variant: metro centers, clustered PoPs, Pareto-ish
+/// capacities. See the module docs.
+pub fn geo_clustered(n: usize, seed: u64) -> NetworkSpec {
+    let mut rng = Rng64::seed_from_u64(derive_stream(seed, fnv1a(b"synth-geo")));
+    // ~√n metros keeps cluster sizes scale-free: intra-metro pairs stay
+    // sub-ms while cross-metro pairs span continents, whatever n is.
+    let clusters = ((n as f64).sqrt().ceil() as usize).clamp(2, n);
+    let centers: Vec<(f64, f64)> = (0..clusters)
+        .map(|_| {
+            // Populated-latitude band (matches the zoo's coordinate
+            // envelope); full longitude range.
+            let lat = -55.0 + 120.0 * rng.gen_f64();
+            let lon = -180.0 + 360.0 * rng.gen_f64();
+            (lat, lon)
+        })
+        .collect();
+    let mut silos = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.gen_range(0, clusters);
+        let (clat, clon) = centers[c];
+        // ~0.35° jitter ≈ tens of km: intra-metro link latency lands at
+        // the sub-ms floor, exactly the property that makes d_min small
+        // on Exodus/Ebone (zoo.rs) and generates isolated states.
+        let lat = (clat + 0.35 * rng.gen_normal()).clamp(-89.0, 89.0);
+        let lon = wrap_lon(clon + 0.35 * rng.gen_normal());
+        let cap = pareto_capacity(&mut rng);
+        silos.push(Silo::with_capacity(&format!("geo{i}_c{c}"), lat, lon, cap));
+    }
+    NetworkSpec { name: name_of(SynthVariant::Geo, n, seed), silos }
+}
+
+/// Uniform-sphere variant: area-uniform points, uniform 10 Gbps links.
+pub fn uniform_sphere(n: usize, seed: u64) -> NetworkSpec {
+    let mut rng = Rng64::seed_from_u64(derive_stream(seed, fnv1a(b"synth-sphere")));
+    let mut silos = Vec::with_capacity(n);
+    for i in 0..n {
+        // Uniform on the sphere: z = sin(lat) uniform in [-1, 1).
+        let z = 2.0 * rng.gen_f64() - 1.0;
+        let lat = z.asin().to_degrees().clamp(-89.0, 89.0);
+        let lon = -180.0 + 360.0 * rng.gen_f64();
+        silos.push(Silo::new(&format!("sph{i}"), lat, lon));
+    }
+    NetworkSpec { name: name_of(SynthVariant::Sphere, n, seed), silos }
+}
+
+/// Symmetric access capacity with a Pareto(α) tail over the 10 Gbps
+/// paper floor, capped at 100 Gbps. Always positive and finite.
+fn pareto_capacity(rng: &mut Rng64) -> f64 {
+    // 1 - gen_f64() ∈ (0, 1]: u = 1 maps to the floor, u → 0 to the cap.
+    let u = 1.0 - rng.gen_f64();
+    (CAPACITY_FLOOR_GBPS * u.powf(-1.0 / CAPACITY_ALPHA)).min(CAPACITY_CAP_GBPS)
+}
+
+/// Wrap a longitude into [-180, 180).
+fn wrap_lon(lon: f64) -> f64 {
+    (lon + 180.0).rem_euclid(360.0) - 180.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_resolve() {
+        for variant in SynthVariant::all() {
+            let name = name_of(variant, 64, 7);
+            let net = by_name(&name).expect("canonical name resolves");
+            assert_eq!(net.name, name, "generated name is the canonical name");
+            assert_eq!(net.n(), 64);
+            // Case-insensitive, like zoo::by_name.
+            assert_eq!(by_name(&name.to_ascii_uppercase()).unwrap().name, name);
+        }
+        assert_eq!(SynthVariant::parse("geo"), Some(SynthVariant::Geo));
+        assert_eq!(SynthVariant::parse("SPHERE"), Some(SynthVariant::Sphere));
+        assert!(SynthVariant::parse("torus").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_names_and_bad_sizes() {
+        for bad in [
+            "gaia",
+            "synth",
+            "synth-geo",
+            "synth-geo-n64",
+            "synth-torus-n64-s1",
+            "synth-geo-nxx-s1",
+            "synth-geo-n64-sxx",
+            "synth-geo-n1-s1",   // below MIN_SYNTH_N
+            "synth-geo-n0-s1",
+            "synth-geo-n99999999-s1", // above MAX_SYNTH_N
+        ] {
+            assert!(by_name(bad).is_none(), "{bad} must not resolve");
+        }
+    }
+
+    #[test]
+    fn coordinates_and_capacities_are_plausible() {
+        for variant in SynthVariant::all() {
+            let net = generate(variant, 128, 3);
+            assert_eq!(net.n(), 128);
+            let names: std::collections::BTreeSet<_> =
+                net.silos.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names.len(), 128, "silo names must be unique");
+            for s in &net.silos {
+                assert!((-90.0..=90.0).contains(&s.lat), "{}: lat {}", s.name, s.lat);
+                assert!((-180.0..180.0 + 1e-9).contains(&s.lon), "{}: lon {}", s.name, s.lon);
+                assert_eq!(s.up_gbps.to_bits(), s.dn_gbps.to_bits(), "symmetric capacity");
+                assert!(s.up_gbps >= CAPACITY_FLOOR_GBPS - 1e-12);
+                assert!(s.up_gbps <= CAPACITY_CAP_GBPS + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn geo_variant_has_metro_clustering_and_capacity_spread() {
+        let net = geo_clustered(96, 11);
+        let mut min = f64::MAX;
+        let mut max: f64 = 0.0;
+        for i in 0..net.n() {
+            for j in (i + 1)..net.n() {
+                let l = net.latency_ms(i, j);
+                min = min.min(l);
+                max = max.max(l);
+            }
+        }
+        assert!(min < 1.0, "expected sub-ms intra-metro latency, got {min}");
+        assert!(max / min > 20.0, "expected wide delay spread, got {max}/{min}");
+        // Pareto spread: not every capacity equals the floor.
+        let caps: std::collections::BTreeSet<u64> =
+            net.silos.iter().map(|s| s.up_gbps.to_bits()).collect();
+        assert!(caps.len() > 10, "expected a capacity spread, got {} distinct", caps.len());
+    }
+
+    #[test]
+    fn wrap_lon_stays_in_range() {
+        for lon in [-541.0, -180.0, -179.9, 0.0, 179.9, 180.0, 541.0] {
+            let w = wrap_lon(lon);
+            assert!((-180.0..180.0).contains(&w), "{lon} -> {w}");
+        }
+        assert_eq!(wrap_lon(0.0), 0.0);
+        assert_eq!(wrap_lon(360.0), 0.0);
+    }
+}

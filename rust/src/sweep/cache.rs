@@ -39,6 +39,7 @@ use crate::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
 use crate::topo::TopologyDesign;
 
 use super::spec::CellSpec;
+use super::CellTiming;
 
 /// Semantic identity of one grid cell's simulation result. Two cells
 /// with equal fingerprints produce bit-identical [`SimSummary`]s, so
@@ -202,19 +203,40 @@ impl SweepCache {
 /// * everything else (e.g. unmaterializably-periodic multigraphs)
 ///   falls through to the uncached per-cell engine.
 pub fn run_cell_cached(cell: &CellSpec, cache: &SweepCache) -> SimSummary {
+    run_cell_cached_timed(cell, cache).0
+}
+
+/// [`run_cell_cached`] with the build/simulate wall-clock split
+/// ([`crate::sweep::CellTiming`]). Build time is measured *inside* the
+/// build-once closures, so it counts only construction work this
+/// worker actually performed: a cache hit — and a worker blocked on
+/// another thread's in-flight build of the same key — both record ~0
+/// (the wait overlaps other workers' time and is visible only in the
+/// sweep's host wall-clock). Simulate time covers the round loop.
+pub fn run_cell_cached_timed(cell: &CellSpec, cache: &SweepCache) -> (SimSummary, CellTiming) {
+    use std::time::Instant;
     let cfg = cell.to_experiment();
     let net = cfg.resolve_network();
     let prof = cfg.resolve_profile().expect("validated profile");
     match cell.topology {
         TopologyKind::Matcha | TopologyKind::MatchaPlus => {
+            let mut build_ms = 0.0;
             let core = cache.matcha_cores.get_or_build(
                 &(cell.network.clone(), cell.profile.clone()),
-                || Arc::new(MatchaCore::build(&net, &prof)),
+                || {
+                    let t0 = Instant::now();
+                    let core = Arc::new(MatchaCore::build(&net, &prof));
+                    build_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    core
+                },
             );
             let budget =
                 if cell.topology == TopologyKind::MatchaPlus { 1.0 } else { DEFAULT_BUDGET };
             let mut topo = MatchaTopology::from_core(core, budget, cell.cell_seed);
-            simulate_summary(&mut topo, &net, &prof, cell.rounds)
+            let t1 = Instant::now();
+            let summary = simulate_summary(&mut topo, &net, &prof, cell.rounds);
+            let timing = CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
+            (summary, timing)
         }
         _ => {
             let key = CompiledKey::for_cell(cell);
@@ -222,25 +244,38 @@ pub fn run_cell_cached(cell: &CellSpec, cache: &SweepCache) -> SimSummary {
             // stream), keep its built topology for the fallback below
             // rather than constructing it a second time.
             let mut built: Option<Box<dyn TopologyDesign>> = None;
+            let mut build_ms = 0.0;
             let compiled = cache.compiled.get_or_build(&key, || {
+                let t0 = Instant::now();
                 let mut topo = cfg.build_topology();
                 let ct = CompiledTopology::compile(topo.as_mut(), cell.rounds).map(Arc::new);
                 if ct.is_none() {
                     built = Some(topo);
                 }
+                build_ms = t0.elapsed().as_secs_f64() * 1e3;
                 ct
             });
             match compiled {
                 Some(ct) => {
+                    let t1 = Instant::now();
                     let mut slab = DelaySlab::new(&ct, &net, &prof);
-                    run_compiled(&ct, &mut slab, &net, &prof, cell.rounds).0
+                    let summary = run_compiled(&ct, &mut slab, &net, &prof, cell.rounds).0;
+                    let timing =
+                        CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
+                    (summary, timing)
                 }
                 // Streaming-engine cells (huge-period multigraphs): the
                 // design is consumed mutably per cell, so cache hits
                 // still rebuild — same work as the pre-cache engine.
                 None => {
+                    let tb = Instant::now();
                     let mut topo = built.unwrap_or_else(|| cfg.build_topology());
-                    simulate_summary(topo.as_mut(), &net, &prof, cell.rounds)
+                    let build_ms = build_ms + tb.elapsed().as_secs_f64() * 1e3;
+                    let t1 = Instant::now();
+                    let summary = simulate_summary(topo.as_mut(), &net, &prof, cell.rounds);
+                    let timing =
+                        CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
+                    (summary, timing)
                 }
             }
         }

@@ -28,7 +28,9 @@ pub mod cache;
 pub mod report;
 pub mod spec;
 
-pub use cache::{run_cell_cached, BuildOnce, CellFingerprint, DedupPlan, SweepCache};
+pub use cache::{
+    run_cell_cached, run_cell_cached_timed, BuildOnce, CellFingerprint, DedupPlan, SweepCache,
+};
 pub use report::{Axis, CellResult, SweepReport};
 pub use spec::{CellSpec, SweepSpec};
 
@@ -222,6 +224,23 @@ where
         .collect()
 }
 
+/// Host-side timing of one simulated cell: wall-clock spent
+/// constructing the topology vs stepping rounds. Never part of the
+/// artifacts (reports stay a pure function of the spec); aggregated
+/// into [`SweepOutcome`] so construction regressions show up in every
+/// sweep's summary line, not only in benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CellTiming {
+    /// Topology construction (and, on the cached path, shared
+    /// compilation) work this worker actually performed, ms. On the
+    /// cached path a cache hit — or blocking on another worker's
+    /// in-flight build of the same key — records ~0.
+    pub build_ms: f64,
+    /// Simulation time, ms. On the uncached path this includes the
+    /// per-cell schedule compile the engine performs internally.
+    pub sim_ms: f64,
+}
+
 /// Simulate one grid cell with nothing shared: builds the topology
 /// (seeded from the cell's derived stream) and its own simulation state.
 /// Cells run on the compiled zero-allocation engine
@@ -229,11 +248,21 @@ where
 /// cycle-detection fast path. This is the pre-cache engine — the
 /// byte-identity oracle for [`run_cell_cached`].
 pub fn run_cell_summary(cell: &CellSpec) -> SimSummary {
+    run_cell_summary_timed(cell).0
+}
+
+/// [`run_cell_summary`] with the build/simulate wall-clock split.
+pub fn run_cell_summary_timed(cell: &CellSpec) -> (SimSummary, CellTiming) {
     let cfg = cell.to_experiment();
     let net = cfg.resolve_network();
     let prof = cfg.resolve_profile().expect("validated profile");
+    let t0 = Instant::now();
     let mut topo = cfg.build_topology();
-    simulate_summary(topo.as_mut(), &net, &prof, cell.rounds)
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let summary = simulate_summary(topo.as_mut(), &net, &prof, cell.rounds);
+    let sim_ms = t1.elapsed().as_secs_f64() * 1e3;
+    (summary, CellTiming { build_ms, sim_ms })
 }
 
 /// [`run_cell_summary`] tagged with the cell's grid coordinates.
@@ -253,6 +282,13 @@ pub struct SweepOutcome {
     /// representatives. Equals the grid size with dedup off or when the
     /// grid has no duplicate work.
     pub unique_cells: usize,
+    /// Aggregate topology-construction work over the simulated
+    /// (unique) cells, ms, summed across workers (each distinct
+    /// construction counted once — see [`CellTiming::build_ms`]).
+    pub build_ms: f64,
+    /// Aggregate simulation wall-clock over the simulated cells, ms
+    /// (same summing convention).
+    pub sim_ms: f64,
 }
 
 impl SweepOutcome {
@@ -298,22 +334,26 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     let threads = effective_threads(opts.threads, work.len());
     let inner = RunOptions { threads, progress: opts.progress, dedup: opts.dedup };
     let t0 = Instant::now();
-    let summaries = if opts.dedup {
+    let summaries: Vec<(SimSummary, CellTiming)> = if opts.dedup {
         let shared = SweepCache::default();
-        run_cells(&work, &inner, |_, c| run_cell_cached(c, &shared))
+        run_cells(&work, &inner, |_, c| run_cell_cached_timed(c, &shared))
     } else {
-        run_cells(&work, &inner, |_, c| run_cell_summary(c))
+        run_cells(&work, &inner, |_, c| run_cell_summary_timed(c))
     };
     let results: Vec<CellResult> = cells
         .iter()
         .zip(&plan.assignment)
-        .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot], cell))
+        .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot].0, cell))
         .collect();
+    let build_ms: f64 = summaries.iter().map(|(_, t)| t.build_ms).sum();
+    let sim_ms: f64 = summaries.iter().map(|(_, t)| t.sim_ms).sum();
     Ok(SweepOutcome {
         report: SweepReport { name: spec.name.clone(), rounds: spec.rounds, cells: results },
         host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
         threads,
         unique_cells: work.len(),
+        build_ms,
+        sim_ms,
     })
 }
 
@@ -363,6 +403,12 @@ mod tests {
         let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         assert_eq!(outcome.threads, 2, "explicit thread request is honored");
         assert_eq!(outcome.unique_cells, 2, "no duplicate work in a single-seed grid");
+        assert!(
+            outcome.build_ms >= 0.0 && outcome.sim_ms > 0.0,
+            "build/sim split must be populated: build {} sim {}",
+            outcome.build_ms,
+            outcome.sim_ms
+        );
         let report = &outcome.report;
         assert_eq!(report.cells.len(), 2);
         // Grid order: ring first, multigraph second.
@@ -438,6 +484,25 @@ mod tests {
         let streams: std::collections::BTreeSet<u64> =
             memo.report.cells.iter().map(|c| c.cell_seed).collect();
         assert_eq!(streams.len(), 9, "derived streams stay per-cell after fan-out");
+    }
+
+    #[test]
+    fn timed_cell_matches_untimed_bitwise() {
+        let spec = SweepSpec {
+            name: "timing".into(),
+            topologies: vec![TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![17],
+            rounds: 60,
+        };
+        let cell = &spec.expand()[0];
+        let (timed, timing) = run_cell_summary_timed(cell);
+        let plain = run_cell_summary(cell);
+        assert_eq!(timed.total_ms.to_bits(), plain.total_ms.to_bits());
+        assert_eq!(timed.mean_cycle_ms.to_bits(), plain.mean_cycle_ms.to_bits());
+        assert!(timing.build_ms >= 0.0 && timing.sim_ms >= 0.0);
     }
 
     #[test]

@@ -106,19 +106,22 @@ impl SweepSpec {
     }
 
     /// Rewrite network/profile names to their canonical (lowercase zoo /
-    /// Table 2) spelling, then drop duplicate axis values. `zoo::by_name`
-    /// accepts any case, so without the rewrite two equivalent specs
-    /// spelled differently would derive different cell seeds and render
-    /// empty slices; canonicalizing at every spec entry point (TOML
-    /// loader, CLI flags, [`super::run`]) keeps coordinates case-stable.
-    /// Duplicate values on any axis (including "GAIA"/"gaia" pairs that
-    /// collapse under the rewrite) would silently inflate the grid with
-    /// identical cells, so they are deduplicated here with a warning —
-    /// [`Self::validate`] rejects them outright for callers that skip
-    /// canonicalization. Errors on unknown names.
+    /// synth / Table 2) spelling, then drop duplicate axis values.
+    /// `net::by_name` accepts any case, so without the rewrite two
+    /// equivalent specs spelled differently would derive different cell
+    /// seeds and render empty slices; canonicalizing at every spec
+    /// entry point (TOML loader, CLI flags, [`super::run`]) keeps
+    /// coordinates case-stable. Duplicate values on any axis (including
+    /// "GAIA"/"gaia" pairs that collapse under the rewrite) would
+    /// silently inflate the grid with identical cells, so they are
+    /// deduplicated here with a warning — [`Self::validate`] rejects
+    /// them outright for callers that skip canonicalization. Errors on
+    /// unknown names.
     pub fn canonicalize(&mut self) -> Result<()> {
         for n in &mut self.networks {
-            *n = zoo::by_name(n).ok_or_else(|| anyhow::anyhow!("unknown network '{n}'"))?.name;
+            *n = crate::net::by_name(n)
+                .ok_or_else(|| anyhow::anyhow!("unknown network '{n}'"))?
+                .name;
         }
         for p in &mut self.profiles {
             *p = DatasetProfile::by_name(p)
@@ -159,7 +162,10 @@ impl SweepSpec {
             );
         }
         for net in &self.networks {
-            ensure!(zoo::by_name(net).is_some(), "unknown network '{net}'");
+            ensure!(
+                crate::net::by_name(net).is_some(),
+                "unknown network '{net}' (zoo name or synth-<variant>-n<N>-s<seed>)"
+            );
         }
         for prof in &self.profiles {
             ensure!(DatasetProfile::by_name(prof).is_some(), "unknown profile '{prof}'");

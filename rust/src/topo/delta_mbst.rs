@@ -3,7 +3,7 @@
 //! trading tree weight for per-link throughput.
 
 use super::{RoundPlan, TopologyDesign};
-use crate::graph::{degree_bounded_mst, Graph};
+use crate::graph::{degree_bounded_mst, degree_bounded_mst_dense, Graph};
 use crate::net::{DatasetProfile, NetworkSpec};
 
 /// Paper/Marfoq default degree bound.
@@ -15,7 +15,17 @@ pub struct DeltaMbstTopology {
 }
 
 impl DeltaMbstTopology {
+    /// Degree-bounded greedy over the dense connectivity slab (cached
+    /// row minima) — byte-identical to [`Self::new_reference`],
+    /// large-N viable.
     pub fn new(net: &NetworkSpec, profile: &DatasetProfile, delta: usize) -> Self {
+        let conn = net.connectivity_dense(profile);
+        DeltaMbstTopology { overlay: degree_bounded_mst_dense(&conn, delta), delta }
+    }
+
+    /// Pre-overhaul construction over the sparse complete [`Graph`],
+    /// kept as the dense path's byte-identity oracle.
+    pub fn new_reference(net: &NetworkSpec, profile: &DatasetProfile, delta: usize) -> Self {
         let conn = net.connectivity_graph(profile);
         DeltaMbstTopology { overlay: degree_bounded_mst(&conn, delta), delta }
     }
@@ -80,5 +90,26 @@ mod tests {
         let mbst = DeltaMbstTopology::new(&net, &p, DEFAULT_DELTA);
         let max_deg = (0..net.n()).map(|i| mbst.overlay().degree(i)).max().unwrap();
         assert!(max_deg <= DEFAULT_DELTA);
+    }
+
+    #[test]
+    fn dense_build_matches_reference_on_zoo() {
+        let p = DatasetProfile::femnist();
+        for net in [zoo::gaia(), zoo::amazon()] {
+            for delta in [2usize, 3, 4] {
+                let dense = DeltaMbstTopology::new(&net, &p, delta);
+                let reference = DeltaMbstTopology::new_reference(&net, &p, delta);
+                let (a, b) = (dense.overlay().edges(), reference.overlay().edges());
+                assert_eq!(a.len(), b.len(), "{} delta={delta}", net.name);
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(
+                        (x.u, x.v, x.w.to_bits()),
+                        (y.u, y.v, y.w.to_bits()),
+                        "{} delta={delta}",
+                        net.name
+                    );
+                }
+            }
+        }
     }
 }

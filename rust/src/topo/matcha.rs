@@ -21,7 +21,10 @@ use std::sync::Arc;
 
 use super::{RoundPlan, TopologyDesign};
 use crate::delay::EdgeType;
-use crate::graph::{matching_decomposition, prim_mst, ring_overlay, Graph, NodeId};
+use crate::graph::{
+    matching_decomposition, prim_mst, prim_mst_dense, ring_overlay, ring_overlay_dense, Graph,
+    NodeId,
+};
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::util::Rng64;
 
@@ -37,13 +40,30 @@ pub struct MatchaCore {
 }
 
 impl MatchaCore {
+    /// Base graph + decomposition over the dense connectivity slab —
+    /// byte-identical to [`Self::build_reference`], large-N viable.
     pub fn build(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        let conn = net.connectivity_dense(profile);
+        let mst = prim_mst_dense(&conn);
+        let ring = ring_overlay_dense(&conn);
+        Self::from_backbone(net.n(), &mst, &ring)
+    }
+
+    /// Pre-overhaul construction over the sparse complete [`Graph`],
+    /// kept as the dense path's byte-identity oracle.
+    pub fn build_reference(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
         let conn = net.connectivity_graph(profile);
-        // Base graph: MST ∪ ring — connected, sparse, with enough edge
-        // diversity for the decomposition to matter.
         let mst = prim_mst(&conn);
         let ring = ring_overlay(&conn);
-        let mut overlay = Graph::new(net.n());
+        Self::from_backbone(net.n(), &mst, &ring)
+    }
+
+    /// Base graph: MST ∪ ring — connected, sparse, with enough edge
+    /// diversity for the decomposition to matter. Shared by both
+    /// construction paths (the substrate differs, the union and
+    /// decomposition do not).
+    fn from_backbone(n: usize, mst: &Graph, ring: &Graph) -> Self {
+        let mut overlay = Graph::new(n);
         let mut seen = std::collections::BTreeSet::new();
         for e in mst.edges().iter().chain(ring.edges()) {
             if seen.insert(e.pair()) {
@@ -233,5 +253,26 @@ mod tests {
             }
         }
         assert!(MatchaTopology::from_core(core, 0.5, 0).seed_sensitive());
+    }
+
+    #[test]
+    fn dense_core_matches_reference_core() {
+        let p = DatasetProfile::femnist();
+        for net in [zoo::gaia(), zoo::geant()] {
+            let dense = MatchaCore::build(&net, &p);
+            let reference = MatchaCore::build_reference(&net, &p);
+            let (a, b) = (dense.overlay().edges(), reference.overlay().edges());
+            assert_eq!(a.len(), b.len(), "{}", net.name);
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!((x.u, x.v, x.w.to_bits()), (y.u, y.v, y.w.to_bits()), "{}", net.name);
+            }
+            assert_eq!(dense.matchings(), reference.matchings(), "{}", net.name);
+            // Same seed over either core → the same sampled schedule.
+            let mut da = MatchaTopology::from_core(Arc::new(dense), 0.5, 42);
+            let mut db = MatchaTopology::from_core(Arc::new(reference), 0.5, 42);
+            for k in 0..20 {
+                assert_eq!(da.plan(k).edges, db.plan(k).edges, "{} round {k}", net.name);
+            }
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! spanning tree of the delay-weighted connectivity graph, static.
 
 use super::{RoundPlan, TopologyDesign};
-use crate::graph::{prim_mst, Graph};
+use crate::graph::{prim_mst, prim_mst_dense, Graph};
 use crate::net::{DatasetProfile, NetworkSpec};
 
 pub struct MstTopology {
@@ -10,7 +10,15 @@ pub struct MstTopology {
 }
 
 impl MstTopology {
+    /// Prim over the dense connectivity slab — byte-identical to
+    /// [`Self::new_reference`], large-N viable.
     pub fn new(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        MstTopology { overlay: prim_mst_dense(&net.connectivity_dense(profile)) }
+    }
+
+    /// Pre-overhaul construction over the sparse complete [`Graph`],
+    /// kept as the dense path's byte-identity oracle.
+    pub fn new_reference(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
         let conn = net.connectivity_graph(profile);
         MstTopology { overlay: prim_mst(&conn) }
     }
@@ -60,5 +68,19 @@ mod tests {
         let mst = MstTopology::new(&net, &p);
         let ring = super::super::ring::RingTopology::new(&net, &p);
         assert!(mst.overlay().total_weight() <= ring.overlay().total_weight() + 1e-9);
+    }
+
+    #[test]
+    fn dense_build_matches_reference_on_zoo() {
+        let p = DatasetProfile::femnist();
+        for net in [zoo::gaia(), zoo::geant()] {
+            let dense = MstTopology::new(&net, &p);
+            let reference = MstTopology::new_reference(&net, &p);
+            let (a, b) = (dense.overlay().edges(), reference.overlay().edges());
+            assert_eq!(a.len(), b.len(), "{}", net.name);
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!((x.u, x.v, x.w.to_bits()), (y.u, y.v, y.w.to_bits()), "{}", net.name);
+            }
+        }
     }
 }

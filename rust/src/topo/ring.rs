@@ -3,7 +3,7 @@
 //! This is also the overlay the paper's multigraph is constructed from.
 
 use super::{RoundPlan, TopologyDesign};
-use crate::graph::{ring_overlay, Graph};
+use crate::graph::{ring_overlay, ring_overlay_dense, Graph};
 use crate::net::{DatasetProfile, NetworkSpec};
 
 pub struct RingTopology {
@@ -11,7 +11,16 @@ pub struct RingTopology {
 }
 
 impl RingTopology {
+    /// Christofides ring over the dense connectivity slab — byte-
+    /// identical to [`Self::new_reference`] (pinned by tests here and
+    /// `benches/scaling.rs`), large-N viable.
     pub fn new(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        RingTopology { overlay: ring_overlay_dense(&net.connectivity_dense(profile)) }
+    }
+
+    /// Pre-overhaul construction over the sparse complete [`Graph`],
+    /// kept as the dense path's byte-identity oracle.
+    pub fn new_reference(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
         let conn = net.connectivity_graph(profile);
         RingTopology { overlay: ring_overlay(&conn) }
     }
@@ -77,5 +86,19 @@ mod tests {
             ring_len < max_edge * net.n() as f64 * 0.6,
             "ring {ring_len} not better than zigzag bound"
         );
+    }
+
+    #[test]
+    fn dense_build_matches_reference_on_zoo() {
+        let p = DatasetProfile::femnist();
+        for net in [zoo::gaia(), zoo::exodus()] {
+            let dense = RingTopology::new(&net, &p);
+            let reference = RingTopology::new_reference(&net, &p);
+            let (a, b) = (dense.overlay().edges(), reference.overlay().edges());
+            assert_eq!(a.len(), b.len(), "{}", net.name);
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!((x.u, x.v, x.w.to_bits()), (y.u, y.v, y.w.to_bits()), "{}", net.name);
+            }
+        }
     }
 }

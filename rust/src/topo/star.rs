@@ -13,7 +13,27 @@ pub struct StarTopology {
 
 impl StarTopology {
     /// Hub = argmin over candidates of max one-way latency to any silo.
+    ///
+    /// Each candidate's worst latency is computed once (O(N²) total);
+    /// the reference recomputed both sides' O(N) scans inside the
+    /// `min_by` comparator — ~4·N² haversines, ruinous at large N. The
+    /// comparator sees the same values, so the hub (and overlay) is
+    /// byte-identical to [`Self::new_reference`].
     pub fn new(net: &NetworkSpec, _profile: &DatasetProfile) -> Self {
+        let n = net.n();
+        assert!(n >= 2);
+        let worst: Vec<f64> = (0..n)
+            .map(|h| {
+                (0..n).filter(|&i| i != h).map(|i| net.latency_ms(i, h)).fold(0.0, f64::max)
+            })
+            .collect();
+        let hub = (0..n).min_by(|&a, &b| worst[a].total_cmp(&worst[b])).unwrap();
+        Self::with_hub(net, hub)
+    }
+
+    /// Pre-overhaul construction (per-comparison latency scans), kept
+    /// as the retuned path's byte-identity oracle.
+    pub fn new_reference(net: &NetworkSpec, _profile: &DatasetProfile) -> Self {
         let n = net.n();
         assert!(n >= 2);
         let hub = (0..n)
@@ -27,6 +47,11 @@ impl StarTopology {
                 worst(a).total_cmp(&worst(b))
             })
             .unwrap();
+        Self::with_hub(net, hub)
+    }
+
+    fn with_hub(net: &NetworkSpec, hub: usize) -> Self {
+        let n = net.n();
         let mut overlay = Graph::new(n);
         for i in 0..n {
             if i != hub {
@@ -101,5 +126,20 @@ mod tests {
         assert_eq!(p0.edges.len(), p9.edges.len());
         assert!(p0.isolated_nodes().is_empty());
         assert_eq!(s.period(), Some(1));
+    }
+
+    #[test]
+    fn precomputed_hub_matches_reference_on_zoo() {
+        let p = DatasetProfile::femnist();
+        for net in [zoo::gaia(), zoo::ebone()] {
+            let fast = StarTopology::new(&net, &p);
+            let reference = StarTopology::new_reference(&net, &p);
+            assert_eq!(fast.hub(), reference.hub(), "{}", net.name);
+            let (a, b) = (fast.overlay().edges(), reference.overlay().edges());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!((x.u, x.v, x.w.to_bits()), (y.u, y.v, y.w.to_bits()), "{}", net.name);
+            }
+        }
     }
 }

@@ -74,8 +74,24 @@ impl MultigraphTopology {
         MultigraphTopology { overlay, mg, s_max }
     }
 
-    /// Convenience: RING overlay -> Algorithm 1 -> Algorithm 2.
+    /// Convenience: RING overlay -> Algorithm 1 -> Algorithm 2. The
+    /// overlay is built over the dense connectivity slab
+    /// ([`crate::graph::ring_overlay_dense`]); Algorithm 1 itself only
+    /// touches the O(N) overlay edges. Byte-identical to
+    /// [`Self::from_network_reference`].
     pub fn from_network(
+        net: &crate::net::NetworkSpec,
+        profile: &crate::net::DatasetProfile,
+        t: u32,
+    ) -> Self {
+        let overlay = crate::graph::ring_overlay_dense(&net.connectivity_dense(profile));
+        let mg = Multigraph::construct(&overlay, net, profile, t);
+        Self::new(overlay, mg)
+    }
+
+    /// Pre-overhaul construction over the sparse complete graph, kept
+    /// as the dense path's byte-identity oracle.
+    pub fn from_network_reference(
         net: &crate::net::NetworkSpec,
         profile: &crate::net::DatasetProfile,
         t: u32,
@@ -241,6 +257,25 @@ mod tests {
                         assert_eq!(ty, EdgeType::Weak, "state {s}, node {i}");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_build_matches_reference_on_zoo() {
+        let p = DatasetProfile::femnist();
+        for net in [zoo::gaia(), zoo::exodus()] {
+            let dense = MultigraphTopology::from_network(&net, &p, 5);
+            let reference = MultigraphTopology::from_network_reference(&net, &p, 5);
+            assert_eq!(dense.s_max(), reference.s_max(), "{}", net.name);
+            assert_eq!(dense.multigraph().edges, reference.multigraph().edges, "{}", net.name);
+            for s in 0..dense.s_max().min(8) {
+                assert_eq!(
+                    dense.plan_for_state(s).edges,
+                    reference.plan_for_state(s).edges,
+                    "{} state {s}",
+                    net.name
+                );
             }
         }
     }

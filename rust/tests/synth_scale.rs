@@ -1,0 +1,201 @@
+//! Integration: synthetic large-N networks + the dense-graph
+//! construction layer.
+//!
+//! Contracts pinned here (extending the `sweep_determinism.rs`
+//! pattern to the synthetic axis):
+//!
+//! * generation determinism — the same `synth-…` name yields a
+//!   byte-identical `NetworkSpec`; different seeds differ;
+//! * connectivity weights are symmetric and positive under the
+//!   Pareto-spread capacities;
+//! * the compiled simulation engine matches the naive `DelayTracker`
+//!   oracle bitwise on a synthetic N=256 network (the same oracle
+//!   cross-check the paper zoo gets);
+//! * dense-built designs equal their pre-overhaul reference builders
+//!   on a synthetic network, not just on the zoo;
+//! * the sweep engine resolves synthetic names, canonicalizes their
+//!   case, and stays thread-count invariant over a synthetic axis.
+
+use mgfl::config::TopologyKind;
+use mgfl::net::synth::{self, SynthVariant};
+use mgfl::net::DatasetProfile;
+use mgfl::simtime::{simulate_summary, simulate_summary_naive};
+use mgfl::sweep::{self, RunOptions, SweepSpec};
+use mgfl::topo::delta_mbst::{DeltaMbstTopology, DEFAULT_DELTA};
+use mgfl::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
+use mgfl::topo::mst::MstTopology;
+use mgfl::topo::ring::RingTopology;
+use mgfl::topo::star::StarTopology;
+use mgfl::topo::{MultigraphTopology, TopologyDesign};
+
+#[test]
+fn same_seed_is_byte_identical_and_seeds_differ() {
+    for variant in SynthVariant::all() {
+        let name = synth::name_of(variant, 96, 7);
+        let a = synth::by_name(&name).unwrap();
+        let b = synth::by_name(&name).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.n(), b.n());
+        for (x, y) in a.silos.iter().zip(&b.silos) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.lat.to_bits(), y.lat.to_bits());
+            assert_eq!(x.lon.to_bits(), y.lon.to_bits());
+            assert_eq!(x.up_gbps.to_bits(), y.up_gbps.to_bits());
+            assert_eq!(x.dn_gbps.to_bits(), y.dn_gbps.to_bits());
+        }
+
+        let c = synth::by_name(&synth::name_of(variant, 96, 8)).unwrap();
+        assert_ne!(c.name, a.name, "seed is part of the canonical name");
+        let moved = a
+            .silos
+            .iter()
+            .zip(&c.silos)
+            .filter(|(x, y)| x.lat.to_bits() != y.lat.to_bits())
+            .count();
+        assert!(moved > 90, "{variant:?}: different seeds must relocate silos ({moved}/96)");
+    }
+}
+
+#[test]
+fn connectivity_weights_symmetric_and_positive() {
+    let prof = DatasetProfile::femnist();
+    for variant in SynthVariant::all() {
+        let net = synth::generate(variant, 64, 3);
+        let dense = net.connectivity_dense(&prof);
+        for u in 0..net.n() {
+            for v in 0..net.n() {
+                if u == v {
+                    continue;
+                }
+                let w = net.conn_weight(&prof, u, v);
+                assert!(w > 0.0 && w.is_finite(), "{variant:?} ({u},{v}): weight {w}");
+                assert_eq!(
+                    w.to_bits(),
+                    net.conn_weight(&prof, v, u).to_bits(),
+                    "{variant:?} ({u},{v}): weight must be symmetric"
+                );
+                assert_eq!(dense.weight(u, v).to_bits(), w.to_bits());
+            }
+        }
+    }
+}
+
+/// The compiled-vs-naive oracle cross-check on a synthetic N=256
+/// network — the bit-identity contract must hold beyond the paper zoo.
+#[test]
+fn compiled_engine_matches_naive_oracle_on_synth_n256() {
+    let net = synth::by_name("synth-geo-n256-s7").unwrap();
+    let prof = DatasetProfile::femnist();
+    let rounds = 120;
+    let build = |kind: TopologyKind| -> Box<dyn TopologyDesign> {
+        match kind {
+            TopologyKind::Ring => Box::new(RingTopology::new(&net, &prof)),
+            TopologyKind::Matcha => {
+                Box::new(MatchaTopology::new(&net, &prof, DEFAULT_BUDGET, 23))
+            }
+            _ => Box::new(MultigraphTopology::from_network(&net, &prof, 5)),
+        }
+    };
+    for kind in [TopologyKind::Ring, TopologyKind::Matcha, TopologyKind::Multigraph] {
+        let mut a = build(kind);
+        let mut b = build(kind);
+        let fast = simulate_summary(a.as_mut(), &net, &prof, rounds);
+        let naive = simulate_summary_naive(b.as_mut(), &net, &prof, rounds);
+        let ctx = format!("{}/{}", fast.topology, net.name);
+        assert_eq!(fast.total_ms.to_bits(), naive.total_ms.to_bits(), "{ctx}");
+        assert_eq!(fast.mean_cycle_ms.to_bits(), naive.mean_cycle_ms.to_bits(), "{ctx}");
+        assert_eq!(fast.rounds_with_isolated, naive.rounds_with_isolated, "{ctx}");
+        assert_eq!(fast.max_isolated, naive.max_isolated, "{ctx}");
+    }
+}
+
+/// Dense builders vs pre-overhaul reference on a synthetic network:
+/// the byte-identity contract is substrate-wide, not zoo-specific.
+#[test]
+fn dense_builders_match_reference_on_synth() {
+    let net = synth::by_name("synth-sphere-n64-s1").unwrap();
+    let prof = DatasetProfile::femnist();
+    let pairs: Vec<(Box<dyn TopologyDesign>, Box<dyn TopologyDesign>)> = vec![
+        (
+            Box::new(StarTopology::new(&net, &prof)),
+            Box::new(StarTopology::new_reference(&net, &prof)),
+        ),
+        (
+            Box::new(MatchaTopology::new(&net, &prof, DEFAULT_BUDGET, 17)),
+            Box::new(MatchaTopology::from_core(
+                std::sync::Arc::new(MatchaCore::build_reference(&net, &prof)),
+                DEFAULT_BUDGET,
+                17,
+            )),
+        ),
+        (
+            Box::new(MstTopology::new(&net, &prof)),
+            Box::new(MstTopology::new_reference(&net, &prof)),
+        ),
+        (
+            Box::new(DeltaMbstTopology::new(&net, &prof, DEFAULT_DELTA)),
+            Box::new(DeltaMbstTopology::new_reference(&net, &prof, DEFAULT_DELTA)),
+        ),
+        (
+            Box::new(RingTopology::new(&net, &prof)),
+            Box::new(RingTopology::new_reference(&net, &prof)),
+        ),
+        (
+            Box::new(MultigraphTopology::from_network(&net, &prof, 5)),
+            Box::new(MultigraphTopology::from_network_reference(&net, &prof, 5)),
+        ),
+    ];
+    for (mut dense, mut reference) in pairs {
+        let ctx = dense.name().to_string();
+        let (a, b) = (dense.overlay().edges(), reference.overlay().edges());
+        assert_eq!(a.len(), b.len(), "{ctx}: overlay size");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!((x.u, x.v, x.w.to_bits()), (y.u, y.v, y.w.to_bits()), "{ctx}");
+        }
+        for k in 0..4 {
+            assert_eq!(dense.plan(k).edges, reference.plan(k).edges, "{ctx}: round {k}");
+        }
+    }
+}
+
+#[test]
+fn sweep_engine_resolves_and_canonicalizes_synthetic_networks() {
+    let mut spec = SweepSpec {
+        name: "synth_axis".into(),
+        topologies: vec![TopologyKind::Ring, TopologyKind::Multigraph],
+        networks: vec!["SYNTH-GEO-N64-S3".into(), "gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![5],
+        seeds: vec![17],
+        rounds: 40,
+    };
+    spec.canonicalize().unwrap();
+    assert_eq!(spec.networks, vec!["synth-geo-n64-s3", "gaia"]);
+    spec.validate().unwrap();
+
+    let serial = sweep::run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
+    let parallel = sweep::run(&spec, &RunOptions { threads: 4, ..Default::default() }).unwrap();
+    assert_eq!(
+        serial.report.to_json().to_string(),
+        parallel.report.to_json().to_string(),
+        "synthetic-axis sweeps must stay thread-count invariant"
+    );
+    assert_eq!(serial.report.cells.len(), 4);
+    assert!(serial.build_ms >= 0.0 && serial.sim_ms > 0.0, "timing split populated");
+
+    // Synthetic multigraph beats synthetic ring (the paper's headline
+    // transfers to the generated networks).
+    let ours = serial.report.cell("multigraph", "synth-geo-n64-s3", "femnist").unwrap();
+    let ring = serial.report.cell("ring", "synth-geo-n64-s3", "femnist").unwrap();
+    assert!(
+        ours.mean_cycle_ms < ring.mean_cycle_ms,
+        "multigraph {} vs ring {}",
+        ours.mean_cycle_ms,
+        ring.mean_cycle_ms
+    );
+
+    // Unknown synthetic spellings fail validation, not simulation.
+    let mut bad = spec.clone();
+    bad.networks = vec!["synth-torus-n64-s3".into()];
+    assert!(bad.validate().is_err());
+}
