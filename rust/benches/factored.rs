@@ -1,0 +1,193 @@
+//! Bench: the period-factorized engine vs the per-edge streaming
+//! engine on the cells the factorization exists for — huge-s_max
+//! multigraphs on large synthetic networks.
+//!
+//! Three jobs in one binary:
+//!
+//! 1. **Zoo identity gate** — on every paper network at multigraph
+//!    t ∈ {10, 20, 30}, the factored `SimSummary` must be bit-identical
+//!    to the naive `DelayTracker` oracle. Aborts (failing CI) on any
+//!    disagreement.
+//! 2. **Synthetic identity gate** — on a synthetic network at the
+//!    smallest requested size (t = 30), factored, streaming, and naive
+//!    must agree bitwise: the large-N axis gets the same contract.
+//! 3. **Per-cell simulation throughput** — for each N in `--n`
+//!    (default 64,256,1024): wall-clock of one simulation cell
+//!    (topology pre-built; the cell is compile/resolve + round loop) on
+//!    the streaming engine vs the factored engine at `--rounds`
+//!    (default 6400). The ≥ 10× streaming-cells/sec bar is asserted
+//!    when N = 1024 is measured at ≥ 6400 rounds — i.e. on full runs;
+//!    the CI smoke (`-- --n 128 --rounds 400`) runs the gates only.
+//!
+//! Run: `cargo bench --bench factored` (refreshes
+//! `BENCH_factored.json`); CI smoke: `-- --n 128 --rounds 400`.
+
+use std::collections::BTreeMap;
+
+use mgfl::net::synth::{self, SynthVariant};
+use mgfl::net::{zoo, DatasetProfile, NetworkSpec};
+use mgfl::simtime::{
+    run_factored, simulate_summary_naive, simulate_summary_streaming_with_stats, FactoredSlab,
+    FactoredTopology, SimSummary,
+};
+use mgfl::topo::MultigraphTopology;
+use mgfl::util::args::Args;
+use mgfl::util::bench;
+use mgfl::util::json::Json;
+
+const BAR_N: usize = 1024;
+const BAR: f64 = 10.0;
+const BAR_ROUNDS: usize = 6400;
+const T_VALUES: [u32; 3] = [10, 20, 30];
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) {
+    assert_eq!(
+        a.total_ms.to_bits(),
+        b.total_ms.to_bits(),
+        "{ctx}: total_ms diverged ({} vs {})",
+        a.total_ms,
+        b.total_ms
+    );
+    assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}");
+    assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}");
+    assert_eq!(a.max_isolated, b.max_isolated, "{ctx}");
+}
+
+/// naive oracle vs factored vs forced-streaming on one multigraph cell.
+fn gate_cell(net: &NetworkSpec, prof: &DatasetProfile, t: u32, rounds: usize) {
+    let ctx = format!("{}/t{t}/x{rounds}", net.name);
+    let mut naive_topo = MultigraphTopology::from_network(net, prof, t);
+    let naive = simulate_summary_naive(&mut naive_topo, net, prof, rounds);
+
+    let topo = MultigraphTopology::from_network(net, prof, t);
+    let ft = FactoredTopology::compile(&topo).expect("multigraph factorizes");
+    let mut slab = FactoredSlab::new(&ft, net, prof);
+    let (factored, _) = run_factored(&ft, &mut slab, net, prof, rounds);
+    assert_bitwise(&naive, &factored, &format!("factored {ctx}"));
+
+    let mut stream_topo = MultigraphTopology::from_network(net, prof, t);
+    let (streamed, _) = simulate_summary_streaming_with_stats(&mut stream_topo, net, prof, rounds);
+    assert_bitwise(&naive, &streamed, &format!("streaming {ctx}"));
+}
+
+fn main() {
+    let args = Args::from_env();
+    let sizes: Vec<usize> = args
+        .get_parsed_list::<usize>("n")
+        .expect("--n takes comma-separated silo counts")
+        .unwrap_or_else(|| vec![64, 256, 1024]);
+    assert!(!sizes.is_empty(), "--n must list at least one size");
+    let rounds: usize = args.get("rounds", BAR_ROUNDS).expect("--rounds takes an integer");
+    let variant_s = args.get_str("variant", "geo");
+    let variant = SynthVariant::parse(&variant_s).expect("--variant geo|sphere");
+    let out = args.get_str("out", "BENCH_factored.json");
+    let prof = DatasetProfile::femnist();
+    let gate_rounds = rounds.min(400);
+
+    // --- 1. zoo identity gate ---------------------------------------
+    bench::header(&format!(
+        "factored identity gate — factored vs streaming vs naive, paper zoo, {gate_rounds} rounds"
+    ));
+    let mut zoo_cells = 0usize;
+    for net in zoo::all_networks() {
+        for t in T_VALUES {
+            gate_cell(&net, &prof, t, gate_rounds);
+            zoo_cells += 1;
+        }
+    }
+    println!("{zoo_cells} zoo cells bit-identical across all three engines");
+
+    // --- 2. synthetic identity gate ---------------------------------
+    let oracle_n = *sizes.iter().min().unwrap();
+    let oracle_name = synth::name_of(variant, oracle_n, 7);
+    bench::header(&format!("synthetic identity gate — {oracle_name}, t = 30"));
+    let oracle_net = synth::by_name(&oracle_name).expect("synthetic size in range");
+    gate_cell(&oracle_net, &prof, 30, gate_rounds);
+    println!("synthetic cell bit-identical across all three engines ({gate_rounds} rounds)");
+
+    // --- 3. per-cell simulation throughput --------------------------
+    // The topology is built once per size (construction is identical
+    // either way); a "cell" is everything a sweep worker pays per
+    // simulation: schedule compile/resolve plus the round loop.
+    // (n, groups, stream_ms, factored_ms)
+    let mut per_n: Vec<(usize, usize, f64, f64)> = Vec::new();
+    let mut bar_speedup: Option<f64> = None;
+    for &n in &sizes {
+        bench::header(&format!(
+            "per-cell simulation throughput — multigraph t=30, synth-{}-n{n}-s7, {rounds} rounds",
+            variant.as_str()
+        ));
+        let net = synth::by_name(&synth::name_of(variant, n, 7)).expect("size in range");
+        let mut topo = MultigraphTopology::from_network(&net, &prof, 30);
+        let groups = FactoredTopology::compile(&topo).expect("factorizes").num_groups();
+        let (warmup, iters) = if n >= 2048 { (0, 2) } else { (1, 3) };
+        let stream_m = bench::bench(&format!("streaming cell  N={n}"), warmup, iters, || {
+            let (s, _) = simulate_summary_streaming_with_stats(&mut topo, &net, &prof, rounds);
+            std::hint::black_box(s.total_ms);
+        });
+        let factored_m = bench::bench(&format!("factored cell   N={n}"), warmup, iters, || {
+            let ft = FactoredTopology::compile(&topo).expect("factorizes");
+            let mut slab = FactoredSlab::new(&ft, &net, &prof);
+            let (s, _) = run_factored(&ft, &mut slab, &net, &prof, rounds);
+            std::hint::black_box(s.total_ms);
+        });
+        let speedup = stream_m.mean_ms / factored_m.mean_ms.max(1e-9);
+        println!("speedup {speedup:.1}x ({groups} multiplicity groups vs {n} edges per round)");
+        if n == BAR_N && rounds >= BAR_ROUNDS {
+            bar_speedup = Some(speedup);
+        }
+        per_n.push((n, groups, stream_m.mean_ms, factored_m.mean_ms));
+    }
+    if let Some(speedup) = bar_speedup {
+        assert!(
+            speedup >= BAR,
+            "acceptance: factored cells/sec must be >= {BAR}x streaming at N={BAR_N}, t=30, \
+             {BAR_ROUNDS} rounds (got {speedup:.2}x)"
+        );
+        println!("\n>= {BAR}x streaming-cells/sec bar at N={BAR_N}: PASS ({speedup:.2}x)");
+    } else {
+        println!(
+            "\n(>= {BAR}x bar asserts when N={BAR_N} is measured at >= {BAR_ROUNDS} rounds; \
+             this run: --n {sizes:?} --rounds {rounds})"
+        );
+    }
+
+    // --- 4. baseline artifact ---------------------------------------
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("factored".into()));
+    obj.insert(
+        "provenance".to_string(),
+        Json::Str(
+            "measured by `cargo bench --bench factored` (zoo + synthetic identity gates and \
+             the >= 10x N=1024 streaming-cells/sec bar passed first)"
+                .into(),
+        ),
+    );
+    obj.insert("variant".to_string(), Json::Str(variant.as_str().into()));
+    obj.insert("rounds".to_string(), Json::Num(rounds as f64));
+    obj.insert("zoo_cells_checked".to_string(), Json::Num(zoo_cells as f64));
+    obj.insert("identity_gates_passed".to_string(), Json::Bool(true));
+    obj.insert(
+        "bar_speedup_n1024".to_string(),
+        bar_speedup.map_or(Json::Null, Json::Num),
+    );
+    let cells: Vec<Json> = per_n
+        .iter()
+        .map(|&(n, groups, stream_ms, factored_ms)| {
+            let mut m = BTreeMap::new();
+            m.insert("n".to_string(), Json::Num(n as f64));
+            m.insert("multiplicity_groups".to_string(), Json::Num(groups as f64));
+            m.insert("streaming_ms_per_cell".to_string(), Json::Num(stream_ms));
+            m.insert("factored_ms_per_cell".to_string(), Json::Num(factored_ms));
+            m.insert(
+                "speedup".to_string(),
+                Json::Num(stream_ms / factored_ms.max(1e-9)),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    obj.insert("sizes".to_string(), Json::Arr(cells));
+    let json = Json::Obj(obj).to_string();
+    std::fs::write(&out, format!("{json}\n")).expect("writing bench baseline");
+    println!("\nbaseline -> {out}");
+}

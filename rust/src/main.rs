@@ -11,7 +11,7 @@ use anyhow::Result;
 use mgfl::config::{ExperimentConfig, TopologyKind, TrainConfig};
 use mgfl::metrics::render_table;
 use mgfl::net::{zoo, DatasetProfile};
-use mgfl::simtime::{simulate, simulate_summary};
+use mgfl::simtime::{simulate, simulate_summary, simulate_summary_compiled_with_stats};
 use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
 use mgfl::topo::{MultigraphTopology, TopologyDesign};
 use mgfl::util::args::Args;
@@ -261,7 +261,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s)",
+        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s; engines: {})",
         outcome.report.cells.len(),
         outcome.unique_cells,
         outcome.dedup_ratio(),
@@ -270,6 +270,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         outcome.cells_per_sec(),
         outcome.build_ms / 1e3,
         outcome.sim_ms / 1e3,
+        outcome.engines.describe(),
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
     Ok(())
@@ -310,8 +311,17 @@ fn scale_cmd(args: &Args) -> Result<()> {
             let build_ms = t0.elapsed().as_secs_f64() * 1e3;
             std::hint::black_box(topo.overlay().edges().len());
             row.push(if rounds > 0 {
-                let s = simulate_summary(topo.as_mut(), &net, &prof, rounds);
-                format!("{build_ms:.1} ({:.1})", s.mean_cycle_ms)
+                // Build and simulate wall-clocks reported separately
+                // (the sweep path's CellTiming split), tagged with the
+                // engine the dispatcher picked — large-N multigraph
+                // cells should show `f` (factored), and a regression
+                // to `s` (streaming) is visible right in the table.
+                let t1 = std::time::Instant::now();
+                let (s, stats) =
+                    simulate_summary_compiled_with_stats(topo.as_mut(), &net, &prof, rounds);
+                let sim_ms = t1.elapsed().as_secs_f64() * 1e3;
+                let engine = &stats.kind.as_str()[..1];
+                format!("{build_ms:.1}+{sim_ms:.1}{engine} ({:.1})", s.mean_cycle_ms)
             } else {
                 format!("{build_ms:.1}")
             });
@@ -323,7 +333,10 @@ fn scale_cmd(args: &Args) -> Result<()> {
     headers.extend(kinds.iter().map(|k| k.as_str()));
     print!("{}", render_table(&headers, &rows));
     if rounds > 0 {
-        println!("(cell format: construction ms (mean cycle ms over {rounds} rounds))");
+        println!(
+            "(cell format: build ms+sim ms over {rounds} rounds, engine \
+             p=periodic/f=factored/s=streaming (mean cycle ms))"
+        );
     }
     Ok(())
 }

@@ -40,11 +40,16 @@
 //! boundaries; "zero allocation" describes the steady per-round edge
 //! walk, not the bounded detector bookkeeping.
 //!
-//! Designs that are stochastic (MATCHA with a budget < 1) or whose
-//! period is too large to materialize (multigraph at t = 30 has
-//! s_max ≈ 2.3e9) run on the **streaming engine**: the same arena and
-//! scratch buffers, fed by [`TopologyDesign::plan_into`] each round —
-//! still zero hashing and zero steady-state allocation, just no replay.
+//! Designs whose period is too large to materialize but whose schedule
+//! factorizes into per-multiplicity groups (the parsed multigraph at
+//! t = 30 has s_max ≈ 2.3e9) run on the **factored engine**
+//! ([`super::factored`]): O(distinct multiplicities) per round, no
+//! states materialized. Everything else — stochastic MATCHA,
+//! structureless third-party designs — runs on the **streaming
+//! engine**: the same arena and scratch buffers, fed by
+//! [`TopologyDesign::plan_into`] each round (with a rayon
+//! chunk-parallel τ reduce on large plans) — still zero hashing and
+//! zero steady-state allocation, just no replay.
 //!
 //! Bit-identity with the reference path is not best-effort: both paths
 //! seed d_0 through [`pair_d0_ms`], apply the same Eq. 4 update in the
@@ -71,21 +76,51 @@ pub const MAX_COMPILED_STATES: u64 = 1 << 16;
 /// designs — it bounds detector memory, never correctness.
 const MAX_SNAPSHOTS: usize = 64;
 
-/// How a simulation was executed (introspection for tests/benches —
-/// never part of the artifact).
+/// Which engine executed a simulation. The dispatch order in
+/// [`simulate_summary_scratch`] is: periodic (materializable period)
+/// → factored (schedule exposes a multiplicity factorization) →
+/// streaming (everything else).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Per-state tables materialized; exact cycle detection + replay.
+    Periodic,
+    /// Period-factorized group engine ([`super::factored`]):
+    /// O(distinct multiplicities) per round.
+    Factored,
+    /// Arena-backed per-edge streaming (stochastic or structureless
+    /// schedules).
+    Streaming,
+}
+
+impl EngineKind {
+    /// Stable lowercase label (report JSON/CSV, summary lines).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::Periodic => "periodic",
+            EngineKind::Factored => "factored",
+            EngineKind::Streaming => "streaming",
+        }
+    }
+}
+
+/// How a simulation was executed. Deterministic for a given cell spec
+/// (the dispatch consumes no randomness and no wall-clock), so it may
+/// ride along in sweep reports without breaking artifact determinism.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineStats {
-    /// Per-state tables were materialized (periodic engine). `false`
-    /// means the streaming engine ran.
-    pub compiled: bool,
-    /// The materialized period, if periodic.
+    /// Which engine ran.
+    pub kind: EngineKind,
+    /// The materialized period, if the periodic engine ran.
     pub period: Option<usize>,
     /// Round at which the cycle detector fired, if it did.
     pub cycle_detected_at: Option<usize>,
     /// Length of the detected cycle.
     pub cycle_len: Option<usize>,
-    /// Rounds that did real per-edge work (the rest were replayed).
+    /// Rounds that did real per-edge (or, factored, per-group) work —
+    /// the rest were replayed from a detected cycle.
     pub simulated_rounds: usize,
+    /// Distinct multiplicity groups (factored engine only).
+    pub groups: Option<usize>,
 }
 
 /// One stable edge id's identity: the normalized pair plus the plan
@@ -200,7 +235,7 @@ impl CompiledTopology {
 /// The per-cell mutable layer over a shared [`CompiledTopology`]: the
 /// d_0 slab resolved against one (network, profile) plus the Eq. 4
 /// backlog slab the round loop mutates.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct DelaySlab {
     d0: Vec<f64>,
     backlog: Vec<f64>,
@@ -214,6 +249,14 @@ impl DelaySlab {
     /// that network's schedule, only the delay numbers are resolved
     /// here.
     pub fn new(ct: &CompiledTopology, net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        let mut slab = DelaySlab::default();
+        slab.resolve(ct, net, profile);
+        slab
+    }
+
+    /// Like [`Self::new`] but reusing this slab's allocations — the
+    /// scratch-pool entry point for cells of the same shape.
+    pub fn resolve(&mut self, ct: &CompiledTopology, net: &NetworkSpec, profile: &DatasetProfile) {
         assert_eq!(
             ct.n,
             net.n(),
@@ -223,23 +266,20 @@ impl DelaySlab {
             net.name,
             net.n()
         );
-        let d0: Vec<f64> = ct
-            .edges
-            .iter()
-            .map(|e| {
-                pair_d0_ms(
-                    net,
-                    profile,
-                    e.u as usize,
-                    e.v as usize,
-                    e.deg_u as usize,
-                    e.deg_v as usize,
-                )
-            })
-            .collect();
+        self.d0.clear();
+        self.d0.extend(ct.edges.iter().map(|e| {
+            pair_d0_ms(
+                net,
+                profile,
+                e.u as usize,
+                e.v as usize,
+                e.deg_u as usize,
+                e.deg_v as usize,
+            )
+        }));
         // The backlog slab is materialized by `reset()` at run entry
-        // (run_compiled always resets), so a fresh slab skips one copy.
-        DelaySlab { d0, backlog: Vec::new() }
+        // (run_compiled always resets), so resolving skips one copy.
+        self.backlog.clear();
     }
 
     /// (Re)seed the backlog to the fresh-transfer state — Alg. 1 seeds
@@ -261,12 +301,11 @@ impl DelaySlab {
 /// critical inner loop exists exactly once. Returns τ_k.
 #[inline]
 fn step_edges(d0: &[f64], backlog: &mut [f64], edges: &[(u32, EdgeType)], floor: f64) -> f64 {
-    let mut tau = floor;
-    for &(id, ty) in edges {
-        if ty == EdgeType::Strong {
-            tau = tau.max(floor.max(backlog[id as usize]));
-        }
-    }
+    let tau = reduce_tau(backlog, edges, floor);
+    // The Eq. 4 advance stays serial: exotic plans may list one pair
+    // twice (the id appears twice), so a parallel in-place update would
+    // race. The read-only τ reduce above is where large-N cells spend
+    // their time anyway.
     for &(id, ty) in edges {
         match ty {
             EdgeType::Strong => backlog[id as usize] = d0[id as usize],
@@ -277,6 +316,48 @@ fn step_edges(d0: &[f64], backlog: &mut [f64], edges: &[(u32, EdgeType)], floor:
         }
     }
     tau
+}
+
+/// Sequential Eq. 5 inner max — the bit-identity-critical fold.
+#[inline]
+fn reduce_tau_serial(backlog: &[f64], edges: &[(u32, EdgeType)], floor: f64) -> f64 {
+    let mut tau = floor;
+    for &(id, ty) in edges {
+        if ty == EdgeType::Strong {
+            tau = tau.max(floor.max(backlog[id as usize]));
+        }
+    }
+    tau
+}
+
+/// Edge count below which the parallel τ reduce is not worth the
+/// fork/join overhead (rayon builds only).
+#[cfg(feature = "rayon")]
+const PAR_REDUCE_MIN_EDGES: usize = 1 << 13;
+
+#[cfg(not(feature = "rayon"))]
+#[inline]
+fn reduce_tau(backlog: &[f64], edges: &[(u32, EdgeType)], floor: f64) -> f64 {
+    reduce_tau_serial(backlog, edges, floor)
+}
+
+/// Chunk-parallel τ reduce for large streaming cells (N = 4096
+/// synthetic networks plan thousands of edges per round): each chunk
+/// folds serially, chunk maxima combine with `f64::max`. Exact and
+/// order-independent on the positive finite delays the model produces,
+/// so the result is bit-identical to the serial fold regardless of
+/// chunking or scheduling.
+#[cfg(feature = "rayon")]
+#[inline]
+fn reduce_tau(backlog: &[f64], edges: &[(u32, EdgeType)], floor: f64) -> f64 {
+    use rayon::prelude::*;
+    if edges.len() < PAR_REDUCE_MIN_EDGES {
+        return reduce_tau_serial(backlog, edges, floor);
+    }
+    edges
+        .par_chunks(PAR_REDUCE_MIN_EDGES / 2)
+        .map(|chunk| reduce_tau_serial(backlog, chunk, floor))
+        .reduce(|| floor, f64::max)
 }
 
 /// Periodic engine: per-round step over a (possibly `Arc`-shared)
@@ -366,11 +447,12 @@ pub fn run_compiled(
         max_isolated,
     };
     let stats = EngineStats {
-        compiled: true,
+        kind: EngineKind::Periodic,
         period: Some(p),
         cycle_detected_at: cycle.map(|_| simulated_rounds),
         cycle_len: cycle.map(|(_, len)| len),
         simulated_rounds,
+        groups: None,
     };
     (summary, stats)
 }
@@ -387,9 +469,22 @@ struct EdgeArena {
     backlog: Vec<f64>,
 }
 
+impl Default for EdgeArena {
+    fn default() -> Self {
+        EdgeArena { n: 0, pair_id: Vec::new(), d0: Vec::new(), backlog: Vec::new() }
+    }
+}
+
 impl EdgeArena {
-    fn new(n: usize) -> Self {
-        EdgeArena { n, pair_id: vec![u32::MAX; n * n], d0: Vec::new(), backlog: Vec::new() }
+    /// Clear for a fresh cell over `n` silos, reusing allocations
+    /// (cells of the same shape stop paying the O(N²) pair-table
+    /// allocation; the `u32::MAX` refill is a memset).
+    fn reset(&mut self, n: usize) {
+        self.n = n;
+        self.pair_id.clear();
+        self.pair_id.resize(n * n, u32::MAX);
+        self.d0.clear();
+        self.backlog.clear();
     }
 
     #[inline]
@@ -410,37 +505,49 @@ impl EdgeArena {
     }
 }
 
+/// Reusable scratch for the streaming engine: the edge arena plus every
+/// per-round buffer. One per worker thread (the sweep scratch pool)
+/// stops large-N cells from reallocating the O(N²) pair table and the
+/// per-round vecs cell after cell.
+#[derive(Default)]
+pub struct StreamScratch {
+    arena: EdgeArena,
+    plan: RoundPlan,
+    ids: Vec<(u32, EdgeType)>,
+    degrees: Vec<usize>,
+    has_edge: Vec<bool>,
+    has_strong: Vec<bool>,
+}
+
 /// Streaming engine: arena-backed stepping for stochastic or
-/// unmaterializably-periodic designs. Zero hashing, zero steady-state
-/// allocation — plans, ids, degrees, and isolation scratch are reused.
+/// structureless designs. Zero hashing, zero steady-state allocation —
+/// plans, ids, degrees, and isolation scratch live in `scratch` and are
+/// reused both across rounds and (via the sweep pool) across cells.
 fn run_streaming(
     topo: &mut dyn TopologyDesign,
     net: &NetworkSpec,
     profile: &DatasetProfile,
     rounds: usize,
+    scratch: &mut StreamScratch,
 ) -> (SimSummary, EngineStats) {
     let n = net.n();
     let floor = profile.u as f64 * profile.t_c_ms;
-    let mut arena = EdgeArena::new(n);
-    let mut plan = RoundPlan::empty(n);
-    let mut ids: Vec<(u32, EdgeType)> = Vec::new();
-    let mut degrees: Vec<usize> = Vec::new();
-    let mut has_edge = vec![false; n];
-    let mut has_strong = vec![false; n];
+    scratch.arena.reset(n);
+    let StreamScratch { arena, plan, ids, degrees, has_edge, has_strong } = scratch;
 
     let mut total_ms = 0.0;
     let mut rounds_with_isolated = 0usize;
     let mut max_isolated = 0usize;
 
     for k in 0..rounds {
-        topo.plan_into(k, &mut plan);
+        topo.plan_into(k, plan);
         ids.clear();
         let mut degrees_ready = false;
         for &(u, v, ty) in &plan.edges {
             let mut id = arena.id(u, v);
             if id == u32::MAX {
                 if !degrees_ready {
-                    plan.degrees_into(&mut degrees);
+                    plan.degrees_into(degrees);
                     degrees_ready = true;
                 }
                 id = arena.insert(u, v, pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]));
@@ -448,8 +555,8 @@ fn run_streaming(
             ids.push((id, ty));
         }
 
-        let tau = step_edges(&arena.d0, &mut arena.backlog, &ids, floor);
-        let isolated = plan.isolated_count_into(&mut has_edge, &mut has_strong);
+        let tau = step_edges(&arena.d0, &mut arena.backlog, ids, floor);
+        let isolated = plan.isolated_count_into(has_edge, has_strong);
 
         total_ms += tau;
         if isolated > 0 {
@@ -469,13 +576,29 @@ fn run_streaming(
         max_isolated,
     };
     let stats = EngineStats {
-        compiled: false,
+        kind: EngineKind::Streaming,
         period: None,
         cycle_detected_at: None,
         cycle_len: None,
         simulated_rounds: rounds,
+        groups: None,
     };
     (summary, stats)
+}
+
+/// Per-thread bundle of every engine's reusable mutable layer. The
+/// sweep cache keeps one per worker thread (`sweep::cache`'s
+/// thread-local pool); standalone entry points create a fresh one per
+/// call. Reuse never changes results — each engine fully re-resolves /
+/// resets its layer per cell, pinned by the slab-reuse tests.
+#[derive(Default)]
+pub struct SimScratch {
+    /// Periodic engine: d_0 + backlog slab.
+    pub slab: DelaySlab,
+    /// Factored engine: group envelopes + representative backlog.
+    pub factored: super::factored::FactoredSlab,
+    /// Streaming engine: edge arena + per-round buffers.
+    pub stream: StreamScratch,
 }
 
 /// Compiled-engine equivalent of [`super::simulate_summary_naive`]:
@@ -497,14 +620,71 @@ pub fn simulate_summary_compiled_with_stats(
     profile: &DatasetProfile,
     rounds: usize,
 ) -> (SimSummary, EngineStats) {
+    let mut scratch = SimScratch::default();
+    simulate_summary_scratch(topo, net, profile, rounds, &mut scratch)
+}
+
+/// The engine dispatcher, over caller-owned scratch:
+///
+/// 1. **periodic** — the schedule's period is materializable within
+///    the round budget ([`CompiledTopology::compile`]): per-state
+///    tables + exact cycle replay;
+/// 2. **factored** — the design exposes a
+///    [`crate::topo::ScheduleFactorization`]
+///    ([`super::factored::FactoredTopology::compile`]): O(distinct
+///    multiplicities) per round, no states materialized;
+/// 3. **streaming** — everything else (stochastic MATCHA, third-party
+///    designs): O(E) per round over the edge arena, with the rayon
+///    chunk-parallel τ reduce on large plans.
+///
+/// All three are bit-identical to [`super::simulate_summary_naive`];
+/// the dispatch is a pure function of the design's structure and the
+/// round budget, so which engine runs is deterministic per cell.
+pub fn simulate_summary_scratch(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+    scratch: &mut SimScratch,
+) -> (SimSummary, EngineStats) {
     assert!(rounds > 0);
-    match CompiledTopology::compile(topo, rounds) {
-        Some(ct) => {
-            let mut slab = DelaySlab::new(&ct, net, profile);
-            run_compiled(&ct, &mut slab, net, profile, rounds)
-        }
-        None => run_streaming(topo, net, profile, rounds),
+    if let Some(ct) = CompiledTopology::compile(topo, rounds) {
+        scratch.slab.resolve(&ct, net, profile);
+        return run_compiled(&ct, &mut scratch.slab, net, profile, rounds);
     }
+    if let Some(ft) = super::factored::FactoredTopology::compile(topo) {
+        scratch.factored.resolve(&ft, net, profile);
+        return super::factored::run_factored(&ft, &mut scratch.factored, net, profile, rounds);
+    }
+    run_streaming(topo, net, profile, rounds, &mut scratch.stream)
+}
+
+/// Force the streaming engine, bypassing the periodic/factored fast
+/// paths — the per-edge oracle benches and tests measure factored
+/// speedups against, and the only engine available to designs without
+/// structure. Bit-identical to every other path.
+pub fn simulate_summary_streaming_with_stats(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    let mut scratch = SimScratch::default();
+    simulate_summary_streaming_scratch(topo, net, profile, rounds, &mut scratch)
+}
+
+/// [`simulate_summary_streaming_with_stats`] over caller-owned scratch —
+/// the sweep cache's streaming-verdict arm, where re-running the
+/// periodic/factored compile attempts would waste the cached verdict.
+pub fn simulate_summary_streaming_scratch(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+    scratch: &mut SimScratch,
+) -> (SimSummary, EngineStats) {
+    assert!(rounds > 0);
+    run_streaming(topo, net, profile, rounds, &mut scratch.stream)
 }
 
 #[cfg(test)]
@@ -576,7 +756,7 @@ mod tests {
         let p = MultigraphTopology::from_network(&net, &prof, 5).s_max() as usize;
         assert!(p >= 2 && p <= 6400, "test premise: periodic schedule shorter than the run");
         let stats = compare(TopologyKind::Multigraph, "gaia", 5, 6400);
-        assert!(stats.compiled);
+        assert_eq!(stats.kind, EngineKind::Periodic);
         assert_eq!(stats.period, Some(p));
         let detected = stats.cycle_detected_at.expect("cycle must be detected");
         assert!(detected <= 2 * p, "detected at {detected}, period {p}");
@@ -591,7 +771,7 @@ mod tests {
     fn static_designs_detect_a_length_one_cycle() {
         for kind in [TopologyKind::Ring, TopologyKind::Star, TopologyKind::Mst] {
             let stats = compare(kind, "gaia", 5, 500);
-            assert!(stats.compiled);
+            assert_eq!(stats.kind, EngineKind::Periodic);
             assert_eq!(stats.period, Some(1));
             assert_eq!(stats.cycle_len, Some(1));
             assert_eq!(stats.simulated_rounds, 1, "{kind:?} should replay after round 0");
@@ -601,22 +781,32 @@ mod tests {
     #[test]
     fn stochastic_matcha_streams_and_matches() {
         let stats = compare(TopologyKind::Matcha, "gaia", 5, 300);
-        assert!(!stats.compiled, "stochastic MATCHA must take the streaming engine");
+        assert_eq!(
+            stats.kind,
+            EngineKind::Streaming,
+            "stochastic MATCHA must take the streaming engine"
+        );
         assert_eq!(stats.simulated_rounds, 300);
     }
 
     #[test]
-    fn large_period_falls_back_to_streaming() {
+    fn large_period_takes_the_factored_engine() {
         // High-t multigraphs (paper Table 6 goes to t = 30) can have an
-        // s_max far beyond any round budget; those cells must stream —
-        // and still match the oracle (checked inside `compare`).
+        // s_max far beyond any round budget; those cells skip the
+        // periodic compile and take the factored engine — and still
+        // match the oracle (checked inside `compare`).
         let net = zoo::exodus();
         let prof = crate::net::DatasetProfile::femnist();
         for t in [20u32, 30] {
             let s_max = MultigraphTopology::from_network(&net, &prof, t).s_max();
             let stats = compare(TopologyKind::Multigraph, "exodus", t, 90);
             if s_max > 90 {
-                assert!(!stats.compiled, "t={t}: s_max={s_max} must take the streaming engine");
+                assert_eq!(
+                    stats.kind,
+                    EngineKind::Factored,
+                    "t={t}: s_max={s_max} must take the factored engine"
+                );
+                assert!(stats.groups.unwrap() >= 2);
             }
             assert_eq!(stats.simulated_rounds, 90);
         }
@@ -625,12 +815,35 @@ mod tests {
     #[test]
     fn period_longer_than_run_still_matches() {
         // Gaia t=5 has s_max > 2; at rounds = 2 the periodic compile is
-        // skipped (no replay could fire) and streaming must still match.
+        // skipped (no replay could fire) and the multigraph's factored
+        // closed form runs instead — still bit-identical.
         let net = zoo::gaia();
         let prof = crate::net::DatasetProfile::femnist();
         assert!(MultigraphTopology::from_network(&net, &prof, 5).s_max() > 2);
         let stats = compare(TopologyKind::Multigraph, "gaia", 5, 2);
-        assert!(!stats.compiled);
+        assert_eq!(stats.kind, EngineKind::Factored);
+    }
+
+    #[test]
+    fn forced_streaming_matches_every_fast_path() {
+        // The public streaming entry bypasses both fast paths; all
+        // three engines must agree bitwise on a factorizable cell.
+        let cfg = ExperimentConfig {
+            network: "gaia".into(),
+            topology: TopologyKind::Multigraph,
+            t: 30,
+            sim_rounds: 140,
+            ..Default::default()
+        };
+        let net = cfg.resolve_network();
+        let prof = cfg.resolve_profile().unwrap();
+        let mut a = cfg.build_topology();
+        let mut b = cfg.build_topology();
+        let (stream, s_stats) = simulate_summary_streaming_with_stats(a.as_mut(), &net, &prof, 140);
+        let (fast, f_stats) = simulate_summary_compiled_with_stats(b.as_mut(), &net, &prof, 140);
+        assert_eq!(s_stats.kind, EngineKind::Streaming);
+        assert_eq!(f_stats.kind, EngineKind::Factored);
+        assert_bitwise_equal(&stream, &fast);
     }
 
     #[test]
@@ -650,7 +863,7 @@ mod tests {
         let mut slab = DelaySlab::new(&ct, &net, &prof);
         for rounds in [130usize, 500, 130] {
             let (got, stats) = run_compiled(&ct, &mut slab, &net, &prof, rounds);
-            assert!(stats.compiled);
+            assert_eq!(stats.kind, EngineKind::Periodic);
             let mut fresh = MultigraphTopology::from_network(&net, &prof, 5);
             let want = simulate_summary_naive(&mut fresh, &net, &prof, rounds);
             assert_bitwise_equal(&want, &got);

@@ -1,0 +1,497 @@
+//! Period-factorized simulation engine: O(distinct multiplicities) per
+//! round for schedules that expose a [`ScheduleFactorization`].
+//!
+//! The parsed multigraph's closed form (Algorithm 2, `topo::states`)
+//! says a pair with multiplicity n is strong exactly when
+//! `k % n == 0`. Two consequences make the per-round edge walk
+//! collapsible:
+//!
+//! 1. **Edges with the same multiplicity share one schedule.** They are
+//!    strong in the same rounds and weak in the same rounds, so they
+//!    all undergo the *same sequence* of Eq. 4 operations: reset to
+//!    their own d_0 on strong rounds, `x → max(floor, x − τ)` on weak
+//!    rounds. Both operations are monotone non-decreasing in the edge's
+//!    value, and the reset targets order like the d_0s do — so the
+//!    group's maximum backlog is, at every round, exactly the backlog
+//!    of its maximum-d_0 edge, computed by the very same iterated f64
+//!    ops the naive tracker applies to that edge. One representative
+//!    value per group replaces the whole group.
+//! 2. **τ regroups exactly.** The round cycle time is a fold of
+//!    `f64::max` over strong-edge contributions; `max` on positive
+//!    finite f64 is exact, associative and commutative, so folding
+//!    per-group maxima instead of per-edge values is bit-identical.
+//!
+//! The steady-state per-round cost is therefore O(m) where m =
+//! distinct multiplicities (m ≤ t, typically < 10 — independent of N),
+//! instead of the streaming engine's O(E): the N = 4096, t = 30 cells
+//! that PR 4 opened stop paying 4096 edge visits per round and pay ~10
+//! group updates. Isolation counts depend only on *which* multiplicity
+//! groups are strong this round (a node is isolated iff it has edges
+//! and none of its incident groups is active), so they are memoized
+//! per active-group bitmask — O(N) once per distinct mask, O(1)
+//! amortized.
+//!
+//! Bit-identity with [`super::simulate_summary_naive`] is by
+//! construction, not best-effort: d_0 seeds through the shared
+//! [`pair_d0_ms`] with the same round-0 plan degrees, the
+//! representative backlog applies the same `(b − τ).max(floor)` /
+//! reset updates in the same per-round order, and `total_ms`
+//! accumulates τ sequentially in round order. The regrouping argument
+//! above was additionally cross-validated bitwise against a Python f64
+//! model (5000 randomized trials, adversarial floors included);
+//! in-tree, `tests/factored_engine.rs`, the factored proptest suite,
+//! and `benches/factored.rs` pin the equality down to the bits.
+//!
+//! Like `compiled.rs`, the product splits into an immutable shareable
+//! half ([`FactoredTopology`] — group structure, edge identities, node
+//! masks; `Arc`-able across cells) and a per-cell mutable half
+//! ([`FactoredSlab`] — the (network, profile)-resolved group envelopes
+//! plus the running backlog), so the sweep cache can compile once per
+//! (topology, network, profile, t) and simulate under any round budget.
+
+use std::collections::HashMap;
+
+use crate::delay::pair_d0_ms;
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::topo::TopologyDesign;
+
+use super::compiled::{EngineKind, EngineStats};
+use super::SimSummary;
+
+/// The factored engine tracks active groups in a u64 bitmask; a
+/// factorization with more distinct multiplicities than this (never the
+/// multigraph — multiplicities are bounded by t) falls back to
+/// streaming.
+pub const MAX_FACTOR_GROUPS: usize = 64;
+
+/// One factored edge: the pair, the (round-constant) plan degrees that
+/// seed its d_0, and the multiplicity group it belongs to.
+#[derive(Debug, Clone, Copy)]
+struct FactoredEdge {
+    u: u32,
+    v: u32,
+    deg_u: u32,
+    deg_v: u32,
+    group: u32,
+}
+
+/// The immutable, `Arc`-shareable product of compiling a
+/// [`crate::topo::ScheduleFactorization`]: per-multiplicity groups,
+/// edge identities (for d_0 resolution), and per-node incident-group
+/// bitmasks (for isolation counting). Holds no delay numbers — those
+/// live in the per-cell [`FactoredSlab`].
+#[derive(Debug, Clone)]
+pub struct FactoredTopology {
+    name: String,
+    n: usize,
+    edges: Vec<FactoredEdge>,
+    /// Distinct multiplicities, in first-appearance (edge) order; the
+    /// group index is the position here.
+    groups: Vec<u32>,
+    /// Bit g set ⇔ the node has an incident edge in group g. A node
+    /// with no edges at all has mask 0 and is never isolated (matching
+    /// `RoundPlan::mark_participation`: no edge ⇒ not isolated).
+    node_mask: Vec<u64>,
+}
+
+impl FactoredTopology {
+    /// Compile `topo`'s factorization, if it exposes one. Returns
+    /// `None` when the design does not factorize, when the edge list
+    /// is malformed (a multiplicity of 0, an unnormalized pair, or a
+    /// pair listed twice — the tracker would share one delay state
+    /// where the grouping would fork it), or when there are more than
+    /// [`MAX_FACTOR_GROUPS`] distinct multiplicities — those cells run
+    /// the streaming engine instead.
+    pub fn compile(topo: &dyn TopologyDesign) -> Option<Self> {
+        let f = topo.factorization()?;
+        // Round-constant plan degrees: the factorization contract says
+        // every round plans exactly these edges, so the round-0 degrees
+        // the naive tracker seeds d_0 with are the degrees over the
+        // full edge list.
+        let mut degrees = vec![0u32; f.n];
+        let mut seen = std::collections::HashSet::with_capacity(f.edges.len());
+        for &(u, v, m) in &f.edges {
+            if m == 0 || u >= v || v >= f.n || !seen.insert((u, v)) {
+                return None;
+            }
+            degrees[u] += 1;
+            degrees[v] += 1;
+        }
+        let mut groups: Vec<u32> = Vec::new();
+        let mut node_mask = vec![0u64; f.n];
+        let mut edges = Vec::with_capacity(f.edges.len());
+        for &(u, v, m) in &f.edges {
+            let group = match groups.iter().position(|&g| g == m) {
+                Some(g) => g,
+                None => {
+                    if groups.len() >= MAX_FACTOR_GROUPS {
+                        return None;
+                    }
+                    groups.push(m);
+                    groups.len() - 1
+                }
+            };
+            node_mask[u] |= 1u64 << group;
+            node_mask[v] |= 1u64 << group;
+            edges.push(FactoredEdge {
+                u: u as u32,
+                v: v as u32,
+                deg_u: degrees[u],
+                deg_v: degrees[v],
+                group: group as u32,
+            });
+        }
+        Some(FactoredTopology { name: topo.name().to_string(), n: f.n, edges, groups, node_mask })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Silo count the schedule was compiled over.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Distinct multiplicity groups — the per-round work factor.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Pairs in the factorized schedule.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// The per-cell mutable layer over a shared [`FactoredTopology`]: the
+/// group d_0 envelopes resolved against one (network, profile), the
+/// running representative backlog per group, and the per-active-mask
+/// isolation-count memo. Reusable across cells via [`Self::resolve`]
+/// (the sweep scratch pool holds one per worker thread).
+#[derive(Debug, Clone, Default)]
+pub struct FactoredSlab {
+    /// max d_0 over each group's edges — the value a group's
+    /// representative backlog resets to on strong rounds.
+    d0_max: Vec<f64>,
+    /// Representative (= maximum) backlog per group.
+    backlog: Vec<f64>,
+    /// active-group bitmask → isolated-node count. Structure-only (no
+    /// delay numbers), lazily filled at O(N) per distinct mask.
+    iso_cache: HashMap<u64, usize>,
+}
+
+impl FactoredSlab {
+    /// Fresh slab resolved against one (network, profile).
+    pub fn new(ft: &FactoredTopology, net: &NetworkSpec, profile: &DatasetProfile) -> Self {
+        let mut slab = FactoredSlab::default();
+        slab.resolve(ft, net, profile);
+        slab
+    }
+
+    /// (Re)resolve against `ft` under a concrete network and profile,
+    /// reusing this slab's allocations. `net` must be the network the
+    /// design behind `ft` was built for.
+    pub fn resolve(&mut self, ft: &FactoredTopology, net: &NetworkSpec, profile: &DatasetProfile) {
+        assert_eq!(
+            ft.n,
+            net.n(),
+            "factored topology '{}' has {} silos but network '{}' has {}",
+            ft.name,
+            ft.n,
+            net.name,
+            net.n()
+        );
+        self.d0_max.clear();
+        self.d0_max.resize(ft.groups.len(), f64::NEG_INFINITY);
+        for e in &ft.edges {
+            let d0 = pair_d0_ms(
+                net,
+                profile,
+                e.u as usize,
+                e.v as usize,
+                e.deg_u as usize,
+                e.deg_v as usize,
+            );
+            let slot = &mut self.d0_max[e.group as usize];
+            *slot = slot.max(d0);
+        }
+        // The backlog is materialized by `reset()` at run entry.
+        self.backlog.clear();
+        // The memo keys are masks of whatever ft was resolved last;
+        // a re-resolve may target a different schedule.
+        self.iso_cache.clear();
+    }
+
+    /// (Re)seed the representative backlogs to the fresh-transfer
+    /// state, mirroring `EdgeDelayState::new` (backlog = d_0).
+    pub fn reset(&mut self) {
+        self.backlog.clear();
+        self.backlog.extend_from_slice(&self.d0_max);
+    }
+
+    /// Isolated-node count under `active` (bit g ⇔ group g strong this
+    /// round): nodes with edges but no incident active group.
+    #[inline]
+    fn iso_count(&mut self, ft: &FactoredTopology, active: u64) -> usize {
+        *self.iso_cache.entry(active).or_insert_with(|| {
+            ft.node_mask.iter().filter(|&&m| m != 0 && m & active == 0).count()
+        })
+    }
+}
+
+/// Factored engine: per-round step over a (possibly `Arc`-shared)
+/// [`FactoredTopology`] and a per-cell [`FactoredSlab`], O(groups) per
+/// round. Resets the slab on entry, so one slab may be reused across
+/// runs. Bit-identical to the naive/streaming paths (see module docs).
+pub fn run_factored(
+    ft: &FactoredTopology,
+    slab: &mut FactoredSlab,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    assert!(rounds > 0);
+    assert_eq!(
+        slab.d0_max.len(),
+        ft.groups.len(),
+        "slab must be resolved against this factored topology before running"
+    );
+    slab.reset();
+    let floor = profile.u as f64 * profile.t_c_ms;
+    let mut total_ms = 0.0;
+    let mut rounds_with_isolated = 0usize;
+    let mut max_isolated = 0usize;
+
+    for k in 0..rounds {
+        // Pass 1 — τ_k: the Eq. 5 inner max over strong edges. Each
+        // active group contributes its representative (= maximum)
+        // backlog; regrouping the naive per-edge fold is exact because
+        // f64::max is order-independent on positive finite values.
+        let mut active = 0u64;
+        let mut tau = floor;
+        for (g, &m) in ft.groups.iter().enumerate() {
+            if k as u64 % m as u64 == 0 {
+                active |= 1u64 << g;
+                tau = tau.max(floor.max(slab.backlog[g]));
+            }
+        }
+        // Pass 2 — Eq. 4 advance, mirroring `step_edges`: strong
+        // groups reset to their d_0 envelope, weak groups drain by τ.
+        for (g, b) in slab.backlog.iter_mut().enumerate() {
+            if active & (1u64 << g) != 0 {
+                *b = slab.d0_max[g];
+            } else {
+                *b = (*b - tau).max(floor);
+            }
+        }
+
+        total_ms += tau;
+        let iso = slab.iso_count(ft, active);
+        if iso > 0 {
+            rounds_with_isolated += 1;
+            max_isolated = max_isolated.max(iso);
+        }
+    }
+
+    let summary = SimSummary {
+        topology: ft.name.clone(),
+        network: net.name.clone(),
+        profile: profile.name.clone(),
+        rounds,
+        mean_cycle_ms: total_ms / rounds as f64,
+        total_ms,
+        rounds_with_isolated,
+        max_isolated,
+    };
+    let stats = EngineStats {
+        kind: EngineKind::Factored,
+        period: None,
+        cycle_detected_at: None,
+        cycle_len: None,
+        simulated_rounds: rounds,
+        groups: Some(ft.groups.len()),
+    };
+    (summary, stats)
+}
+
+/// One-shot convenience: compile `topo`'s factorization and run it.
+/// `None` when the design does not factorize (the dispatcher then falls
+/// back to the streaming engine).
+pub fn simulate_summary_factored_with_stats(
+    topo: &dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> Option<(SimSummary, EngineStats)> {
+    let ft = FactoredTopology::compile(topo)?;
+    let mut slab = FactoredSlab::new(&ft, net, profile);
+    Some(run_factored(&ft, &mut slab, net, profile, rounds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, TopologyKind};
+    use crate::net::zoo;
+    use crate::simtime::simulate_summary_naive;
+    use crate::topo::MultigraphTopology;
+
+    fn assert_bitwise_equal(a: &SimSummary, b: &SimSummary, ctx: &str) {
+        assert_eq!(a.topology, b.topology, "{ctx}");
+        assert_eq!(a.network, b.network, "{ctx}");
+        assert_eq!(a.profile, b.profile, "{ctx}");
+        assert_eq!(a.rounds, b.rounds, "{ctx}");
+        assert_eq!(
+            a.total_ms.to_bits(),
+            b.total_ms.to_bits(),
+            "{ctx}: total_ms {} vs {}",
+            a.total_ms,
+            b.total_ms
+        );
+        assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}");
+        assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}");
+        assert_eq!(a.max_isolated, b.max_isolated, "{ctx}");
+    }
+
+    fn compare_multigraph(network: &str, t: u32, rounds: usize) {
+        let cfg = ExperimentConfig {
+            network: network.into(),
+            topology: TopologyKind::Multigraph,
+            t,
+            sim_rounds: rounds,
+            ..Default::default()
+        };
+        let net = cfg.resolve_network();
+        let prof = cfg.resolve_profile().unwrap();
+        let mut a = cfg.build_topology();
+        let b = cfg.build_topology();
+        let naive = simulate_summary_naive(a.as_mut(), &net, &prof, rounds);
+        let (fast, stats) = simulate_summary_factored_with_stats(b.as_ref(), &net, &prof, rounds)
+            .expect("multigraph factorizes");
+        assert_bitwise_equal(&naive, &fast, &format!("{network} t={t} rounds={rounds}"));
+        assert_eq!(stats.kind, EngineKind::Factored);
+        assert_eq!(stats.simulated_rounds, rounds);
+        assert!(stats.groups.unwrap() >= 1);
+    }
+
+    #[test]
+    fn factored_matches_naive_small_period() {
+        // t = 5 (s_max = 60 on gaia): factored, periodic, and naive all
+        // agree even where the periodic engine would normally run.
+        compare_multigraph("gaia", 5, 150);
+        compare_multigraph("gaia", 1, 40); // t=1: a single all-strong group
+    }
+
+    #[test]
+    fn factored_matches_naive_huge_period() {
+        // t ∈ {20, 30}: s_max is far beyond any materializable table —
+        // exactly the cells the engine exists for.
+        for t in [20u32, 30] {
+            compare_multigraph("gaia", t, 300);
+            compare_multigraph("exodus", t, 300);
+        }
+    }
+
+    #[test]
+    fn group_count_equals_distinct_multiplicities() {
+        let net = zoo::exodus();
+        let prof = crate::net::DatasetProfile::femnist();
+        let topo = MultigraphTopology::from_network(&net, &prof, 30);
+        let ft = FactoredTopology::compile(&topo).unwrap();
+        let mut mults: Vec<u32> = topo.multigraph().edges.iter().map(|e| e.n_edges).collect();
+        mults.sort_unstable();
+        mults.dedup();
+        assert_eq!(ft.num_groups(), mults.len());
+        assert_eq!(ft.num_edges(), topo.multigraph().edges.len());
+        assert_eq!(ft.n(), net.n());
+        assert_eq!(ft.name(), "multigraph");
+        // The whole point: group count is tiny and N-independent.
+        assert!(ft.num_groups() <= 30, "groups bounded by t");
+    }
+
+    #[test]
+    fn non_factorizable_designs_return_none() {
+        let net = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        for kind in [TopologyKind::Matcha, TopologyKind::Ring, TopologyKind::Star] {
+            let cfg = ExperimentConfig {
+                network: "gaia".into(),
+                topology: kind,
+                ..Default::default()
+            };
+            let topo = cfg.build_topology();
+            assert!(
+                FactoredTopology::compile(topo.as_ref()).is_none(),
+                "{kind:?} must not claim a factorization"
+            );
+            let got = simulate_summary_factored_with_stats(topo.as_ref(), &net, &prof, 10);
+            assert!(got.is_none());
+        }
+    }
+
+    #[test]
+    fn slab_reuse_across_cells_is_exact() {
+        // One slab resolved against cell A, then cell B, must equal a
+        // fresh slab on cell B — the scratch-pool contract.
+        let prof = crate::net::DatasetProfile::femnist();
+        let gaia = zoo::gaia();
+        let exodus = zoo::exodus();
+        let topo_a = MultigraphTopology::from_network(&gaia, &prof, 20);
+        let topo_b = MultigraphTopology::from_network(&exodus, &prof, 30);
+        let ft_a = FactoredTopology::compile(&topo_a).unwrap();
+        let ft_b = FactoredTopology::compile(&topo_b).unwrap();
+
+        let mut pooled = FactoredSlab::default();
+        pooled.resolve(&ft_a, &gaia, &prof);
+        let (got_a, _) = run_factored(&ft_a, &mut pooled, &gaia, &prof, 120);
+        pooled.resolve(&ft_b, &exodus, &prof);
+        let (got_b, _) = run_factored(&ft_b, &mut pooled, &exodus, &prof, 120);
+
+        let mut fresh_a = FactoredSlab::new(&ft_a, &gaia, &prof);
+        let (want_a, _) = run_factored(&ft_a, &mut fresh_a, &gaia, &prof, 120);
+        let mut fresh_b = FactoredSlab::new(&ft_b, &exodus, &prof);
+        let (want_b, _) = run_factored(&ft_b, &mut fresh_b, &exodus, &prof, 120);
+
+        assert_bitwise_equal(&want_a, &got_a, "pooled slab, cell A");
+        assert_bitwise_equal(&want_b, &got_b, "pooled slab, cell B");
+    }
+
+    #[test]
+    fn repeated_runs_on_one_slab_are_exact() {
+        // reset() must fully re-seed state: 3 runs over one slab, each
+        // bit-identical to the naive oracle.
+        let net = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        let topo = MultigraphTopology::from_network(&net, &prof, 30);
+        let ft = FactoredTopology::compile(&topo).unwrap();
+        let mut slab = FactoredSlab::new(&ft, &net, &prof);
+        for rounds in [90usize, 250, 90] {
+            let (got, _) = run_factored(&ft, &mut slab, &net, &prof, rounds);
+            let mut fresh = MultigraphTopology::from_network(&net, &prof, 30);
+            let want = simulate_summary_naive(&mut fresh, &net, &prof, rounds);
+            assert_bitwise_equal(&want, &got, &format!("{rounds} rounds"));
+        }
+    }
+
+    #[test]
+    fn factored_is_exact_on_every_profile() {
+        let net = zoo::gaia();
+        for prof in crate::net::DatasetProfile::all() {
+            let mut a = MultigraphTopology::from_network(&net, &prof, 10);
+            let b = MultigraphTopology::from_network(&net, &prof, 10);
+            let naive = simulate_summary_naive(&mut a, &net, &prof, 200);
+            let (fast, _) = simulate_summary_factored_with_stats(&b, &net, &prof, 200).unwrap();
+            assert_bitwise_equal(&naive, &fast, &prof.name);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "silos")]
+    fn slab_rejects_mismatched_network() {
+        let prof = crate::net::DatasetProfile::femnist();
+        let topo = MultigraphTopology::from_network(&zoo::gaia(), &prof, 5);
+        let ft = FactoredTopology::compile(&topo).unwrap();
+        let _ = FactoredSlab::new(&ft, &zoo::exodus(), &prof);
+    }
+}

@@ -8,6 +8,7 @@
 //! cycle-time tables are produced.
 
 pub mod compiled;
+pub mod factored;
 
 use std::collections::HashMap;
 
@@ -17,7 +18,12 @@ use crate::topo::TopologyDesign;
 
 pub use compiled::{
     run_compiled, simulate_summary_compiled, simulate_summary_compiled_with_stats,
-    CompiledTopology, DelaySlab, EngineStats,
+    simulate_summary_scratch, simulate_summary_streaming_scratch,
+    simulate_summary_streaming_with_stats, CompiledTopology, DelaySlab, EngineKind, EngineStats,
+    SimScratch, StreamScratch,
+};
+pub use factored::{
+    run_factored, simulate_summary_factored_with_stats, FactoredSlab, FactoredTopology,
 };
 
 /// Simulation output for one (topology, network, profile) cell.
@@ -142,9 +148,14 @@ pub struct SimSummary {
 ///
 /// Since PR 2 this runs on the compiled zero-allocation engine
 /// ([`compiled`]): a dense edge arena plus an exact cycle-detection fast
-/// path for periodic schedules. The engine is pinned bit-identical to
-/// the [`DelayTracker`] reference path ([`simulate_summary_naive`]) by
-/// the simcore bench, unit tests, and the proptest suite.
+/// path for periodic schedules. Since PR 5 the dispatcher additionally
+/// routes schedules that expose a multiplicity factorization (the
+/// parsed multigraph at any t) to the period-factorized engine
+/// ([`factored`]) when their period is too large to materialize —
+/// O(distinct multiplicities) per round instead of O(E). Every engine
+/// is pinned bit-identical to the [`DelayTracker`] reference path
+/// ([`simulate_summary_naive`]) by the simcore/factored benches, unit
+/// tests, and the proptest suites.
 pub fn simulate_summary(
     topo: &mut dyn TopologyDesign,
     net: &NetworkSpec,

@@ -23,23 +23,52 @@
 //!   report fields come from each cell's own spec, never from the
 //!   representative.
 //! * [`SweepCache`] — a [`BuildOnce`] map per artifact kind: shared
-//!   [`CompiledTopology`]s (`Arc`ed across cells that differ only in
-//!   rounds — or in `t`, for designs that ignore it) and shared
-//!   [`MatchaCore`]s (a stochastic seed axis pays for one
-//!   Christofides/MST/decomposition build, not N). Workers that race on
-//!   a key block on one `OnceLock`, so a construction never runs twice.
+//!   compiled schedules ([`CompiledTopology`] / [`FactoredTopology`],
+//!   `Arc`ed across the seed axis — and across `t`, for designs that
+//!   ignore it; the key keeps `rounds` because it gates the periodic
+//!   compile) and shared [`MatchaCore`]s (a stochastic seed axis pays
+//!   for one Christofides/MST/decomposition build, not N). Workers
+//!   that race on a key block on one `OnceLock`, so a construction
+//!   never runs twice.
+//! * a **thread-local scratch pool** — every worker thread owns one
+//!   [`SimScratch`] (delay slabs, factored-group slab, streaming edge
+//!   arena + per-round buffers) that [`run_cell_cached`] reuses across
+//!   every cell the thread simulates, whatever engine the cell takes.
+//!   Large-N cells stop reallocating O(N²) pair tables and O(E) slabs
+//!   per cell; reuse never changes results because each engine fully
+//!   re-resolves its layer per cell (pinned by the slab-reuse tests in
+//!   `simtime`).
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::TopologyKind;
-use crate::simtime::{run_compiled, simulate_summary, CompiledTopology, DelaySlab, SimSummary};
+use crate::simtime::{
+    run_compiled, run_factored, simulate_summary_scratch, simulate_summary_streaming_scratch,
+    CompiledTopology, EngineStats, FactoredTopology, SimScratch, SimSummary,
+};
 use crate::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
 use crate::topo::TopologyDesign;
 
 use super::spec::CellSpec;
 use super::CellTiming;
+
+thread_local! {
+    /// The per-thread scratch pool: reused across every cell one
+    /// worker thread simulates within a sweep. Both pool
+    /// implementations spawn fresh workers per `sweep::run`, so
+    /// parallel-run scratch is dropped when the sweep ends; only a
+    /// caller-thread (threads <= 1) run retains its scratch across
+    /// invocations.
+    static SCRATCH: RefCell<SimScratch> = RefCell::new(SimScratch::default());
+}
+
+/// Run `f` with this thread's pooled [`SimScratch`].
+fn with_scratch<R>(f: impl FnOnce(&mut SimScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
 
 /// Semantic identity of one grid cell's simulation result. Two cells
 /// with equal fingerprints produce bit-identical [`SimSummary`]s, so
@@ -164,16 +193,33 @@ impl CompiledKey {
     }
 }
 
+/// The sharable compilation product of one deterministic cell shape —
+/// which engine its simulations run on, with the engine's immutable
+/// `Arc`-shared half where one exists. Mirrors the dispatch order of
+/// [`crate::simtime::simulate_summary_scratch`] exactly, so cached and
+/// uncached cells always take the same engine (reports carry the engine
+/// kind, which must not depend on the execution strategy).
+#[derive(Clone)]
+enum SharedSchedule {
+    /// Materializable period: per-state tables + cycle replay.
+    Periodic(Arc<CompiledTopology>),
+    /// Unmaterializable period but multiplicity-factorizable
+    /// (huge-s_max multigraphs): the O(groups)-per-round engine.
+    Factored(Arc<FactoredTopology>),
+    /// No shareable structure: the streaming verdict, cached so doomed
+    /// compiles are not re-attempted.
+    Stream,
+}
+
 /// Shared artifacts for one sweep run. Create one per [`super::run`]
 /// invocation (or hold one across invocations to share compiles between
 /// sweeps of the same process — everything inside is immutable once
 /// built).
 #[derive(Default)]
 pub struct SweepCache {
-    /// (construction inputs, rounds) → compiled schedule; `None` caches
-    /// the "streaming engine required" verdict so doomed compiles are
-    /// not re-attempted.
-    compiled: BuildOnce<CompiledKey, Option<Arc<CompiledTopology>>>,
+    /// (construction inputs, rounds) → compiled schedule (or the
+    /// cached streaming verdict).
+    compiled: BuildOnce<CompiledKey, SharedSchedule>,
     /// (network, profile) → shared MATCHA construction.
     matcha_cores: BuildOnce<(String, String), Arc<MatchaCore>>,
 }
@@ -195,25 +241,40 @@ impl SweepCache {
 /// never change what is computed —
 ///
 /// * deterministic periodic designs run on an `Arc`-shared
-///   [`CompiledTopology`] with a private [`DelaySlab`] (same compile
-///   the per-cell engine would produce, pinned by
-///   `simtime::compiled` tests);
+///   [`CompiledTopology`] with the thread's pooled
+///   [`crate::simtime::DelaySlab`] (same compile the per-cell engine
+///   would produce, pinned by `simtime::compiled` tests);
+/// * deterministic factorizable designs (huge-s_max multigraphs) run
+///   on an `Arc`-shared [`FactoredTopology`] with the pooled
+///   [`crate::simtime::FactoredSlab`] (pinned by `simtime::factored`
+///   tests);
 /// * MATCHA variants instantiate over a shared [`MatchaCore`] with the
 ///   cell's own RNG stream (pinned by `topo::matcha` tests);
-/// * everything else (e.g. unmaterializably-periodic multigraphs)
-///   falls through to the uncached per-cell engine.
+/// * everything else streams through the pooled edge arena.
 pub fn run_cell_cached(cell: &CellSpec, cache: &SweepCache) -> SimSummary {
     run_cell_cached_timed(cell, cache).0
 }
 
 /// [`run_cell_cached`] with the build/simulate wall-clock split
-/// ([`crate::sweep::CellTiming`]). Build time is measured *inside* the
-/// build-once closures, so it counts only construction work this
-/// worker actually performed: a cache hit — and a worker blocked on
-/// another thread's in-flight build of the same key — both record ~0
-/// (the wait overlaps other workers' time and is visible only in the
-/// sweep's host wall-clock). Simulate time covers the round loop.
-pub fn run_cell_cached_timed(cell: &CellSpec, cache: &SweepCache) -> (SimSummary, CellTiming) {
+/// ([`crate::sweep::CellTiming`]) and the engine's [`EngineStats`].
+/// Build time is measured *inside* the build-once closures, so it
+/// counts only construction work this worker actually performed: a
+/// cache hit — and a worker blocked on another thread's in-flight
+/// build of the same key — both record ~0 (the wait overlaps other
+/// workers' time and is visible only in the sweep's host wall-clock).
+/// Simulate time covers the round loop.
+pub fn run_cell_cached_timed(
+    cell: &CellSpec,
+    cache: &SweepCache,
+) -> (SimSummary, CellTiming, EngineStats) {
+    with_scratch(|scratch| run_cell_cached_scratch(cell, cache, scratch))
+}
+
+fn run_cell_cached_scratch(
+    cell: &CellSpec,
+    cache: &SweepCache,
+    scratch: &mut SimScratch,
+) -> (SimSummary, CellTiming, EngineStats) {
     use std::time::Instant;
     let cfg = cell.to_experiment();
     let net = cfg.resolve_network();
@@ -234,48 +295,76 @@ pub fn run_cell_cached_timed(cell: &CellSpec, cache: &SweepCache) -> (SimSummary
                 if cell.topology == TopologyKind::MatchaPlus { 1.0 } else { DEFAULT_BUDGET };
             let mut topo = MatchaTopology::from_core(core, budget, cell.cell_seed);
             let t1 = Instant::now();
-            let summary = simulate_summary(&mut topo, &net, &prof, cell.rounds);
+            let (summary, stats) =
+                simulate_summary_scratch(&mut topo, &net, &prof, cell.rounds, scratch);
             let timing = CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
-            (summary, timing)
+            (summary, timing, stats)
         }
         _ => {
             let key = CompiledKey::for_cell(cell);
-            // If this worker loses the compile (the design turns out to
-            // stream), keep its built topology for the fallback below
-            // rather than constructing it a second time.
+            // If this worker's compile lands on the streaming verdict,
+            // keep its built topology for the fallback below rather
+            // than constructing it a second time.
             let mut built: Option<Box<dyn TopologyDesign>> = None;
             let mut build_ms = 0.0;
-            let compiled = cache.compiled.get_or_build(&key, || {
+            let schedule = cache.compiled.get_or_build(&key, || {
                 let t0 = Instant::now();
                 let mut topo = cfg.build_topology();
-                let ct = CompiledTopology::compile(topo.as_mut(), cell.rounds).map(Arc::new);
-                if ct.is_none() {
-                    built = Some(topo);
-                }
+                // Same dispatch order as simulate_summary_scratch:
+                // periodic → factored → streaming.
+                let sched = match CompiledTopology::compile(topo.as_mut(), cell.rounds) {
+                    Some(ct) => SharedSchedule::Periodic(Arc::new(ct)),
+                    None => match FactoredTopology::compile(topo.as_ref()) {
+                        Some(ft) => SharedSchedule::Factored(Arc::new(ft)),
+                        None => {
+                            built = Some(topo);
+                            SharedSchedule::Stream
+                        }
+                    },
+                };
                 build_ms = t0.elapsed().as_secs_f64() * 1e3;
-                ct
+                sched
             });
-            match compiled {
-                Some(ct) => {
+            match schedule {
+                SharedSchedule::Periodic(ct) => {
                     let t1 = Instant::now();
-                    let mut slab = DelaySlab::new(&ct, &net, &prof);
-                    let summary = run_compiled(&ct, &mut slab, &net, &prof, cell.rounds).0;
+                    scratch.slab.resolve(&ct, &net, &prof);
+                    let (summary, stats) =
+                        run_compiled(&ct, &mut scratch.slab, &net, &prof, cell.rounds);
                     let timing =
                         CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
-                    (summary, timing)
+                    (summary, timing, stats)
                 }
-                // Streaming-engine cells (huge-period multigraphs): the
-                // design is consumed mutably per cell, so cache hits
-                // still rebuild — same work as the pre-cache engine.
-                None => {
+                SharedSchedule::Factored(ft) => {
+                    let t1 = Instant::now();
+                    scratch.factored.resolve(&ft, &net, &prof);
+                    let (summary, stats) =
+                        run_factored(&ft, &mut scratch.factored, &net, &prof, cell.rounds);
+                    let timing =
+                        CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
+                    (summary, timing, stats)
+                }
+                // Streaming cells: the design is consumed mutably per
+                // cell, so cache hits still rebuild the topology — but
+                // the round loop runs over the pooled arena, and the
+                // cached verdict skips straight to the streaming engine
+                // (the periodic/factored compiles already failed once
+                // for this key; same dispatch outcome, same bits).
+                SharedSchedule::Stream => {
                     let tb = Instant::now();
                     let mut topo = built.unwrap_or_else(|| cfg.build_topology());
                     let build_ms = build_ms + tb.elapsed().as_secs_f64() * 1e3;
                     let t1 = Instant::now();
-                    let summary = simulate_summary(topo.as_mut(), &net, &prof, cell.rounds);
+                    let (summary, stats) = simulate_summary_streaming_scratch(
+                        topo.as_mut(),
+                        &net,
+                        &prof,
+                        cell.rounds,
+                        scratch,
+                    );
                     let timing =
                         CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 };
-                    (summary, timing)
+                    (summary, timing, stats)
                 }
             }
         }
@@ -379,5 +468,43 @@ mod tests {
         // compile, the multigraph keeps one per t.
         assert_eq!(cache.matcha_entries(), 1);
         assert_eq!(cache.compiled_entries(), 1 + 2);
+    }
+
+    #[test]
+    fn factored_schedules_are_shared_and_exact() {
+        // t = 30: s_max is unmaterializable, so the cached path must
+        // take the Arc-shared factored schedule — one compile across
+        // the seed axis — and stay bit-identical (summary AND engine
+        // stats, which ride in reports) to the uncached engine.
+        use crate::simtime::EngineKind;
+        use crate::topo::MultigraphTopology;
+        // Pick a round budget strictly below s_max so the periodic
+        // compile is provably skipped whatever gaia's exact t=30 LCM.
+        let net = crate::net::zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        let s_max = MultigraphTopology::from_network(&net, &prof, 30).s_max();
+        assert!(s_max >= 5, "gaia t=30 must have a non-trivial schedule");
+        let rounds = (s_max - 1).min(80) as usize;
+        let spec = SweepSpec {
+            name: "factored".into(),
+            topologies: vec![TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![30],
+            seeds: vec![11, 23],
+            rounds,
+        };
+        let cache = SweepCache::default();
+        for cell in &spec.expand() {
+            let (got, _, got_stats) = run_cell_cached_timed(cell, &cache);
+            let (want, _, want_stats) = crate::sweep::run_cell_summary_timed(cell);
+            assert_eq!(got_stats.kind, EngineKind::Factored, "t=30 must factor");
+            assert_eq!(got_stats, want_stats, "stats must not depend on caching");
+            assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+            assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits());
+            assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated);
+            assert_eq!(got.max_isolated, want.max_isolated);
+        }
+        assert_eq!(cache.compiled_entries(), 1, "one shared factored compile");
     }
 }

@@ -41,7 +41,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::simtime::{simulate_summary, SimSummary};
+use crate::simtime::{simulate_summary_compiled_with_stats, EngineKind, EngineStats, SimSummary};
 
 /// How to execute a sweep (host-side knobs; never part of the artifact).
 #[derive(Debug, Clone)]
@@ -243,16 +243,17 @@ pub struct CellTiming {
 
 /// Simulate one grid cell with nothing shared: builds the topology
 /// (seeded from the cell's derived stream) and its own simulation state.
-/// Cells run on the compiled zero-allocation engine
-/// ([`crate::simtime::compiled`]); periodic cells additionally take its
-/// cycle-detection fast path. This is the pre-cache engine — the
-/// byte-identity oracle for [`run_cell_cached`].
+/// Cells run through the engine dispatcher
+/// ([`crate::simtime::simulate_summary_scratch`]): periodic compile,
+/// then the period-factorized engine, then streaming. This is the
+/// pre-cache engine — the byte-identity oracle for [`run_cell_cached`].
 pub fn run_cell_summary(cell: &CellSpec) -> SimSummary {
     run_cell_summary_timed(cell).0
 }
 
-/// [`run_cell_summary`] with the build/simulate wall-clock split.
-pub fn run_cell_summary_timed(cell: &CellSpec) -> (SimSummary, CellTiming) {
+/// [`run_cell_summary`] with the build/simulate wall-clock split and
+/// the engine's [`EngineStats`].
+pub fn run_cell_summary_timed(cell: &CellSpec) -> (SimSummary, CellTiming, EngineStats) {
     let cfg = cell.to_experiment();
     let net = cfg.resolve_network();
     let prof = cfg.resolve_profile().expect("validated profile");
@@ -260,14 +261,55 @@ pub fn run_cell_summary_timed(cell: &CellSpec) -> (SimSummary, CellTiming) {
     let mut topo = cfg.build_topology();
     let build_ms = t0.elapsed().as_secs_f64() * 1e3;
     let t1 = Instant::now();
-    let summary = simulate_summary(topo.as_mut(), &net, &prof, cell.rounds);
+    let (summary, stats) =
+        simulate_summary_compiled_with_stats(topo.as_mut(), &net, &prof, cell.rounds);
     let sim_ms = t1.elapsed().as_secs_f64() * 1e3;
-    (summary, CellTiming { build_ms, sim_ms })
+    (summary, CellTiming { build_ms, sim_ms }, stats)
 }
 
 /// [`run_cell_summary`] tagged with the cell's grid coordinates.
 pub fn run_cell(cell: &CellSpec) -> CellResult {
-    CellResult::from_summary(&run_cell_summary(cell), cell)
+    let (summary, _, stats) = run_cell_summary_timed(cell);
+    CellResult::from_summary(&summary, cell, &stats)
+}
+
+/// Which engines the simulated (unique) cells ran on, aggregated for
+/// the sweep summary line — the observable that makes engine-dispatch
+/// regressions visible in every sweep, not only in benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineMix {
+    /// Cells on the periodic per-state engine (cycle replay).
+    pub periodic: usize,
+    /// Cells on the period-factorized group engine.
+    pub factored: usize,
+    /// Cells on the per-edge streaming engine.
+    pub streaming: usize,
+    /// Rounds that did real per-edge/per-group work across simulated
+    /// cells (cycle-replayed rounds excluded).
+    pub stepped_rounds: u64,
+    /// Total rounds across simulated cells.
+    pub total_rounds: u64,
+}
+
+impl EngineMix {
+    fn count(&mut self, stats: &EngineStats, rounds: usize) {
+        match stats.kind {
+            EngineKind::Periodic => self.periodic += 1,
+            EngineKind::Factored => self.factored += 1,
+            EngineKind::Streaming => self.streaming += 1,
+        }
+        self.stepped_rounds += stats.simulated_rounds as u64;
+        self.total_rounds += rounds as u64;
+    }
+
+    /// Human summary, e.g. `3 periodic + 2 factored + 1 streaming,
+    /// stepped 180/38400 rounds`.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} periodic + {} factored + {} streaming, stepped {}/{} rounds",
+            self.periodic, self.factored, self.streaming, self.stepped_rounds, self.total_rounds
+        )
+    }
 }
 
 /// A finished sweep: the deterministic report plus host-side execution
@@ -289,6 +331,8 @@ pub struct SweepOutcome {
     /// Aggregate simulation wall-clock over the simulated cells, ms
     /// (same summing convention).
     pub sim_ms: f64,
+    /// Engine dispatch over the simulated (unique) cells.
+    pub engines: EngineMix,
 }
 
 impl SweepOutcome {
@@ -334,7 +378,7 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     let threads = effective_threads(opts.threads, work.len());
     let inner = RunOptions { threads, progress: opts.progress, dedup: opts.dedup };
     let t0 = Instant::now();
-    let summaries: Vec<(SimSummary, CellTiming)> = if opts.dedup {
+    let summaries: Vec<(SimSummary, CellTiming, EngineStats)> = if opts.dedup {
         let shared = SweepCache::default();
         run_cells(&work, &inner, |_, c| run_cell_cached_timed(c, &shared))
     } else {
@@ -343,10 +387,15 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     let results: Vec<CellResult> = cells
         .iter()
         .zip(&plan.assignment)
-        .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot].0, cell))
+        .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot].0, cell, &summaries[slot].2))
         .collect();
-    let build_ms: f64 = summaries.iter().map(|(_, t)| t.build_ms).sum();
-    let sim_ms: f64 = summaries.iter().map(|(_, t)| t.sim_ms).sum();
+    let build_ms: f64 = summaries.iter().map(|(_, t, _)| t.build_ms).sum();
+    let sim_ms: f64 = summaries.iter().map(|(_, t, _)| t.sim_ms).sum();
+    let mut engines = EngineMix::default();
+    for ((s, _, stats), &i) in summaries.iter().zip(&plan.unique) {
+        debug_assert_eq!(s.rounds, cells[i].rounds);
+        engines.count(stats, cells[i].rounds);
+    }
     Ok(SweepOutcome {
         report: SweepReport { name: spec.name.clone(), rounds: spec.rounds, cells: results },
         host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -354,6 +403,7 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
         unique_cells: work.len(),
         build_ms,
         sim_ms,
+        engines,
     })
 }
 
@@ -408,6 +458,16 @@ mod tests {
             "build/sim split must be populated: build {} sim {}",
             outcome.build_ms,
             outcome.sim_ms
+        );
+        // Both unique cells (ring, multigraph) are periodic at 200
+        // rounds (s_max = 60 on gaia t=5); the mix must say so, and
+        // cycle replay must have cut the stepped-round count.
+        assert_eq!(outcome.engines.periodic, 2, "{:?}", outcome.engines);
+        assert_eq!(outcome.engines.total_rounds, 400);
+        assert!(
+            outcome.engines.stepped_rounds < 400,
+            "cycle replay should step fewer rounds than simulated: {:?}",
+            outcome.engines
         );
         let report = &outcome.report;
         assert_eq!(report.cells.len(), 2);
@@ -498,11 +558,12 @@ mod tests {
             rounds: 60,
         };
         let cell = &spec.expand()[0];
-        let (timed, timing) = run_cell_summary_timed(cell);
+        let (timed, timing, stats) = run_cell_summary_timed(cell);
         let plain = run_cell_summary(cell);
         assert_eq!(timed.total_ms.to_bits(), plain.total_ms.to_bits());
         assert_eq!(timed.mean_cycle_ms.to_bits(), plain.mean_cycle_ms.to_bits());
         assert!(timing.build_ms >= 0.0 && timing.sim_ms >= 0.0);
+        assert!(stats.simulated_rounds >= 1);
     }
 
     #[test]

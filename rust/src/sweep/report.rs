@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::metrics::render_pivot;
-use crate::simtime::SimSummary;
+use crate::simtime::{EngineStats, SimSummary};
 use crate::util::Json;
 
 use super::spec::CellSpec;
@@ -38,6 +38,16 @@ pub struct CellResult {
     pub total_ms: f64,
     pub rounds_with_isolated: usize,
     pub max_isolated: usize,
+    /// Which engine simulated the cell ("periodic" | "factored" |
+    /// "streaming"). Deterministic per cell spec — the dispatch is a
+    /// pure function of the design's structure and the round budget —
+    /// so it rides in the artifact without breaking determinism, and
+    /// an engine regression (a factorizable cell silently falling back
+    /// to streaming) diffs in every report.
+    pub engine: &'static str,
+    /// Rounds that did real per-edge/per-group work (cycle-replayed
+    /// rounds excluded). Also deterministic.
+    pub simulated_rounds: usize,
 }
 
 impl CellResult {
@@ -45,8 +55,9 @@ impl CellResult {
     /// summary may come from `cell` itself or from a fingerprint-equal
     /// representative (the dedup fan-out) — the seed columns always
     /// come from `cell`'s own spec, so fanned-out rows stay
-    /// coordinate-exact.
-    pub fn from_summary(s: &SimSummary, cell: &CellSpec) -> Self {
+    /// coordinate-exact. (`stats` is fingerprint-determined, so fanning
+    /// it out is exact too.)
+    pub fn from_summary(s: &SimSummary, cell: &CellSpec, stats: &EngineStats) -> Self {
         CellResult {
             topology: s.topology.clone(),
             network: s.network.clone(),
@@ -59,6 +70,8 @@ impl CellResult {
             total_ms: s.total_ms,
             rounds_with_isolated: s.rounds_with_isolated,
             max_isolated: s.max_isolated,
+            engine: stats.kind.as_str(),
+            simulated_rounds: stats.simulated_rounds,
         }
     }
 }
@@ -180,6 +193,8 @@ impl SweepReport {
                     Json::Num(c.rounds_with_isolated as f64),
                 );
                 m.insert("max_isolated".into(), Json::Num(c.max_isolated as f64));
+                m.insert("engine".into(), Json::Str(c.engine.to_string()));
+                m.insert("simulated_rounds".into(), Json::Num(c.simulated_rounds as f64));
                 Json::Obj(m)
             })
             .collect();
@@ -193,12 +208,12 @@ impl SweepReport {
     /// CSV artifact, one row per cell in grid order (deterministic).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "topology,network,profile,t,seed,cell_seed,rounds,mean_cycle_ms,total_ms,rounds_with_isolated,max_isolated\n",
+            "topology,network,profile,t,seed,cell_seed,rounds,mean_cycle_ms,total_ms,rounds_with_isolated,max_isolated,engine,simulated_rounds\n",
         );
         for c in &self.cells {
             let _ = writeln!(
                 out,
-                "{},{},{},{},{},{},{},{:.6},{:.6},{},{}",
+                "{},{},{},{},{},{},{},{:.6},{:.6},{},{},{},{}",
                 c.topology,
                 c.network,
                 c.profile,
@@ -210,6 +225,8 @@ impl SweepReport {
                 c.total_ms,
                 c.rounds_with_isolated,
                 c.max_isolated,
+                c.engine,
+                c.simulated_rounds,
             );
         }
         out
@@ -246,6 +263,8 @@ mod tests {
             total_ms: mean * 10.0,
             rounds_with_isolated: 3,
             max_isolated: 2,
+            engine: "periodic",
+            simulated_rounds: 10,
         }
     }
 
@@ -295,6 +314,9 @@ mod tests {
             cells[0].get("cell_seed").unwrap().as_str().unwrap(),
             "11400714819323198485"
         );
+        // Engine columns ride in the artifact.
+        assert_eq!(cells[0].get("engine").unwrap().as_str().unwrap(), "periodic");
+        assert_eq!(cells[0].get("simulated_rounds").unwrap().as_usize().unwrap(), 10);
         let csv = r.to_csv();
         assert_eq!(csv.lines().count(), 5);
         let row = csv.lines().nth(1).unwrap();

@@ -30,6 +30,14 @@ pub struct RoundPlan {
     pub edges: Vec<(NodeId, NodeId, EdgeType)>,
 }
 
+impl Default for RoundPlan {
+    /// An empty zero-node plan (scratch-pool seeding; retargeted by
+    /// [`Self::reset`] before use).
+    fn default() -> Self {
+        RoundPlan::empty(0)
+    }
+}
+
 impl RoundPlan {
     /// Build a plan, checking (in debug builds) that every pair is
     /// normalized `u < v` — the invariant the delay tracker's pair keys
@@ -144,6 +152,28 @@ impl RoundPlan {
     }
 }
 
+/// A period-factorized description of a periodic schedule: every listed
+/// pair appears in **every** round's plan, strong exactly when
+/// `k % multiplicity == 0` and weak otherwise.
+///
+/// This is the closed form Algorithm 2 proves for the parsed multigraph
+/// (see [`states::edge_type_in_state`]): a pair with multiplicity n is
+/// strong in states `s ≡ 0 (mod n)`, and since every n divides s_max,
+/// `(k % s_max) % n == k % n` — the per-edge pattern is periodic in the
+/// round index itself, with period n. The factored simulation engine
+/// ([`crate::simtime::factored`]) exploits this to collapse the O(E)
+/// per-round edge walk into O(distinct multiplicities) group updates,
+/// which is what makes huge-s_max schedules (t = 30 has s_max ≈ 2.3e9)
+/// cheap without materializing any states.
+#[derive(Debug, Clone)]
+pub struct ScheduleFactorization {
+    /// Silo count (must match the overlay/network).
+    pub n: usize,
+    /// `(u, v, multiplicity)` with `u < v`, in plan order: `plan(k)`
+    /// lists exactly these pairs, in this order, every round.
+    pub edges: Vec<(NodeId, NodeId, u32)>,
+}
+
 /// A topology design consumed by the time simulator and the training
 /// coordinator.
 pub trait TopologyDesign {
@@ -174,6 +204,22 @@ pub trait TopologyDesign {
     /// must return `None`.
     fn period(&self) -> Option<u64> {
         Some(1)
+    }
+
+    /// Period-factorized view of the schedule, if the design can
+    /// express one.
+    ///
+    /// Contract: returning `Some(f)` asserts that for **every** round
+    /// `k`, `plan(k)` lists exactly `f.edges` (same pairs, same order),
+    /// with pair `(u, v, m)` strong iff `k % m == 0` — so plan degrees
+    /// are round-constant and the Eq. 4 recurrence factors into
+    /// independent per-multiplicity groups. The factored engine
+    /// ([`crate::simtime::factored`]) replays this closed form in
+    /// O(distinct multiplicities) per round instead of walking edges; a
+    /// wrong `Some` silently corrupts simulations, so the default is
+    /// `None` (third-party designs stream).
+    fn factorization(&self) -> Option<ScheduleFactorization> {
+        None
     }
 
     /// Whether the experiment seed influences this design's behaviour.

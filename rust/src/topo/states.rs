@@ -11,7 +11,7 @@
 //! tested equal to the closed form.
 
 use super::multigraph::Multigraph;
-use super::{RoundPlan, TopologyDesign};
+use super::{RoundPlan, ScheduleFactorization, TopologyDesign};
 use crate::delay::EdgeType;
 use crate::graph::{Graph, NodeId};
 
@@ -162,6 +162,17 @@ impl TopologyDesign for MultigraphTopology {
         Some(self.s_max)
     }
 
+    /// The closed form of Algorithm 2, exported structurally: every
+    /// round's plan is the full edge list ([`Self::plan_for_state_into`]
+    /// pushes every pair), pair (u, v) strong iff `s % n(u,v) == 0`,
+    /// and `s = k % s_max` with `n(u,v) | s_max` ⇒ `s % n == k % n`.
+    fn factorization(&self) -> Option<ScheduleFactorization> {
+        Some(ScheduleFactorization {
+            n: self.mg.n,
+            edges: self.mg.edges.iter().map(|e| (e.u, e.v, e.n_edges)).collect(),
+        })
+    }
+
     /// Algorithms 1 and 2 are deterministic in (network, profile, t);
     /// the schedule consumes no randomness.
     fn seed_sensitive(&self) -> bool {
@@ -276,6 +287,32 @@ mod tests {
                     "{} state {s}",
                     net.name
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn factorization_matches_plans_round_by_round() {
+        // The factorization contract: plan(k) lists exactly the
+        // factorization edges, in order, strong iff k % multiplicity
+        // == 0 — pinned across more than one full period (s_max = 60
+        // at t = 5) so the `s % n == k % n` reduction is exercised
+        // past the period boundary.
+        for t in [3u32, 5, 30] {
+            let mut topo = gaia_topo(t);
+            let f = topo.factorization().expect("multigraph factorizes");
+            assert_eq!(f.n, topo.multigraph().n);
+            assert_eq!(f.edges.len(), topo.multigraph().edges.len());
+            let rounds = if topo.s_max() < 100 { topo.s_max() as usize + 13 } else { 150 };
+            for k in 0..rounds {
+                let plan = topo.plan(k);
+                assert_eq!(plan.edges.len(), f.edges.len(), "t={t} round {k}");
+                for (&(u, v, ty), &(fu, fv, m)) in plan.edges.iter().zip(&f.edges) {
+                    assert_eq!((u, v), (fu, fv), "t={t} round {k}");
+                    let expect =
+                        if k as u64 % m as u64 == 0 { EdgeType::Strong } else { EdgeType::Weak };
+                    assert_eq!(ty, expect, "t={t} round {k} pair ({u},{v}) mult {m}");
+                }
             }
         }
     }

@@ -1,0 +1,147 @@
+//! Integration gate for the period-factorized engine (ISSUE 5
+//! acceptance): the factored `SimSummary` must be **bit-identical** to
+//! the naive `DelayTracker` oracle on every zoo network at multigraph
+//! t ∈ {10, 20, 30} and on N ∈ {64, 256} synthetic networks, and the
+//! engine dispatch must be observable per cell in sweep reports.
+//!
+//! The paper-scale cell (N = 1024, t = 30, 6400 rounds) runs behind
+//! the full-run gate (`cargo test -- --ignored`) — too heavy for the
+//! tier-1 debug-build suite, same policy as the bench wall-clock bars.
+
+use mgfl::net::{synth, zoo, DatasetProfile};
+use mgfl::simtime::{
+    simulate_summary_compiled_with_stats, simulate_summary_factored_with_stats,
+    simulate_summary_naive, EngineKind, SimSummary,
+};
+use mgfl::topo::MultigraphTopology;
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) {
+    assert_eq!(a.topology, b.topology, "{ctx}");
+    assert_eq!(a.network, b.network, "{ctx}");
+    assert_eq!(a.profile, b.profile, "{ctx}");
+    assert_eq!(a.rounds, b.rounds, "{ctx}");
+    assert_eq!(
+        a.total_ms.to_bits(),
+        b.total_ms.to_bits(),
+        "{ctx}: total_ms {} vs {}",
+        a.total_ms,
+        b.total_ms
+    );
+    assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}");
+    assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}");
+    assert_eq!(a.max_isolated, b.max_isolated, "{ctx}");
+}
+
+/// naive oracle vs (a) the factored engine invoked directly and (b)
+/// whatever `simulate_summary` dispatches to — both must match bitwise.
+fn check_cell(net: &mgfl::net::NetworkSpec, t: u32, rounds: usize) {
+    let prof = DatasetProfile::femnist();
+    let mut naive_topo = MultigraphTopology::from_network(net, &prof, t);
+    let naive = simulate_summary_naive(&mut naive_topo, net, &prof, rounds);
+
+    let factored_topo = MultigraphTopology::from_network(net, &prof, t);
+    let (factored, stats) =
+        simulate_summary_factored_with_stats(&factored_topo, net, &prof, rounds)
+            .expect("multigraph always factorizes");
+    assert_bitwise(&naive, &factored, &format!("factored {} t={t} x{rounds}", net.name));
+    assert_eq!(stats.kind, EngineKind::Factored);
+    assert!(
+        stats.groups.unwrap() <= t as usize,
+        "{}: {} groups exceed t={t}",
+        net.name,
+        stats.groups.unwrap()
+    );
+
+    let mut dispatch_topo = MultigraphTopology::from_network(net, &prof, t);
+    let (dispatched, _) =
+        simulate_summary_compiled_with_stats(&mut dispatch_topo, net, &prof, rounds);
+    assert_bitwise(&naive, &dispatched, &format!("dispatch {} t={t} x{rounds}", net.name));
+}
+
+#[test]
+fn factored_matches_naive_on_every_zoo_network() {
+    for net in zoo::all_networks() {
+        for t in [10u32, 20, 30] {
+            check_cell(&net, t, 1500);
+        }
+    }
+}
+
+#[test]
+fn factored_matches_naive_on_synthetic_networks() {
+    for (n, rounds) in [(64usize, 1200usize), (256, 800)] {
+        for variant in ["geo", "sphere"] {
+            let name = format!("synth-{variant}-n{n}-s7");
+            let net = synth::by_name(&name).expect("synth size in range");
+            check_cell(&net, 30, rounds);
+        }
+    }
+}
+
+#[test]
+fn sweep_reports_carry_the_engine_dispatch() {
+    use mgfl::config::TopologyKind;
+    use mgfl::sweep::{self, RunOptions, SweepSpec};
+    // One grid mixing all three engines: multigraph t=30 (factored —
+    // the round budget is chosen strictly below its s_max so the
+    // periodic compile is provably skipped), ring (periodic), matcha
+    // (streaming). The report's engine column is the observable.
+    let prof = DatasetProfile::femnist();
+    let s_max = MultigraphTopology::from_network(&zoo::gaia(), &prof, 30).s_max();
+    assert!(s_max >= 5, "gaia t=30 must have a non-trivial schedule");
+    let rounds = (s_max - 1).min(50) as usize;
+    let spec = SweepSpec {
+        name: "engines".into(),
+        topologies: vec![
+            TopologyKind::Multigraph,
+            TopologyKind::Ring,
+            TopologyKind::Matcha,
+        ],
+        networks: vec!["gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![30],
+        seeds: vec![17],
+        rounds,
+    };
+    let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
+    let engine_of = |topo: &str| {
+        outcome
+            .report
+            .cells
+            .iter()
+            .find(|c| c.topology == topo)
+            .map(|c| c.engine)
+            .expect("grid cell")
+    };
+    assert_eq!(engine_of("multigraph"), "factored");
+    assert_eq!(engine_of("ring"), "periodic");
+    assert_eq!(engine_of("matcha"), "streaming");
+    assert_eq!(outcome.engines.periodic, 1, "{:?}", outcome.engines);
+    assert_eq!(outcome.engines.factored, 1, "{:?}", outcome.engines);
+    assert_eq!(outcome.engines.streaming, 1, "{:?}", outcome.engines);
+    // The ring cell replays after round 0; factored/streaming step all.
+    assert_eq!(outcome.engines.total_rounds, 3 * rounds as u64);
+    assert_eq!(outcome.engines.stepped_rounds, 1 + 2 * rounds as u64);
+
+    // The engine columns survive the JSON artifact (and dedup fan-out
+    // keeps them byte-identical — the determinism suite pins the rest).
+    let json = outcome.report.to_json().to_string();
+    assert!(json.contains("\"engine\":\"factored\""), "{json}");
+    let opts = RunOptions { threads: 1, dedup: false, ..Default::default() };
+    let no_dedup = sweep::run(&spec, &opts).unwrap();
+    assert_eq!(no_dedup.report.to_json().to_string(), json);
+    assert_eq!(no_dedup.engines, outcome.engines);
+}
+
+/// The paper-scale identity cell the ISSUE names: N = 1024 synthetic,
+/// t = 30, 6400 rounds, plus the heaviest zoo network at the same
+/// budget. Heavy (a full naive large-N simulation — the exact cost the
+/// factored engine removes), so it runs on full runs only:
+/// `cargo test --release --test factored_engine -- --ignored`.
+#[test]
+#[ignore = "full-run gate: naive N=1024 x 6400 rounds is minutes of oracle work"]
+fn full_run_paper_scale_identity() {
+    let net = synth::by_name("synth-geo-n1024-s7").expect("synth size in range");
+    check_cell(&net, 30, 6400);
+    check_cell(&zoo::ebone(), 30, 6400);
+}

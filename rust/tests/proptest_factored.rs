@@ -1,0 +1,199 @@
+//! Property tests for the period-factorized engine, backed by the real
+//! proptest crate (gated behind `--features proptest` like the other
+//! proptest suites; the offline build vendors no proptest).
+//!
+//! Strategy: random multiplicity assignments over synthetic networks —
+//! a ring backbone plus random chords over a seeded `synth-geo`
+//! network, each pair carrying an arbitrary multiplicity — simulated
+//! four ways:
+//!
+//! * the naive `DelayTracker` reference (the oracle),
+//! * the streaming engine (the factorization hidden behind a wrapper),
+//! * the factored engine invoked directly,
+//! * whatever `simulate_summary` dispatches to (periodic when the LCM
+//!   is small enough, factored otherwise — both legs get exercised
+//!   across cases).
+//!
+//! All four `SimSummary`s must be **bitwise** equal, counters included.
+
+#![cfg(feature = "proptest")]
+
+use std::collections::BTreeSet;
+
+use mgfl::graph::Graph;
+use mgfl::net::{synth, DatasetProfile};
+use mgfl::simtime::{
+    simulate_summary, simulate_summary_factored_with_stats, simulate_summary_naive,
+    simulate_summary_streaming_with_stats, EngineKind, SimSummary,
+};
+use mgfl::topo::{RoundPlan, ScheduleFactorization, TopologyDesign};
+use mgfl::util::lcm;
+use proptest::prelude::*;
+use proptest::test_runner::TestCaseError;
+
+/// A synthetic multigraph schedule: an arbitrary edge set with
+/// arbitrary multiplicities, planned in full every round with pair
+/// (u, v, m) strong iff `k % m == 0` — the factorization closed form
+/// as a standalone design.
+struct RandomMultigraph {
+    overlay: Graph,
+    edges: Vec<(usize, usize, u32)>,
+}
+
+impl RandomMultigraph {
+    fn new(n: usize, edges: Vec<(usize, usize, u32)>) -> Self {
+        let overlay = Graph::from_edges(n, edges.iter().map(|&(u, v, _)| (u, v, 1.0)));
+        RandomMultigraph { overlay, edges }
+    }
+}
+
+impl TopologyDesign for RandomMultigraph {
+    fn name(&self) -> &str {
+        "random-multigraph"
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, k: usize) -> RoundPlan {
+        let mut out = RoundPlan::empty(self.overlay.n());
+        self.plan_into(k, &mut out);
+        out
+    }
+
+    fn plan_into(&mut self, k: usize, out: &mut RoundPlan) {
+        out.reset(self.overlay.n());
+        for &(u, v, m) in &self.edges {
+            let ty = if k as u64 % m as u64 == 0 {
+                mgfl::delay::EdgeType::Strong
+            } else {
+                mgfl::delay::EdgeType::Weak
+            };
+            out.push(u, v, ty);
+        }
+    }
+
+    fn period(&self) -> Option<u64> {
+        Some(self.edges.iter().map(|&(_, _, m)| m as u64).fold(1, lcm))
+    }
+
+    fn factorization(&self) -> Option<ScheduleFactorization> {
+        Some(ScheduleFactorization {
+            n: self.overlay.n(),
+            edges: self.edges.clone(),
+        })
+    }
+
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
+}
+
+/// The same schedule with its structure hidden (no period, no
+/// factorization): the dispatcher has no choice but to stream.
+struct Hidden(RandomMultigraph);
+
+impl TopologyDesign for Hidden {
+    fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    fn overlay(&self) -> &Graph {
+        self.0.overlay()
+    }
+
+    fn plan(&mut self, k: usize) -> RoundPlan {
+        self.0.plan(k)
+    }
+
+    fn plan_into(&mut self, k: usize, out: &mut RoundPlan) {
+        self.0.plan_into(k, out);
+    }
+
+    fn period(&self) -> Option<u64> {
+        None
+    }
+}
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) -> Result<(), TestCaseError> {
+    prop_assert_eq!(&a.topology, &b.topology, "{}", ctx);
+    prop_assert_eq!(a.rounds, b.rounds, "{}", ctx);
+    prop_assert_eq!(
+        a.total_ms.to_bits(),
+        b.total_ms.to_bits(),
+        "{}: total_ms {} vs {}",
+        ctx,
+        a.total_ms,
+        b.total_ms
+    );
+    prop_assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{}", ctx);
+    prop_assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{}", ctx);
+    prop_assert_eq!(a.max_isolated, b.max_isolated, "{}", ctx);
+    Ok(())
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(40))]
+
+    #[test]
+    fn factored_streaming_and_naive_agree_bitwise(
+        n in 4usize..40,
+        net_seed in 1u64..1000,
+        chord_seeds in proptest::collection::vec((0usize..1000, 0usize..1000), 0..12),
+        mult_seed in 0u64..(1 << 32),
+        max_mult in 1u32..=12,
+        rounds in 1usize..160,
+    ) {
+        let net = synth::by_name(&format!("synth-geo-n{n}-s{net_seed}"))
+            .expect("synth size in range");
+        let prof = DatasetProfile::femnist();
+
+        // Ring backbone (connected, every node participates) plus
+        // random chords, deduplicated; multiplicities derived from a
+        // cheap splitmix over the pair so they are reproducible.
+        let mut pairs: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for i in 0..n - 1 {
+            pairs.insert((i, i + 1));
+        }
+        pairs.insert((0, n - 1));
+        for &(a, b) in &chord_seeds {
+            let (u, v) = (a % n, b % n);
+            if u < v {
+                pairs.insert((u, v));
+            }
+        }
+        let edges: Vec<(usize, usize, u32)> = pairs
+            .into_iter()
+            .map(|(u, v)| {
+                let h = mult_seed
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(((u as u64) << 32) | v as u64)
+                    .wrapping_mul(0xBF58476D1CE4E5B9);
+                (u, v, 1 + (h >> 33) as u32 % max_mult)
+            })
+            .collect();
+
+        let mut naive_topo = RandomMultigraph::new(n, edges.clone());
+        let naive = simulate_summary_naive(&mut naive_topo, &net, &prof, rounds);
+
+        let mut hidden = Hidden(RandomMultigraph::new(n, edges.clone()));
+        let (streamed, s_stats) =
+            simulate_summary_streaming_with_stats(&mut hidden, &net, &prof, rounds);
+        prop_assert_eq!(s_stats.kind, EngineKind::Streaming);
+        assert_bitwise(&naive, &streamed, "streaming vs naive")?;
+
+        let factored_topo = RandomMultigraph::new(n, edges.clone());
+        let (factored, f_stats) =
+            simulate_summary_factored_with_stats(&factored_topo, &net, &prof, rounds)
+                .expect("random multigraph factorizes");
+        prop_assert_eq!(f_stats.kind, EngineKind::Factored);
+        assert_bitwise(&naive, &factored, "factored vs naive")?;
+
+        // Full dispatch: periodic when the LCM fits the budget,
+        // factored otherwise — either way, same bits.
+        let mut dispatch_topo = RandomMultigraph::new(n, edges);
+        let dispatched = simulate_summary(&mut dispatch_topo, &net, &prof, rounds);
+        assert_bitwise(&naive, &dispatched, "dispatch vs naive")?;
+    }
+}
