@@ -1,4 +1,7 @@
-//! Metrics: per-round training records, loss curves, CSV/JSON writers.
+//! Metrics: per-round training records, loss curves, CSV/JSON writers,
+//! and the `mgfl optimize` search artifact ([`search::SearchReport`]).
+
+pub mod search;
 
 use std::io::Write;
 use std::path::Path;

@@ -1,0 +1,324 @@
+//! Structured `mgfl optimize` output: the accepted-move trace of every
+//! chain, the baselines the searched topology is judged against, and
+//! JSON/CSV artifact writers in [`crate::sweep::SweepReport`] style.
+//!
+//! Like sweep reports, a [`SearchReport`] is deliberately free of
+//! wall-clock and thread-count fields: it is a pure function of its
+//! [`crate::search::OptimizeSpec`], so the same spec + seed produces
+//! byte-identical artifacts on 1 thread and N threads (pinned by
+//! `tests/search_determinism.rs`). Host-side timing lives in
+//! [`crate::search::SearchOutcome`] instead.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// One genome with its fitness, as reported (start / best candidates).
+#[derive(Debug, Clone)]
+pub struct CandidateSummary {
+    /// Ring visit order (`order[0] == 0`).
+    pub order: Vec<usize>,
+    /// Chord edges beyond the ring, sorted, each `u < v`.
+    pub chords: Vec<(usize, usize)>,
+    /// Algorithm 1's t for this candidate.
+    pub t: u32,
+    /// The canonical dedup key ([`crate::search::Genome::canonical_key`]).
+    pub key: String,
+    /// Simulated fitness: mean Eq. 5 cycle time, ms.
+    pub mean_cycle_ms: f64,
+}
+
+/// One accepted transition of a chain (or its start / a restart).
+#[derive(Debug, Clone)]
+pub struct TraceStep {
+    /// Proposal step the transition happened at (0 = chain start).
+    pub step: usize,
+    /// Move name (`two_opt`, `or_opt`, `t_up`, `t_down`, `chord_add`,
+    /// `chord_drop`) or the synthetic `start` / `restart` markers.
+    pub mv: String,
+    /// Fitness after the transition, ms.
+    pub fitness_ms: f64,
+}
+
+/// The full trajectory of one search chain.
+#[derive(Debug, Clone)]
+pub struct ChainTrace {
+    /// Chain index (chain 0 starts from the paper design).
+    pub chain: usize,
+    /// Where the chain started.
+    pub start: CandidateSummary,
+    /// The best candidate the chain ever held.
+    pub best: CandidateSummary,
+    /// Accepted transitions (trace entries past the start marker).
+    pub accepted: usize,
+    /// The accepted-move trace, step-ordered, starting with `start`.
+    pub trace: Vec<TraceStep>,
+}
+
+/// A reference design the search result is compared against.
+#[derive(Debug, Clone)]
+pub struct BaselineRow {
+    /// Design name (`multigraph`, `ring`).
+    pub topology: String,
+    /// Algorithm 1's t the baseline was built with.
+    pub t: u32,
+    /// Simulated mean cycle time, ms.
+    pub mean_cycle_ms: f64,
+}
+
+/// One MATCHA budget probed alongside the overlay search.
+#[derive(Debug, Clone)]
+pub struct BudgetProbe {
+    /// Per-round matching activation budget, in (0, 1].
+    pub budget: f64,
+    /// Simulated mean cycle time, ms.
+    pub mean_cycle_ms: f64,
+}
+
+/// The full result of one `mgfl optimize` run.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    /// Artifact stem (`optimize_<name>.json` / `.csv`).
+    pub name: String,
+    /// Canonical network name searched over.
+    pub network: String,
+    /// Canonical dataset profile name.
+    pub profile: String,
+    /// Strategy that drove the chains (`hill` / `anneal`).
+    pub strategy: String,
+    /// Simulated rounds per fitness evaluation.
+    pub rounds: usize,
+    /// The spec's base seed (all chain streams derive from it).
+    pub seed: u64,
+    /// Every chain's trajectory, in chain order.
+    pub chains: Vec<ChainTrace>,
+    /// Reference designs (paper multigraph at `baseline_t`, ring).
+    pub baselines: Vec<BaselineRow>,
+    /// MATCHA budget probes (empty unless the spec lists budgets).
+    pub budget_probes: Vec<BudgetProbe>,
+    /// Index into `chains` of the winning chain (first minimum).
+    pub best_chain: usize,
+    /// The searched winner across all chains.
+    pub best: CandidateSummary,
+    /// `100 · (1 − best / multigraph-baseline)` — positive means the
+    /// searched topology beats the paper's design.
+    pub improvement_pct: f64,
+    /// Distinct genomes simulated (canonical-key dedup).
+    pub unique_evals: usize,
+    /// Fitness lookups served from the dedup cache.
+    pub cache_hits: usize,
+}
+
+fn candidate_json(c: &CandidateSummary) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "order".into(),
+        Json::Arr(c.order.iter().map(|&x| Json::Num(x as f64)).collect()),
+    );
+    m.insert(
+        "chords".into(),
+        Json::Arr(
+            c.chords
+                .iter()
+                .map(|&(u, v)| Json::Arr(vec![Json::Num(u as f64), Json::Num(v as f64)]))
+                .collect(),
+        ),
+    );
+    m.insert("t".into(), Json::Num(c.t as f64));
+    m.insert("key".into(), Json::Str(c.key.clone()));
+    m.insert("mean_cycle_ms".into(), Json::Num(c.mean_cycle_ms));
+    Json::Obj(m)
+}
+
+impl SearchReport {
+    /// JSON artifact (deterministic: BTreeMap keys, chain-ordered
+    /// traces, no host timing).
+    pub fn to_json(&self) -> Json {
+        let chains: Vec<Json> = self
+            .chains
+            .iter()
+            .map(|c| {
+                let mut m = BTreeMap::new();
+                m.insert("chain".into(), Json::Num(c.chain as f64));
+                m.insert("start".into(), candidate_json(&c.start));
+                m.insert("best".into(), candidate_json(&c.best));
+                m.insert("accepted".into(), Json::Num(c.accepted as f64));
+                let trace: Vec<Json> = c
+                    .trace
+                    .iter()
+                    .map(|s| {
+                        let mut t = BTreeMap::new();
+                        t.insert("step".into(), Json::Num(s.step as f64));
+                        t.insert("move".into(), Json::Str(s.mv.clone()));
+                        t.insert("fitness_ms".into(), Json::Num(s.fitness_ms));
+                        Json::Obj(t)
+                    })
+                    .collect();
+                m.insert("trace".into(), Json::Arr(trace));
+                Json::Obj(m)
+            })
+            .collect();
+        let baselines: Vec<Json> = self
+            .baselines
+            .iter()
+            .map(|b| {
+                let mut m = BTreeMap::new();
+                m.insert("topology".into(), Json::Str(b.topology.clone()));
+                m.insert("t".into(), Json::Num(b.t as f64));
+                m.insert("mean_cycle_ms".into(), Json::Num(b.mean_cycle_ms));
+                Json::Obj(m)
+            })
+            .collect();
+        let probes: Vec<Json> = self
+            .budget_probes
+            .iter()
+            .map(|p| {
+                let mut m = BTreeMap::new();
+                m.insert("budget".into(), Json::Num(p.budget));
+                m.insert("mean_cycle_ms".into(), Json::Num(p.mean_cycle_ms));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("name".into(), Json::Str(self.name.clone()));
+        top.insert("network".into(), Json::Str(self.network.clone()));
+        top.insert("profile".into(), Json::Str(self.profile.clone()));
+        top.insert("strategy".into(), Json::Str(self.strategy.clone()));
+        top.insert("rounds".into(), Json::Num(self.rounds as f64));
+        // Base seeds are validated < 2^53 so the JSON number is exact.
+        top.insert("seed".into(), Json::Num(self.seed as f64));
+        top.insert("chains".into(), Json::Arr(chains));
+        top.insert("baselines".into(), Json::Arr(baselines));
+        top.insert("budget_probes".into(), Json::Arr(probes));
+        top.insert("best_chain".into(), Json::Num(self.best_chain as f64));
+        top.insert("best".into(), candidate_json(&self.best));
+        top.insert("improvement_pct".into(), Json::Num(self.improvement_pct));
+        top.insert("unique_evals".into(), Json::Num(self.unique_evals as f64));
+        top.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+        Json::Obj(top)
+    }
+
+    /// CSV artifact: the accepted-move trace, one row per transition,
+    /// chain-major step-minor (deterministic).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("chain,step,move,mean_cycle_ms\n");
+        for c in &self.chains {
+            for s in &c.trace {
+                let _ = writeln!(out, "{},{},{},{:.6}", c.chain, s.step, s.mv, s.fitness_ms);
+            }
+        }
+        out
+    }
+
+    /// Write `<dir>/optimize_<name>.json` + `.csv`; returns both paths.
+    pub fn write_artifacts(&self, dir: impl AsRef<Path>) -> Result<(PathBuf, PathBuf)> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let json_path = dir.join(format!("optimize_{}.json", self.name));
+        let csv_path = dir.join(format!("optimize_{}.csv", self.name));
+        std::fs::write(&json_path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", json_path.display()))?;
+        std::fs::write(&csv_path, self.to_csv())
+            .with_context(|| format!("writing {}", csv_path.display()))?;
+        Ok((json_path, csv_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn candidate(t: u32, f: f64) -> CandidateSummary {
+        CandidateSummary {
+            order: vec![0, 2, 1],
+            chords: vec![(0, 1)],
+            t,
+            key: format!("overlay/o=0,1,2;c=0-1;t={t}"),
+            mean_cycle_ms: f,
+        }
+    }
+
+    fn report() -> SearchReport {
+        SearchReport {
+            name: "test".into(),
+            network: "gaia".into(),
+            profile: "femnist".into(),
+            strategy: "hill".into(),
+            rounds: 60,
+            seed: 17,
+            chains: vec![ChainTrace {
+                chain: 0,
+                start: candidate(5, 20.0),
+                best: candidate(7, 14.5),
+                accepted: 2,
+                trace: vec![
+                    TraceStep { step: 0, mv: "start".into(), fitness_ms: 20.0 },
+                    TraceStep { step: 3, mv: "two_opt".into(), fitness_ms: 16.25 },
+                    TraceStep { step: 9, mv: "t_up".into(), fitness_ms: 14.5 },
+                ],
+            }],
+            baselines: vec![BaselineRow {
+                topology: "multigraph".into(),
+                t: 5,
+                mean_cycle_ms: 20.0,
+            }],
+            budget_probes: vec![BudgetProbe { budget: 0.5, mean_cycle_ms: 33.0 }],
+            best_chain: 0,
+            best: candidate(7, 14.5),
+            improvement_pct: 27.5,
+            unique_evals: 9,
+            cache_hits: 4,
+        }
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let r = report();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "test");
+        assert_eq!(j.get("best_chain").unwrap().as_usize().unwrap(), 0);
+        let best = j.get("best").unwrap();
+        assert_eq!(best.get("t").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(best.get("order").unwrap().as_arr().unwrap().len(), 3);
+        let chains = j.get("chains").unwrap().as_arr().unwrap();
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].get("trace").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            chains[0].get("trace").unwrap().as_arr().unwrap()[1]
+                .get("move")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "two_opt"
+        );
+        assert_eq!(j.get("baselines").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("budget_probes").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("unique_evals").unwrap().as_usize().unwrap(), 9);
+    }
+
+    #[test]
+    fn csv_lists_the_trace_in_order() {
+        let csv = report().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "chain,step,move,mean_cycle_ms");
+        assert_eq!(lines[1], "0,0,start,20.000000");
+        assert_eq!(lines[2], "0,3,two_opt,16.250000");
+        assert_eq!(lines[3], "0,9,t_up,14.500000");
+        assert_eq!(lines.len(), 4);
+    }
+
+    #[test]
+    fn artifacts_round_trip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("mgfl_search_report_{}", std::process::id()));
+        let (json_path, csv_path) = report().write_artifacts(&dir).unwrap();
+        assert!(json_path.ends_with("optimize_test.json"));
+        let parsed = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(parsed.get("chains").unwrap().as_arr().unwrap().len(), 1);
+        assert!(std::fs::read_to_string(&csv_path).unwrap().starts_with("chain,"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,304 @@
+//! The search space: a genome is (ring order, chord set, t).
+//!
+//! Every genome describes a connected overlay — a Hamiltonian ring in
+//! `order` plus optional chord edges — and the Algorithm-1 parameter
+//! `t`. The move set mutates all three: `two_opt`/`or_opt` reorder the
+//! ring (classic TSP neighborhoods), `t_up`/`t_down` step the edge
+//! multiplicity cap, `chord_add`/`chord_drop` edit the chord set under
+//! the spec's degree bound. RNG consumption order is part of the
+//! determinism contract (`tests/search_determinism.rs` pins report
+//! bytes): a proposal that turns out invalid still consumed exactly the
+//! draws it made before failing.
+
+use crate::graph::Graph;
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::util::rng::Rng64;
+
+use super::spec::OptimizeSpec;
+
+/// One point of the search space: a ring permutation (always starting
+/// at silo 0 — rotations are equivalent, so the anchor costs nothing),
+/// a sorted chord list (`u < v`, not ring edges), and Algorithm 1's t.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Genome {
+    /// Ring visit order; `order[0] == 0` always.
+    pub order: Vec<usize>,
+    /// Extra overlay edges beyond the ring, sorted, each `u < v`.
+    pub chords: Vec<(usize, usize)>,
+    /// Algorithm 1's max edge multiplicity for this candidate.
+    pub t: u32,
+}
+
+impl Genome {
+    /// Canonical cache key: ring direction is normalized (a ring read
+    /// backwards is the same overlay), chords are already sorted, and
+    /// `t` is appended — so two genomes with equal keys build identical
+    /// multigraphs and therefore identical fitness bits. The key's
+    /// insertion-order independence is safe because overlay edge order
+    /// never changes fitness: Eq. 4/5 reduce edges through `f64::max`
+    /// and per-edge state, both order-independent.
+    pub fn canonical_key(&self) -> String {
+        let o = &self.order;
+        debug_assert_eq!(o[0], 0, "genome ring must be anchored at silo 0");
+        let canon: Vec<usize> = if o.len() > 2 && o[1] > o[o.len() - 1] {
+            let mut v = Vec::with_capacity(o.len());
+            v.push(o[0]);
+            v.extend(o[1..].iter().rev().copied());
+            v
+        } else {
+            o.clone()
+        };
+        let order_s =
+            canon.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+        let chord_s = self
+            .chords
+            .iter()
+            .map(|(u, v)| format!("{u}-{v}"))
+            .collect::<Vec<_>>()
+            .join(";");
+        format!("overlay/o={order_s};c={chord_s};t={}", self.t)
+    }
+
+    /// Materialize the overlay graph (ring edges in order, then chords)
+    /// with Eq. 3 degree-1 connectivity weights — the same weights the
+    /// paper's overlay carries; Algorithm 1 recomputes true delays from
+    /// overlay degrees, so the stored weights are bookkeeping only.
+    pub fn overlay(&self, net: &NetworkSpec, profile: &DatasetProfile) -> Graph {
+        let mut g = Graph::new(net.n());
+        let k = self.order.len();
+        for i in 0..k {
+            let (u, v) = (self.order[i], self.order[(i + 1) % k]);
+            g.add_edge(u, v, net.conn_weight(profile, u, v));
+        }
+        for &(u, v) in &self.chords {
+            g.add_edge(u, v, net.conn_weight(profile, u, v));
+        }
+        g
+    }
+
+    /// Overlay degree of every node (ring contributes 2 each, chords 1
+    /// per endpoint) — what `chord_add` checks against `max_degree`.
+    pub fn degrees(&self, n: usize) -> Vec<usize> {
+        let mut deg = vec![0usize; n];
+        let k = self.order.len();
+        for i in 0..k {
+            deg[self.order[i]] += 1;
+            deg[self.order[(i + 1) % k]] += 1;
+        }
+        for &(u, v) in &self.chords {
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+        deg
+    }
+
+    /// Whether `(u, v)` (normalized `u < v`) is one of the ring edges.
+    fn has_ring_pair(&self, u: usize, v: usize) -> bool {
+        let k = self.order.len();
+        (0..k).any(|i| {
+            let (a, b) = (self.order[i], self.order[(i + 1) % k]);
+            (a.min(b), a.max(b)) == (u, v)
+        })
+    }
+}
+
+/// Propose one mutation of `genome`. Returns `None` when the drawn move
+/// is invalid in this state (t at its bound, chord duplicate/degree
+/// violation, empty chord list) — the chain treats that as a skipped
+/// step. The kind is drawn uniformly from the moves the spec enables;
+/// each arm's RNG draws are fixed per kind (see module docs).
+pub fn propose(
+    genome: &Genome,
+    rng: &mut Rng64,
+    n: usize,
+    spec: &OptimizeSpec,
+) -> Option<(Genome, &'static str)> {
+    let mut kinds: Vec<&'static str> = vec!["two_opt", "or_opt"];
+    if spec.t_min < spec.t_max {
+        kinds.push("t_up");
+        kinds.push("t_down");
+    }
+    if spec.max_degree > 2 {
+        kinds.push("chord_add");
+        kinds.push("chord_drop");
+    }
+    let kind = kinds[rng.gen_range(0, kinds.len())];
+    let mut g = genome.clone();
+    match kind {
+        "two_opt" => {
+            // Reverse a segment that never includes the anchor 0.
+            let i = rng.gen_range(1, n - 1);
+            let j = rng.gen_range(i + 1, n);
+            g.order[i..=j].reverse();
+            Some((g, kind))
+        }
+        "or_opt" => {
+            // Relocate one node to another position past the anchor.
+            let i = rng.gen_range(1, n);
+            let j = rng.gen_range(1, n);
+            let node = g.order.remove(i);
+            let pos = j.min(g.order.len());
+            g.order.insert(pos, node);
+            Some((g, kind))
+        }
+        "t_up" => {
+            if g.t >= spec.t_max {
+                return None;
+            }
+            g.t += 1;
+            Some((g, kind))
+        }
+        "t_down" => {
+            if g.t <= spec.t_min {
+                return None;
+            }
+            g.t -= 1;
+            Some((g, kind))
+        }
+        "chord_add" => {
+            let u = rng.gen_range(0, n);
+            let v = rng.gen_range(0, n);
+            if u == v {
+                return None;
+            }
+            let (u, v) = (u.min(v), u.max(v));
+            if g.has_ring_pair(u, v) || g.chords.contains(&(u, v)) {
+                return None;
+            }
+            let deg = g.degrees(n);
+            if deg[u] >= spec.max_degree || deg[v] >= spec.max_degree {
+                return None;
+            }
+            g.chords.push((u, v));
+            g.chords.sort_unstable();
+            Some((g, kind))
+        }
+        "chord_drop" => {
+            if g.chords.is_empty() {
+                return None;
+            }
+            let i = rng.gen_range(0, g.chords.len());
+            g.chords.remove(i);
+            Some((g, kind))
+        }
+        _ => unreachable!("kind drawn from the kinds list"),
+    }
+}
+
+/// A uniformly random genome: shuffled ring order (anchor fixed at 0),
+/// uniform `t` in `[t_min, t_max]`, no chords. Used for chain starts
+/// (chains past 0) and hill-climbing restarts.
+pub fn random_genome(rng: &mut Rng64, n: usize, spec: &OptimizeSpec) -> Genome {
+    let mut rest: Vec<usize> = (1..n).collect();
+    rng.shuffle(&mut rest);
+    let t = spec.t_min + rng.gen_range(0, (spec.t_max - spec.t_min + 1) as usize) as u32;
+    let mut order = Vec::with_capacity(n);
+    order.push(0);
+    order.extend(rest);
+    Genome { order, chords: Vec::new(), t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::named_stream;
+
+    fn spec() -> OptimizeSpec {
+        OptimizeSpec::default()
+    }
+
+    #[test]
+    fn canonical_key_normalizes_ring_direction() {
+        let a = Genome { order: vec![0, 1, 2, 3], chords: vec![], t: 5 };
+        let b = Genome { order: vec![0, 3, 2, 1], chords: vec![], t: 5 };
+        assert_eq!(a.canonical_key(), b.canonical_key());
+        let c = Genome { order: vec![0, 1, 2, 3], chords: vec![], t: 4 };
+        assert_ne!(a.canonical_key(), c.canonical_key(), "t is part of the key");
+        let d = Genome { order: vec![0, 1, 2, 3], chords: vec![(0, 2)], t: 5 };
+        assert_ne!(a.canonical_key(), d.canonical_key(), "chords are part of the key");
+        assert_eq!(a.canonical_key(), "overlay/o=0,1,2,3;c=;t=5");
+        assert_eq!(d.canonical_key(), "overlay/o=0,1,2,3;c=0-2;t=5");
+    }
+
+    #[test]
+    fn overlay_and_degrees_agree() {
+        let net = crate::net::zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let g = Genome {
+            order: (0..net.n()).collect(),
+            chords: vec![(0, 5), (2, 7)],
+            t: 5,
+        };
+        let ov = g.overlay(&net, &p);
+        assert!(ov.is_connected());
+        assert_eq!(ov.edges().len(), net.n() + 2);
+        let deg = g.degrees(net.n());
+        for u in 0..net.n() {
+            assert_eq!(ov.degree(u), deg[u], "node {u}");
+        }
+        assert_eq!(deg[0], 3);
+        assert_eq!(deg[1], 2);
+    }
+
+    #[test]
+    fn proposals_keep_invariants() {
+        let spec = spec();
+        let n = 11;
+        let mut rng = Rng64::seed_from_u64(named_stream(7, "genome-test"));
+        let mut cur = random_genome(&mut rng, n, &spec);
+        let mut seen_kinds = std::collections::BTreeSet::new();
+        let mut valid = 0;
+        for _ in 0..2000 {
+            if let Some((g, kind)) = propose(&cur, &mut rng, n, &spec) {
+                seen_kinds.insert(kind);
+                valid += 1;
+                assert_eq!(g.order[0], 0, "anchor must survive {kind}");
+                let mut sorted = g.order.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "{kind} broke the permutation");
+                assert!((spec.t_min..=spec.t_max).contains(&g.t), "{kind} broke t bounds");
+                let mut chords_sorted = g.chords.clone();
+                chords_sorted.sort_unstable();
+                assert_eq!(chords_sorted, g.chords, "{kind} left chords unsorted");
+                for &(u, v) in &g.chords {
+                    assert!(u < v);
+                    assert!(!g.has_ring_pair(u, v), "{kind} duplicated a ring edge");
+                }
+                let deg = g.degrees(n);
+                assert!(
+                    deg.iter().all(|&d| d <= spec.max_degree),
+                    "{kind} violated max_degree: {deg:?}"
+                );
+                cur = g;
+            }
+        }
+        assert!(valid > 1000, "most proposals should be valid ({valid}/2000)");
+        for kind in ["two_opt", "or_opt", "t_up", "t_down", "chord_add", "chord_drop"] {
+            assert!(seen_kinds.contains(kind), "move {kind} never accepted-proposed");
+        }
+    }
+
+    #[test]
+    fn ring_only_spec_disables_chords_and_t_moves() {
+        let spec = OptimizeSpec { t_min: 5, t_max: 5, max_degree: 2, ..Default::default() };
+        let mut rng = Rng64::seed_from_u64(3);
+        let start = random_genome(&mut rng, 8, &spec);
+        assert_eq!(start.t, 5);
+        for _ in 0..200 {
+            let (g, kind) = propose(&start, &mut rng, 8, &spec).expect("ring moves always valid");
+            assert!(kind == "two_opt" || kind == "or_opt", "unexpected move {kind}");
+            assert_eq!(g.t, 5);
+            assert!(g.chords.is_empty());
+        }
+    }
+
+    #[test]
+    fn random_genome_is_deterministic_in_seed() {
+        let spec = spec();
+        let a = random_genome(&mut Rng64::seed_from_u64(9), 11, &spec);
+        let b = random_genome(&mut Rng64::seed_from_u64(9), 11, &spec);
+        assert_eq!(a, b);
+        let c = random_genome(&mut Rng64::seed_from_u64(10), 11, &spec);
+        assert!(a != c || a.t != c.t, "different seeds should diverge");
+    }
+}

@@ -1,0 +1,519 @@
+//! `mgfl optimize`: simulator-driven topology search.
+//!
+//! The paper hand-picks six designs and shows the multigraph wins;
+//! this module treats topology as an optimization problem instead
+//! (following Marfoq et al.'s framing) and uses the simulation engine
+//! as a fitness oracle. A [`Genome`] — ring order, chord set, t — is
+//! mutated by the moves in [`genome`], materialized as a
+//! [`crate::topo::CandidateTopology`], and scored by its simulated
+//! mean Eq. 5 cycle time over the spec's round budget. Chains run in
+//! parallel over the sweep thread pool ([`crate::sweep::run_cells`]),
+//! share a canonical-key fitness cache, and evaluate through the same
+//! pooled scratch the sweep workers use
+//! ([`crate::sweep::simulate_design_pooled`]), so a repeated candidate
+//! costs a hash lookup.
+//!
+//! Determinism contract: the [`SearchReport`] is a pure function of
+//! the [`OptimizeSpec`]. Chain c's RNG is
+//! `named_stream(seed, "optimize/chain/{c}")`, random starts use
+//! `"optimize/init/{c}"`, and the shared cache only dedups work (equal
+//! keys ⇒ equal fitness bits), so thread count and scheduling never
+//! change a single reported byte (`tests/search_determinism.rs`).
+
+pub mod genome;
+pub mod spec;
+
+pub use genome::{propose, random_genome, Genome};
+pub use spec::{OptimizeSpec, StrategyKind};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::TopologyKind;
+use crate::graph::christofides_cycle_dense;
+use crate::metrics::search::{
+    BaselineRow, BudgetProbe, CandidateSummary, ChainTrace, SearchReport, TraceStep,
+};
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::sweep::spec::{cell_stream, CellSpec};
+use crate::sweep::{
+    run_cell_cached, run_cells, simulate_design_pooled, BuildOnce, RunOptions, SweepCache,
+};
+use crate::topo::matcha::MatchaTopology;
+use crate::topo::CandidateTopology;
+use crate::util::rng::{named_stream, Rng64};
+
+/// The shared fitness oracle: genome → simulated mean cycle time, with
+/// a [`BuildOnce`] cache keyed by [`Genome::canonical_key`] so any
+/// candidate is simulated at most once per search, across all chains.
+/// Cache sharing affects cost only, never values: equal keys mean
+/// equal multigraphs mean bit-equal summaries.
+pub struct Evaluator<'a> {
+    net: &'a NetworkSpec,
+    profile: &'a DatasetProfile,
+    rounds: usize,
+    cache: BuildOnce<String, f64>,
+    lookups: AtomicUsize,
+}
+
+impl<'a> Evaluator<'a> {
+    /// A fresh oracle over `(net, profile)` at `rounds` per evaluation.
+    pub fn new(net: &'a NetworkSpec, profile: &'a DatasetProfile, rounds: usize) -> Self {
+        Evaluator {
+            net,
+            profile,
+            rounds,
+            cache: BuildOnce::default(),
+            lookups: AtomicUsize::new(0),
+        }
+    }
+
+    /// Fitness of `g`: mean Eq. 5 cycle time (ms) of its
+    /// [`CandidateTopology`], simulated through the pooled-scratch
+    /// engine dispatcher — bit-identical to
+    /// [`crate::simtime::simulate_summary_naive`] on the same design.
+    pub fn fitness(&self, g: &Genome) -> f64 {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let key = g.canonical_key();
+        self.cache.get_or_build(&key, || {
+            let overlay = g.overlay(self.net, self.profile);
+            let mut topo = CandidateTopology::new(overlay, self.net, self.profile, g.t);
+            simulate_design_pooled(&mut topo, self.net, self.profile, self.rounds)
+                .0
+                .mean_cycle_ms
+        })
+    }
+
+    /// Distinct genomes actually simulated.
+    pub fn unique_evals(&self) -> usize {
+        self.cache.entries()
+    }
+
+    /// Fitness lookups served from the cache (lookups − unique). Both
+    /// counts are thread-count invariant: each chain's trajectory — and
+    /// so its lookup sequence — is a pure function of the spec.
+    pub fn cache_hits(&self) -> usize {
+        self.lookups.load(Ordering::Relaxed) - self.cache.entries()
+    }
+}
+
+/// One accepted transition in a chain (search-side view; the report
+/// stores [`crate::metrics::search::TraceStep`]).
+#[derive(Debug, Clone)]
+pub struct ChainStep {
+    /// Proposal step (0 = start marker).
+    pub step: usize,
+    /// Move name, or `start` / `restart`.
+    pub mv: &'static str,
+    /// Fitness after the transition, ms.
+    pub fitness_ms: f64,
+}
+
+/// The outcome of one chain.
+#[derive(Debug, Clone)]
+pub struct ChainResult {
+    /// Chain index.
+    pub chain: usize,
+    /// The genome the chain started from.
+    pub start: Genome,
+    /// Fitness of `start`, ms.
+    pub start_fitness_ms: f64,
+    /// Best genome the chain ever held.
+    pub best: Genome,
+    /// Fitness of `best`, ms.
+    pub best_fitness_ms: f64,
+    /// Accepted-move trace, beginning with the `start` marker.
+    pub trace: Vec<ChainStep>,
+}
+
+/// A chain driver: consumes `steps` proposals from the chain's own RNG
+/// stream and returns the trajectory. Implementations must draw RNG
+/// values in a fixed order per step so runs are reproducible.
+pub trait SearchStrategy: Sync {
+    /// Spec/report spelling of the strategy.
+    fn name(&self) -> &'static str;
+
+    /// Run chain `chain` from `start` to completion.
+    fn run_chain(
+        &self,
+        chain: usize,
+        start: Genome,
+        ev: &Evaluator<'_>,
+        spec: &OptimizeSpec,
+    ) -> ChainResult;
+}
+
+/// The chain's deterministic RNG: stream `"optimize/chain/{c}"` of the
+/// spec seed, independent of every other chain and of execution order.
+fn chain_rng(spec: &OptimizeSpec, chain: usize) -> Rng64 {
+    Rng64::seed_from_u64(named_stream(spec.seed, &format!("optimize/chain/{chain}")))
+}
+
+/// Greedy hill-climbing: accept strictly-improving proposals only;
+/// after `restart_after` consecutive rejections, jump to a fresh
+/// random genome (drawn from the same chain stream) and keep going.
+pub struct HillClimb;
+
+impl SearchStrategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hill"
+    }
+
+    fn run_chain(
+        &self,
+        chain: usize,
+        start: Genome,
+        ev: &Evaluator<'_>,
+        spec: &OptimizeSpec,
+    ) -> ChainResult {
+        let n = start.order.len();
+        let mut rng = chain_rng(spec, chain);
+        let mut cur = start.clone();
+        let mut f_cur = ev.fitness(&cur);
+        let start_fitness_ms = f_cur;
+        let mut best = cur.clone();
+        let mut f_best = f_cur;
+        let mut trace = vec![ChainStep { step: 0, mv: "start", fitness_ms: f_cur }];
+        let mut stall = 0usize;
+        for step in 1..=spec.steps {
+            let Some((g, mv)) = propose(&cur, &mut rng, n, spec) else {
+                continue;
+            };
+            let f = ev.fitness(&g);
+            if f < f_cur {
+                cur = g;
+                f_cur = f;
+                stall = 0;
+                trace.push(ChainStep { step, mv, fitness_ms: f });
+                if f < f_best {
+                    best = cur.clone();
+                    f_best = f;
+                }
+            } else {
+                stall += 1;
+                if stall >= spec.restart_after {
+                    cur = random_genome(&mut rng, n, spec);
+                    f_cur = ev.fitness(&cur);
+                    stall = 0;
+                    trace.push(ChainStep { step, mv: "restart", fitness_ms: f_cur });
+                    if f_cur < f_best {
+                        best = cur.clone();
+                        f_best = f_cur;
+                    }
+                }
+            }
+        }
+        ChainResult { chain, start, start_fitness_ms, best, best_fitness_ms: f_best, trace }
+    }
+}
+
+/// Simulated annealing: geometric cooling (`temp *= alpha` each step),
+/// Metropolis acceptance `exp(-(f - f_cur) / temp)` for worsening
+/// proposals. The acceptance draw is taken only for non-improving
+/// proposals (short-circuit), which is part of the RNG contract.
+pub struct Anneal;
+
+impl SearchStrategy for Anneal {
+    fn name(&self) -> &'static str {
+        "anneal"
+    }
+
+    fn run_chain(
+        &self,
+        chain: usize,
+        start: Genome,
+        ev: &Evaluator<'_>,
+        spec: &OptimizeSpec,
+    ) -> ChainResult {
+        let n = start.order.len();
+        let mut rng = chain_rng(spec, chain);
+        let mut cur = start.clone();
+        let mut f_cur = ev.fitness(&cur);
+        let start_fitness_ms = f_cur;
+        let mut best = cur.clone();
+        let mut f_best = f_cur;
+        let mut trace = vec![ChainStep { step: 0, mv: "start", fitness_ms: f_cur }];
+        let mut temp = spec.anneal_t0;
+        for step in 1..=spec.steps {
+            temp *= spec.anneal_alpha;
+            let Some((g, mv)) = propose(&cur, &mut rng, n, spec) else {
+                continue;
+            };
+            let f = ev.fitness(&g);
+            let accept = f < f_cur || rng.gen_f64() < (-(f - f_cur) / temp).exp();
+            if accept {
+                cur = g;
+                f_cur = f;
+                trace.push(ChainStep { step, mv, fitness_ms: f });
+                if f < f_best {
+                    best = cur.clone();
+                    f_best = f;
+                }
+            }
+        }
+        ChainResult { chain, start, start_fitness_ms, best, best_fitness_ms: f_best, trace }
+    }
+}
+
+/// A finished search: the deterministic report plus host-side stats
+/// (which deliberately stay out of the artifacts, mirroring
+/// [`crate::sweep::SweepOutcome`]).
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    /// The deterministic artifact (pure function of the spec).
+    pub report: SearchReport,
+    /// Wall-clock of the whole search, ms.
+    pub host_elapsed_ms: f64,
+    /// Worker threads the chains ran on.
+    pub threads: usize,
+}
+
+fn summarize(g: &Genome, fitness_ms: f64) -> CandidateSummary {
+    CandidateSummary {
+        order: g.order.clone(),
+        chords: g.chords.clone(),
+        t: g.t,
+        key: g.canonical_key(),
+        mean_cycle_ms: fitness_ms,
+    }
+}
+
+/// The genome chain 0 starts from: the paper's Christofides ring at
+/// `baseline_t` (clamped into the search's t range), no chords. Its
+/// fitness is bit-identical to the paper-multigraph baseline —
+/// [`crate::graph::ring_overlay_dense`] emits exactly these
+/// consecutive-pair edges — so the searched best can never lose to the
+/// paper design under hill-climbing.
+pub fn paper_start(net: &NetworkSpec, profile: &DatasetProfile, spec: &OptimizeSpec) -> Genome {
+    let cycle = christofides_cycle_dense(&net.connectivity_dense(profile));
+    Genome {
+        order: cycle,
+        chords: Vec::new(),
+        t: spec.baseline_t.clamp(spec.t_min, spec.t_max),
+    }
+}
+
+/// Run the full search: baselines through the literal sweep-cell cache
+/// path, then all chains in parallel over the shared fitness oracle,
+/// then the MATCHA budget probes. Returns the report plus host stats.
+pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
+    let spec = {
+        let mut s = spec.clone();
+        s.canonicalize()?;
+        s
+    };
+    spec.validate()?;
+    let net = crate::net::by_name(&spec.network).expect("validated network");
+    let profile = DatasetProfile::by_name(&spec.profile).expect("validated profile");
+    let n = net.n();
+    let t0 = Instant::now();
+
+    // Baselines go through run_cell_cached — the same CellFingerprint
+    // path the sweep engine uses — so an optimize report's baseline row
+    // is bit-identical to the equivalent sweep cell.
+    let cache = SweepCache::default();
+    let baselines: Vec<BaselineRow> = [TopologyKind::Multigraph, TopologyKind::Ring]
+        .iter()
+        .map(|&kind| {
+            let cell = CellSpec {
+                index: 0,
+                topology: kind,
+                network: spec.network.clone(),
+                profile: spec.profile.clone(),
+                t: spec.baseline_t,
+                base_seed: spec.seed,
+                cell_seed: cell_stream(
+                    spec.seed,
+                    kind,
+                    &spec.network,
+                    &spec.profile,
+                    spec.baseline_t,
+                ),
+                rounds: spec.rounds,
+            };
+            let s = run_cell_cached(&cell, &cache);
+            BaselineRow { topology: s.topology, t: cell.t, mean_cycle_ms: s.mean_cycle_ms }
+        })
+        .collect();
+    let multigraph_baseline_ms = baselines[0].mean_cycle_ms;
+
+    // Chain starts: chain 0 from the paper design, the rest random,
+    // each from its own "optimize/init/{c}" stream (separate from the
+    // chain's proposal stream so adding steps never reshuffles starts).
+    let starts: Vec<Genome> = (0..spec.chains)
+        .map(|c| {
+            if c == 0 {
+                paper_start(&net, &profile, &spec)
+            } else {
+                let mut rng =
+                    Rng64::seed_from_u64(named_stream(spec.seed, &format!("optimize/init/{c}")));
+                random_genome(&mut rng, n, &spec)
+            }
+        })
+        .collect();
+
+    let strategy: &dyn SearchStrategy = match spec.strategy {
+        StrategyKind::Hill => &HillClimb,
+        StrategyKind::Anneal => &Anneal,
+    };
+    let ev = Evaluator::new(&net, &profile, spec.rounds);
+    let inner = RunOptions { threads: opts.threads, progress: false, dedup: true };
+    let results: Vec<ChainResult> =
+        run_cells(&starts, &inner, |i, start| strategy.run_chain(i, start.clone(), &ev, &spec));
+    let threads = crate::sweep::effective_threads(opts.threads, starts.len());
+
+    // Winner: minimum best fitness, first chain wins ties.
+    let mut best_chain = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        if r.best_fitness_ms < results[best_chain].best_fitness_ms {
+            best_chain = i;
+        }
+    }
+    let best = summarize(&results[best_chain].best, results[best_chain].best_fitness_ms);
+    let improvement_pct = 100.0 * (1.0 - best.mean_cycle_ms / multigraph_baseline_ms);
+
+    // MATCHA budget probes: reported alongside, never a search winner
+    // (a different design family; listed for the comparison table).
+    let budget_probes: Vec<BudgetProbe> = spec
+        .matcha_budgets
+        .iter()
+        .map(|&budget| {
+            let seed = named_stream(spec.seed, &format!("optimize/matcha/{budget}"));
+            let mut topo = MatchaTopology::new(&net, &profile, budget, seed);
+            let (s, _) = simulate_design_pooled(&mut topo, &net, &profile, spec.rounds);
+            BudgetProbe { budget, mean_cycle_ms: s.mean_cycle_ms }
+        })
+        .collect();
+
+    let chains: Vec<ChainTrace> = results
+        .iter()
+        .map(|r| ChainTrace {
+            chain: r.chain,
+            start: summarize(&r.start, r.start_fitness_ms),
+            best: summarize(&r.best, r.best_fitness_ms),
+            accepted: r.trace.len().saturating_sub(1),
+            trace: r
+                .trace
+                .iter()
+                .map(|s| TraceStep {
+                    step: s.step,
+                    mv: s.mv.to_string(),
+                    fitness_ms: s.fitness_ms,
+                })
+                .collect(),
+        })
+        .collect();
+
+    let report = SearchReport {
+        name: spec.name.clone(),
+        network: spec.network.clone(),
+        profile: spec.profile.clone(),
+        strategy: spec.strategy.as_str().to_string(),
+        rounds: spec.rounds,
+        seed: spec.seed,
+        chains,
+        baselines,
+        budget_probes,
+        best_chain,
+        best,
+        improvement_pct,
+        unique_evals: ev.unique_evals(),
+        cache_hits: ev.cache_hits(),
+    };
+    Ok(SearchOutcome {
+        report,
+        host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
+        threads,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+
+    fn tiny_spec() -> OptimizeSpec {
+        OptimizeSpec {
+            name: "tiny".into(),
+            rounds: 60,
+            chains: 2,
+            steps: 30,
+            restart_after: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn chain0_start_matches_the_multigraph_baseline_bitwise() {
+        let spec = tiny_spec();
+        let outcome = run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
+        let r = &outcome.report;
+        assert_eq!(r.baselines[0].topology, "multigraph");
+        assert_eq!(
+            r.chains[0].start.mean_cycle_ms.to_bits(),
+            r.baselines[0].mean_cycle_ms.to_bits(),
+            "chain 0 must start exactly at the paper design"
+        );
+        // Hill-climbing only ever improves, so the winner can't lose.
+        assert!(r.best.mean_cycle_ms <= r.baselines[0].mean_cycle_ms);
+        assert!(r.improvement_pct >= 0.0);
+    }
+
+    #[test]
+    fn evaluator_dedups_by_canonical_key() {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let ev = Evaluator::new(&net, &p, 40);
+        let g = Genome { order: (0..net.n()).collect(), chords: vec![], t: 5 };
+        let mut rev: Vec<usize> = g.order.clone();
+        rev[1..].reverse();
+        let g_rev = Genome { order: rev, chords: vec![], t: 5 };
+        let f1 = ev.fitness(&g);
+        let f2 = ev.fitness(&g);
+        let f3 = ev.fitness(&g_rev);
+        assert_eq!(f1.to_bits(), f2.to_bits());
+        assert_eq!(f1.to_bits(), f3.to_bits(), "reversed ring is the same overlay");
+        assert_eq!(ev.unique_evals(), 1);
+        assert_eq!(ev.cache_hits(), 2);
+    }
+
+    #[test]
+    fn strategies_have_matching_names() {
+        assert_eq!(HillClimb.name(), StrategyKind::Hill.as_str());
+        assert_eq!(Anneal.name(), StrategyKind::Anneal.as_str());
+    }
+
+    #[test]
+    fn anneal_runs_and_reports() {
+        let spec = OptimizeSpec { strategy: StrategyKind::Anneal, ..tiny_spec() };
+        let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
+        let r = &outcome.report;
+        assert_eq!(r.strategy, "anneal");
+        assert_eq!(r.chains.len(), 2);
+        // Annealing can wander uphill, but best is tracked separately
+        // and chain 0 starts at the baseline, so best <= baseline.
+        assert!(r.best.mean_cycle_ms <= r.baselines[0].mean_cycle_ms);
+        for c in &r.chains {
+            assert_eq!(c.trace[0].mv, "start");
+            assert_eq!(c.accepted, c.trace.len() - 1);
+        }
+    }
+
+    #[test]
+    fn budget_probes_ride_in_the_report() {
+        let spec = OptimizeSpec {
+            matcha_budgets: vec![0.5, 1.0],
+            chains: 1,
+            steps: 5,
+            rounds: 40,
+            ..tiny_spec()
+        };
+        let outcome = run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
+        let probes = &outcome.report.budget_probes;
+        assert_eq!(probes.len(), 2);
+        assert_eq!(probes[0].budget, 0.5);
+        assert!(probes.iter().all(|p| p.mean_cycle_ms > 0.0));
+    }
+}

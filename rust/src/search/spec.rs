@@ -1,0 +1,386 @@
+//! Optimize specifications: the knobs of one `mgfl optimize` run as a
+//! typed value with the same TOML-subset loader dialect as
+//! [`crate::sweep::SweepSpec`] (comments, flat `key = value`, `[list]`
+//! values), plus canonicalize/validate so committed specs are
+//! coordinate-stable. See `rust/docs/SPECS.md` for the key-by-key
+//! reference.
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::net::DatasetProfile;
+use crate::sweep::spec::{one, split_values};
+
+/// Which [`crate::search::SearchStrategy`] drives the chains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Greedy hill-climbing with random restarts after a stall.
+    Hill,
+    /// Simulated annealing (Metropolis acceptance, geometric cooling).
+    Anneal,
+}
+
+impl StrategyKind {
+    /// Spec/report spelling (`"hill"` / `"anneal"`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StrategyKind::Hill => "hill",
+            StrategyKind::Anneal => "anneal",
+        }
+    }
+}
+
+impl FromStr for StrategyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hill" => Ok(StrategyKind::Hill),
+            "anneal" => Ok(StrategyKind::Anneal),
+            other => bail!("unknown search strategy '{other}' (hill | anneal)"),
+        }
+    }
+}
+
+/// One topology-search run: network, fitness budget, move-space bounds,
+/// and strategy knobs. The whole search is a pure function of this
+/// value — every RNG stream derives from `seed` and a chain label, so
+/// the [`crate::metrics::search::SearchReport`] is byte-identical on
+/// any thread count.
+#[derive(Debug, Clone)]
+pub struct OptimizeSpec {
+    /// Artifact stem (`optimize_<name>.json` / `.csv`).
+    pub name: String,
+    /// Network to optimize over (zoo name or `synth-<variant>-n<N>-s<seed>`).
+    pub network: String,
+    /// Dataset profile supplying model size and local-computation time.
+    pub profile: String,
+    /// Simulated rounds per fitness evaluation.
+    pub rounds: usize,
+    /// Base seed; chain and init streams derive from it by label.
+    pub seed: u64,
+    /// Independent search chains (chain 0 starts from the paper design).
+    pub chains: usize,
+    /// Proposal steps per chain.
+    pub steps: usize,
+    /// Hill-climbing only: consecutive rejected proposals before a
+    /// random restart.
+    pub restart_after: usize,
+    /// Chain driver: hill-climbing or simulated annealing.
+    pub strategy: StrategyKind,
+    /// Smallest Algorithm-1 `t` the search may pick.
+    pub t_min: u32,
+    /// Largest Algorithm-1 `t` the search may pick.
+    pub t_max: u32,
+    /// `t` of the paper-multigraph baseline (and chain 0's start,
+    /// clamped into `[t_min, t_max]`).
+    pub baseline_t: u32,
+    /// Overlay degree cap; 2 disables chord moves (pure ring search).
+    pub max_degree: usize,
+    /// Annealing start temperature (ms of fitness, Metropolis scale).
+    pub anneal_t0: f64,
+    /// Annealing geometric cooling factor per step, in (0, 1).
+    pub anneal_alpha: f64,
+    /// MATCHA communication budgets to probe alongside the search
+    /// (reported for comparison; never a search winner).
+    pub matcha_budgets: Vec<f64>,
+}
+
+impl Default for OptimizeSpec {
+    fn default() -> Self {
+        OptimizeSpec {
+            name: "optimize".into(),
+            network: "gaia".into(),
+            profile: "femnist".into(),
+            rounds: 600,
+            seed: 17,
+            chains: 4,
+            steps: 400,
+            restart_after: 80,
+            strategy: StrategyKind::Hill,
+            t_min: 3,
+            t_max: 10,
+            baseline_t: 5,
+            max_degree: 3,
+            anneal_t0: 2.0,
+            anneal_alpha: 0.995,
+            matcha_budgets: Vec::new(),
+        }
+    }
+}
+
+impl OptimizeSpec {
+    /// Rewrite network/profile names to their canonical spelling (same
+    /// contract as [`crate::sweep::SweepSpec::canonicalize`]): the names
+    /// feed RNG stream labels, so equivalent spellings must derive
+    /// identical streams. Errors on unknown names.
+    pub fn canonicalize(&mut self) -> Result<()> {
+        self.network = crate::net::by_name(&self.network)
+            .ok_or_else(|| anyhow::anyhow!("unknown network '{}'", self.network))?
+            .name;
+        self.profile = DatasetProfile::by_name(&self.profile)
+            .ok_or_else(|| anyhow::anyhow!("unknown profile '{}'", self.profile))?
+            .name;
+        Ok(())
+    }
+
+    /// Check every knob is in-range and the network is searchable.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "optimize name must be non-empty");
+        ensure!(self.rounds >= 1, "rounds must be >= 1");
+        ensure!(
+            self.seed < (1u64 << 53),
+            "seed {} exceeds 2^53 and would lose precision in JSON artifacts",
+            self.seed
+        );
+        ensure!(self.chains >= 1, "chains must be >= 1");
+        ensure!(self.steps >= 1, "steps must be >= 1");
+        ensure!(self.restart_after >= 1, "restart_after must be >= 1");
+        ensure!(self.t_min >= 1, "t_min must be >= 1 (got {})", self.t_min);
+        ensure!(
+            self.t_min <= self.t_max,
+            "t_min {} must be <= t_max {}",
+            self.t_min,
+            self.t_max
+        );
+        ensure!(self.baseline_t >= 1, "baseline_t must be >= 1");
+        ensure!(
+            self.max_degree >= 2,
+            "max_degree must be >= 2 (a ring already has degree 2)"
+        );
+        ensure!(
+            self.anneal_t0.is_finite() && self.anneal_t0 > 0.0,
+            "anneal_t0 must be positive and finite (got {})",
+            self.anneal_t0
+        );
+        ensure!(
+            self.anneal_alpha > 0.0 && self.anneal_alpha < 1.0,
+            "anneal_alpha must be in (0, 1) (got {})",
+            self.anneal_alpha
+        );
+        for &b in &self.matcha_budgets {
+            ensure!(
+                b.is_finite() && b > 0.0 && b <= 1.0,
+                "matcha budget {b} must be in (0, 1]"
+            );
+        }
+        for (i, b) in self.matcha_budgets.iter().enumerate() {
+            ensure!(
+                !self.matcha_budgets[..i].contains(b),
+                "matcha_budgets lists {b} twice"
+            );
+        }
+        let net = crate::net::by_name(&self.network).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown network '{}' (zoo name or synth-<variant>-n<N>-s<seed>)",
+                self.network
+            )
+        })?;
+        ensure!(
+            net.n() >= 3,
+            "network '{}' has {} silos; the overlay move set needs >= 3",
+            self.network,
+            net.n()
+        );
+        ensure!(
+            DatasetProfile::by_name(&self.profile).is_some(),
+            "unknown profile '{}'",
+            self.profile
+        );
+        Ok(())
+    }
+
+    /// Load, canonicalize, and validate a spec file.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading optimize spec {}", path.as_ref().display()))?;
+        let mut spec = Self::from_toml_str(&text)?;
+        spec.canonicalize()?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the TOML subset (comments, flat `key = value`, `[list]`
+    /// values); unknown keys error with their line number.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let mut spec = OptimizeSpec::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                bail!("line {}: optimize specs have no sections (got '{line}')", lineno + 1);
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let items = split_values(value);
+            let ctx = |k: &str| format!("line {}: key '{k}'", lineno + 1);
+            match key {
+                "name" => spec.name = one(&items, key, lineno)?,
+                "network" => spec.network = one(&items, key, lineno)?,
+                "profile" => spec.profile = one(&items, key, lineno)?,
+                "rounds" => {
+                    spec.rounds = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "seed" => {
+                    spec.seed = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "chains" => {
+                    spec.chains = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "steps" => {
+                    spec.steps = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "restart_after" => {
+                    spec.restart_after =
+                        one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "strategy" => {
+                    spec.strategy = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "t_min" => {
+                    spec.t_min = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "t_max" => {
+                    spec.t_max = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "baseline_t" => {
+                    spec.baseline_t =
+                        one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "max_degree" => {
+                    spec.max_degree =
+                        one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "anneal_t0" => {
+                    spec.anneal_t0 = one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "anneal_alpha" => {
+                    spec.anneal_alpha =
+                        one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
+                "matcha_budgets" => {
+                    spec.matcha_budgets = items
+                        .iter()
+                        .map(|s| s.parse::<f64>())
+                        .collect::<Result<_, _>>()
+                        .with_context(|| ctx(key))?
+                }
+                other => bail!("line {}: unknown optimize key '{other}'", lineno + 1),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Serialize back to the TOML subset (for shipped example specs).
+    pub fn to_toml_string(&self) -> String {
+        let budgets: Vec<String> = self.matcha_budgets.iter().map(|b| b.to_string()).collect();
+        format!(
+            "name = \"{}\"\nnetwork = \"{}\"\nprofile = \"{}\"\nrounds = {}\nseed = {}\n\
+             strategy = \"{}\"\nchains = {}\nsteps = {}\nrestart_after = {}\n\
+             t_min = {}\nt_max = {}\nbaseline_t = {}\nmax_degree = {}\n\
+             anneal_t0 = {}\nanneal_alpha = {}\nmatcha_budgets = [{}]\n",
+            self.name,
+            self.network,
+            self.profile,
+            self.rounds,
+            self.seed,
+            self.strategy.as_str(),
+            self.chains,
+            self.steps,
+            self.restart_after,
+            self.t_min,
+            self.t_max,
+            self.baseline_t,
+            self.max_degree,
+            self.anneal_t0,
+            self.anneal_alpha,
+            budgets.join(", "),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_validates() {
+        let mut spec = OptimizeSpec::default();
+        spec.canonicalize().unwrap();
+        spec.validate().unwrap();
+        assert_eq!(spec.strategy, StrategyKind::Hill);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let spec = OptimizeSpec {
+            name: "probe".into(),
+            network: "exodus".into(),
+            strategy: StrategyKind::Anneal,
+            t_min: 2,
+            t_max: 7,
+            matcha_budgets: vec![0.3, 0.7],
+            ..Default::default()
+        };
+        let back = OptimizeSpec::from_toml_str(&spec.to_toml_string()).unwrap();
+        assert_eq!(back.name, "probe");
+        assert_eq!(back.network, "exodus");
+        assert_eq!(back.strategy, StrategyKind::Anneal);
+        assert_eq!(back.t_min, 2);
+        assert_eq!(back.t_max, 7);
+        assert_eq!(back.matcha_budgets, vec![0.3, 0.7]);
+        assert_eq!(back.anneal_alpha, spec.anneal_alpha);
+    }
+
+    #[test]
+    fn parses_comments_and_rejects_unknown_keys() {
+        let text = "# search gaia\nname = \"g\"  # stem\nsteps = 40\nstrategy = anneal\n";
+        let spec = OptimizeSpec::from_toml_str(text).unwrap();
+        assert_eq!(spec.name, "g");
+        assert_eq!(spec.steps, 40);
+        assert_eq!(spec.strategy, StrategyKind::Anneal);
+        assert!(OptimizeSpec::from_toml_str("bogus = 1").is_err());
+        assert!(OptimizeSpec::from_toml_str("[section]").is_err());
+        assert!(OptimizeSpec::from_toml_str("strategy = tabu").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let bad = |f: fn(&mut OptimizeSpec)| {
+            let mut s = OptimizeSpec::default();
+            f(&mut s);
+            s.validate().is_err()
+        };
+        assert!(bad(|s| s.chains = 0));
+        assert!(bad(|s| s.steps = 0));
+        assert!(bad(|s| s.rounds = 0));
+        assert!(bad(|s| s.t_min = 0));
+        assert!(bad(|s| { s.t_min = 6; s.t_max = 5 }));
+        assert!(bad(|s| s.max_degree = 1));
+        assert!(bad(|s| s.anneal_alpha = 1.0));
+        assert!(bad(|s| s.anneal_t0 = 0.0));
+        assert!(bad(|s| s.seed = 1u64 << 53));
+        assert!(bad(|s| s.matcha_budgets = vec![1.5]));
+        assert!(bad(|s| s.matcha_budgets = vec![0.5, 0.5]));
+        assert!(bad(|s| s.network = "nowhere".into()));
+        assert!(OptimizeSpec::from_toml_file("/nonexistent.toml").is_err());
+    }
+
+    #[test]
+    fn canonicalize_is_case_stable() {
+        let mut spec = OptimizeSpec {
+            network: "GAIA".into(),
+            profile: "FEMNIST".into(),
+            ..Default::default()
+        };
+        spec.canonicalize().unwrap();
+        assert_eq!(spec.network, "gaia");
+        assert_eq!(spec.profile, "femnist");
+    }
+}

@@ -129,9 +129,13 @@ pub struct EngineStats {
 /// and nothing that depends on one.
 #[derive(Debug, Clone, Copy)]
 pub struct CompiledEdge {
+    /// Lower endpoint (u < v).
     pub u: u32,
+    /// Upper endpoint.
     pub v: u32,
+    /// Plan degree of `u` when the pair first appeared.
     pub deg_u: u32,
+    /// Plan degree of `v` when the pair first appeared.
     pub deg_v: u32,
 }
 
@@ -211,6 +215,7 @@ impl CompiledTopology {
         Some(CompiledTopology { name: topo.name().to_string(), n, edges, states })
     }
 
+    /// Name of the design this schedule was compiled from.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -144,6 +144,7 @@ impl FactoredTopology {
         Some(FactoredTopology { name: topo.name().to_string(), n: f.n, edges, groups, node_mask })
     }
 
+    /// Name of the design this schedule was factored from.
     pub fn name(&self) -> &str {
         &self.name
     }

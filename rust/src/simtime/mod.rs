@@ -29,9 +29,13 @@ pub use factored::{
 /// Simulation output for one (topology, network, profile) cell.
 #[derive(Debug, Clone)]
 pub struct SimResult {
+    /// Design name (from [`crate::topo::TopologyDesign::name`]).
     pub topology: String,
+    /// Network name.
     pub network: String,
+    /// Dataset-profile name.
     pub profile: String,
+    /// Simulated communication rounds.
     pub rounds: usize,
     /// Mean cycle time over rounds, ms (Eq. 5) — the Table 1 number.
     pub mean_cycle_ms: f64,
@@ -80,6 +84,7 @@ pub struct RoundTime {
 }
 
 impl DelayTracker {
+    /// Fresh tracker with no per-pair Eq. 4 state yet.
     pub fn new(net: &NetworkSpec, profile: &DatasetProfile) -> Self {
         DelayTracker { net: net.clone(), profile: profile.clone(), edge_state: HashMap::new() }
     }
@@ -129,13 +134,21 @@ impl DelayTracker {
 /// sweep's resident set flat.
 #[derive(Debug, Clone)]
 pub struct SimSummary {
+    /// Design name (from [`crate::topo::TopologyDesign::name`]).
     pub topology: String,
+    /// Network name.
     pub network: String,
+    /// Dataset-profile name.
     pub profile: String,
+    /// Simulated communication rounds.
     pub rounds: usize,
+    /// Mean cycle time over rounds, ms (Eq. 5) — the Table 1 number.
     pub mean_cycle_ms: f64,
+    /// Simulated total wall-clock, ms.
     pub total_ms: f64,
+    /// Rounds in which at least one node was isolated.
     pub rounds_with_isolated: usize,
+    /// Max isolated-node count seen in any round.
     pub max_isolated: usize,
 }
 

@@ -45,6 +45,7 @@ use std::hash::Hash;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::TopologyKind;
+use crate::net::{DatasetProfile, NetworkSpec};
 use crate::simtime::{
     run_compiled, run_factored, simulate_summary_scratch, simulate_summary_streaming_scratch,
     CompiledTopology, EngineStats, FactoredTopology, SimScratch, SimSummary,
@@ -70,15 +71,37 @@ fn with_scratch<R>(f: impl FnOnce(&mut SimScratch) -> R) -> R {
     SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
+/// Simulate an ad-hoc design through this thread's pooled
+/// [`SimScratch`] — the entry point `mgfl optimize` uses to evaluate
+/// search candidates, so every fitness call reuses the same slabs the
+/// sweep workers do (same dispatch, same bits as
+/// [`crate::simtime::simulate_summary`]; only allocation is factored).
+pub fn simulate_design_pooled(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+) -> (SimSummary, EngineStats) {
+    with_scratch(|scratch| simulate_summary_scratch(topo, net, profile, rounds, scratch))
+}
+
 /// Semantic identity of one grid cell's simulation result. Two cells
 /// with equal fingerprints produce bit-identical [`SimSummary`]s, so
 /// the scheduler simulates one and fans the summary out to both.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CellFingerprint {
+    /// Topology design kind.
     pub topology: TopologyKind,
+    /// Canonical network name.
     pub network: String,
+    /// Canonical dataset-profile name.
     pub profile: String,
+    /// Algorithm-1 multiplicity cap, verbatim from the cell. Designs
+    /// that never consume t still share their *compiled topology* via
+    /// the compile-cache key (which zeroes t for them), but their
+    /// fingerprints keep t as written.
     pub t: u32,
+    /// Simulated rounds.
     pub rounds: usize,
     /// The derived per-cell stream — present **only** when the design
     /// consumes randomness, so stochastic cells with distinct seeds are
@@ -153,6 +176,8 @@ impl<K, V> Default for BuildOnce<K, V> {
 }
 
 impl<K: Eq + Hash + Clone, V: Clone> BuildOnce<K, V> {
+    /// Return `key`'s value, running `build` exactly once per key
+    /// (concurrent callers block on the first builder, then clone).
     pub fn get_or_build(&self, key: &K, build: impl FnOnce() -> V) -> V {
         let slot = {
             let mut map = self.map.lock().expect("build-once map lock");

@@ -29,7 +29,8 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{
-    run_cell_cached, run_cell_cached_timed, BuildOnce, CellFingerprint, DedupPlan, SweepCache,
+    run_cell_cached, run_cell_cached_timed, simulate_design_pooled, BuildOnce, CellFingerprint,
+    DedupPlan, SweepCache,
 };
 pub use report::{Axis, CellResult, SweepReport};
 pub use spec::{CellSpec, SweepSpec};
@@ -316,8 +317,11 @@ impl EngineMix {
 /// stats (which deliberately stay out of the artifacts).
 #[derive(Debug, Clone)]
 pub struct SweepOutcome {
+    /// The deterministic artifact: pure function of the spec.
     pub report: SweepReport,
+    /// Wall-clock of the run on this host (never in artifacts).
     pub host_elapsed_ms: f64,
+    /// Worker threads actually used (never in artifacts).
     pub threads: usize,
     /// Cells actually simulated after fingerprint dedup; the remaining
     /// `report.cells.len() - unique_cells` results were fanned out from

@@ -22,9 +22,13 @@ use super::spec::CellSpec;
 /// Simulation result of one grid cell, tagged with its coordinates.
 #[derive(Debug, Clone)]
 pub struct CellResult {
+    /// Design name as reported by the simulator.
     pub topology: String,
+    /// Canonical network name.
     pub network: String,
+    /// Canonical dataset-profile name.
     pub profile: String,
+    /// Algorithm-1 multiplicity cap of this coordinate.
     pub t: u32,
     /// The spec-level base seed (what the user wrote in the spec;
     /// reports and slices key on it).
@@ -33,10 +37,15 @@ pub struct CellResult {
     /// ([`super::spec::cell_stream`]); exported so any single cell can
     /// be reproduced with `mgfl simulate --seed <cell_seed>`.
     pub cell_seed: u64,
+    /// Simulated communication rounds.
     pub rounds: usize,
+    /// Mean Eq. 5 cycle time, ms (the paper's headline metric).
     pub mean_cycle_ms: f64,
+    /// Total simulated time over all rounds, ms.
     pub total_ms: f64,
+    /// Rounds in which at least one silo was isolated.
     pub rounds_with_isolated: usize,
+    /// Largest isolated-silo count seen in any round.
     pub max_isolated: usize,
     /// Which engine simulated the cell ("periodic" | "factored" |
     /// "streaming"). Deterministic per cell spec — the dispatch is a
@@ -79,14 +88,20 @@ impl CellResult {
 /// A sweep grid axis, for slicing reports into 2-D tables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Axis {
+    /// The topology-design axis.
     Topology,
+    /// The network axis.
     Network,
+    /// The dataset-profile axis.
     Profile,
+    /// The Algorithm-1 multiplicity-cap axis.
     T,
+    /// The base-seed axis.
     Seed,
 }
 
 impl Axis {
+    /// Lowercase axis name as used in CLI flags and artifact headers.
     pub fn label(&self) -> &'static str {
         match self {
             Axis::Topology => "topology",
@@ -111,8 +126,11 @@ impl Axis {
 /// The full result set of one sweep run, in grid order.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// Artifact stem from the spec (`sweep_<name>.json` / `.csv`).
     pub name: String,
+    /// Simulated rounds per cell.
     pub rounds: usize,
+    /// One result per grid coordinate, in grid order.
     pub cells: Vec<CellResult>,
 }
 

@@ -17,8 +17,11 @@ use crate::util::rng::{derive_stream, fnv1a};
 pub struct SweepSpec {
     /// Artifact stem (`sweep_<name>.json` / `.csv`).
     pub name: String,
+    /// Topology-design axis.
     pub topologies: Vec<TopologyKind>,
+    /// Network axis: zoo and/or synthetic names.
     pub networks: Vec<String>,
+    /// Dataset-profile axis (paper Table 2).
     pub profiles: Vec<String>,
     /// Algorithm 1's t (max edges between two nodes); multigraph only,
     /// other designs carry it through for bookkeeping.
@@ -50,9 +53,13 @@ impl Default for SweepSpec {
 pub struct CellSpec {
     /// Position in the expanded grid (artifact ordering).
     pub index: usize,
+    /// Topology design of this coordinate.
     pub topology: TopologyKind,
+    /// Canonical network name.
     pub network: String,
+    /// Canonical dataset-profile name.
     pub profile: String,
+    /// Algorithm-1 multiplicity cap of this coordinate.
     pub t: u32,
     /// The spec-level seed this cell descends from (reported).
     pub base_seed: u64,
@@ -60,6 +67,7 @@ pub struct CellSpec {
     /// a function of (base seed, cell coordinates) only — never of
     /// execution order or thread count.
     pub cell_seed: u64,
+    /// Simulated communication rounds.
     pub rounds: usize,
 }
 
@@ -136,6 +144,9 @@ impl SweepSpec {
         Ok(())
     }
 
+    /// Range-check every knob and reject empty or duplicated axes.
+    /// Assumes canonical names ([`Self::canonicalize`] runs first on
+    /// every spec entry point).
     pub fn validate(&self) -> Result<()> {
         ensure!(!self.name.is_empty(), "sweep name must be non-empty");
         ensure!(self.rounds >= 1, "rounds must be >= 1");
@@ -242,6 +253,7 @@ impl SweepSpec {
         cells
     }
 
+    /// Load, canonicalize, and validate a spec from a TOML file.
     pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading sweep spec {}", path.as_ref().display()))?;
@@ -351,8 +363,10 @@ fn dedup_axis<T: PartialEq + Clone>(axis: &str, values: &mut Vec<T>) {
 }
 
 /// Split a TOML-subset value into its items: `[a, "b", c]` lists or a
-/// single scalar; quotes stripped, empties dropped.
-fn split_values(value: &str) -> Vec<String> {
+/// single scalar; quotes stripped, empties dropped. Shared with the
+/// optimize-spec loader ([`crate::search::OptimizeSpec`]) so the two
+/// dialects cannot drift.
+pub(crate) fn split_values(value: &str) -> Vec<String> {
     let v = value.trim();
     let inner = v.strip_prefix('[').and_then(|s| s.strip_suffix(']'));
     let raw: Vec<&str> = match inner {
@@ -365,7 +379,9 @@ fn split_values(value: &str) -> Vec<String> {
         .collect()
 }
 
-fn one(items: &[String], key: &str, lineno: usize) -> Result<String> {
+/// Expect exactly one item for scalar-valued keys (shared with the
+/// optimize-spec loader).
+pub(crate) fn one(items: &[String], key: &str, lineno: usize) -> Result<String> {
     match items {
         [single] => Ok(single.clone()),
         _ => bail!("line {}: key '{key}' takes a single value", lineno + 1),

@@ -9,6 +9,8 @@ use crate::net::{DatasetProfile, NetworkSpec};
 /// Paper/Marfoq default degree bound.
 pub const DEFAULT_DELTA: usize = 3;
 
+/// Static δ-MBST design: every round is the all-strong degree-bounded
+/// MST.
 pub struct DeltaMbstTopology {
     overlay: Graph,
     delta: usize,
@@ -30,6 +32,7 @@ impl DeltaMbstTopology {
         DeltaMbstTopology { overlay: degree_bounded_mst(&conn, delta), delta }
     }
 
+    /// The degree bound δ this tree was built under.
     pub fn delta(&self) -> usize {
         self.delta
     }

@@ -75,19 +75,26 @@ impl MatchaCore {
         MatchaCore { overlay, matchings }
     }
 
+    /// The MST ∪ ring base graph the matchings decompose.
     pub fn overlay(&self) -> &Graph {
         &self.overlay
     }
 
+    /// The matching decomposition: disjoint `(u, v, w)` edge sets whose
+    /// union is the overlay.
     pub fn matchings(&self) -> &[Vec<(NodeId, NodeId, f64)>] {
         &self.matchings
     }
 
+    /// Number of matchings in the decomposition.
     pub fn num_matchings(&self) -> usize {
         self.matchings.len()
     }
 }
 
+/// MATCHA baseline: each round independently activates each matching of
+/// the decomposed base graph with probability `budget` (MATCHA+ at
+/// budget 1.0 activates everything).
 pub struct MatchaTopology {
     name: String,
     core: Arc<MatchaCore>,
@@ -97,6 +104,8 @@ pub struct MatchaTopology {
 }
 
 impl MatchaTopology {
+    /// Build the MST ∪ ring core for `net` and wrap it at `budget` with
+    /// an activation RNG seeded from `seed`.
     pub fn new(net: &NetworkSpec, profile: &DatasetProfile, budget: f64, seed: u64) -> Self {
         Self::from_core(Arc::new(MatchaCore::build(net, profile)), budget, seed)
     }
@@ -120,6 +129,7 @@ impl MatchaTopology {
         Self::new(net, profile, 1.0, seed)
     }
 
+    /// Number of matchings in the shared core's decomposition.
     pub fn num_matchings(&self) -> usize {
         self.core.num_matchings()
     }

@@ -7,6 +7,7 @@
 //! same all-strong plan every round; MATCHA samples matchings; the
 //! multigraph cycles through its parsed states.
 
+pub mod candidate;
 pub mod delta_mbst;
 pub mod matcha;
 pub mod mst;
@@ -18,12 +19,14 @@ pub mod states;
 use crate::delay::EdgeType;
 use crate::graph::{Graph, NodeId};
 
+pub use candidate::CandidateTopology;
 pub use multigraph::Multigraph;
 pub use states::{GraphState, MultigraphTopology};
 
 /// The communication plan for one round.
 #[derive(Debug, Clone)]
 pub struct RoundPlan {
+    /// Silo count (node ids in `edges` are `< n`).
     pub n: usize,
     /// Undirected pairs (u < v) with their connection type; communication
     /// happens in both directions over a pair.
@@ -70,6 +73,8 @@ impl RoundPlan {
         self.edges.push((u, v, ty));
     }
 
+    /// Every edge of `g` marked strong — the plan of all static
+    /// baselines (STAR, MST, δ-MBST, RING).
     pub fn all_strong(g: &Graph) -> Self {
         let mut plan = RoundPlan::empty(g.n());
         Self::all_strong_into(g, &mut plan);
@@ -144,6 +149,7 @@ impl RoundPlan {
         (0..self.n).filter(|&i| has_edge[i] && !has_strong[i]).count()
     }
 
+    /// The strongly-connected pairs of this plan, in plan order.
     pub fn strong_edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
         self.edges
             .iter()
@@ -177,6 +183,8 @@ pub struct ScheduleFactorization {
 /// A topology design consumed by the time simulator and the training
 /// coordinator.
 pub trait TopologyDesign {
+    /// Short lowercase identifier used in summaries and artifacts
+    /// (e.g. `"multigraph"`, `"matcha"`, `"candidate"`).
     fn name(&self) -> &str;
 
     /// The overlay graph: which pairs may ever communicate.

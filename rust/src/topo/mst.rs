@@ -5,6 +5,8 @@ use super::{RoundPlan, TopologyDesign};
 use crate::graph::{prim_mst, prim_mst_dense, Graph};
 use crate::net::{DatasetProfile, NetworkSpec};
 
+/// Static MST design: every round is the all-strong minimum spanning
+/// tree.
 pub struct MstTopology {
     overlay: Graph,
 }

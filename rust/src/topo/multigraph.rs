@@ -13,7 +13,9 @@ use crate::net::{DatasetProfile, NetworkSpec};
 /// One overlay pair in the multigraph with its edge multiplicity.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MultiEdge {
+    /// Lower endpoint of the pair (u < v).
     pub u: NodeId,
+    /// Upper endpoint of the pair.
     pub v: NodeId,
     /// Symmetrized Eq. 3 overlay delay for this pair, ms.
     pub delay_ms: f64,
@@ -25,7 +27,9 @@ pub struct MultiEdge {
 /// (the track list \(\mathcal{L}\) of Algorithm 1).
 #[derive(Debug, Clone)]
 pub struct Multigraph {
+    /// Number of silos.
     pub n: usize,
+    /// One entry per overlay pair, sorted by (u, v).
     pub edges: Vec<MultiEdge>,
     /// The maximum-edges parameter t of Algorithm 1.
     pub t: u32,

@@ -6,6 +6,7 @@ use super::{RoundPlan, TopologyDesign};
 use crate::graph::{ring_overlay, ring_overlay_dense, Graph};
 use crate::net::{DatasetProfile, NetworkSpec};
 
+/// Static RING design: every round is the all-strong Christofides ring.
 pub struct RingTopology {
     overlay: Graph,
 }

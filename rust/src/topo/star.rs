@@ -6,6 +6,7 @@ use super::{RoundPlan, TopologyDesign};
 use crate::graph::Graph;
 use crate::net::{DatasetProfile, NetworkSpec};
 
+/// Static STAR design: every round every silo exchanges with the hub.
 pub struct StarTopology {
     overlay: Graph,
     hub: usize,
@@ -61,6 +62,7 @@ impl StarTopology {
         StarTopology { overlay, hub }
     }
 
+    /// The chosen hub silo.
     pub fn hub(&self) -> usize {
         self.hub
     }

@@ -19,8 +19,11 @@ use crate::graph::{Graph, NodeId};
 /// marked strong/weak, plus the derived isolated-node set.
 #[derive(Debug, Clone)]
 pub struct GraphState {
+    /// State index s in `0..s_max`.
     pub index: u64,
+    /// Every overlay pair with its strong/weak mark in this state.
     pub edges: Vec<(NodeId, NodeId, EdgeType)>,
+    /// Nodes touching no strong edge (they skip this round entirely).
     pub isolated: Vec<NodeId>,
 }
 
@@ -68,6 +71,7 @@ pub struct MultigraphTopology {
 }
 
 impl MultigraphTopology {
+    /// Wrap an already-constructed multigraph and its overlay.
     pub fn new(overlay: Graph, mg: Multigraph) -> Self {
         assert_eq!(overlay.n(), mg.n);
         let s_max = mg.s_max();
@@ -102,10 +106,12 @@ impl MultigraphTopology {
         Self::new(overlay, mg)
     }
 
+    /// The underlying Algorithm-1 multigraph (pairs + multiplicities).
     pub fn multigraph(&self) -> &Multigraph {
         &self.mg
     }
 
+    /// Schedule period: lcm of the edge multiplicities.
     pub fn s_max(&self) -> u64 {
         self.s_max
     }

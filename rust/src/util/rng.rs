@@ -43,7 +43,17 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// [`derive_stream`] keyed by a human-readable label: the label is
+/// FNV-1a hashed into the stream id. `mgfl optimize` names its streams
+/// this way (`"optimize/chain/0"`, `"optimize/init/1"`, …) so search
+/// chains are independent of each other and of every sweep cell stream.
+pub fn named_stream(base: u64, label: &str) -> u64 {
+    derive_stream(base, fnv1a(label.as_bytes()))
+}
+
 impl Rng64 {
+    /// Expand a u64 seed into the 256-bit xoshiro state via four
+    /// SplitMix64 draws (the canonical seeding procedure).
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = seed;
         Rng64 {

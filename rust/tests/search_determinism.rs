@@ -1,0 +1,230 @@
+//! `mgfl optimize` determinism and correctness gates.
+//!
+//! Pins the search subsystem's contracts: the SearchReport is a pure
+//! function of the spec (byte-identical across runs and thread counts),
+//! every reported fitness is bitwise reproducible on the naive
+//! reference simulator, a small-network search provably finds the
+//! enumerated optimum, and the committed `specs/optimize_gaia.toml`
+//! beats the paper multigraph from chain 0's bit-exact baseline start.
+
+use mgfl::net::{DatasetProfile, NetworkSpec, Silo};
+use mgfl::search::{
+    paper_start, random_genome, run, Anneal, Evaluator, Genome, HillClimb, OptimizeSpec,
+    SearchStrategy, StrategyKind,
+};
+use mgfl::simtime::simulate_summary_naive;
+use mgfl::sweep::RunOptions;
+use mgfl::topo::CandidateTopology;
+use mgfl::util::rng::{named_stream, Rng64};
+
+fn small_spec(strategy: StrategyKind) -> OptimizeSpec {
+    OptimizeSpec {
+        name: "det".into(),
+        rounds: 80,
+        chains: 3,
+        steps: 40,
+        restart_after: 12,
+        strategy,
+        matcha_budgets: vec![0.5],
+        ..Default::default()
+    }
+}
+
+fn opts(threads: usize) -> RunOptions {
+    RunOptions { threads, ..Default::default() }
+}
+
+#[test]
+fn report_is_byte_identical_across_runs_and_thread_counts() {
+    for strategy in [StrategyKind::Hill, StrategyKind::Anneal] {
+        let spec = small_spec(strategy);
+        let a = run(&spec, &opts(1)).unwrap().report;
+        let b = run(&spec, &opts(1)).unwrap().report;
+        let c = run(&spec, &opts(2)).unwrap().report;
+        let name = spec.strategy.as_str();
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "{name}: run-to-run JSON must be byte-identical"
+        );
+        assert_eq!(
+            a.to_json().to_string(),
+            c.to_json().to_string(),
+            "{name}: 1-thread and 2-thread JSON must be byte-identical"
+        );
+        assert_eq!(a.to_csv(), c.to_csv(), "{name}: CSV must be thread-invariant");
+        // The shared fitness cache only dedups; its accounting is part
+        // of the report and must be scheduling-invariant too.
+        assert_eq!(a.unique_evals, c.unique_evals, "{name}");
+        assert_eq!(a.cache_hits, c.cache_hits, "{name}");
+    }
+}
+
+#[test]
+fn reported_fitness_is_bitwise_reproducible_on_the_naive_oracle() {
+    let spec = small_spec(StrategyKind::Hill);
+    let report = run(&spec, &opts(2)).unwrap().report;
+    let net = mgfl::net::by_name(&report.network).unwrap();
+    let profile = DatasetProfile::by_name(&report.profile).unwrap();
+    // Rebuild the winner from nothing but its reported genome and
+    // re-simulate on the unbatched reference engine.
+    let g = Genome {
+        order: report.best.order.clone(),
+        chords: report.best.chords.clone(),
+        t: report.best.t,
+    };
+    assert_eq!(g.canonical_key(), report.best.key, "report key must match the genome");
+    let mut topo = CandidateTopology::new(g.overlay(&net, &profile), &net, &profile, g.t);
+    let naive = simulate_summary_naive(&mut topo, &net, &profile, report.rounds);
+    assert_eq!(
+        naive.mean_cycle_ms.to_bits(),
+        report.best.mean_cycle_ms.to_bits(),
+        "search fitness must be bit-identical to the naive simulator"
+    );
+    // Every accepted-trace fitness is a real simulation too — spot-check
+    // each chain's start the same way.
+    for chain in &report.chains {
+        let s = Genome {
+            order: chain.start.order.clone(),
+            chords: chain.start.chords.clone(),
+            t: chain.start.t,
+        };
+        let mut topo = CandidateTopology::new(s.overlay(&net, &profile), &net, &profile, s.t);
+        let naive = simulate_summary_naive(&mut topo, &net, &profile, report.rounds);
+        assert_eq!(
+            naive.mean_cycle_ms.to_bits(),
+            chain.start.mean_cycle_ms.to_bits(),
+            "chain {} start fitness must replay bitwise",
+            chain.chain
+        );
+    }
+}
+
+/// Six Gaia-coordinate silos: small enough to enumerate every ring
+/// (5! = 120 orders, 60 after direction symmetry) with the naive
+/// simulator as the oracle.
+fn six_silo_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "six".into(),
+        silos: vec![
+            Silo::new("virginia", 38.95, -77.45),
+            Silo::new("california", 37.35, -121.95),
+            Silo::new("ireland", 53.34, -6.26),
+            Silo::new("tokyo", 35.68, 139.69),
+            Silo::new("singapore", 1.35, 103.82),
+            Silo::new("sao_paulo", -23.55, -46.63),
+        ],
+    }
+}
+
+fn permutations(items: &[usize]) -> Vec<Vec<usize>> {
+    if items.len() <= 1 {
+        return vec![items.to_vec()];
+    }
+    let mut out = Vec::new();
+    for (i, &x) in items.iter().enumerate() {
+        let mut rest = items.to_vec();
+        rest.remove(i);
+        for mut p in permutations(&rest) {
+            p.insert(0, x);
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[test]
+fn search_finds_the_enumerated_optimum_on_a_six_silo_network() {
+    let net = six_silo_net();
+    let profile = DatasetProfile::femnist();
+    let rounds = 120;
+    let spec = OptimizeSpec {
+        name: "six".into(),
+        rounds,
+        seed: 17,
+        chains: 3,
+        steps: 120,
+        restart_after: 25,
+        t_min: 3,
+        t_max: 3,
+        baseline_t: 3,
+        max_degree: 2, // pure ring search: the space is exactly the 120 orders
+        ..Default::default()
+    };
+
+    // Ground truth by exhaustive enumeration on the naive engine.
+    let mut enum_best = f64::INFINITY;
+    for perm in permutations(&[1, 2, 3, 4, 5]) {
+        let mut order = vec![0];
+        order.extend(perm);
+        let g = Genome { order, chords: vec![], t: 3 };
+        let mut topo = CandidateTopology::new(g.overlay(&net, &profile), &net, &profile, g.t);
+        let s = simulate_summary_naive(&mut topo, &net, &profile, rounds);
+        if s.mean_cycle_ms < enum_best {
+            enum_best = s.mean_cycle_ms;
+        }
+    }
+    assert!(
+        (enum_best - 39.37042857536237).abs() < 1e-9,
+        "pinned optimum drifted: {enum_best}"
+    );
+
+    // Both strategies must land exactly on the optimum (compare fitness
+    // bits, not orders — the optimum is fitness-tied between orders).
+    for strategy in [&HillClimb as &dyn SearchStrategy, &Anneal] {
+        let ev = Evaluator::new(&net, &profile, rounds);
+        let mut best = f64::INFINITY;
+        for c in 0..spec.chains {
+            let start = if c == 0 {
+                paper_start(&net, &profile, &spec)
+            } else {
+                let mut rng =
+                    Rng64::seed_from_u64(named_stream(spec.seed, &format!("optimize/init/{c}")));
+                random_genome(&mut rng, net.n(), &spec)
+            };
+            let r = strategy.run_chain(c, start, &ev, &spec);
+            if r.best_fitness_ms < best {
+                best = r.best_fitness_ms;
+            }
+        }
+        assert_eq!(
+            best.to_bits(),
+            enum_best.to_bits(),
+            "{} must find the enumerated optimum (got {best}, want {enum_best})",
+            strategy.name()
+        );
+    }
+}
+
+#[test]
+fn committed_gaia_spec_beats_the_paper_multigraph() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/specs/optimize_gaia.toml");
+    let spec = OptimizeSpec::from_toml_file(path).unwrap();
+    assert_eq!(spec.name, "gaia");
+    assert_eq!(spec.strategy, StrategyKind::Hill);
+    let report = run(&spec, &opts(0)).unwrap().report;
+
+    // Chain 0 starts bit-exactly at the paper design, so "beats the
+    // baseline" is an apples-to-apples claim, not a calibration gap.
+    assert_eq!(report.baselines[0].topology, "multigraph");
+    assert_eq!(
+        report.chains[0].start.mean_cycle_ms.to_bits(),
+        report.baselines[0].mean_cycle_ms.to_bits(),
+        "chain 0 must start exactly at the paper multigraph"
+    );
+    assert!(
+        report.best.mean_cycle_ms < report.baselines[0].mean_cycle_ms,
+        "searched best {} must beat the paper multigraph {}",
+        report.best.mean_cycle_ms,
+        report.baselines[0].mean_cycle_ms
+    );
+    assert!(
+        report.improvement_pct > 25.0,
+        "expected a large win on gaia (got {:.2}%, expected ~41%)",
+        report.improvement_pct
+    );
+    // The ring baseline rides along for the paper's Table-1 framing.
+    assert_eq!(report.baselines[1].topology, "ring");
+    assert!(report.unique_evals > 100, "the search must actually explore");
+    assert!(report.cache_hits > 0, "revisited candidates must hit the cache");
+}
