@@ -163,6 +163,9 @@ fn main() {
                 .into(),
         ),
     );
+    // A full measured run leaves no nulls in this artifact; smoke runs
+    // say so explicitly (CI checks the consistency of committed files).
+    obj.insert("measured".to_string(), Json::Bool(bar_speedup.is_some()));
     obj.insert("variant".to_string(), Json::Str(variant.as_str().into()));
     obj.insert("rounds".to_string(), Json::Num(rounds as f64));
     obj.insert("zoo_cells_checked".to_string(), Json::Num(zoo_cells as f64));

@@ -221,6 +221,10 @@ fn main() {
                 .into(),
         ),
     );
+    // A full measured run (bar asserted, reference measured at every
+    // size) leaves no nulls in this artifact; anything else says so.
+    let measured = bar_speedup.is_some() && per_n.iter().all(|&(_, _, r)| r.is_some());
+    obj.insert("measured".to_string(), Json::Bool(measured));
     obj.insert("variant".to_string(), Json::Str(variant.as_str().into()));
     obj.insert("overlays_checked".to_string(), Json::Num(overlays_checked as f64));
     obj.insert("oracle_cells_checked".to_string(), Json::Num(oracle_cells as f64));

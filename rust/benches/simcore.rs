@@ -136,6 +136,12 @@ fn main() {
     obj.insert("bench".to_string(), Json::Str("simcore".into()));
     let provenance = "measured by `cargo bench --bench simcore` (oracle gate passed first)";
     obj.insert("provenance".to_string(), Json::Str(provenance.into()));
+    // A full measured run (>= 5x bar asserted, cycle fast path hit)
+    // leaves no nulls in this artifact; anything else says so.
+    obj.insert(
+        "measured".to_string(),
+        Json::Bool(rounds >= 6400 && stats.cycle_len.is_some()),
+    );
     obj.insert("rounds".to_string(), Json::Num(rounds as f64));
     obj.insert("oracle_cells_checked".to_string(), Json::Num(checked as f64));
     obj.insert("oracle_bit_identical".to_string(), Json::Bool(true));

@@ -157,6 +157,9 @@ fn main() {
                 .into(),
         ),
     );
+    // A full measured run (>= 3x bar asserted, full-depth pass taken)
+    // leaves no nulls in this artifact; anything else says so.
+    obj.insert("measured".to_string(), Json::Bool(rounds >= 6400 && full.is_some()));
     obj.insert("rounds".to_string(), Json::Num(rounds as f64));
     obj.insert("total_cells".to_string(), Json::Num(total_cells as f64));
     obj.insert("unique_cells".to_string(), Json::Num(unique_cells as f64));

@@ -434,7 +434,7 @@ fn scale_cmd(args: &Args) -> Result<()> {
     if rounds > 0 {
         println!(
             "(cell format: build ms+sim ms over {rounds} rounds, engine \
-             p=periodic/f=factored/s=streaming (mean cycle ms))"
+             p=periodic/b=batched/f=factored/s=streaming (mean cycle ms))"
         );
     }
     Ok(())

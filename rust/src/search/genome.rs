@@ -59,6 +59,44 @@ impl Genome {
         format!("overlay/o={order_s};c={chord_s};t={}", self.t)
     }
 
+    /// Allocation-free FNV-1a fingerprint of the *content* of
+    /// [`Self::canonical_key`]: the same ring-direction normalization,
+    /// the same components (order, chords, t) in the same sequence,
+    /// hashed directly instead of formatted into a `String`. Component
+    /// lengths are mixed in as prefixes, so the (order, chords)
+    /// boundary is unambiguous and equal fingerprints mean equal
+    /// canonical keys up to 64-bit collisions — which the evaluator
+    /// cross-checks against the string key in debug builds.
+    pub fn canonical_fingerprint(&self) -> u64 {
+        fn mix(mut h: u64, x: u64) -> u64 {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001B3);
+            }
+            h
+        }
+        let o = &self.order;
+        debug_assert_eq!(o[0], 0, "genome ring must be anchored at silo 0");
+        let mut h = 0xCBF29CE484222325u64;
+        h = mix(h, o.len() as u64);
+        if o.len() > 2 && o[1] > o[o.len() - 1] {
+            h = mix(h, o[0] as u64);
+            for &x in o[1..].iter().rev() {
+                h = mix(h, x as u64);
+            }
+        } else {
+            for &x in o {
+                h = mix(h, x as u64);
+            }
+        }
+        h = mix(h, self.chords.len() as u64);
+        for &(u, v) in &self.chords {
+            h = mix(h, u as u64);
+            h = mix(h, v as u64);
+        }
+        mix(h, self.t as u64)
+    }
+
     /// Materialize the overlay graph (ring edges in order, then chords)
     /// with Eq. 3 degree-1 connectivity weights — the same weights the
     /// paper's overlay carries; Algorithm 1 recomputes true delays from
@@ -218,6 +256,37 @@ mod tests {
         assert_ne!(a.canonical_key(), d.canonical_key(), "chords are part of the key");
         assert_eq!(a.canonical_key(), "overlay/o=0,1,2,3;c=;t=5");
         assert_eq!(d.canonical_key(), "overlay/o=0,1,2,3;c=0-2;t=5");
+    }
+
+    #[test]
+    fn canonical_fingerprint_mirrors_the_canonical_key() {
+        // Same normalization as the string key: a reversed ring is the
+        // same overlay; t and chords split the fingerprint.
+        let a = Genome { order: vec![0, 1, 2, 3], chords: vec![], t: 5 };
+        let b = Genome { order: vec![0, 3, 2, 1], chords: vec![], t: 5 };
+        assert_eq!(a.canonical_fingerprint(), b.canonical_fingerprint());
+        let c = Genome { order: vec![0, 1, 2, 3], chords: vec![], t: 4 };
+        assert_ne!(a.canonical_fingerprint(), c.canonical_fingerprint());
+        let d = Genome { order: vec![0, 1, 2, 3], chords: vec![(0, 2)], t: 5 };
+        assert_ne!(a.canonical_fingerprint(), d.canonical_fingerprint());
+        let e = Genome { order: vec![0, 2, 1, 3], chords: vec![], t: 5 };
+        assert_ne!(a.canonical_fingerprint(), e.canonical_fingerprint());
+
+        // Key-equality ⇔ fingerprint-equality over a random population.
+        let spec = spec();
+        let mut rng = Rng64::seed_from_u64(named_stream(11, "fp-test"));
+        let genomes: Vec<Genome> = (0..200).map(|_| random_genome(&mut rng, 7, &spec)).collect();
+        for x in &genomes {
+            for y in &genomes {
+                assert_eq!(
+                    x.canonical_key() == y.canonical_key(),
+                    x.canonical_fingerprint() == y.canonical_fingerprint(),
+                    "{} vs {}",
+                    x.canonical_key(),
+                    y.canonical_key()
+                );
+            }
+        }
     }
 
     #[test]

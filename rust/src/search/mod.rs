@@ -37,25 +37,33 @@ use crate::metrics::search::{
     BaselineRow, BudgetProbe, CandidateSummary, ChainTrace, SearchReport, TraceStep,
 };
 use crate::net::{DatasetProfile, NetworkSpec};
+use crate::simtime::{BatchLane, CompiledTopology, LANE_WIDTH, MIN_BATCH};
 use crate::sweep::spec::{cell_stream, CellSpec};
 use crate::sweep::{
-    run_cell_cached, run_cells, simulate_design_pooled, BuildOnce, RunOptions, SweepCache,
+    run_batch_pooled, run_cells, run_cells_auto_batched, simulate_design_pooled, BuildOnce,
+    RunOptions, SweepCache,
 };
 use crate::topo::matcha::MatchaTopology;
 use crate::topo::CandidateTopology;
 use crate::util::rng::{named_stream, Rng64};
 
 /// The shared fitness oracle: genome → simulated mean cycle time, with
-/// a [`BuildOnce`] cache keyed by [`Genome::canonical_key`] so any
+/// a [`BuildOnce`] cache keyed by [`Genome::canonical_fingerprint`] —
+/// an allocation-free 64-bit digest of the canonical key — so any
 /// candidate is simulated at most once per search, across all chains.
-/// Cache sharing affects cost only, never values: equal keys mean
-/// equal multigraphs mean bit-equal summaries.
+/// Debug builds cross-check every fingerprint against the full
+/// [`Genome::canonical_key`] string, so a 64-bit collision would fail
+/// loudly instead of silently aliasing two genomes. Cache sharing
+/// affects cost only, never values: equal keys mean equal multigraphs
+/// mean bit-equal summaries.
 pub struct Evaluator<'a> {
     net: &'a NetworkSpec,
     profile: &'a DatasetProfile,
     rounds: usize,
-    cache: BuildOnce<String, f64>,
+    cache: BuildOnce<u64, f64>,
     lookups: AtomicUsize,
+    #[cfg(debug_assertions)]
+    fingerprint_check: std::sync::Mutex<std::collections::HashMap<u64, String>>,
 }
 
 impl<'a> Evaluator<'a> {
@@ -67,7 +75,26 @@ impl<'a> Evaluator<'a> {
             rounds,
             cache: BuildOnce::default(),
             lookups: AtomicUsize::new(0),
+            #[cfg(debug_assertions)]
+            fingerprint_check: std::sync::Mutex::new(std::collections::HashMap::new()),
         }
+    }
+
+    /// `g`'s cache key; in debug builds, asserts it is collision-free
+    /// against every canonical key seen so far this search.
+    fn fingerprinted(&self, g: &Genome) -> u64 {
+        let key = g.canonical_fingerprint();
+        #[cfg(debug_assertions)]
+        {
+            let canonical = g.canonical_key();
+            let mut check = self.fingerprint_check.lock().expect("fingerprint check lock");
+            let prev = check.entry(key).or_insert_with(|| canonical.clone());
+            assert_eq!(
+                *prev, canonical,
+                "u64 fingerprint collision between distinct canonical keys"
+            );
+        }
+        key
     }
 
     /// Fitness of `g`: mean Eq. 5 cycle time (ms) of its
@@ -76,7 +103,7 @@ impl<'a> Evaluator<'a> {
     /// [`crate::simtime::simulate_summary_naive`] on the same design.
     pub fn fitness(&self, g: &Genome) -> f64 {
         self.lookups.fetch_add(1, Ordering::Relaxed);
-        let key = g.canonical_key();
+        let key = self.fingerprinted(g);
         self.cache.get_or_build(&key, || {
             let overlay = g.overlay(self.net, self.profile);
             let mut topo = CandidateTopology::new(overlay, self.net, self.profile, g.t);
@@ -84,6 +111,93 @@ impl<'a> Evaluator<'a> {
                 .0
                 .mean_cycle_ms
         })
+    }
+
+    /// Evaluate many genomes at once, stepping same-schedule candidates
+    /// in lockstep through [`run_batch_pooled`]. Values are bit-equal
+    /// to calling [`Self::fitness`] per genome — the batched engine is
+    /// bitwise-identical to the solo dispatcher, and cache/fallback
+    /// paths reuse the exact same code — so batching is purely a
+    /// throughput lever. Used for baseline probes and the chain-start
+    /// pre-pass, where many genomes are known before any is needed.
+    pub fn fitness_batch(&self, genomes: &[Genome]) -> Vec<f64> {
+        self.lookups.fetch_add(genomes.len(), Ordering::Relaxed);
+        let keys: Vec<u64> = genomes.iter().map(|g| self.fingerprinted(g)).collect();
+
+        // Distinct cache misses, first appearance carrying the build.
+        let mut first: Vec<usize> = Vec::new();
+        {
+            let mut seen = std::collections::HashSet::new();
+            for (i, k) in keys.iter().enumerate() {
+                if self.cache.get(k).is_none() && seen.insert(*k) {
+                    first.push(i);
+                }
+            }
+        }
+
+        // Materialize and compile each distinct miss once.
+        let mut topos: Vec<(usize, CandidateTopology, Option<CompiledTopology>)> = first
+            .into_iter()
+            .map(|i| {
+                let g = &genomes[i];
+                let overlay = g.overlay(self.net, self.profile);
+                let mut topo = CandidateTopology::new(overlay, self.net, self.profile, g.t);
+                let ct = CompiledTopology::compile(&mut topo, self.rounds);
+                (i, topo, ct)
+            })
+            .collect();
+
+        // Group periodic compiles sharing one schedule; run groups of
+        // MIN_BATCH+ in lockstep, everything else through the ordinary
+        // dispatcher (identical bits either way).
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (mi, (_, _, ct)) in topos.iter().enumerate() {
+            let Some(ct) = ct else { continue };
+            let found = groups.iter_mut().find(|grp| {
+                topos[grp[0]].2.as_ref().expect("groups hold periodic compiles").schedule_eq(ct)
+            });
+            match found {
+                Some(grp) => grp.push(mi),
+                None => groups.push(vec![mi]),
+            }
+        }
+        let mut values: Vec<Option<f64>> = vec![None; topos.len()];
+        for grp in groups.iter().filter(|g| g.len() >= MIN_BATCH) {
+            for chunk in grp.chunks(LANE_WIDTH) {
+                let rep = topos[chunk[0]].2.as_ref().expect("groups hold periodic compiles");
+                let lanes: Vec<BatchLane<'_>> = chunk
+                    .iter()
+                    .map(|&mi| BatchLane {
+                        ct: topos[mi].2.as_ref().expect("groups hold periodic compiles"),
+                        net: self.net,
+                        profile: self.profile,
+                    })
+                    .collect();
+                let res = run_batch_pooled(rep, &lanes, self.rounds);
+                for (&mi, (summary, _)) in chunk.iter().zip(res) {
+                    values[mi] = Some(summary.mean_cycle_ms);
+                }
+            }
+        }
+        for (mi, (_, topo, _)) in topos.iter_mut().enumerate() {
+            if values[mi].is_none() {
+                values[mi] = Some(
+                    simulate_design_pooled(topo, self.net, self.profile, self.rounds)
+                        .0
+                        .mean_cycle_ms,
+                );
+            }
+        }
+
+        // Publish through the same build-once slots fitness() uses, then
+        // answer every input (duplicates included) from the cache.
+        for ((gi, _, _), v) in topos.iter().zip(&values) {
+            let v = (*v).expect("every distinct miss was evaluated");
+            self.cache.get_or_build(&keys[*gi], || v);
+        }
+        keys.iter()
+            .map(|k| self.cache.get(k).expect("all keys evaluated above"))
+            .collect()
     }
 
     /// Distinct genomes actually simulated.
@@ -310,31 +424,32 @@ pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
     let n = net.n();
     let t0 = Instant::now();
 
-    // Baselines go through run_cell_cached — the same CellFingerprint
-    // path the sweep engine uses — so an optimize report's baseline row
-    // is bit-identical to the equivalent sweep cell.
+    // Baselines go through run_cells_auto_batched — the same schedule
+    // cache and batch planner the sweep engine uses — so an optimize
+    // report's baseline row is bit-identical to the equivalent sweep
+    // cell whether the probes batch (structurally equal schedules) or
+    // fall back to per-cell runs.
     let cache = SweepCache::default();
-    let baselines: Vec<BaselineRow> = [TopologyKind::Multigraph, TopologyKind::Ring]
+    let baseline_cells: Vec<CellSpec> = [TopologyKind::Multigraph, TopologyKind::Ring]
         .iter()
-        .map(|&kind| {
-            let cell = CellSpec {
-                index: 0,
-                topology: kind,
-                network: spec.network.clone(),
-                profile: spec.profile.clone(),
-                t: spec.baseline_t,
-                base_seed: spec.seed,
-                cell_seed: cell_stream(
-                    spec.seed,
-                    kind,
-                    &spec.network,
-                    &spec.profile,
-                    spec.baseline_t,
-                ),
-                rounds: spec.rounds,
-            };
-            let s = run_cell_cached(&cell, &cache);
-            BaselineRow { topology: s.topology, t: cell.t, mean_cycle_ms: s.mean_cycle_ms }
+        .map(|&kind| CellSpec {
+            index: 0,
+            topology: kind,
+            network: spec.network.clone(),
+            profile: spec.profile.clone(),
+            t: spec.baseline_t,
+            base_seed: spec.seed,
+            cell_seed: cell_stream(spec.seed, kind, &spec.network, &spec.profile, spec.baseline_t),
+            rounds: spec.rounds,
+        })
+        .collect();
+    let baselines: Vec<BaselineRow> = baseline_cells
+        .iter()
+        .zip(run_cells_auto_batched(&baseline_cells, &cache))
+        .map(|(cell, (s, _, _))| BaselineRow {
+            topology: s.topology,
+            t: cell.t,
+            mean_cycle_ms: s.mean_cycle_ms,
         })
         .collect();
     let multigraph_baseline_ms = baselines[0].mean_cycle_ms;
@@ -359,6 +474,12 @@ pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
         StrategyKind::Anneal => &Anneal,
     };
     let ev = Evaluator::new(&net, &profile, spec.rounds);
+    // Pre-evaluate every chain start as one batch: starts that share a
+    // schedule (duplicate random genomes, or distinct rings whose
+    // multigraphs coincide) run in lockstep lanes, and each chain's
+    // opening fitness() call becomes a cache hit. Values are bit-equal
+    // to the solo path, so chain trajectories are unchanged.
+    let _ = ev.fitness_batch(&starts);
     let inner = RunOptions { threads: opts.threads, progress: false, dedup: true };
     let results: Vec<ChainResult> =
         run_cells(&starts, &inner, |i, start| strategy.run_chain(i, start.clone(), &ev, &spec));
@@ -477,6 +598,55 @@ mod tests {
         assert_eq!(f1.to_bits(), f3.to_bits(), "reversed ring is the same overlay");
         assert_eq!(ev.unique_evals(), 1);
         assert_eq!(ev.cache_hits(), 2);
+    }
+
+    #[test]
+    fn fitness_batch_is_bitwise_equal_to_solo_fitness() {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let n = net.n();
+        let spec = OptimizeSpec::default();
+        // A population with deliberate duplicates: same-t ring copies
+        // batch in lockstep lanes, the reversed ring dedups by
+        // fingerprint, and the random genomes exercise the fallback.
+        let ring = Genome { order: (0..n).collect(), chords: vec![], t: 5 };
+        let mut rev: Vec<usize> = ring.order.clone();
+        rev[1..].reverse();
+        let mut pop = vec![
+            ring.clone(),
+            Genome { order: rev, chords: vec![], t: 5 },
+            Genome { order: (0..n).collect(), chords: vec![], t: 3 },
+            ring.clone(),
+        ];
+        let mut rng = Rng64::seed_from_u64(named_stream(5, "batch-test"));
+        for _ in 0..4 {
+            pop.push(random_genome(&mut rng, n, &spec));
+        }
+
+        let batch_ev = Evaluator::new(&net, &p, 60);
+        let batch = batch_ev.fitness_batch(&pop);
+        let solo_ev = Evaluator::new(&net, &p, 60);
+        for (g, &f) in pop.iter().zip(&batch) {
+            assert_eq!(
+                f.to_bits(),
+                solo_ev.fitness(g).to_bits(),
+                "batched fitness must be bit-equal to the solo path for {}",
+                g.canonical_key()
+            );
+        }
+        // Same dedup accounting as the solo evaluator, in one call.
+        assert_eq!(batch_ev.unique_evals(), solo_ev.unique_evals());
+        assert_eq!(
+            batch_ev.cache_hits(),
+            pop.len() - batch_ev.unique_evals(),
+            "every duplicate input is a cache hit"
+        );
+        // A second batch over the same population is all hits.
+        let again = batch_ev.fitness_batch(&pop);
+        for (a, b) in batch.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(batch_ev.unique_evals(), solo_ev.unique_evals());
     }
 
     #[test]

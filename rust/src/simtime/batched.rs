@@ -1,0 +1,491 @@
+//! Cross-cell SoA batched periodic engine: step many cells in lockstep
+//! through one compiled schedule.
+//!
+//! Every engine before this one accelerates a *single* cell; the
+//! workloads that matter run thousands. A sweep grid fans one design
+//! out over profiles and seeds, and `mgfl optimize` evaluates thousands
+//! of candidates against one network — so after the dedup layer the
+//! remaining unique cells still contain groups that share one schedule
+//! ([`CompiledTopology`]) and differ only in their delay inputs (the
+//! per-cell `d0`/backlog the [`super::DelaySlab`] resolves). This
+//! module executes such a group as **one** walk over the per-round edge
+//! tables:
+//!
+//! * **Structure of arrays.** The per-edge Eq. 4 backlog of all lanes
+//!   is one contiguous slab indexed `[edge][lane]`, with the lane count
+//!   padded to a power of two (`stride`) so the inner loops — the Eq. 5
+//!   τ max-reduce and the Eq. 4 weak-edge drain — are fixed-stride
+//!   walks the compiler can auto-vectorize. Padding lanes replicate
+//!   lane 0's inputs (finite, positive — the arithmetic stays benign)
+//!   and their results are discarded.
+//! * **No cross-lane arithmetic.** Lane `j`'s values never touch lane
+//!   `i`'s: each lane performs exactly the f64 op sequence
+//!   [`super::run_compiled`] would perform for it alone — same d₀ seed
+//!   via [`pair_d0_ms`], same per-round reduce/advance order, same
+//!   sequential `total_ms` accumulation. Bit-identity with the naive
+//!   oracle is therefore inherited per lane, not re-argued: the batch
+//!   is a scheduling change, not a numerical one.
+//! * **Per-lane cycle detection.** The exact-recurrence fast path runs
+//!   independently per lane (each lane snapshots *its own* backlog bits
+//!   at period boundaries, records its own τ sequence, and replays the
+//!   moment its own recurrence fires) so a lane's reported
+//!   `simulated_rounds`/`cycle_*` stats — which ride in sweep
+//!   artifacts — are identical whether the cell ran solo or in any
+//!   batch composition. Replay-heavy cells are why the batch planner
+//!   never needs a special "replay hit" fallback: a lane that would
+//!   replay solo replays in the batch at the same round.
+//!
+//! Lanes must share the representative's schedule *structurally*
+//! ([`CompiledTopology::schedule_eq`] — name excluded, so two designs
+//! that happen to compile to the same schedule may share a batch while
+//! keeping their own report names). The sweep batch planner
+//! ([`crate::sweep::cache`]) discovers such groups from the post-dedup
+//! unique-cell set; `mgfl optimize` batches same-schedule candidate
+//! evaluations the same way.
+
+use crate::delay::{pair_d0_ms, EdgeType};
+use crate::net::{DatasetProfile, NetworkSpec};
+
+use super::compiled::{CompiledTopology, EngineKind, EngineStats, MAX_SNAPSHOTS};
+use super::SimSummary;
+
+/// Maximum lanes per batch. Eight f64 lanes are two AVX2 (or one
+/// AVX-512) vectors per edge visit — wide enough to amortize the
+/// schedule walk, small enough that the SoA slab of a large-N cell
+/// group stays cache-resident.
+pub const LANE_WIDTH: usize = 8;
+
+/// Smallest structural group the sweep planner batches. Groups below
+/// this run the ordinary per-cell path — a single-lane batch is legal
+/// (the no-dedup engine uses it for labeling parity) but buys nothing.
+pub const MIN_BATCH: usize = 2;
+
+/// One cell of a batch: the lane's own compiled schedule (structurally
+/// equal to the batch representative's; kept so the lane's report name
+/// is its own) plus the (network, profile) its delays resolve against.
+pub struct BatchLane<'a> {
+    /// The lane's own compile — `schedule_eq` to the representative.
+    pub ct: &'a CompiledTopology,
+    /// Network the lane's d₀ values resolve against.
+    pub net: &'a NetworkSpec,
+    /// Dataset profile (model size, floor u·T_c) of the lane.
+    pub profile: &'a DatasetProfile,
+}
+
+/// Reusable SoA scratch for [`run_batched`]: the `[edge][lane]` d₀ and
+/// backlog slabs plus the per-lane floor/τ rows. Lives in
+/// [`super::SimScratch`] so sweep workers reuse one allocation across
+/// every batch they execute.
+#[derive(Debug, Clone, Default)]
+pub struct BatchSlab {
+    d0: Vec<f64>,
+    backlog: Vec<f64>,
+    floor: Vec<f64>,
+    tau: Vec<f64>,
+}
+
+/// Step every lane through `rep`'s schedule in lockstep; returns one
+/// `(SimSummary, EngineStats)` per lane, in lane order, each
+/// bit-identical to what [`super::run_compiled`] would produce for that
+/// lane alone (stats report [`EngineKind::Batched`]; every other stats
+/// field — period, cycle round, simulated rounds — matches the solo run
+/// exactly, because detection and replay are per-lane).
+///
+/// Panics if `lanes` is empty, exceeds [`LANE_WIDTH`], or a lane's
+/// network size disagrees with the schedule; debug builds additionally
+/// verify every lane's schedule is structurally equal to `rep`'s.
+pub fn run_batched(
+    rep: &CompiledTopology,
+    lanes: &[BatchLane<'_>],
+    rounds: usize,
+    slab: &mut BatchSlab,
+) -> Vec<(SimSummary, EngineStats)> {
+    assert!(rounds > 0);
+    assert!(
+        !lanes.is_empty() && lanes.len() <= LANE_WIDTH,
+        "batch must hold 1..={LANE_WIDTH} lanes, got {}",
+        lanes.len()
+    );
+    let p = rep.period();
+    let n_edges = rep.num_edges();
+    for lane in lanes {
+        assert_eq!(
+            lane.net.n(),
+            rep.n(),
+            "lane network '{}' has {} silos but the schedule was compiled over {}",
+            lane.net.name,
+            lane.net.n(),
+            rep.n()
+        );
+        debug_assert!(
+            lane.ct.schedule_eq(rep),
+            "batched lane '{}' does not share the representative schedule '{}'",
+            lane.ct.name(),
+            rep.name()
+        );
+    }
+    let l = lanes.len();
+    let stride = l.next_power_of_two();
+
+    // Resolve per-lane delay inputs into the SoA layout. Each lane's d₀
+    // comes from pair_d0_ms over the representative's edge table — the
+    // identical seeding run_compiled's DelaySlab performs (schedule_eq
+    // guarantees identical edge identities). Padding lanes replicate
+    // lane 0 so every slot holds finite positive values.
+    slab.d0.clear();
+    slab.d0.resize(n_edges * stride, 0.0);
+    for (e, ce) in rep.edge_table().iter().enumerate() {
+        let base = e * stride;
+        for (j, lane) in lanes.iter().enumerate() {
+            slab.d0[base + j] = pair_d0_ms(
+                lane.net,
+                lane.profile,
+                ce.u as usize,
+                ce.v as usize,
+                ce.deg_u as usize,
+                ce.deg_v as usize,
+            );
+        }
+        for j in l..stride {
+            slab.d0[base + j] = slab.d0[base];
+        }
+    }
+    slab.floor.clear();
+    slab.floor.resize(stride, 0.0);
+    for (j, lane) in lanes.iter().enumerate() {
+        slab.floor[j] = lane.profile.u as f64 * lane.profile.t_c_ms;
+    }
+    for j in l..stride {
+        slab.floor[j] = slab.floor[0];
+    }
+    // Backlog seeds to d₀ (Alg. 1 seeds from the all-strong overlay),
+    // mirroring DelaySlab::reset.
+    slab.backlog.clear();
+    slab.backlog.extend_from_slice(&slab.d0);
+    slab.tau.clear();
+    slab.tau.resize(stride, 0.0);
+
+    // Split-borrow the slab fields so the strong-edge reset can copy
+    // d0 -> backlog slices while both live in one struct.
+    let BatchSlab { d0, backlog, floor, tau } = slab;
+    let d0: &[f64] = d0;
+    let floor: &[f64] = floor;
+
+    let mut total = vec![0.0f64; l];
+    let mut riso = vec![0usize; l];
+    let mut miso = vec![0usize; l];
+    // The cycle detector state is per lane — each lane mirrors
+    // run_compiled's detector over its own backlog bits.
+    let mut detecting = vec![p < rounds; l];
+    let mut rec_tau: Vec<Vec<f64>> = vec![Vec::new(); l];
+    let mut snapshots: Vec<Vec<(usize, Vec<u64>)>> = vec![Vec::new(); l];
+    let mut cycle: Vec<Option<(usize, usize)>> = vec![None; l];
+    let mut sim_rounds = vec![rounds; l];
+    let mut done = vec![false; l];
+    let mut live = l;
+
+    let mut k = 0usize;
+    while k < rounds && live > 0 {
+        let s = k % p;
+        if s == 0 {
+            for j in 0..l {
+                if done[j] || !detecting[j] {
+                    continue;
+                }
+                let snap: Vec<u64> =
+                    (0..n_edges).map(|e| backlog[e * stride + j].to_bits()).collect();
+                if let Some(&(k0, _)) = snapshots[j].iter().find(|(_, old)| *old == snap) {
+                    // Lane j's state entering round k repeats round k0's:
+                    // replay its recorded τ sequence for the rest of the
+                    // run — the same sequential adds run_compiled does —
+                    // and freeze the lane before this round steps.
+                    let len = k - k0;
+                    cycle[j] = Some((k0, len));
+                    sim_rounds[j] = k;
+                    for jj in k..rounds {
+                        total[j] += rec_tau[j][k0 + (jj - k0) % len];
+                        let iso = rep.state(jj % p).1;
+                        if iso > 0 {
+                            riso[j] += 1;
+                            miso[j] = miso[j].max(iso);
+                        }
+                    }
+                    done[j] = true;
+                    live -= 1;
+                } else if snapshots[j].len() >= MAX_SNAPSHOTS {
+                    // Give up for this lane only: stop paying for its
+                    // snapshots and τ recording.
+                    detecting[j] = false;
+                    rec_tau[j] = Vec::new();
+                    snapshots[j] = Vec::new();
+                } else {
+                    snapshots[j].push((k, snap));
+                }
+            }
+            if live == 0 {
+                break;
+            }
+        }
+
+        // One lockstep round: the Eq. 5 reduce then the Eq. 4 advance,
+        // walking the shared edge table once for all lanes. Per lane
+        // this is exactly run_compiled's step_edges (serial reduce; the
+        // advance in plan order). Replayed lanes keep stepping in the
+        // SoA — their values stay finite and their accumulators are
+        // frozen below, so the extra arithmetic is waste, never error.
+        let (st_edges, isolated) = rep.state(s);
+        tau.copy_from_slice(floor);
+        for &(id, ty) in st_edges {
+            if ty == EdgeType::Strong {
+                let base = id as usize * stride;
+                for j in 0..stride {
+                    tau[j] = tau[j].max(floor[j].max(backlog[base + j]));
+                }
+            }
+        }
+        for &(id, ty) in st_edges {
+            let base = id as usize * stride;
+            match ty {
+                EdgeType::Strong => {
+                    backlog[base..base + stride].copy_from_slice(&d0[base..base + stride]);
+                }
+                EdgeType::Weak => {
+                    for j in 0..stride {
+                        let b = &mut backlog[base + j];
+                        *b = (*b - tau[j]).max(floor[j]);
+                    }
+                }
+            }
+        }
+
+        for j in 0..l {
+            if done[j] {
+                continue;
+            }
+            total[j] += tau[j];
+            if isolated > 0 {
+                riso[j] += 1;
+                miso[j] = miso[j].max(isolated);
+            }
+            if detecting[j] {
+                rec_tau[j].push(tau[j]);
+            }
+        }
+        k += 1;
+    }
+
+    lanes
+        .iter()
+        .enumerate()
+        .map(|(j, lane)| {
+            let summary = SimSummary {
+                topology: lane.ct.name().to_string(),
+                network: lane.net.name.clone(),
+                profile: lane.profile.name.clone(),
+                rounds,
+                mean_cycle_ms: total[j] / rounds as f64,
+                total_ms: total[j],
+                rounds_with_isolated: riso[j],
+                max_isolated: miso[j],
+            };
+            let stats = EngineStats {
+                kind: EngineKind::Batched,
+                period: Some(p),
+                cycle_detected_at: cycle[j].map(|_| sim_rounds[j]),
+                cycle_len: cycle[j].map(|(_, len)| len),
+                simulated_rounds: sim_rounds[j],
+                groups: None,
+            };
+            (summary, stats)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{zoo, DatasetProfile};
+    use crate::simtime::compiled::run_compiled;
+    use crate::simtime::{simulate_summary_naive, DelaySlab};
+    use crate::topo::ring::RingTopology;
+    use crate::topo::MultigraphTopology;
+
+    fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) {
+        assert_eq!(a.topology, b.topology, "{ctx}");
+        assert_eq!(a.network, b.network, "{ctx}");
+        assert_eq!(a.profile, b.profile, "{ctx}");
+        assert_eq!(
+            a.total_ms.to_bits(),
+            b.total_ms.to_bits(),
+            "{ctx}: total_ms {} vs {}",
+            a.total_ms,
+            b.total_ms
+        );
+        assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}");
+        assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}");
+        assert_eq!(a.max_isolated, b.max_isolated, "{ctx}");
+    }
+
+    #[test]
+    fn ring_lanes_across_profiles_match_solo_and_naive() {
+        // The planner's bread-and-butter group: one static design fanned
+        // over the profile axis. Zoo capacities are uniform, so the ring
+        // overlay — and hence the compiled schedule — is profile-
+        // independent; only the delay numbers differ per lane.
+        for net in zoo::all_networks() {
+            let profiles = DatasetProfile::all();
+            let mut compiles: Vec<CompiledTopology> = profiles
+                .iter()
+                .map(|prof| {
+                    let mut topo = RingTopology::new(&net, prof);
+                    CompiledTopology::compile(&mut topo, 90).expect("ring is periodic")
+                })
+                .collect();
+            let rep = compiles.remove(0);
+            for ct in &compiles {
+                assert!(ct.schedule_eq(&rep), "{}: ring must be profile-independent", net.name);
+            }
+            let all: Vec<&CompiledTopology> =
+                std::iter::once(&rep).chain(compiles.iter()).collect();
+            let lanes: Vec<BatchLane> = profiles
+                .iter()
+                .zip(&all)
+                .map(|(prof, ct)| BatchLane { ct, net: &net, profile: prof })
+                .collect();
+            let mut slab = BatchSlab::default();
+            let got = run_batched(&rep, &lanes, 90, &mut slab);
+            assert_eq!(got.len(), 3);
+            for ((prof, ct), (summary, stats)) in profiles.iter().zip(&all).zip(&got) {
+                let mut naive_topo = RingTopology::new(&net, prof);
+                let want = simulate_summary_naive(&mut naive_topo, &net, prof, 90);
+                assert_bitwise(summary, &want, &format!("{}/{}", net.name, prof.name));
+                // Stats must equal the solo periodic run's, kind aside.
+                let mut delay = DelaySlab::new(ct, &net, prof);
+                let (_, solo) = run_compiled(ct, &mut delay, &net, prof, 90);
+                assert_eq!(stats.kind, EngineKind::Batched);
+                assert_eq!(stats.period, solo.period);
+                assert_eq!(stats.cycle_detected_at, solo.cycle_detected_at);
+                assert_eq!(stats.cycle_len, solo.cycle_len);
+                assert_eq!(stats.simulated_rounds, solo.simulated_rounds);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_multigraph_lanes_replay_like_the_solo_engine() {
+        // Eight copies of one cell (the bench's timing shape): every
+        // lane must detect the cycle at the same round as a solo run and
+        // come out bitwise equal to it — and to the naive oracle.
+        let net = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let rounds = 400;
+        let mut topo = MultigraphTopology::from_network(&net, &prof, 5);
+        let rep = CompiledTopology::compile(&mut topo, rounds).expect("gaia t=5 materializes");
+        let lanes: Vec<BatchLane> = (0..LANE_WIDTH)
+            .map(|_| BatchLane { ct: &rep, net: &net, profile: &prof })
+            .collect();
+        let mut slab = BatchSlab::default();
+        let got = run_batched(&rep, &lanes, rounds, &mut slab);
+
+        let mut delay = DelaySlab::new(&rep, &net, &prof);
+        let (solo, solo_stats) = run_compiled(&rep, &mut delay, &net, &prof, rounds);
+        assert!(solo_stats.cycle_detected_at.is_some(), "test premise: replay fires");
+        let mut naive_topo = MultigraphTopology::from_network(&net, &prof, 5);
+        let want = simulate_summary_naive(&mut naive_topo, &net, &prof, rounds);
+        for (j, (summary, stats)) in got.iter().enumerate() {
+            assert_bitwise(summary, &solo, &format!("lane {j} vs solo"));
+            assert_bitwise(summary, &want, &format!("lane {j} vs naive"));
+            assert_eq!(stats.cycle_detected_at, solo_stats.cycle_detected_at, "lane {j}");
+            assert_eq!(stats.cycle_len, solo_stats.cycle_len, "lane {j}");
+            assert_eq!(stats.simulated_rounds, solo_stats.simulated_rounds, "lane {j}");
+        }
+    }
+
+    #[test]
+    fn odd_lane_counts_pad_without_perturbing_results() {
+        // 3 lanes pad to stride 4; the padding lane replicates lane 0
+        // and must not change any real lane's bits.
+        let net = zoo::exodus();
+        let profiles = DatasetProfile::all();
+        let rounds = 70;
+        let compiles: Vec<CompiledTopology> = profiles
+            .iter()
+            .map(|prof| {
+                let mut topo = RingTopology::new(&net, prof);
+                CompiledTopology::compile(&mut topo, rounds).expect("periodic")
+            })
+            .collect();
+        let lanes: Vec<BatchLane> = profiles
+            .iter()
+            .zip(&compiles)
+            .map(|(prof, ct)| BatchLane { ct, net: &net, profile: prof })
+            .collect();
+        let mut slab = BatchSlab::default();
+        let got = run_batched(&compiles[0], &lanes, rounds, &mut slab);
+        for ((prof, ct), (summary, _)) in profiles.iter().zip(&compiles).zip(&got) {
+            let mut delay = DelaySlab::new(ct, &net, prof);
+            let (want, _) = run_compiled(ct, &mut delay, &net, prof, rounds);
+            assert_bitwise(summary, &want, &format!("padded lane {}", prof.name));
+        }
+    }
+
+    #[test]
+    fn single_lane_batch_equals_run_compiled_bitwise() {
+        // The no-dedup engine labels batchable cells and runs them as
+        // 1-lane batches; that path must be exactly run_compiled.
+        let net = zoo::gaia();
+        let prof = DatasetProfile::sentiment140();
+        for rounds in [1usize, 2, 59, 200] {
+            let mut topo = MultigraphTopology::from_network(&net, &prof, 3);
+            let Some(rep) = CompiledTopology::compile(&mut topo, rounds) else {
+                continue;
+            };
+            let lane = BatchLane { ct: &rep, net: &net, profile: &prof };
+            let mut slab = BatchSlab::default();
+            let got = run_batched(&rep, std::slice::from_ref(&lane), rounds, &mut slab);
+            let mut delay = DelaySlab::new(&rep, &net, &prof);
+            let (want, want_stats) = run_compiled(&rep, &mut delay, &net, &prof, rounds);
+            assert_bitwise(&got[0].0, &want, &format!("rounds {rounds}"));
+            let stats = got[0].1;
+            assert_eq!(stats.period, want_stats.period);
+            assert_eq!(stats.cycle_detected_at, want_stats.cycle_detected_at);
+            assert_eq!(stats.cycle_len, want_stats.cycle_len);
+            assert_eq!(stats.simulated_rounds, want_stats.simulated_rounds);
+        }
+    }
+
+    #[test]
+    fn slab_reuse_across_batches_is_exact() {
+        // One BatchSlab reused across differently-shaped batches must
+        // fully re-resolve (the sweep workers pool it per thread).
+        let gaia = zoo::gaia();
+        let exodus = zoo::exodus();
+        let prof = DatasetProfile::femnist();
+        let mut slab = BatchSlab::default();
+        for net in [&gaia, &exodus, &gaia] {
+            let mut topo = RingTopology::new(net, &prof);
+            let rep = CompiledTopology::compile(&mut topo, 50).expect("periodic");
+            let lanes = [
+                BatchLane { ct: &rep, net, profile: &prof },
+                BatchLane { ct: &rep, net, profile: &prof },
+            ];
+            let got = run_batched(&rep, &lanes, 50, &mut slab);
+            let mut naive_topo = RingTopology::new(net, &prof);
+            let want = simulate_summary_naive(&mut naive_topo, net, &prof, 50);
+            assert_bitwise(&got[0].0, &want, &net.name);
+            assert_bitwise(&got[1].0, &want, &net.name);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "silos")]
+    fn mismatched_lane_network_is_rejected() {
+        let gaia = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let mut topo = RingTopology::new(&gaia, &prof);
+        let rep = CompiledTopology::compile(&mut topo, 50).unwrap();
+        let exodus = zoo::exodus();
+        let lane = BatchLane { ct: &rep, net: &exodus, profile: &prof };
+        let _ = run_batched(&rep, std::slice::from_ref(&lane), 50, &mut BatchSlab::default());
+    }
+}

@@ -73,8 +73,9 @@ pub const MAX_COMPILED_STATES: u64 = 1 << 16;
 /// Snapshots the cycle detector retains before giving up. Every in-tree
 /// periodic schedule recurs by the second period boundary (state 0 is
 /// all-strong), so this is pure insurance against exotic third-party
-/// designs — it bounds detector memory, never correctness.
-const MAX_SNAPSHOTS: usize = 64;
+/// designs — it bounds detector memory, never correctness. Shared with
+/// the batched engine's per-lane detectors ([`super::batched`]).
+pub(crate) const MAX_SNAPSHOTS: usize = 64;
 
 /// Which engine executed a simulation. The dispatch order in
 /// [`simulate_summary_scratch`] is: periodic (materializable period)
@@ -84,6 +85,10 @@ const MAX_SNAPSHOTS: usize = 64;
 pub enum EngineKind {
     /// Per-state tables materialized; exact cycle detection + replay.
     Periodic,
+    /// Cross-cell SoA batch ([`super::batched`]): many cells sharing
+    /// one periodic schedule stepped in lockstep, per-lane cycle
+    /// detection and replay.
+    Batched,
     /// Period-factorized group engine ([`super::factored`]):
     /// O(distinct multiplicities) per round.
     Factored,
@@ -97,6 +102,7 @@ impl EngineKind {
     pub fn as_str(&self) -> &'static str {
         match self {
             EngineKind::Periodic => "periodic",
+            EngineKind::Batched => "batched",
             EngineKind::Factored => "factored",
             EngineKind::Streaming => "streaming",
         }
@@ -235,6 +241,78 @@ impl CompiledTopology {
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }
+
+    /// The stable edge-id table (lane delay resolution in
+    /// [`super::batched`] seeds per-lane d_0 from it).
+    pub(crate) fn edge_table(&self) -> &[CompiledEdge] {
+        &self.edges
+    }
+
+    /// State `s`'s (edge id, type) table in plan order, plus its
+    /// precomputed isolated-node count.
+    pub(crate) fn state(&self, s: usize) -> (&[(u32, EdgeType)], usize) {
+        let st = &self.states[s];
+        (&st.edges, st.isolated)
+    }
+
+    /// FNV-1a fingerprint of the compiled *schedule* — edge identities
+    /// and per-state tables, the design **name excluded** — so two
+    /// designs compiling to the same schedule fingerprint equal. A
+    /// cheap grouping key for the sweep batch planner; equal
+    /// fingerprints are confirmed with [`Self::schedule_eq`] before
+    /// cells share a batch, so a collision can never corrupt results.
+    pub fn schedule_fingerprint(&self) -> u64 {
+        fn fnv_u64(mut h: u64, x: u64) -> u64 {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001B3);
+            }
+            h
+        }
+        let mut h = 0xCBF29CE484222325u64;
+        h = fnv_u64(h, self.n as u64);
+        h = fnv_u64(h, self.edges.len() as u64);
+        h = fnv_u64(h, self.states.len() as u64);
+        for e in &self.edges {
+            h = fnv_u64(h, e.u as u64);
+            h = fnv_u64(h, e.v as u64);
+            h = fnv_u64(h, e.deg_u as u64);
+            h = fnv_u64(h, e.deg_v as u64);
+        }
+        for st in &self.states {
+            h = fnv_u64(h, st.edges.len() as u64);
+            for &(id, ty) in &st.edges {
+                h = fnv_u64(h, id as u64);
+                h = fnv_u64(h, matches!(ty, EdgeType::Strong) as u64);
+            }
+            h = fnv_u64(h, st.isolated as u64);
+        }
+        h
+    }
+
+    /// Structural schedule equality — same silo count, same edge
+    /// identities, same per-state tables (ids, types, plan order,
+    /// isolation counts); the design name is excluded. Two compiles
+    /// that are `schedule_eq` drive bit-identical simulations for any
+    /// given delay inputs, which is the batched engine's admission
+    /// contract.
+    pub fn schedule_eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.edges.len() == other.edges.len()
+            && self.states.len() == other.states.len()
+            && self
+                .edges
+                .iter()
+                .zip(&other.edges)
+                .all(|(a, b)| {
+                    a.u == b.u && a.v == b.v && a.deg_u == b.deg_u && a.deg_v == b.deg_v
+                })
+            && self
+                .states
+                .iter()
+                .zip(&other.states)
+                .all(|(a, b)| a.isolated == b.isolated && a.edges == b.edges)
+    }
 }
 
 /// The per-cell mutable layer over a shared [`CompiledTopology`]: the
@@ -340,10 +418,32 @@ fn reduce_tau_serial(backlog: &[f64], edges: &[(u32, EdgeType)], floor: f64) -> 
 #[cfg(feature = "rayon")]
 const PAR_REDUCE_MIN_EDGES: usize = 1 << 13;
 
+/// Portable chunked τ reduce for scalar (non-rayon) builds: four
+/// independent max accumulators walk the plan in chunks of four and
+/// fold at the end, breaking the serial `max` dependency chain so the
+/// hot reduce gets ILP without any fork/join machinery. `f64::max` is
+/// exact and order-independent on the positive finite delays the model
+/// produces (no NaN, no signed zero mixing), so the result is
+/// bit-identical to [`reduce_tau_serial`].
 #[cfg(not(feature = "rayon"))]
 #[inline]
 fn reduce_tau(backlog: &[f64], edges: &[(u32, EdgeType)], floor: f64) -> f64 {
-    reduce_tau_serial(backlog, edges, floor)
+    let mut m = [floor; 4];
+    let mut chunks = edges.chunks_exact(4);
+    for chunk in &mut chunks {
+        for (lane, &(id, ty)) in m.iter_mut().zip(chunk) {
+            if ty == EdgeType::Strong {
+                *lane = lane.max(floor.max(backlog[id as usize]));
+            }
+        }
+    }
+    let mut tau = m[0].max(m[1]).max(m[2].max(m[3]));
+    for &(id, ty) in chunks.remainder() {
+        if ty == EdgeType::Strong {
+            tau = tau.max(floor.max(backlog[id as usize]));
+        }
+    }
+    tau
 }
 
 /// Chunk-parallel τ reduce for large streaming cells (N = 4096
@@ -600,6 +700,8 @@ fn run_streaming(
 pub struct SimScratch {
     /// Periodic engine: d_0 + backlog slab.
     pub slab: DelaySlab,
+    /// Batched engine: the `[edge][lane]` SoA slabs.
+    pub batched: super::batched::BatchSlab,
     /// Factored engine: group envelopes + representative backlog.
     pub factored: super::factored::FactoredSlab,
     /// Streaming engine: edge arena + per-round buffers.
@@ -890,6 +992,32 @@ mod tests {
             let want = simulate_summary_naive(&mut fresh, &net, &prof, 200);
             assert_bitwise_equal(&want, &got);
         }
+    }
+
+    #[test]
+    fn schedule_fingerprint_tracks_structural_equality() {
+        let net = zoo::gaia();
+        let prof = crate::net::DatasetProfile::femnist();
+        let mut a = MultigraphTopology::from_network(&net, &prof, 5);
+        let mut b = MultigraphTopology::from_network(&net, &prof, 5);
+        let ca = CompiledTopology::compile(&mut a, 200).unwrap();
+        let cb = CompiledTopology::compile(&mut b, 200).unwrap();
+        assert!(ca.schedule_eq(&cb));
+        assert!(ca.schedule_eq(&ca));
+        assert_eq!(ca.schedule_fingerprint(), cb.schedule_fingerprint());
+
+        // A different t changes the schedule: fingerprints must split.
+        let mut c = MultigraphTopology::from_network(&net, &prof, 3);
+        let cc = CompiledTopology::compile(&mut c, 200).unwrap();
+        assert!(!ca.schedule_eq(&cc));
+        assert_ne!(ca.schedule_fingerprint(), cc.schedule_fingerprint());
+
+        // Same design over a different network: different structure.
+        let exodus = zoo::exodus();
+        let mut d = MultigraphTopology::from_network(&exodus, &prof, 5);
+        let cd = CompiledTopology::compile(&mut d, 200).unwrap();
+        assert!(!ca.schedule_eq(&cd));
+        assert_ne!(ca.schedule_fingerprint(), cd.schedule_fingerprint());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! long the local hardware takes, which is exactly how the paper's
 //! cycle-time tables are produced.
 
+pub mod batched;
 pub mod compiled;
 pub mod factored;
 
@@ -16,6 +17,7 @@ use crate::delay::{pair_d0_ms, round_cycle_time_ms, EdgeDelayState, EdgeType};
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::topo::TopologyDesign;
 
+pub use batched::{run_batched, BatchLane, BatchSlab, LANE_WIDTH, MIN_BATCH};
 pub use compiled::{
     run_compiled, simulate_summary_compiled, simulate_summary_compiled_with_stats,
     simulate_summary_scratch, simulate_summary_streaming_scratch,

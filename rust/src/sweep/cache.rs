@@ -44,11 +44,14 @@ use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::{Arc, Mutex, OnceLock};
 
+use std::time::Instant;
+
 use crate::config::TopologyKind;
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::simtime::{
-    run_compiled, run_factored, simulate_summary_scratch, simulate_summary_streaming_scratch,
-    CompiledTopology, EngineStats, FactoredTopology, SimScratch, SimSummary,
+    run_batched, run_compiled, run_factored, simulate_summary_scratch,
+    simulate_summary_streaming_scratch, BatchLane, CompiledTopology, EngineStats,
+    FactoredTopology, SimScratch, SimSummary, LANE_WIDTH, MIN_BATCH,
 };
 use crate::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
 use crate::topo::TopologyDesign;
@@ -187,6 +190,16 @@ impl<K: Eq + Hash + Clone, V: Clone> BuildOnce<K, V> {
         slot.get_or_init(build).clone()
     }
 
+    /// Probe `key` without building: the value if it has been built,
+    /// `None` otherwise (including while another thread's build is
+    /// in flight). Never creates a map entry, so [`Self::entries`]
+    /// accounting — which tests and the search's `unique_evals` pin —
+    /// is unaffected by probes.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let slot = self.map.lock().expect("build-once map lock").get(key).cloned()?;
+        slot.get().cloned()
+    }
+
     /// Number of distinct keys ever requested (diagnostics/tests).
     pub fn entries(&self) -> usize {
         self.map.lock().expect("build-once map lock").len()
@@ -225,8 +238,11 @@ impl CompiledKey {
 /// uncached cells always take the same engine (reports carry the engine
 /// kind, which must not depend on the execution strategy).
 #[derive(Clone)]
-enum SharedSchedule {
-    /// Materializable period: per-state tables + cycle replay.
+pub enum SharedSchedule {
+    /// Materializable period: per-state tables + cycle replay. The only
+    /// variant the batch planner ([`plan_batches`]) considers — batches
+    /// are groups of cells whose `Periodic` compiles are
+    /// [`CompiledTopology::schedule_eq`].
     Periodic(Arc<CompiledTopology>),
     /// Unmaterializable period but multiplicity-factorizable
     /// (huge-s_max multigraphs): the O(groups)-per-round engine.
@@ -258,6 +274,40 @@ impl SweepCache {
     /// Distinct MATCHA cores built so far (tests/benches).
     pub fn matcha_entries(&self) -> usize {
         self.matcha_cores.entries()
+    }
+
+    /// Resolve (building if first) the cell's shared schedule, plus the
+    /// construction wall-clock this call actually spent (~0 on a cache
+    /// hit). MATCHA variants return `None` — they are stochastic
+    /// per-cell instantiations with no shareable schedule, and
+    /// [`run_cell_cached`] routes them before the compile cache is
+    /// consulted. The batch planner's phase-1 probe: the verdict (and
+    /// dispatch) is exactly the one [`run_cell_cached`] would reach for
+    /// this cell, so planning never changes which engine a cell takes.
+    pub fn schedule_for(&self, cell: &CellSpec) -> (Option<SharedSchedule>, f64) {
+        match cell.topology {
+            TopologyKind::Matcha | TopologyKind::MatchaPlus => (None, 0.0),
+            _ => {
+                let key = CompiledKey::for_cell(cell);
+                let mut build_ms = 0.0;
+                let schedule = self.compiled.get_or_build(&key, || {
+                    let t0 = Instant::now();
+                    let mut topo = cell.to_experiment().build_topology();
+                    // Same dispatch order as simulate_summary_scratch:
+                    // periodic → factored → streaming.
+                    let sched = match CompiledTopology::compile(topo.as_mut(), cell.rounds) {
+                        Some(ct) => SharedSchedule::Periodic(Arc::new(ct)),
+                        None => match FactoredTopology::compile(topo.as_ref()) {
+                            Some(ft) => SharedSchedule::Factored(Arc::new(ft)),
+                            None => SharedSchedule::Stream,
+                        },
+                    };
+                    build_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    sched
+                });
+                (Some(schedule), build_ms)
+            }
+        }
     }
 }
 
@@ -396,6 +446,195 @@ fn run_cell_cached_scratch(
     }
 }
 
+/// The batch planner's output over one post-dedup unique-cell set:
+/// groups of cell indices that share one periodic schedule (each group
+/// at most [`LANE_WIDTH`] wide), plus every cell that runs the ordinary
+/// per-cell path.
+#[derive(Debug, Clone, Default)]
+pub struct BatchPlan {
+    /// Batches: indices into the planned cell slice, grid order within
+    /// each chunk, every chunk's cells mutually `schedule_eq` and over
+    /// the same network and round budget.
+    pub chunks: Vec<Vec<usize>>,
+    /// Cells on the per-cell fallback: factored/streaming verdicts,
+    /// MATCHA variants, and periodic cells whose structural group is
+    /// smaller than [`MIN_BATCH`].
+    pub solos: Vec<usize>,
+}
+
+impl BatchPlan {
+    /// Cells the plan routes through the batched engine.
+    pub fn batched_cells(&self) -> usize {
+        self.chunks.iter().map(Vec::len).sum()
+    }
+}
+
+/// Partition cells by shared periodic schedule. `schedules[i]` is cell
+/// `i`'s resolved [`SweepCache::schedule_for`] verdict; only
+/// `Periodic` cells are batch-eligible. Grouping is by
+/// (network, rounds, [`CompiledTopology::schedule_fingerprint`])
+/// *confirmed* by full [`CompiledTopology::schedule_eq`] against the
+/// group representative, so a fingerprint collision degrades to extra
+/// groups, never to a wrong batch. Structural groups of at least
+/// [`MIN_BATCH`] are chunked into runs of at most [`LANE_WIDTH`] cells
+/// in grid order (a trailing short chunk stays batched so the label is
+/// a pure function of the group, not its chunking).
+///
+/// The plan is a pure function of `(cells, schedules)` — no pointer
+/// identity, no thread scheduling — so dedup and no-dedup sweeps at any
+/// thread count label the same cells `batched`, keeping report
+/// artifacts byte-identical across execution modes.
+pub fn plan_batches(cells: &[&CellSpec], schedules: &[Option<SharedSchedule>]) -> BatchPlan {
+    assert_eq!(cells.len(), schedules.len());
+    // (network, rounds, fingerprint) → structural subgroups (the inner
+    // Vec of Vecs handles fingerprint collisions): first-appearance
+    // order throughout.
+    let mut order: Vec<Vec<Vec<usize>>> = Vec::new();
+    let mut index: HashMap<(&str, usize, u64), usize> = HashMap::new();
+    let mut plan = BatchPlan::default();
+    for (i, (cell, sched)) in cells.iter().zip(schedules).enumerate() {
+        let Some(SharedSchedule::Periodic(ct)) = sched else {
+            plan.solos.push(i);
+            continue;
+        };
+        let key = (cell.network.as_str(), cell.rounds, ct.schedule_fingerprint());
+        let slot = *index.entry(key).or_insert_with(|| {
+            order.push(Vec::new());
+            order.len() - 1
+        });
+        let subgroups = &mut order[slot];
+        let rep_of = |sub: &[usize]| match &schedules[sub[0]] {
+            Some(SharedSchedule::Periodic(rep)) => Arc::clone(rep),
+            _ => unreachable!("subgroups hold periodic cells only"),
+        };
+        match subgroups.iter_mut().find(|sub| rep_of(sub).schedule_eq(ct)) {
+            Some(sub) => sub.push(i),
+            None => subgroups.push(vec![i]),
+        }
+    }
+    for sub in order.into_iter().flatten() {
+        if sub.len() >= MIN_BATCH {
+            for chunk in sub.chunks(LANE_WIDTH) {
+                plan.chunks.push(chunk.to_vec());
+            }
+        } else {
+            plan.solos.extend(sub);
+        }
+    }
+    plan
+}
+
+/// Execute one planned batch through this thread's pooled scratch:
+/// every cell of `chunk` becomes one lane of a single
+/// [`run_batched`] call over the first cell's compile as
+/// representative. Each lane's summary is bit-identical to the per-cell
+/// path; `sim_ms` splits the batch's wall-clock evenly across lanes
+/// (the lanes are inseparable inside one lockstep pass), and `build_ms`
+/// is 0 — the shared compile was charged when the schedule cache built
+/// it.
+pub fn run_batch_cached(
+    chunk: &[(&CellSpec, Arc<CompiledTopology>)],
+    rounds: usize,
+) -> Vec<(SimSummary, CellTiming, EngineStats)> {
+    // Resolve the (network, profile) pairs first so the lanes can
+    // borrow them for the duration of the run.
+    let resolved: Vec<(NetworkSpec, DatasetProfile)> = chunk
+        .iter()
+        .map(|(cell, _)| {
+            let cfg = cell.to_experiment();
+            let net = cfg.resolve_network();
+            let prof = cfg.resolve_profile().expect("validated profile");
+            (net, prof)
+        })
+        .collect();
+    let lanes: Vec<BatchLane> = chunk
+        .iter()
+        .zip(&resolved)
+        .map(|((_, ct), (net, prof))| BatchLane { ct, net, profile: prof })
+        .collect();
+    let rep = &chunk[0].1;
+    let t0 = Instant::now();
+    let results = with_scratch(|scratch| run_batched(rep, &lanes, rounds, &mut scratch.batched));
+    let sim_ms = t0.elapsed().as_secs_f64() * 1e3 / lanes.len() as f64;
+    results
+        .into_iter()
+        .map(|(summary, stats)| (summary, CellTiming { build_ms: 0.0, sim_ms }, stats))
+        .collect()
+}
+
+/// Run one cell as a single-lane batch, building its compile fresh —
+/// the no-dedup engine's executor for cells the planner labels
+/// `batched`. A one-lane batch performs exactly the per-lane op
+/// sequence of [`run_compiled`], so the summary is bit-identical to
+/// every other path; only the reported engine kind says `batched`,
+/// which is the point: the report's engine column must not depend on
+/// whether dedup ran.
+pub fn run_cell_batched_single(cell: &CellSpec) -> (SimSummary, CellTiming, EngineStats) {
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    let t0 = Instant::now();
+    let mut topo = cfg.build_topology();
+    let ct = CompiledTopology::compile(topo.as_mut(), cell.rounds)
+        .expect("batch-labeled cells have a materializable periodic schedule");
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let lane = BatchLane { ct: &ct, net: &net, profile: &prof };
+    let mut out = with_scratch(|scratch| {
+        run_batched(&ct, std::slice::from_ref(&lane), cell.rounds, &mut scratch.batched)
+    });
+    let (summary, stats) = out.pop().expect("one lane in, one result out");
+    (summary, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 }, stats)
+}
+
+/// Plan and execute a small cell list serially with automatic batching:
+/// resolve every cell's shared schedule through `cache`, batch the
+/// groups [`plan_batches`] finds, run everything else per-cell. Results
+/// come back in input order. This is the search engine's entry for its
+/// baseline probes (and any caller too small to justify the sweep
+/// engine's parallel phases); schedule-construction cost is folded into
+/// each solo/batched cell's timing the same way the sweep engine's
+/// phase split does.
+pub fn run_cells_auto_batched(
+    cells: &[CellSpec],
+    cache: &SweepCache,
+) -> Vec<(SimSummary, CellTiming, EngineStats)> {
+    let refs: Vec<&CellSpec> = cells.iter().collect();
+    let scheds: Vec<Option<SharedSchedule>> =
+        refs.iter().map(|c| cache.schedule_for(c).0).collect();
+    let plan = plan_batches(&refs, &scheds);
+    let mut out: Vec<Option<(SimSummary, CellTiming, EngineStats)>> =
+        cells.iter().map(|_| None).collect();
+    for chunk in &plan.chunks {
+        let batch: Vec<(&CellSpec, Arc<CompiledTopology>)> = chunk
+            .iter()
+            .map(|&i| match &scheds[i] {
+                Some(SharedSchedule::Periodic(ct)) => (refs[i], Arc::clone(ct)),
+                _ => unreachable!("planner only chunks periodic cells"),
+            })
+            .collect();
+        let rounds = refs[chunk[0]].rounds;
+        for (&i, r) in chunk.iter().zip(run_batch_cached(&batch, rounds)) {
+            out[i] = Some(r);
+        }
+    }
+    for &i in &plan.solos {
+        out[i] = Some(run_cell_cached_timed(refs[i], cache));
+    }
+    out.into_iter().map(|o| o.expect("every cell executed")).collect()
+}
+
+/// Run one caller-assembled batch through this thread's pooled scratch —
+/// the search evaluator's entry point, whose lanes are local candidate
+/// compiles rather than cache-shared `Arc`s.
+pub fn run_batch_pooled(
+    rep: &CompiledTopology,
+    lanes: &[BatchLane<'_>],
+    rounds: usize,
+) -> Vec<(SimSummary, EngineStats)> {
+    with_scratch(|scratch| run_batched(rep, lanes, rounds, &mut scratch.batched))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -531,5 +770,121 @@ mod tests {
             assert_eq!(got.max_isolated, want.max_isolated);
         }
         assert_eq!(cache.compiled_entries(), 1, "one shared factored compile");
+    }
+
+    #[test]
+    fn plan_batches_groups_structural_twins_and_isolates_the_rest() {
+        let cells = spec().expand();
+        let plan = DedupPlan::partition(&cells);
+        let cache = SweepCache::default();
+        let work: Vec<&CellSpec> = plan.unique.iter().map(|&i| &cells[i]).collect();
+        let schedules: Vec<Option<SharedSchedule>> =
+            work.iter().map(|c| cache.schedule_for(c).0).collect();
+        let bplan = plan_batches(&work, &schedules);
+        // Ring t=3 and t=5 share one periodic schedule (ring structure
+        // ignores t), so they form the only lockstep chunk; the two
+        // multigraph compiles are structurally distinct singletons, and
+        // matcha cells never expose a shareable schedule.
+        assert_eq!(bplan.chunks.len(), 1, "exactly one batchable group");
+        assert_eq!(bplan.chunks[0].len(), 2);
+        assert_eq!(bplan.batched_cells(), 2);
+        assert_eq!(bplan.solos.len(), work.len() - 2);
+        // The plan covers the work list exactly once, in order.
+        let mut all: Vec<usize> = bplan
+            .chunks
+            .iter()
+            .flatten()
+            .copied()
+            .chain(bplan.solos.iter().copied())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..work.len()).collect::<Vec<_>>());
+        // Chunk members really share the structure the planner claims.
+        for chunk in &bplan.chunks {
+            let rep = match &schedules[chunk[0]] {
+                Some(SharedSchedule::Periodic(ct)) => Arc::clone(ct),
+                _ => panic!("chunks hold periodic schedules"),
+            };
+            for &i in chunk {
+                match &schedules[i] {
+                    Some(SharedSchedule::Periodic(ct)) => assert!(rep.schedule_eq(ct)),
+                    _ => panic!("chunks hold periodic schedules"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_chunks_match_the_per_cell_engine_bitwise() {
+        use crate::simtime::EngineKind;
+        let cells = spec().expand();
+        // cells[0] is ring t=3, cells[2] ring t=5 (seed is the
+        // innermost axis): distinct fingerprints, one shared schedule.
+        let (ring3, ring5) = (&cells[0], &cells[2]);
+        assert_ne!(ring3.fingerprint(), ring5.fingerprint());
+        let cache = SweepCache::default();
+        let arc_of = |c: &CellSpec| match cache.schedule_for(c).0 {
+            Some(SharedSchedule::Periodic(ct)) => ct,
+            _ => panic!("ring cells compile periodically"),
+        };
+        let chunk = vec![(ring3, arc_of(ring3)), (ring5, arc_of(ring5))];
+        let out = run_batch_cached(&chunk, ring3.rounds);
+        assert_eq!(out.len(), 2);
+        for ((cell, _), (got, _, got_stats)) in chunk.iter().zip(&out) {
+            let (want, _, want_stats) = crate::sweep::run_cell_summary_timed(cell);
+            let ctx = format!("{}/t{}", cell.topology.as_str(), cell.t);
+            assert_eq!(got_stats.kind, EngineKind::Batched, "{ctx}");
+            assert_eq!(
+                EngineStats { kind: want_stats.kind, ..*got_stats },
+                want_stats,
+                "{ctx}: stats must agree in everything but the engine tag"
+            );
+            assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits(), "{ctx}");
+            assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits(), "{ctx}");
+            assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated, "{ctx}");
+            assert_eq!(got.max_isolated, want.max_isolated, "{ctx}");
+        }
+    }
+
+    #[test]
+    fn single_cell_batch_dispatch_matches_the_solo_engine() {
+        use crate::simtime::EngineKind;
+        let cells = spec().expand();
+        let ring3 = &cells[0];
+        let (got, timing, got_stats) = run_cell_batched_single(ring3);
+        let (want, _, want_stats) = crate::sweep::run_cell_summary_timed(ring3);
+        assert_eq!(got_stats.kind, EngineKind::Batched);
+        assert_eq!(EngineStats { kind: want_stats.kind, ..got_stats }, want_stats);
+        assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+        assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits());
+        assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated);
+        assert_eq!(got.max_isolated, want.max_isolated);
+        assert!(timing.build_ms >= 0.0 && timing.sim_ms >= 0.0);
+    }
+
+    #[test]
+    fn auto_batched_grid_is_bitwise_identical_and_order_preserving() {
+        use crate::simtime::EngineKind;
+        let cells = spec().expand();
+        let cache = SweepCache::default();
+        let out = run_cells_auto_batched(&cells, &cache);
+        assert_eq!(out.len(), cells.len());
+        let mut batched = 0;
+        for (cell, (got, _, stats)) in cells.iter().zip(&out) {
+            let want = run_cell_summary(cell);
+            let ctx = format!("{}/t{}/seed{}", cell.topology.as_str(), cell.t, cell.base_seed);
+            assert_eq!(got.topology, want.topology, "{ctx}");
+            assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits(), "{ctx}");
+            assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits(), "{ctx}");
+            assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated, "{ctx}");
+            assert_eq!(got.max_isolated, want.max_isolated, "{ctx}");
+            if stats.kind == EngineKind::Batched {
+                batched += 1;
+            }
+        }
+        // Without dedup, all four ring cells share one schedule (one
+        // 4-lane chunk) and each multigraph t forms a 2-lane chunk
+        // across its seed axis; only the four matcha cells run solo.
+        assert_eq!(batched, 8, "ring x4 plus multigraph 2x2 must batch");
     }
 }

@@ -29,20 +29,23 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{
-    run_cell_cached, run_cell_cached_timed, simulate_design_pooled, BuildOnce, CellFingerprint,
-    DedupPlan, SweepCache,
+    plan_batches, run_batch_cached, run_batch_pooled, run_cell_batched_single, run_cell_cached,
+    run_cell_cached_timed, run_cells_auto_batched, simulate_design_pooled, BatchPlan, BuildOnce,
+    CellFingerprint, DedupPlan, SharedSchedule, SweepCache,
 };
 pub use report::{Axis, CellResult, SweepReport};
 pub use spec::{CellSpec, SweepSpec};
 
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::simtime::{simulate_summary_compiled_with_stats, EngineKind, EngineStats, SimSummary};
+use crate::simtime::{
+    simulate_summary_compiled_with_stats, CompiledTopology, EngineKind, EngineStats, SimSummary,
+};
 
 /// How to execute a sweep (host-side knobs; never part of the artifact).
 #[derive(Debug, Clone)]
@@ -281,6 +284,9 @@ pub fn run_cell(cell: &CellSpec) -> CellResult {
 pub struct EngineMix {
     /// Cells on the periodic per-state engine (cycle replay).
     pub periodic: usize,
+    /// Cells on the cross-cell SoA batched engine (lanes of a shared
+    /// schedule stepped in lockstep).
+    pub batched: usize,
     /// Cells on the period-factorized group engine.
     pub factored: usize,
     /// Cells on the per-edge streaming engine.
@@ -296,6 +302,7 @@ impl EngineMix {
     fn count(&mut self, stats: &EngineStats, rounds: usize) {
         match stats.kind {
             EngineKind::Periodic => self.periodic += 1,
+            EngineKind::Batched => self.batched += 1,
             EngineKind::Factored => self.factored += 1,
             EngineKind::Streaming => self.streaming += 1,
         }
@@ -303,12 +310,17 @@ impl EngineMix {
         self.total_rounds += rounds as u64;
     }
 
-    /// Human summary, e.g. `3 periodic + 2 factored + 1 streaming,
-    /// stepped 180/38400 rounds`.
+    /// Human summary, e.g. `3 periodic + 2 batched + 2 factored + 1
+    /// streaming, stepped 180/38400 rounds`.
     pub fn describe(&self) -> String {
         format!(
-            "{} periodic + {} factored + {} streaming, stepped {}/{} rounds",
-            self.periodic, self.factored, self.streaming, self.stepped_rounds, self.total_rounds
+            "{} periodic + {} batched + {} factored + {} streaming, stepped {}/{} rounds",
+            self.periodic,
+            self.batched,
+            self.factored,
+            self.streaming,
+            self.stepped_rounds,
+            self.total_rounds
         )
     }
 }
@@ -361,6 +373,15 @@ impl SweepOutcome {
 /// only those are simulated (through a per-run [`SweepCache`]) and the
 /// summaries are fanned out to every duplicate coordinate — the report
 /// is byte-identical to the undeduplicated engine either way.
+///
+/// The deduplicated engine runs in three phases: (1) resolve every
+/// unique cell's shared schedule in parallel, (2) serially plan batches
+/// of cells that share one periodic schedule ([`plan_batches`]), (3)
+/// execute batches and per-cell fallbacks in parallel. With dedup off
+/// the same batch *labels* are still computed (from the fingerprint
+/// partition), and labeled cells run as single-lane batches — so the
+/// report's `engine` column, like every other column, is byte-identical
+/// across modes and thread counts.
 pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     // Canonicalize a local copy so coordinates (and the cell seeds
     // derived from them) are case-stable no matter how the caller
@@ -373,27 +394,101 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     };
     spec.validate()?;
     let cells = spec.expand();
-    let plan = if opts.dedup {
-        DedupPlan::partition(&cells)
-    } else {
-        DedupPlan::identity(cells.len())
-    };
+    // The fingerprint partition is computed in BOTH modes: with dedup on
+    // it is the work plan; with dedup off it still drives batch
+    // labeling, which must not depend on the execution mode.
+    let fp_plan = DedupPlan::partition(&cells);
+    let plan = if opts.dedup { fp_plan.clone() } else { DedupPlan::identity(cells.len()) };
     let work: Vec<&CellSpec> = plan.unique.iter().map(|&i| &cells[i]).collect();
     let threads = effective_threads(opts.threads, work.len());
     let inner = RunOptions { threads, progress: opts.progress, dedup: opts.dedup };
+    let sched_opts = RunOptions { threads, progress: false, dedup: opts.dedup };
     let t0 = Instant::now();
-    let summaries: Vec<(SimSummary, CellTiming, EngineStats)> = if opts.dedup {
-        let shared = SweepCache::default();
-        run_cells(&work, &inner, |_, c| run_cell_cached_timed(c, &shared))
-    } else {
-        run_cells(&work, &inner, |_, c| run_cell_summary_timed(c))
-    };
+    let (summaries, planner_build_ms): (Vec<(SimSummary, CellTiming, EngineStats)>, f64) =
+        if opts.dedup {
+            let shared = SweepCache::default();
+            // Phase 1 (parallel): resolve every unique cell's shared
+            // schedule — construction the per-cell path would have done
+            // lazily, hoisted so the planner can inspect the compiles.
+            let resolved: Vec<(Option<SharedSchedule>, f64)> =
+                run_cells(&work, &sched_opts, |_, c| shared.schedule_for(c));
+            let phase1_build: f64 = resolved.iter().map(|(_, b)| b).sum();
+            let scheds: Vec<Option<SharedSchedule>> =
+                resolved.into_iter().map(|(s, _)| s).collect();
+            // Phase 2 (serial): group cells sharing one periodic
+            // schedule into batches.
+            let bplan = plan_batches(&work, &scheds);
+            // Phase 3 (parallel): execute batches and solos, scattering
+            // results back into work order.
+            enum Unit {
+                Chunk(usize),
+                Solo(usize),
+            }
+            let units: Vec<Unit> = (0..bplan.chunks.len())
+                .map(Unit::Chunk)
+                .chain(bplan.solos.iter().map(|&i| Unit::Solo(i)))
+                .collect();
+            let produced: Vec<Vec<(usize, (SimSummary, CellTiming, EngineStats))>> =
+                run_cells(&units, &inner, |_, unit| match unit {
+                    Unit::Chunk(ci) => {
+                        let chunk = &bplan.chunks[*ci];
+                        let batch: Vec<(&CellSpec, Arc<CompiledTopology>)> = chunk
+                            .iter()
+                            .map(|&i| match &scheds[i] {
+                                Some(SharedSchedule::Periodic(ct)) => (work[i], Arc::clone(ct)),
+                                _ => unreachable!("planner only chunks periodic cells"),
+                            })
+                            .collect();
+                        // The batch key includes `rounds`, so the chunk
+                        // is uniform; take the first cell's budget.
+                        let rounds = work[chunk[0]].rounds;
+                        chunk.iter().copied().zip(run_batch_cached(&batch, rounds)).collect()
+                    }
+                    Unit::Solo(i) => vec![(*i, run_cell_cached_timed(work[*i], &shared))],
+                });
+            let mut slots: Vec<Option<(SimSummary, CellTiming, EngineStats)>> =
+                work.iter().map(|_| None).collect();
+            for (i, r) in produced.into_iter().flatten() {
+                slots[i] = Some(r);
+            }
+            let summaries =
+                slots.into_iter().map(|s| s.expect("every unique cell executed")).collect();
+            (summaries, phase1_build)
+        } else {
+            // Dedup off: every grid cell runs independently, but batch
+            // labels still come from the fingerprint partition above so
+            // the engine column matches the dedup mode byte for byte;
+            // labeled cells run as single-lane batches. The labeling
+            // pass's construction cost is not added to build_ms here
+            // (every cell's own timing already pays its full build) —
+            // it is visible only in host_elapsed_ms.
+            let labeler = SweepCache::default();
+            let fp_work: Vec<&CellSpec> = fp_plan.unique.iter().map(|&i| &cells[i]).collect();
+            let scheds: Vec<Option<SharedSchedule>> =
+                run_cells(&fp_work, &sched_opts, |_, c| labeler.schedule_for(c).0);
+            let bplan = plan_batches(&fp_work, &scheds);
+            let mut batched_label = vec![false; fp_work.len()];
+            for chunk in &bplan.chunks {
+                for &i in chunk {
+                    batched_label[i] = true;
+                }
+            }
+            let summaries = run_cells(&work, &inner, |i, c| {
+                if batched_label[fp_plan.assignment[i]] {
+                    run_cell_batched_single(c)
+                } else {
+                    run_cell_summary_timed(c)
+                }
+            });
+            (summaries, 0.0)
+        };
     let results: Vec<CellResult> = cells
         .iter()
         .zip(&plan.assignment)
         .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot].0, cell, &summaries[slot].2))
         .collect();
-    let build_ms: f64 = summaries.iter().map(|(_, t, _)| t.build_ms).sum();
+    let build_ms: f64 =
+        planner_build_ms + summaries.iter().map(|(_, t, _)| t.build_ms).sum::<f64>();
     let sim_ms: f64 = summaries.iter().map(|(_, t, _)| t.sim_ms).sum();
     let mut engines = EngineMix::default();
     for ((s, _, stats), &i) in summaries.iter().zip(&plan.unique) {

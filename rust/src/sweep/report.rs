@@ -47,9 +47,10 @@ pub struct CellResult {
     pub rounds_with_isolated: usize,
     /// Largest isolated-silo count seen in any round.
     pub max_isolated: usize,
-    /// Which engine simulated the cell ("periodic" | "factored" |
-    /// "streaming"). Deterministic per cell spec — the dispatch is a
-    /// pure function of the design's structure and the round budget —
+    /// Which engine simulated the cell ("periodic" | "batched" |
+    /// "factored" | "streaming"). Deterministic per cell spec — the
+    /// dispatch (including the batch planner's labels) is a pure
+    /// function of the design's structure and the round budget —
     /// so it rides in the artifact without breaking determinism, and
     /// an engine regression (a factorizable cell silently falling back
     /// to streaming) diffs in every report.

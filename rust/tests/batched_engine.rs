@@ -1,0 +1,157 @@
+//! Integration gate for the cross-cell SoA batched engine (ISSUE 7
+//! acceptance): batch lanes must be **bit-identical** to the naive
+//! `DelayTracker` oracle on every zoo network across all dataset
+//! profiles, the sweep batch planner's dispatch must be observable per
+//! cell in reports, and sweep artifacts must stay byte-identical across
+//! thread counts and dedup modes when batching kicks in.
+
+use mgfl::config::TopologyKind;
+use mgfl::net::{zoo, DatasetProfile};
+use mgfl::simtime::{
+    run_batched, simulate_summary_naive, BatchLane, BatchSlab, CompiledTopology, EngineKind,
+    SimSummary,
+};
+use mgfl::sweep::{self, RunOptions, SweepSpec};
+use mgfl::topo::ring::RingTopology;
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}");
+    assert_eq!(
+        a.total_ms.to_bits(),
+        b.total_ms.to_bits(),
+        "{ctx}: total_ms {} vs {}",
+        a.total_ms,
+        b.total_ms
+    );
+    assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}");
+    assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}");
+    assert_eq!(a.max_isolated, b.max_isolated, "{ctx}");
+}
+
+/// Every zoo network: one ring batch with a lane per dataset profile
+/// (the ring schedule is profile-independent, so the lanes genuinely
+/// share one schedule at three different delay resolutions), each lane
+/// bit-identical to the naive oracle.
+#[test]
+fn ring_batches_match_naive_on_every_zoo_network() {
+    let rounds = 90;
+    let profiles = DatasetProfile::all();
+    for net in zoo::all_networks() {
+        let compiled: Vec<CompiledTopology> = profiles
+            .iter()
+            .map(|p| {
+                let mut topo = RingTopology::new(&net, p);
+                CompiledTopology::compile(&mut topo, rounds).expect("ring schedules are periodic")
+            })
+            .collect();
+        let rep = &compiled[0];
+        let lanes: Vec<BatchLane<'_>> = compiled
+            .iter()
+            .zip(&profiles)
+            .map(|(ct, p)| {
+                assert!(rep.schedule_eq(ct), "ring schedule must be profile-independent");
+                BatchLane { ct, net: &net, profile: p }
+            })
+            .collect();
+        let mut slab = BatchSlab::default();
+        let res = run_batched(rep, &lanes, rounds, &mut slab);
+        for ((got, stats), p) in res.iter().zip(&profiles) {
+            let mut naive_topo = RingTopology::new(&net, p);
+            let naive = simulate_summary_naive(&mut naive_topo, &net, p, rounds);
+            assert_bitwise(got, &naive, &format!("{}/{}", net.name, p.name));
+            assert_eq!(stats.kind, EngineKind::Batched);
+        }
+    }
+}
+
+/// A grid mixing batched, solo-periodic, and streaming dispatch: ring
+/// t ∈ {3, 5} share one schedule under two distinct cell fingerprints
+/// (the only guaranteed-batchable pair), the multigraph's two t values
+/// compile to structurally different periodic schedules (solo), and
+/// matcha streams. The report's engine column and the sweep summary's
+/// `EngineMix` are the observables, and the artifacts must stay
+/// byte-identical whatever the thread count or dedup mode — the batch
+/// planner labels cells by structure, never by execution strategy.
+#[test]
+fn sweep_batch_planner_dispatch_is_observable_and_deterministic() {
+    let spec = SweepSpec {
+        name: "batched".into(),
+        topologies: vec![TopologyKind::Ring, TopologyKind::Multigraph, TopologyKind::Matcha],
+        networks: vec!["gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![3, 5],
+        seeds: vec![17],
+        rounds: 60,
+    };
+    let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
+
+    let engines_of = |topo: &str| -> Vec<&str> {
+        outcome
+            .report
+            .cells
+            .iter()
+            .filter(|c| c.topology == topo)
+            .map(|c| c.engine)
+            .collect()
+    };
+    assert_eq!(engines_of("ring"), ["batched", "batched"], "ring t=3/t=5 share one schedule");
+    assert_eq!(
+        engines_of("multigraph"),
+        ["periodic", "periodic"],
+        "structural singletons stay solo"
+    );
+    assert_eq!(engines_of("matcha"), ["streaming", "streaming"]);
+    assert_eq!(outcome.engines.batched, 2, "{:?}", outcome.engines);
+    assert_eq!(outcome.engines.periodic, 2, "{:?}", outcome.engines);
+    assert_eq!(outcome.engines.streaming, 2, "{:?}", outcome.engines);
+    assert_eq!(outcome.engines.factored, 0, "{:?}", outcome.engines);
+
+    // The engine column survives the JSON artifact, and the artifact is
+    // byte-identical across thread counts and dedup modes: the batch
+    // planner's labels are a pure function of cell structure.
+    let json = outcome.report.to_json().to_string();
+    let csv = outcome.report.to_csv();
+    assert!(json.contains("\"engine\":\"batched\""), "{json}");
+    for (threads, dedup) in [(1, true), (4, true), (1, false), (4, false)] {
+        let opts = RunOptions { threads, progress: false, dedup };
+        let again = sweep::run(&spec, &opts).unwrap();
+        let ctx = format!("threads={threads} dedup={dedup}");
+        assert_eq!(again.report.to_json().to_string(), json, "{ctx}");
+        assert_eq!(again.report.to_csv(), csv, "{ctx}");
+        assert_eq!(again.engines, outcome.engines, "{ctx}");
+    }
+}
+
+/// A seed-replicated all-ring grid: every cell shares the ring
+/// schedule, so batching covers the whole grid in both dedup modes —
+/// and the artifacts must not move by a single bit between them.
+#[test]
+fn seed_replicated_ring_grid_batches_without_perturbing_artifacts() {
+    let spec = SweepSpec {
+        name: "lanes".into(),
+        topologies: vec![TopologyKind::Ring],
+        networks: vec!["gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![3, 5],
+        seeds: (17..22).collect(),
+        rounds: 40,
+    };
+    let dedup = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
+    let no_dedup =
+        sweep::run(&spec, &RunOptions { threads: 2, dedup: false, ..Default::default() }).unwrap();
+    assert_eq!(
+        no_dedup.report.to_json().to_string(),
+        dedup.report.to_json().to_string(),
+        "dedup fan-out must not change batched artifacts"
+    );
+    assert_eq!(no_dedup.report.to_csv(), dedup.report.to_csv());
+    // EngineMix counts simulated (unique) cells: the seed axis merges
+    // under dedup (2 unique ring schedules run as one 2-lane chunk);
+    // without dedup all 10 cells execute through the batch dispatch
+    // (single-lane runs of the batch-labeled schedule — same bits).
+    assert_eq!(dedup.engines.batched, 2, "{:?}", dedup.engines);
+    assert_eq!(no_dedup.engines.batched, spec.cell_count(), "{:?}", no_dedup.engines);
+    for c in &dedup.report.cells {
+        assert_eq!(c.engine, "batched");
+    }
+}

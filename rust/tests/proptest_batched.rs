@@ -1,0 +1,176 @@
+//! Property tests for the cross-cell SoA batched engine, backed by the
+//! real proptest crate (gated behind `--features proptest` like the
+//! other proptest suites; the offline build vendors no proptest).
+//!
+//! Strategy: random multigraph schedules over synthetic networks — a
+//! ring backbone plus random chords, each pair carrying a multiplicity
+//! drawn from the divisors of 12 so the schedule's LCM always fits the
+//! round budget and the periodic compile is guaranteed — batched at
+//! every width from 1 to `LANE_WIDTH`, with lanes cycling through all
+//! dataset profiles (the schedule is profile-independent, the delays
+//! are not). Every lane must be **bitwise** equal to both the per-cell
+//! compiled engine and the naive `DelayTracker` oracle, and must replay
+//! the compiled engine's cycle detection stat for stat.
+
+#![cfg(feature = "proptest")]
+
+use std::collections::BTreeSet;
+
+use mgfl::graph::Graph;
+use mgfl::net::{synth, DatasetProfile};
+use mgfl::simtime::{
+    run_batched, run_compiled, simulate_summary_naive, BatchLane, BatchSlab, CompiledTopology,
+    DelaySlab, EngineKind, SimSummary, LANE_WIDTH,
+};
+use mgfl::topo::{RoundPlan, ScheduleFactorization, TopologyDesign};
+use mgfl::util::lcm;
+use proptest::prelude::*;
+use proptest::test_runner::TestCaseError;
+
+/// A synthetic multigraph schedule: an arbitrary edge set with
+/// arbitrary multiplicities, planned in full every round with pair
+/// (u, v, m) strong iff `k % m == 0`.
+struct RandomMultigraph {
+    overlay: Graph,
+    edges: Vec<(usize, usize, u32)>,
+}
+
+impl RandomMultigraph {
+    fn new(n: usize, edges: Vec<(usize, usize, u32)>) -> Self {
+        let overlay = Graph::from_edges(n, edges.iter().map(|&(u, v, _)| (u, v, 1.0)));
+        RandomMultigraph { overlay, edges }
+    }
+}
+
+impl TopologyDesign for RandomMultigraph {
+    fn name(&self) -> &str {
+        "random-multigraph"
+    }
+
+    fn overlay(&self) -> &Graph {
+        &self.overlay
+    }
+
+    fn plan(&mut self, k: usize) -> RoundPlan {
+        let mut out = RoundPlan::empty(self.overlay.n());
+        self.plan_into(k, &mut out);
+        out
+    }
+
+    fn plan_into(&mut self, k: usize, out: &mut RoundPlan) {
+        out.reset(self.overlay.n());
+        for &(u, v, m) in &self.edges {
+            let ty = if k as u64 % m as u64 == 0 {
+                mgfl::delay::EdgeType::Strong
+            } else {
+                mgfl::delay::EdgeType::Weak
+            };
+            out.push(u, v, ty);
+        }
+    }
+
+    fn period(&self) -> Option<u64> {
+        Some(self.edges.iter().map(|&(_, _, m)| m as u64).fold(1, lcm))
+    }
+
+    fn factorization(&self) -> Option<ScheduleFactorization> {
+        Some(ScheduleFactorization {
+            n: self.overlay.n(),
+            edges: self.edges.clone(),
+        })
+    }
+
+    fn seed_sensitive(&self) -> bool {
+        false
+    }
+}
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) -> Result<(), TestCaseError> {
+    prop_assert_eq!(a.rounds, b.rounds, "{}", ctx);
+    prop_assert_eq!(
+        a.total_ms.to_bits(),
+        b.total_ms.to_bits(),
+        "{}: total_ms {} vs {}",
+        ctx,
+        a.total_ms,
+        b.total_ms
+    );
+    prop_assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{}", ctx);
+    prop_assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{}", ctx);
+    prop_assert_eq!(a.max_isolated, b.max_isolated, "{}", ctx);
+    Ok(())
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(40))]
+
+    #[test]
+    fn batched_lanes_match_compiled_and_naive_bitwise(
+        n in 4usize..32,
+        net_seed in 1u64..1000,
+        chord_seeds in proptest::collection::vec((0usize..1000, 0usize..1000), 0..10),
+        mult_seed in 0u64..(1 << 32),
+        rounds in 13usize..160,
+        width in 1usize..=LANE_WIDTH,
+    ) {
+        let net = synth::by_name(&format!("synth-geo-n{n}-s{net_seed}"))
+            .expect("synth size in range");
+        let profiles = DatasetProfile::all();
+
+        // Ring backbone (connected, every node participates) plus
+        // random chords, deduplicated; multiplicities drawn from the
+        // divisors of 12 via a cheap splitmix over the pair, so the
+        // schedule period (the LCM) divides 12 and 12 < rounds.
+        const DIVISORS: [u32; 6] = [1, 2, 3, 4, 6, 12];
+        let mut pairs: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for i in 0..n - 1 {
+            pairs.insert((i, i + 1));
+        }
+        pairs.insert((0, n - 1));
+        for &(a, b) in &chord_seeds {
+            let (u, v) = (a % n, b % n);
+            if u < v {
+                pairs.insert((u, v));
+            }
+        }
+        let edges: Vec<(usize, usize, u32)> = pairs
+            .into_iter()
+            .map(|(u, v)| {
+                let h = mult_seed
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .wrapping_add(((u as u64) << 32) | v as u64)
+                    .wrapping_mul(0xBF58476D1CE4E5B9);
+                (u, v, DIVISORS[(h >> 33) as usize % DIVISORS.len()])
+            })
+            .collect();
+
+        // One shared schedule compile (profile-independent); lanes
+        // cycle through the profiles, so the batch mixes three delay
+        // resolutions over one plan.
+        let mut topo = RandomMultigraph::new(n, edges.clone());
+        let ct = CompiledTopology::compile(&mut topo, rounds)
+            .expect("divisor-of-12 LCM fits any rounds >= 13");
+        let lanes: Vec<BatchLane<'_>> = (0..width)
+            .map(|j| BatchLane { ct: &ct, net: &net, profile: &profiles[j % profiles.len()] })
+            .collect();
+        let mut slab = BatchSlab::default();
+        let res = run_batched(&ct, &lanes, rounds, &mut slab);
+        prop_assert_eq!(res.len(), width);
+
+        for (j, (got, stats)) in res.iter().enumerate() {
+            let prof = &profiles[j % profiles.len()];
+            let mut naive_topo = RandomMultigraph::new(n, edges.clone());
+            let naive = simulate_summary_naive(&mut naive_topo, &net, prof, rounds);
+            assert_bitwise(got, &naive, &format!("lane {j} vs naive"))?;
+
+            let mut delay = DelaySlab::new(&ct, &net, prof);
+            let (want, want_stats) = run_compiled(&ct, &mut delay, &net, prof, rounds);
+            assert_bitwise(got, &want, &format!("lane {j} vs compiled"))?;
+            prop_assert_eq!(stats.kind, EngineKind::Batched);
+            prop_assert_eq!(stats.period, want_stats.period, "lane {}", j);
+            prop_assert_eq!(stats.cycle_detected_at, want_stats.cycle_detected_at, "lane {}", j);
+            prop_assert_eq!(stats.cycle_len, want_stats.cycle_len, "lane {}", j);
+            prop_assert_eq!(stats.simulated_rounds, want_stats.simulated_rounds, "lane {}", j);
+        }
+    }
+}
