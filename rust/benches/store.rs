@@ -1,0 +1,180 @@
+//! Bench: the persistent cell store's read-through sweep path — warm
+//! runs must be byte-identical to cold runs and much faster.
+//!
+//! Three jobs in one binary:
+//!
+//! 1. **Identity gate** — a store-backed sweep (cold, then warm, on 1
+//!    and 4 threads) must produce JSON/CSV artifacts byte-identical to
+//!    a storeless run of the same grid, the cold pass must miss on
+//!    every unique cell, and the warm passes must hit on every unique
+//!    cell and simulate none. Aborts (failing CI) on any disagreement.
+//! 2. **Warm-start bar** — wall-clock of the grid cold (empty store:
+//!    simulate everything, write everything back) vs warm (every cell
+//!    served from the log). The ≥ 5× acceptance bar is asserted on
+//!    full runs (`--rounds` ≥ 6400); smoke runs print the measured
+//!    ratio without a timing assert a loaded CI runner could flake.
+//! 3. **Baseline artifact** — `BENCH_store.json`, with `measured`
+//!    honest about whether this was a full run.
+//!
+//! Run: `cargo bench --bench store` (refreshes `BENCH_store.json`);
+//! CI smoke: `-- --rounds 120 --out /tmp/BENCH_store.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use mgfl::config::TopologyKind;
+use mgfl::store::CellStore;
+use mgfl::sweep::{self, RunOptions, SweepSpec};
+use mgfl::util::args::Args;
+use mgfl::util::bench;
+use mgfl::util::json::Json;
+
+/// The committed Gaia grid: 7 topologies × gaia × femnist × 1 t × 8
+/// seeds — the same grid the sweep_cache bench pins, so the two
+/// baselines measure the same work through different caches.
+fn grid(rounds: usize) -> SweepSpec {
+    SweepSpec {
+        name: "store".into(),
+        topologies: TopologyKind::all().to_vec(),
+        networks: vec!["gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![5],
+        seeds: (17..25).collect(),
+        rounds,
+    }
+}
+
+fn opts(threads: usize) -> RunOptions {
+    RunOptions { threads, progress: false, dedup: true }
+}
+
+/// A process-unique scratch directory under the system temp dir;
+/// `tag` separates the gate store from the timing store.
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mgfl_bench_store_{}_{tag}", std::process::id()))
+}
+
+fn fresh_store(dir: &Path) -> CellStore {
+    let _ = std::fs::remove_dir_all(dir);
+    CellStore::open(dir).expect("opening bench store")
+}
+
+fn main() {
+    let args = Args::from_env();
+    let rounds: usize = args.get("rounds", 6400).expect("--rounds takes an integer");
+    let out = args.get_str("out", "BENCH_store.json");
+
+    // --- 1. identity gate -------------------------------------------
+    let gate_rounds = rounds.min(200);
+    bench::header(&format!(
+        "store identity gate — warm sweeps vs storeless runs, {gate_rounds} rounds"
+    ));
+    let gate = grid(gate_rounds);
+    let reference = sweep::run(&gate, &opts(1)).expect("storeless sweep");
+    let ref_json = reference.report.to_json().to_string();
+    let ref_csv = reference.report.to_csv();
+    let unique_cells = reference.unique_cells;
+
+    let gate_dir = scratch_dir("gate");
+    let store = fresh_store(&gate_dir);
+    let cold = sweep::run_with_store(&gate, &opts(1), Some(&store)).expect("cold sweep");
+    assert_eq!(cold.store_hits, 0, "an empty store must hit nothing");
+    assert_eq!(cold.store_misses, unique_cells, "cold must simulate every unique cell");
+    assert_eq!(cold.report.to_json().to_string(), ref_json, "cold JSON must match storeless");
+    assert_eq!(cold.report.to_csv(), ref_csv, "cold CSV must match storeless");
+    for threads in [1usize, 4] {
+        let warm = sweep::run_with_store(&gate, &opts(threads), Some(&store)).expect("warm sweep");
+        assert_eq!(
+            warm.store_hits, unique_cells,
+            "warm must serve every unique cell from the store (threads={threads})"
+        );
+        assert_eq!(warm.store_misses, 0, "warm must simulate nothing (threads={threads})");
+        assert_eq!(
+            warm.report.to_json().to_string(),
+            ref_json,
+            "warm JSON must be byte-identical to the storeless run (threads={threads})"
+        );
+        assert_eq!(
+            warm.report.to_csv(),
+            ref_csv,
+            "warm CSV must be byte-identical to the storeless run (threads={threads})"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&gate_dir);
+    let total_cells = gate.cell_count();
+    println!(
+        "{total_cells} cells -> {unique_cells} unique; cold missed all, warm hit all, \
+         artifacts byte-identical across store states and thread counts"
+    );
+
+    // --- 2. warm-start bar ------------------------------------------
+    bench::header(&format!(
+        "warm-start bar — {total_cells}-cell grid, {rounds} rounds, 1 thread"
+    ));
+    let deep = grid(rounds);
+    let timing_dir = scratch_dir("timing");
+    // Cold populates the store, so it is timed as a single pass against
+    // a fresh directory (a second "cold" iteration would be warm).
+    let store = fresh_store(&timing_dir);
+    let m_cold = bench::bench("cold (empty store, write-back)", 0, 1, || {
+        let outcome = sweep::run_with_store(&deep, &opts(1), Some(&store)).expect("cold sweep");
+        std::hint::black_box(outcome.report.cells.len());
+    });
+    let m_warm = bench::bench("warm (every cell from the log)", 1, 5, || {
+        let outcome = sweep::run_with_store(&deep, &opts(1), Some(&store)).expect("warm sweep");
+        assert_eq!(outcome.store_misses, 0, "timing store must stay fully warm");
+        std::hint::black_box(outcome.report.cells.len());
+    });
+    let _ = std::fs::remove_dir_all(&timing_dir);
+    let cold_cps = total_cells as f64 / (m_cold.mean_ms / 1e3);
+    let warm_cps = total_cells as f64 / (m_warm.mean_ms / 1e3);
+    let speedup = m_cold.mean_ms / m_warm.mean_ms.max(1e-9);
+    println!(
+        "cells/sec: {cold_cps:.0} -> {warm_cps:.0} | speedup {speedup:.2}x \
+         (bar: >= 5x cells/sec on the second run of the committed grid)"
+    );
+    if rounds >= 6400 {
+        assert!(
+            speedup >= 5.0,
+            "acceptance: a warm store must serve the committed Gaia grid >= 5x faster \
+             than the cold run that filled it (got {speedup:.2}x)"
+        );
+    } else {
+        println!("(>= 5x bar asserted on full runs; this is a smoke run at {rounds} rounds)");
+    }
+
+    // --- 3. baseline artifact ---------------------------------------
+    let measured = rounds >= 6400;
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("store".into()));
+    obj.insert(
+        "provenance".to_string(),
+        Json::Str(
+            "measured by `cargo bench --bench store` (identity gate and >= 5x \
+             warm-start bar passed first)"
+                .into(),
+        ),
+    );
+    obj.insert("measured".to_string(), Json::Bool(measured));
+    obj.insert("rounds".to_string(), Json::Num(rounds as f64));
+    obj.insert("total_cells".to_string(), Json::Num(total_cells as f64));
+    obj.insert("unique_cells".to_string(), Json::Num(unique_cells as f64));
+    obj.insert("artifacts_byte_identical".to_string(), Json::Bool(true));
+    obj.insert(
+        "warm_start".to_string(),
+        if measured {
+            Json::Obj(BTreeMap::from([
+                ("cold_ms_per_sweep".to_string(), Json::Num(m_cold.mean_ms)),
+                ("warm_ms_per_sweep".to_string(), Json::Num(m_warm.mean_ms)),
+                ("cold_cells_per_sec".to_string(), Json::Num(cold_cps)),
+                ("warm_cells_per_sec".to_string(), Json::Num(warm_cps)),
+                ("speedup".to_string(), Json::Num(speedup)),
+            ]))
+        } else {
+            Json::Null
+        },
+    );
+    let json = Json::Obj(obj).to_string();
+    std::fs::write(&out, format!("{json}\n")).expect("writing bench baseline");
+    println!("\nbaseline -> {out}");
+}

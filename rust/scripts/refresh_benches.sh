@@ -13,7 +13,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-BENCHES=(simcore sweep_cache scaling factored batched)
+BENCHES=(simcore sweep_cache scaling factored batched store)
 if [[ $# -gt 0 ]]; then
     BENCHES=("$@")
 fi

@@ -100,6 +100,7 @@ pub mod net;
 pub mod runtime;
 pub mod search;
 pub mod simtime;
+pub mod store;
 pub mod sweep;
 pub mod topo;
 #[allow(missing_docs)]

@@ -12,7 +12,8 @@ use mgfl::config::{ExperimentConfig, TopologyKind, TrainConfig};
 use mgfl::metrics::render_table;
 use mgfl::net::{zoo, DatasetProfile};
 use mgfl::simtime::{simulate, simulate_summary, simulate_summary_compiled_with_stats};
-use mgfl::sweep::{self, Axis, RunOptions, SweepSpec};
+use mgfl::store::CellStore;
+use mgfl::sweep::{self, Axis, RunOptions, SweepFile, SweepSpec};
 use mgfl::topo::{MultigraphTopology, TopologyDesign};
 use mgfl::util::args::Args;
 
@@ -25,10 +26,12 @@ SUBCOMMANDS
   simulate  --network gaia --profile femnist --topology multigraph --t 5 --rounds 6400 --seed 17
   sweep     [spec.toml] [--threads 0] [--out results] [--name sweep] [--rounds 6400]
             [--topologies all|a,b] [--networks all|a,b] [--profiles all|a,b]
-            [--t 1,3,5] [--seeds 17,18] [--no-dedup]
+            [--t 1,3,5] [--seeds 17,18] [--no-dedup] [--store PATH] [--no-store]
   optimize  [spec.toml] [--name optimize] [--network gaia] [--profile femnist]
             [--strategy hill|anneal] [--chains 4] [--steps 400] [--rounds 600]
-            [--seed 17] [--threads 0] [--out results]
+            [--seed 17] [--threads 0] [--out results] [--store PATH]
+  serve     --store PATH [--addr 127.0.0.1:7700] [--threads 0]
+  cache     <stats|verify|gc> --store PATH
   scale     [--sizes 64,256,1024] [--variant geo|sphere] [--seed 7]
             [--profile femnist] [--t 5] [--rounds 0]
   train     <config.toml> [--eval-every 10] [--csv out.csv]
@@ -52,6 +55,14 @@ Network axes accept the five zoo names and synthetic large-N networks
 by name: synth-geo-n1024-s7 / synth-sphere-n256-s17 (variant, silo
 count, generator seed). `scale` times topology construction per design
 across synthetic sizes (add --rounds to also simulate each cell).
+
+`--store PATH` points sweeps and searches at a persistent on-disk cell
+store: previously simulated cells are served from disk and new results
+are written back, so re-running a spec simulates only what changed —
+with byte-identical artifacts either way. Spec files may carry a
+`[store]` section; `--store` overrides it and `--no-store` disables it.
+`serve` keeps one store open behind a local HTTP/JSON endpoint, and
+`cache` inspects (stats), audits (verify), or compacts (gc) a store.
 ";
 
 fn resolve_profile(name: &str) -> Result<DatasetProfile> {
@@ -108,6 +119,8 @@ fn run(args: Args) -> Result<()> {
         }
         "sweep" => sweep_cmd(&args)?,
         "optimize" => optimize_cmd(&args)?,
+        "serve" => serve_cmd(&args)?,
+        "cache" => cache_cmd(&args)?,
         "scale" => scale_cmd(&args)?,
         "train" => {
             let config = args
@@ -201,9 +214,12 @@ fn run(args: Args) -> Result<()> {
 /// artifacts.
 fn sweep_cmd(args: &Args) -> Result<()> {
     let defaults = SweepSpec::default();
-    let mut spec = match args.positional.first() {
-        Some(path) => SweepSpec::from_toml_file(path)?,
-        None => defaults.clone(),
+    let (mut spec, file_store) = match args.positional.first() {
+        Some(path) => {
+            let file = SweepFile::from_toml_file(path)?;
+            (file.spec, file.store)
+        }
+        None => (defaults.clone(), None),
     };
     if let Some(name) = args.flag("name") {
         spec.name = name.to_string();
@@ -231,6 +247,16 @@ fn sweep_cmd(args: &Args) -> Result<()> {
 
     let threads: usize = args.get("threads", 0)?;
     let dedup = !args.has("no-dedup");
+    // Store resolution: `--no-store` beats `--store PATH` beats the
+    // spec file's `[store]` section (if enabled).
+    let store_path = if args.has("no-store") {
+        None
+    } else if let Some(path) = args.flag("store") {
+        Some(path.to_string())
+    } else {
+        file_store.filter(|s| s.enabled).map(|s| s.path)
+    };
+    let store = store_path.map(CellStore::open).transpose()?;
     eprintln!(
         "sweep '{}': {} cells ({} topologies x {} networks x {} profiles x {} t x {} seeds, {} rounds)",
         spec.name,
@@ -242,7 +268,11 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         spec.seeds.len(),
         spec.rounds,
     );
-    let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup })?;
+    let outcome = sweep::run_with_store(
+        &spec,
+        &RunOptions { threads, progress: true, dedup },
+        store.as_ref(),
+    )?;
     let (json_path, csv_path) = outcome.report.write_artifacts(args.get_str("out", "results"))?;
 
     // One table per (profile, t) pair: a slice must only ever average
@@ -264,8 +294,17 @@ fn sweep_cmd(args: &Args) -> Result<()> {
             );
         }
     }
+    let store_note = match &store {
+        Some(st) => format!(
+            "; store: {} hits + {} misses @ {}",
+            outcome.store_hits,
+            outcome.store_misses,
+            st.dir().display()
+        ),
+        None => String::new(),
+    };
     println!(
-        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s; engines: {})",
+        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s; engines: {}{})",
         outcome.report.cells.len(),
         outcome.unique_cells,
         outcome.dedup_ratio(),
@@ -275,6 +314,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         outcome.build_ms / 1e3,
         outcome.sim_ms / 1e3,
         outcome.engines.describe(),
+        store_note,
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
     Ok(())
@@ -322,7 +362,12 @@ fn optimize_cmd(args: &Args) -> Result<()> {
         spec.rounds,
         spec.seed,
     );
-    let outcome = mgfl::search::run(&spec, &RunOptions { threads, ..Default::default() })?;
+    let store = args.flag("store").map(CellStore::open).transpose()?;
+    let outcome = mgfl::search::run_with_store(
+        &spec,
+        &RunOptions { threads, ..Default::default() },
+        store.as_ref(),
+    )?;
     let report = &outcome.report;
     let (json_path, csv_path) = report.write_artifacts(args.get_str("out", "results"))?;
 
@@ -363,15 +408,99 @@ fn optimize_cmd(args: &Args) -> Result<()> {
         report.best.order, report.best.t
     );
     let accepted: usize = report.chains.iter().map(|c| c.accepted).sum();
+    let store_note = match &store {
+        Some(st) => format!(
+            "; store: {} hits + {} misses @ {}",
+            outcome.store_hits,
+            outcome.store_misses,
+            st.dir().display()
+        ),
+        None => String::new(),
+    };
     println!(
-        "{} unique candidates simulated ({} cache hits, {} accepted moves) in {:.2} s on {} threads",
+        "{} unique candidates simulated ({} cache hits, {} accepted moves) in {:.2} s on {} threads{}",
         report.unique_evals,
         report.cache_hits,
         accepted,
         outcome.host_elapsed_ms / 1e3,
         outcome.threads,
+        store_note,
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
+    Ok(())
+}
+
+/// `mgfl serve`: keep one store open behind a local HTTP/JSON endpoint
+/// so the warm cache amortizes across processes (routes: GET /health,
+/// GET /stats, POST /sweep — see [`mgfl::store::serve`]).
+fn serve_cmd(args: &Args) -> Result<()> {
+    let path = args
+        .flag("store")
+        .ok_or_else(|| anyhow::anyhow!("serve requires --store PATH\n{USAGE}"))?;
+    let addr = args.get_str("addr", "127.0.0.1:7700");
+    let threads: usize = args.get("threads", 0)?;
+    let store = std::sync::Arc::new(CellStore::open(path)?);
+    let server = mgfl::store::serve::Server::bind(&addr, store, threads)?;
+    eprintln!(
+        "mgfl serve: store {path} (epoch {}) at http://{} — GET /health, GET /stats, POST /sweep",
+        mgfl::store::ENGINE_EPOCH,
+        server.local_addr()?,
+    );
+    server.run()
+}
+
+/// `mgfl cache`: inspect (stats), audit (verify), or compact (gc) a
+/// persistent cell store without running anything.
+fn cache_cmd(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("cache requires an action: stats|verify|gc\n{USAGE}"))?;
+    let path = args
+        .flag("store")
+        .ok_or_else(|| anyhow::anyhow!("cache requires --store PATH\n{USAGE}"))?;
+    match action.as_str() {
+        "stats" => {
+            let store = CellStore::open(path)?;
+            let s = store.stats()?;
+            println!(
+                "store {path} (epoch {}): {} entries in {} records across {} shard files, {} bytes",
+                store.epoch(),
+                s.entries,
+                s.records,
+                s.shard_files,
+                s.bytes,
+            );
+        }
+        "verify" => {
+            let report = mgfl::store::verify(path)?;
+            println!(
+                "store {path}: {} files, {} records, {} torn tails, {} corrupt",
+                report.files,
+                report.records,
+                report.torn_tails,
+                report.corrupt.len(),
+            );
+            for detail in &report.corrupt {
+                eprintln!("  corrupt: {detail}");
+            }
+            anyhow::ensure!(report.ok(), "store {path} failed verification");
+        }
+        "gc" => {
+            let r = mgfl::store::gc(path)?;
+            println!(
+                "store {path}: removed {} stale files, compacted {} ({} -> {} records, {} -> {} bytes)",
+                r.removed_files,
+                r.compacted_files,
+                r.records_before,
+                r.records_after,
+                r.bytes_before,
+                r.bytes_after,
+            );
+        }
+        other => anyhow::bail!("unknown cache action '{other}' (stats|verify|gc)\n{USAGE}"),
+    }
     Ok(())
 }
 

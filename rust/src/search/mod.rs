@@ -26,7 +26,7 @@ pub mod spec;
 pub use genome::{propose, random_genome, Genome};
 pub use spec::{OptimizeSpec, StrategyKind};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -38,6 +38,7 @@ use crate::metrics::search::{
 };
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::simtime::{BatchLane, CompiledTopology, LANE_WIDTH, MIN_BATCH};
+use crate::store::{fitness_key, probe_key, CellStore};
 use crate::sweep::spec::{cell_stream, CellSpec};
 use crate::sweep::{
     run_batch_pooled, run_cells, run_cells_auto_batched, simulate_design_pooled, BuildOnce,
@@ -62,6 +63,14 @@ pub struct Evaluator<'a> {
     rounds: usize,
     cache: BuildOnce<u64, f64>,
     lookups: AtomicUsize,
+    /// Optional persistent store, consulted inside the build-once slot
+    /// so report-visible counters (`unique_evals`/`cache_hits`) are
+    /// unchanged by warm starts. Store I/O errors degrade to a miss
+    /// (with one warning), never to a failed search.
+    store: Option<&'a CellStore>,
+    store_hits: AtomicUsize,
+    store_misses: AtomicUsize,
+    store_warned: AtomicBool,
     #[cfg(debug_assertions)]
     fingerprint_check: std::sync::Mutex<std::collections::HashMap<u64, String>>,
 }
@@ -69,15 +78,75 @@ pub struct Evaluator<'a> {
 impl<'a> Evaluator<'a> {
     /// A fresh oracle over `(net, profile)` at `rounds` per evaluation.
     pub fn new(net: &'a NetworkSpec, profile: &'a DatasetProfile, rounds: usize) -> Self {
+        Self::with_store(net, profile, rounds, None)
+    }
+
+    /// [`Self::new`] with a persistent fitness store attached: every
+    /// first-in-process evaluation probes the store before simulating,
+    /// and fresh results are written back, so a later `mgfl optimize`
+    /// over shared cells warm-starts. Values served from the store are
+    /// the exact bits a cold evaluation would produce (f64 bits
+    /// roundtrip the record log), so trajectories are unchanged.
+    pub fn with_store(
+        net: &'a NetworkSpec,
+        profile: &'a DatasetProfile,
+        rounds: usize,
+        store: Option<&'a CellStore>,
+    ) -> Self {
         Evaluator {
             net,
             profile,
             rounds,
             cache: BuildOnce::default(),
             lookups: AtomicUsize::new(0),
+            store,
+            store_hits: AtomicUsize::new(0),
+            store_misses: AtomicUsize::new(0),
+            store_warned: AtomicBool::new(false),
             #[cfg(debug_assertions)]
             fingerprint_check: std::sync::Mutex::new(std::collections::HashMap::new()),
         }
+    }
+
+    /// The persistent-store key of `g` under this oracle's context.
+    fn store_key(&self, g: &Genome) -> String {
+        fitness_key(&self.net.name, &self.profile.name, self.rounds, &g.canonical_key())
+    }
+
+    /// Probe the persistent store; `None` on no-store, not-found, or
+    /// I/O error (warned once).
+    fn store_probe(&self, key: &str) -> Option<f64> {
+        match self.store?.get_fitness(key) {
+            Ok(v) => v,
+            Err(e) => {
+                self.warn_store_once(&e);
+                None
+            }
+        }
+    }
+
+    /// Write a fresh fitness back to the persistent store, if any.
+    fn store_write(&self, key: &str, value: f64) {
+        if let Some(st) = self.store {
+            if let Err(e) = st.put_fitness(key, value) {
+                self.warn_store_once(&e);
+            }
+        }
+    }
+
+    fn warn_store_once(&self, e: &anyhow::Error) {
+        if !self.store_warned.swap(true, Ordering::Relaxed) {
+            eprintln!("warning: fitness store unavailable, simulating instead: {e:#}");
+        }
+    }
+
+    /// Simulate `g` from scratch (the cold path under every cache).
+    fn evaluate(&self, g: &Genome) -> f64 {
+        let overlay = g.overlay(self.net, self.profile);
+        let mut topo = CandidateTopology::new(overlay, self.net, self.profile, g.t);
+        simulate_design_pooled(&mut topo, self.net, self.profile, self.rounds)
+            .0
+            .mean_cycle_ms
     }
 
     /// `g`'s cache key; in debug builds, asserts it is collision-free
@@ -105,11 +174,17 @@ impl<'a> Evaluator<'a> {
         self.lookups.fetch_add(1, Ordering::Relaxed);
         let key = self.fingerprinted(g);
         self.cache.get_or_build(&key, || {
-            let overlay = g.overlay(self.net, self.profile);
-            let mut topo = CandidateTopology::new(overlay, self.net, self.profile, g.t);
-            simulate_design_pooled(&mut topo, self.net, self.profile, self.rounds)
-                .0
-                .mean_cycle_ms
+            let skey = self.store_key(g);
+            if let Some(v) = self.store_probe(&skey) {
+                self.store_hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
+            if self.store.is_some() {
+                self.store_misses.fetch_add(1, Ordering::Relaxed);
+            }
+            let v = self.evaluate(g);
+            self.store_write(&skey, v);
+            v
         })
     }
 
@@ -133,6 +208,27 @@ impl<'a> Evaluator<'a> {
                     first.push(i);
                 }
             }
+        }
+
+        // Answer what the persistent store already knows; only true
+        // misses go on to compile and simulate. Hits are published
+        // through the same build-once slots the cold path fills, so the
+        // in-memory accounting is identical either way.
+        if self.store.is_some() {
+            let mut missed = Vec::with_capacity(first.len());
+            for i in first {
+                match self.store_probe(&self.store_key(&genomes[i])) {
+                    Some(v) => {
+                        self.store_hits.fetch_add(1, Ordering::Relaxed);
+                        self.cache.get_or_build(&keys[i], || v);
+                    }
+                    None => {
+                        self.store_misses.fetch_add(1, Ordering::Relaxed);
+                        missed.push(i);
+                    }
+                }
+            }
+            first = missed;
         }
 
         // Materialize and compile each distinct miss once.
@@ -189,11 +285,13 @@ impl<'a> Evaluator<'a> {
             }
         }
 
-        // Publish through the same build-once slots fitness() uses, then
+        // Publish through the same build-once slots fitness() uses (and
+        // write fresh results back to the persistent store), then
         // answer every input (duplicates included) from the cache.
         for ((gi, _, _), v) in topos.iter().zip(&values) {
             let v = (*v).expect("every distinct miss was evaluated");
             self.cache.get_or_build(&keys[*gi], || v);
+            self.store_write(&self.store_key(&genomes[*gi]), v);
         }
         keys.iter()
             .map(|k| self.cache.get(k).expect("all keys evaluated above"))
@@ -210,6 +308,17 @@ impl<'a> Evaluator<'a> {
     /// so its lookup sequence — is a pure function of the spec.
     pub fn cache_hits(&self) -> usize {
         self.lookups.load(Ordering::Relaxed) - self.cache.entries()
+    }
+
+    /// First-in-process evaluations answered by the persistent store.
+    pub fn store_hits(&self) -> usize {
+        self.store_hits.load(Ordering::Relaxed)
+    }
+
+    /// First-in-process evaluations the store missed (simulated and
+    /// written back). 0 when no store is attached.
+    pub fn store_misses(&self) -> usize {
+        self.store_misses.load(Ordering::Relaxed)
     }
 }
 
@@ -382,6 +491,13 @@ pub struct SearchOutcome {
     pub host_elapsed_ms: f64,
     /// Worker threads the chains ran on.
     pub threads: usize,
+    /// Evaluations (genomes, baselines, budget probes) answered by the
+    /// persistent store. Host-side only — never in the report, which
+    /// stays a pure function of the spec.
+    pub store_hits: usize,
+    /// Store probes that missed (simulated, then written back). 0 when
+    /// no store is attached.
+    pub store_misses: usize,
 }
 
 fn summarize(g: &Genome, fitness_ms: f64) -> CandidateSummary {
@@ -413,6 +529,20 @@ pub fn paper_start(net: &NetworkSpec, profile: &DatasetProfile, spec: &OptimizeS
 /// path, then all chains in parallel over the shared fitness oracle,
 /// then the MATCHA budget probes. Returns the report plus host stats.
 pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
+    run_with_store(spec, opts, None)
+}
+
+/// [`run`] with an optional persistent [`CellStore`]: baseline cells,
+/// genome fitness, and MATCHA budget probes are all read through (and
+/// written back to) the store, so a repeated `mgfl optimize` — or one
+/// sharing cells with earlier sweeps — warm-starts. The report is
+/// byte-identical to a cold run; only the [`SearchOutcome`] host-side
+/// counters observe the store.
+pub fn run_with_store(
+    spec: &OptimizeSpec,
+    opts: &RunOptions,
+    store: Option<&CellStore>,
+) -> Result<SearchOutcome> {
     let spec = {
         let mut s = spec.clone();
         s.canonicalize()?;
@@ -443,15 +573,42 @@ pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
             rounds: spec.rounds,
         })
         .collect();
-    let baselines: Vec<BaselineRow> = baseline_cells
-        .iter()
-        .zip(run_cells_auto_batched(&baseline_cells, &cache))
-        .map(|(cell, (s, _, _))| BaselineRow {
+    let mut aux_store_hits = 0usize;
+    let mut aux_store_misses = 0usize;
+    let mut baseline_rows: Vec<Option<BaselineRow>> =
+        baseline_cells.iter().map(|_| None).collect();
+    let mut baseline_missed: Vec<usize> = Vec::new();
+    for (i, cell) in baseline_cells.iter().enumerate() {
+        if let Some(st) = store {
+            if let Some(sc) = st.get_cell(&cell.fingerprint())? {
+                baseline_rows[i] = Some(BaselineRow {
+                    topology: sc.topology,
+                    t: cell.t,
+                    mean_cycle_ms: sc.mean_cycle_ms,
+                });
+                aux_store_hits += 1;
+                continue;
+            }
+            aux_store_misses += 1;
+        }
+        baseline_missed.push(i);
+    }
+    let missed_cells: Vec<CellSpec> =
+        baseline_missed.iter().map(|&i| baseline_cells[i].clone()).collect();
+    for (&i, (s, _, stats)) in
+        baseline_missed.iter().zip(run_cells_auto_batched(&missed_cells, &cache))
+    {
+        if let Some(st) = store {
+            st.put_cell(&baseline_cells[i].fingerprint(), &s, &stats)?;
+        }
+        baseline_rows[i] = Some(BaselineRow {
             topology: s.topology,
-            t: cell.t,
+            t: baseline_cells[i].t,
             mean_cycle_ms: s.mean_cycle_ms,
-        })
-        .collect();
+        });
+    }
+    let baselines: Vec<BaselineRow> =
+        baseline_rows.into_iter().map(|r| r.expect("every baseline ran or hit")).collect();
     let multigraph_baseline_ms = baselines[0].mean_cycle_ms;
 
     // Chain starts: chain 0 from the paper design, the rest random,
@@ -473,7 +630,7 @@ pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
         StrategyKind::Hill => &HillClimb,
         StrategyKind::Anneal => &Anneal,
     };
-    let ev = Evaluator::new(&net, &profile, spec.rounds);
+    let ev = Evaluator::with_store(&net, &profile, spec.rounds, store);
     // Pre-evaluate every chain start as one batch: starts that share a
     // schedule (duplicate random genomes, or distinct rings whose
     // multigraphs coincide) run in lockstep lanes, and each chain's
@@ -497,16 +654,33 @@ pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
 
     // MATCHA budget probes: reported alongside, never a search winner
     // (a different design family; listed for the comparison table).
-    let budget_probes: Vec<BudgetProbe> = spec
-        .matcha_budgets
-        .iter()
-        .map(|&budget| {
-            let seed = named_stream(spec.seed, &format!("optimize/matcha/{budget}"));
-            let mut topo = MatchaTopology::new(&net, &profile, budget, seed);
-            let (s, _) = simulate_design_pooled(&mut topo, &net, &profile, spec.rounds);
-            BudgetProbe { budget, mean_cycle_ms: s.mean_cycle_ms }
-        })
-        .collect();
+    let mut budget_probes: Vec<BudgetProbe> = Vec::with_capacity(spec.matcha_budgets.len());
+    for &budget in &spec.matcha_budgets {
+        let seed = named_stream(spec.seed, &format!("optimize/matcha/{budget}"));
+        let key = probe_key(&spec.network, &spec.profile, spec.rounds, budget, seed);
+        let stored_ms = match store {
+            Some(st) => st.get_fitness(&key)?,
+            None => None,
+        };
+        let mean_cycle_ms = match stored_ms {
+            Some(ms) => {
+                aux_store_hits += 1;
+                ms
+            }
+            None => {
+                if store.is_some() {
+                    aux_store_misses += 1;
+                }
+                let mut topo = MatchaTopology::new(&net, &profile, budget, seed);
+                let (s, _) = simulate_design_pooled(&mut topo, &net, &profile, spec.rounds);
+                if let Some(st) = store {
+                    st.put_fitness(&key, s.mean_cycle_ms)?;
+                }
+                s.mean_cycle_ms
+            }
+        };
+        budget_probes.push(BudgetProbe { budget, mean_cycle_ms });
+    }
 
     let chains: Vec<ChainTrace> = results
         .iter()
@@ -547,6 +721,8 @@ pub fn run(spec: &OptimizeSpec, opts: &RunOptions) -> Result<SearchOutcome> {
         report,
         host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
         threads,
+        store_hits: ev.store_hits() + aux_store_hits,
+        store_misses: ev.store_misses() + aux_store_misses,
     })
 }
 

@@ -1,0 +1,229 @@
+//! On-disk framing of one store shard: a fixed header followed by
+//! length-prefixed, checksummed records.
+//!
+//! Layout of a shard file:
+//!
+//! ```text
+//! [ 8-byte magic "MGFLSTO1" | u32 LE format version | u32 LE epoch ]
+//! [ u32 LE payload_len | payload | u64 LE fnv1a(payload) ]*
+//! ```
+//!
+//! where each payload is `u32 LE key_len | key (UTF-8) | value bytes`.
+//! Records are appended with one `write_all` on an `O_APPEND` handle,
+//! so a record is either fully present or cut off at the end of the
+//! file — [`scan_records`] stops at the first short, malformed, or
+//! checksum-failed record and reports the byte offset of the last clean
+//! record boundary, so a crash-truncated tail is dropped without ever
+//! corrupting (or trusting) anything before it.
+
+use crate::util::rng::fnv1a;
+
+/// Shard-file magic: identifies the format (and its major revision).
+pub(crate) const MAGIC: &[u8; 8] = b"MGFLSTO1";
+
+/// Total header length in bytes: magic + version + epoch.
+pub(crate) const HEADER_LEN: usize = 16;
+
+/// Cap on a single record payload; anything larger is treated as
+/// corruption (real payloads are a few hundred bytes).
+const MAX_PAYLOAD: usize = 1 << 30;
+
+/// Serialize the 16-byte shard header for `(version, epoch)`.
+pub(crate) fn header_bytes(version: u32, epoch: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&version.to_le_bytes());
+    h[12..16].copy_from_slice(&epoch.to_le_bytes());
+    h
+}
+
+/// Parse and validate a shard header. Returns `(version, epoch)`.
+pub(crate) fn parse_header(bytes: &[u8]) -> Result<(u32, u32), String> {
+    if bytes.len() < HEADER_LEN {
+        return Err(format!("file shorter than the {HEADER_LEN}-byte header"));
+    }
+    if &bytes[..8] != MAGIC {
+        return Err("bad magic (not a store shard file)".into());
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    let epoch = u32::from_le_bytes(bytes[12..16].try_into().expect("4 bytes"));
+    Ok((version, epoch))
+}
+
+/// Serialize one record (frame + payload + checksum) for appending.
+pub(crate) fn encode_record(key: &str, value: &[u8]) -> Vec<u8> {
+    let payload_len = 4 + key.len() + value.len();
+    let mut out = Vec::with_capacity(4 + payload_len + 8);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    out.extend_from_slice(key.as_bytes());
+    out.extend_from_slice(value);
+    let payload = &out[4..];
+    let sum = fnv1a(payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Why a scan stopped before the end of the file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum ScanIssue {
+    /// The final record is cut off mid-frame — the crash-recovery case.
+    /// Everything before `clean_len` is intact; the tail is dropped.
+    TornTail,
+    /// A record failed its checksum or carried impossible lengths —
+    /// in-place corruption. The scan conservatively stops here: nothing
+    /// at or after this offset is trusted.
+    Corrupt(String),
+}
+
+/// Result of scanning a shard file's record region.
+#[derive(Debug, Clone)]
+pub(crate) struct ScanResult {
+    /// Decoded `(key, value)` records in file order (duplicates kept;
+    /// the index layer applies last-record-wins).
+    pub records: Vec<(String, Vec<u8>)>,
+    /// Byte offset (relative to the start of `bytes`) just past the
+    /// last fully-valid record — where appends may safely resume after
+    /// truncating anything beyond it.
+    pub clean_len: usize,
+    /// Why the scan stopped early, if it did.
+    pub issue: Option<ScanIssue>,
+}
+
+/// Scan the record region of a shard file (everything after the
+/// header). Stops at the first torn or corrupt record; see
+/// [`ScanIssue`] for the recovery contract.
+pub(crate) fn scan_records(bytes: &[u8]) -> ScanResult {
+    let mut records = Vec::new();
+    let mut i = 0usize;
+    let mut issue = None;
+    while i < bytes.len() {
+        if i + 4 > bytes.len() {
+            issue = Some(ScanIssue::TornTail);
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[i..i + 4].try_into().expect("4 bytes")) as usize;
+        if len < 4 || len > MAX_PAYLOAD {
+            issue = Some(ScanIssue::Corrupt(format!(
+                "record at offset {i} claims impossible payload length {len}"
+            )));
+            break;
+        }
+        let end = i + 4 + len + 8;
+        if end > bytes.len() {
+            issue = Some(ScanIssue::TornTail);
+            break;
+        }
+        let payload = &bytes[i + 4..i + 4 + len];
+        let sum = u64::from_le_bytes(bytes[i + 4 + len..end].try_into().expect("8 bytes"));
+        if fnv1a(payload) != sum {
+            issue = Some(ScanIssue::Corrupt(format!(
+                "checksum mismatch in record at offset {i}"
+            )));
+            break;
+        }
+        let key_len = u32::from_le_bytes(payload[..4].try_into().expect("4 bytes")) as usize;
+        if 4 + key_len > len {
+            issue = Some(ScanIssue::Corrupt(format!(
+                "record at offset {i} claims key length {key_len} beyond its payload"
+            )));
+            break;
+        }
+        let key = match std::str::from_utf8(&payload[4..4 + key_len]) {
+            Ok(k) => k.to_string(),
+            Err(_) => {
+                issue = Some(ScanIssue::Corrupt(format!(
+                    "record at offset {i} has a non-UTF-8 key"
+                )));
+                break;
+            }
+        };
+        records.push((key, payload[4 + key_len..].to_vec()));
+        i = end;
+    }
+    ScanResult { records, clean_len: if issue.is_some() { i } else { bytes.len() }, issue }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip_and_rejection() {
+        let h = header_bytes(1, 7);
+        assert_eq!(parse_header(&h).unwrap(), (1, 7));
+        assert!(parse_header(&h[..12]).is_err(), "short header");
+        let mut bad = h;
+        bad[0] ^= 1;
+        assert!(parse_header(&bad).is_err(), "bad magic");
+    }
+
+    #[test]
+    fn records_roundtrip_in_order() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&encode_record("a", b"one"));
+        buf.extend_from_slice(&encode_record("bb", b""));
+        buf.extend_from_slice(&encode_record("a", b"two"));
+        let scan = scan_records(&buf);
+        assert!(scan.issue.is_none());
+        assert_eq!(scan.clean_len, buf.len());
+        assert_eq!(
+            scan.records,
+            vec![
+                ("a".to_string(), b"one".to_vec()),
+                ("bb".to_string(), Vec::new()),
+                ("a".to_string(), b"two".to_vec()),
+            ]
+        );
+    }
+
+    #[test]
+    fn every_truncation_point_drops_only_the_torn_tail() {
+        let r1 = encode_record("first", b"payload-1");
+        let r2 = encode_record("second", b"payload-22");
+        let mut buf = r1.clone();
+        buf.extend_from_slice(&r2);
+        for cut in 0..buf.len() {
+            let scan = scan_records(&buf[..cut]);
+            let complete = if cut >= buf.len() {
+                2
+            } else if cut >= r1.len() {
+                1
+            } else {
+                0
+            };
+            assert_eq!(scan.records.len(), complete, "cut at {cut}");
+            if cut == r1.len() || cut == 0 {
+                // Exactly at a boundary: nothing torn.
+                assert!(scan.issue.is_none(), "cut at {cut}");
+            } else {
+                assert_eq!(scan.issue, Some(ScanIssue::TornTail), "cut at {cut}");
+            }
+            let boundary = if complete >= 1 { r1.len() } else { 0 };
+            assert_eq!(scan.clean_len, boundary.min(cut), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn flipped_bytes_are_rejected_as_corrupt() {
+        let r1 = encode_record("first", b"payload-1");
+        let r2 = encode_record("second", b"payload-22");
+        let mut buf = r1.clone();
+        buf.extend_from_slice(&r2);
+        // Flip one payload byte of the second record: record 1 survives,
+        // the scan stops at record 2 with a checksum issue.
+        let mut flipped = buf.clone();
+        flipped[r1.len() + 6] ^= 0xFF;
+        let scan = scan_records(&flipped);
+        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.clean_len, r1.len());
+        assert!(matches!(scan.issue, Some(ScanIssue::Corrupt(_))), "{:?}", scan.issue);
+        // Corruption mid-file hides everything after it, by design.
+        let mut early = buf.clone();
+        early[6] ^= 0xFF;
+        let scan = scan_records(&early);
+        assert!(scan.records.is_empty());
+        assert_eq!(scan.clean_len, 0);
+        assert!(matches!(scan.issue, Some(ScanIssue::Corrupt(_))));
+    }
+}

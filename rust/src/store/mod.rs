@@ -1,0 +1,791 @@
+//! Persistent content-addressed cell-result store.
+//!
+//! The in-process dedup layers ([`crate::sweep::SweepCache`], the search
+//! fitness [`crate::sweep::BuildOnce`]) die with the process; this module
+//! makes the fingerprint discipline a durable cross-process contract. A
+//! [`CellStore`] is a directory of append-only shard logs (see
+//! [`mod@self::log`] for the byte framing) plus an in-memory last-record-wins
+//! index rebuilt lazily per shard on first touch, so opening a store with
+//! millions of records costs nothing until keys in a shard are actually
+//! consulted.
+//!
+//! # Keys
+//!
+//! Everything is a flat string key:
+//!
+//! - `cell/{kind}/{network}/{profile}/t{t}/r{rounds}/s{seed}` — one sweep
+//!   cell's [`SimSummary`]-equivalent payload, addressed by its
+//!   [`CellFingerprint`] (seed is the literal `-` for deterministic kinds,
+//!   matching the fingerprint's `None`).
+//! - `fit/{network}/{profile}/r{rounds}/{genome}` — a search genome's
+//!   fitness (mean cycle ms), keyed by the genome's canonical key.
+//! - `probe/{network}/{profile}/r{rounds}/b{budget}/s{seed}` — a MATCHA
+//!   budget-probe fitness from `mgfl optimize`.
+//!
+//! Keys are sharded by `fnv1a(key) & 0xF` into 16 log files.
+//!
+//! # Invalidation epochs
+//!
+//! Every shard file header embeds [`FORMAT_VERSION`] (byte layout) and
+//! [`ENGINE_EPOCH`] (simulation semantics), and both are also baked into
+//! the file *name*, so a store directory can hold generations side by
+//! side. A store opened at epoch N never reads epoch M≠N files: bumping
+//! [`ENGINE_EPOCH`] when engine semantics change invalidates every stale
+//! result wholesale without deleting anything (run `gc` to reclaim).
+//!
+//! # Engine-label purity
+//!
+//! A cell's reported `engine` label depends on the *whole grid's* batch
+//! plan (only groups of `MIN_BATCH`-plus lanes run batched), not on the
+//! cell alone — so a label stored as-executed under one spec could leak a
+//! wrong label into another. [`CellStore::put_cell`] therefore normalizes
+//! `batched` to `periodic` (the two engines produce bit-identical
+//! summaries per lane), and warm sweeps recompute labels from the current
+//! grid's own batch plan before fanning stored results out.
+//!
+//! # Crash safety
+//!
+//! Appends are a single `write_all` of a checksummed record on an
+//! `O_APPEND` handle under the shard mutex. On open, a torn tail (from a
+//! crash mid-append) is detected, logged off, and truncated away;
+//! records before it are untouched. [`verify`] audits every generation
+//! read-only; [`gc`] drops stale generations and compacts live shards.
+
+pub mod serve;
+
+mod log;
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::simtime::{EngineKind, EngineStats, SimSummary};
+use crate::sweep::CellFingerprint;
+use crate::util::rng::fnv1a;
+
+/// On-disk byte-layout revision. Bump when the record or value encoding
+/// changes shape.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Simulation-semantics epoch. Bump whenever engine changes could alter
+/// any stored number (delay model, schedule compilation, RNG streams…):
+/// every result stored under an older epoch becomes invisible wholesale.
+pub const ENGINE_EPOCH: u32 = 1;
+
+/// Number of shard log files per store generation.
+const SHARD_COUNT: usize = 16;
+
+/// How long to wait for another process to finish writing a fresh shard
+/// header before giving up (see [`CellStore`] creation race handling).
+const HEADER_RACE_TRIES: usize = 500;
+
+/// One shard once loaded: its last-record-wins index plus the open
+/// `O_APPEND` handle and bookkeeping counters.
+struct ShardState {
+    index: HashMap<String, Vec<u8>>,
+    file: File,
+    /// Records seen at load plus records appended since.
+    records: usize,
+    /// Current file length in bytes (post any recovery truncation).
+    bytes: u64,
+}
+
+/// A persistent, content-addressed result store rooted at a directory.
+///
+/// Cheap to open (shards load lazily) and safe to share across threads —
+/// all methods take `&self`. Multiple processes may append to the same
+/// store concurrently: appends are atomic records, and each process
+/// simply won't *see* the others' writes until it reopens.
+pub struct CellStore {
+    dir: PathBuf,
+    epoch: u32,
+    shards: Vec<Mutex<Option<ShardState>>>,
+}
+
+impl CellStore {
+    /// Open (creating if needed) the store at `dir` under the crate's
+    /// current [`ENGINE_EPOCH`].
+    pub fn open(dir: impl AsRef<Path>) -> Result<CellStore> {
+        CellStore::open_with_epoch(dir, ENGINE_EPOCH)
+    }
+
+    /// Open the store at `dir` pinned to an explicit epoch. Production
+    /// callers want [`CellStore::open`]; this exists so tests (and `gc`)
+    /// can address non-current generations.
+    pub fn open_with_epoch(dir: impl AsRef<Path>, epoch: u32) -> Result<CellStore> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store directory {}", dir.display()))?;
+        let shards = (0..SHARD_COUNT).map(|_| Mutex::new(None)).collect();
+        Ok(CellStore { dir, epoch, shards })
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The epoch this handle reads and writes.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Raw lookup: the latest value recorded for `key`, if any.
+    pub fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let mut guard = self.shard(shard_of(key))?;
+        let state = guard.as_mut().expect("shard loaded");
+        Ok(state.index.get(key).cloned())
+    }
+
+    /// Raw append: durably record `key = value` (last record wins).
+    pub fn put(&self, key: &str, value: &[u8]) -> Result<()> {
+        let record = log::encode_record(key, value);
+        let mut guard = self.shard(shard_of(key))?;
+        let state = guard.as_mut().expect("shard loaded");
+        state
+            .file
+            .write_all(&record)
+            .with_context(|| format!("appending to store shard for key {key}"))?;
+        state.records += 1;
+        state.bytes += record.len() as u64;
+        state.index.insert(key.to_string(), value.to_vec());
+        Ok(())
+    }
+
+    /// Typed lookup of one sweep cell by fingerprint.
+    pub fn get_cell(&self, fp: &CellFingerprint) -> Result<Option<StoredCell>> {
+        match self.get(&cell_key(fp))? {
+            Some(bytes) => Ok(Some(
+                StoredCell::decode(&bytes)
+                    .with_context(|| format!("decoding stored cell {}", cell_key(fp)))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    /// Typed write-back of one sweep cell's result.
+    ///
+    /// The engine label is normalized before storage: `batched` becomes
+    /// `periodic` (bit-identical summaries; see the module docs on
+    /// label purity), so nothing grid-dependent is ever persisted.
+    pub fn put_cell(
+        &self,
+        fp: &CellFingerprint,
+        summary: &SimSummary,
+        stats: &EngineStats,
+    ) -> Result<()> {
+        let mut stats = *stats;
+        if stats.kind == EngineKind::Batched {
+            stats.kind = EngineKind::Periodic;
+        }
+        let cell = StoredCell {
+            topology: summary.topology.clone(),
+            mean_cycle_ms: summary.mean_cycle_ms,
+            total_ms: summary.total_ms,
+            rounds_with_isolated: summary.rounds_with_isolated,
+            max_isolated: summary.max_isolated,
+            stats,
+        };
+        self.put(&cell_key(fp), &cell.encode())
+    }
+
+    /// Typed lookup of a persisted fitness value (search genomes and
+    /// MATCHA budget probes).
+    pub fn get_fitness(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key)? {
+            Some(bytes) => {
+                if bytes.len() != 8 {
+                    bail!("fitness value for {key} has {} bytes, want 8", bytes.len());
+                }
+                let bits = u64::from_le_bytes(bytes[..8].try_into().expect("8 bytes"));
+                Ok(Some(f64::from_bits(bits)))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Typed write-back of a fitness value.
+    pub fn put_fitness(&self, key: &str, fitness: f64) -> Result<()> {
+        self.put(key, &fitness.to_bits().to_le_bytes())
+    }
+
+    /// Aggregate statistics over this generation's shards (forces every
+    /// shard to load).
+    pub fn stats(&self) -> Result<StoreStats> {
+        let mut out = StoreStats::default();
+        for s in 0..SHARD_COUNT {
+            let mut guard = self.shard(s)?;
+            let state = guard.as_mut().expect("shard loaded");
+            out.shard_files += 1;
+            out.entries += state.index.len();
+            out.records += state.records;
+            out.bytes += state.bytes;
+        }
+        Ok(out)
+    }
+
+    /// Lock shard `idx`, loading it from disk first if this is the first
+    /// touch. Poisoned locks are entered anyway: a panic in one lookup
+    /// must not wedge the store for every later caller.
+    fn shard(&self, idx: usize) -> Result<std::sync::MutexGuard<'_, Option<ShardState>>> {
+        let mut guard = self.shards[idx].lock().unwrap_or_else(|e| e.into_inner());
+        if guard.is_none() {
+            *guard = Some(load_shard(&self.dir, idx, self.epoch)?);
+        }
+        Ok(guard)
+    }
+}
+
+/// Which shard a key lives in.
+fn shard_of(key: &str) -> usize {
+    (fnv1a(key.as_bytes()) & (SHARD_COUNT as u64 - 1)) as usize
+}
+
+/// Path of shard `idx` for a `(version, epoch)` generation.
+fn shard_path(dir: &Path, idx: usize, version: u32, epoch: u32) -> PathBuf {
+    dir.join(format!("shard-{idx:02}-v{version}-e{epoch}.log"))
+}
+
+/// Create-or-recover one shard file and build its in-memory state.
+fn load_shard(dir: &Path, idx: usize, epoch: u32) -> Result<ShardState> {
+    let path = shard_path(dir, idx, FORMAT_VERSION, epoch);
+    ensure_shard_file(&path, epoch)?;
+    let bytes = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let (version, file_epoch) = log::parse_header(&bytes)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    if version != FORMAT_VERSION || file_epoch != epoch {
+        bail!(
+            "{}: header says v{version}/e{file_epoch}, expected v{FORMAT_VERSION}/e{epoch}",
+            path.display()
+        );
+    }
+    let scan = log::scan_records(&bytes[log::HEADER_LEN..]);
+    let clean = (log::HEADER_LEN + scan.clean_len) as u64;
+    if scan.issue.is_some() && clean < bytes.len() as u64 {
+        // Destructive-but-safe recovery: drop the torn/corrupt tail so
+        // appends resume on a clean record boundary. Everything before
+        // the tail checksummed good and is kept.
+        let f = OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("reopening {} for recovery", path.display()))?;
+        f.set_len(clean)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+    }
+    let records = scan.records.len();
+    let mut index = HashMap::with_capacity(records);
+    for (key, value) in scan.records {
+        index.insert(key, value);
+    }
+    let file = OpenOptions::new()
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("opening {} for append", path.display()))?;
+    Ok(ShardState { index, file, records, bytes: clean })
+}
+
+/// Make sure `path` exists with a complete header, handling the
+/// cross-process creation race: exactly one creator wins `create_new`
+/// and writes the header; losers poll until the header bytes land.
+fn ensure_shard_file(path: &Path, epoch: u32) -> Result<()> {
+    match OpenOptions::new().write(true).create_new(true).open(path) {
+        Ok(mut f) => {
+            f.write_all(&log::header_bytes(FORMAT_VERSION, epoch))
+                .with_context(|| format!("writing header of {}", path.display()))?;
+            Ok(())
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+            for _ in 0..HEADER_RACE_TRIES {
+                let len = fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                if len >= log::HEADER_LEN as u64 {
+                    return Ok(());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            bail!(
+                "{}: another process created this shard but never finished its header",
+                path.display()
+            )
+        }
+        Err(e) => Err(e).with_context(|| format!("creating {}", path.display())),
+    }
+}
+
+/// The store key for one sweep cell's fingerprint.
+pub fn cell_key(fp: &CellFingerprint) -> String {
+    let seed = match fp.seed {
+        Some(s) => s.to_string(),
+        None => "-".to_string(),
+    };
+    format!(
+        "cell/{}/{}/{}/t{}/r{}/s{}",
+        fp.topology.as_str(),
+        fp.network,
+        fp.profile,
+        fp.t,
+        fp.rounds,
+        seed
+    )
+}
+
+/// The store key for a search genome's fitness under one evaluation
+/// context. `genome_key` is [`crate::search::Genome::canonical_key`].
+pub fn fitness_key(network: &str, profile: &str, rounds: usize, genome_key: &str) -> String {
+    format!("fit/{network}/{profile}/r{rounds}/{genome_key}")
+}
+
+/// The store key for a MATCHA budget probe.
+pub fn probe_key(network: &str, profile: &str, rounds: usize, budget: f64, seed: u64) -> String {
+    format!("probe/{network}/{profile}/r{rounds}/b{budget}/s{seed}")
+}
+
+/// One persisted sweep-cell result: everything a warm sweep needs to
+/// reconstruct the cell's report row without simulating.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredCell {
+    /// Design display name (e.g. `multigraph(t=5)`).
+    pub topology: String,
+    /// Mean cycle time over rounds, ms.
+    pub mean_cycle_ms: f64,
+    /// Simulated total wall-clock, ms.
+    pub total_ms: f64,
+    /// Rounds with at least one isolated node.
+    pub rounds_with_isolated: usize,
+    /// Max isolated-node count in any round.
+    pub max_isolated: usize,
+    /// Engine statistics, normalized (never `batched`; see module docs).
+    pub stats: EngineStats,
+}
+
+impl StoredCell {
+    /// Rebuild the full [`SimSummary`] by re-attaching the context the
+    /// key already pins (network, profile, rounds).
+    pub fn to_summary(&self, network: &str, profile: &str, rounds: usize) -> SimSummary {
+        SimSummary {
+            topology: self.topology.clone(),
+            network: network.to_string(),
+            profile: profile.to_string(),
+            rounds,
+            mean_cycle_ms: self.mean_cycle_ms,
+            total_ms: self.total_ms,
+            rounds_with_isolated: self.rounds_with_isolated,
+            max_isolated: self.max_isolated,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.topology.len());
+        out.extend_from_slice(&(self.topology.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.topology.as_bytes());
+        out.extend_from_slice(&self.mean_cycle_ms.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.total_ms.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.rounds_with_isolated as u64).to_le_bytes());
+        out.extend_from_slice(&(self.max_isolated as u64).to_le_bytes());
+        out.push(match self.stats.kind {
+            EngineKind::Periodic => 0,
+            // put_cell normalizes; reaching here with Batched is a bug.
+            EngineKind::Batched => 1,
+            EngineKind::Factored => 2,
+            EngineKind::Streaming => 3,
+        });
+        push_opt_u64(&mut out, self.stats.period.map(|v| v as u64));
+        push_opt_u64(&mut out, self.stats.cycle_detected_at.map(|v| v as u64));
+        push_opt_u64(&mut out, self.stats.cycle_len.map(|v| v as u64));
+        out.extend_from_slice(&(self.stats.simulated_rounds as u64).to_le_bytes());
+        push_opt_u64(&mut out, self.stats.groups.map(|v| v as u64));
+        out
+    }
+
+    fn decode(bytes: &[u8]) -> Result<StoredCell> {
+        let mut r = Reader { bytes, pos: 0 };
+        let topology = r.str_u32_len()?;
+        let mean_cycle_ms = f64::from_bits(r.u64()?);
+        let total_ms = f64::from_bits(r.u64()?);
+        let rounds_with_isolated = r.u64()? as usize;
+        let max_isolated = r.u64()? as usize;
+        let kind = match r.u8()? {
+            0 => EngineKind::Periodic,
+            1 => bail!("stored cell carries a grid-dependent 'batched' label"),
+            2 => EngineKind::Factored,
+            3 => EngineKind::Streaming,
+            k => bail!("unknown engine kind code {k}"),
+        };
+        let period = r.opt_u64()?.map(|v| v as usize);
+        let cycle_detected_at = r.opt_u64()?.map(|v| v as usize);
+        let cycle_len = r.opt_u64()?.map(|v| v as usize);
+        let simulated_rounds = r.u64()? as usize;
+        let groups = r.opt_u64()?.map(|v| v as usize);
+        if r.pos != bytes.len() {
+            bail!("{} trailing bytes after stored cell", bytes.len() - r.pos);
+        }
+        Ok(StoredCell {
+            topology,
+            mean_cycle_ms,
+            total_ms,
+            rounds_with_isolated,
+            max_isolated,
+            stats: EngineStats {
+                kind,
+                period,
+                cycle_detected_at,
+                cycle_len,
+                simulated_rounds,
+                groups,
+            },
+        })
+    }
+}
+
+/// `Option<u64>` encoded as a u64 with `u64::MAX` meaning `None` (the
+/// counters involved are round/period counts, far below the sentinel).
+fn push_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    out.extend_from_slice(&v.unwrap_or(u64::MAX).to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor over a value payload.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("stored value truncated: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        let v = self.u64()?;
+        Ok(if v == u64::MAX { None } else { Some(v) })
+    }
+
+    fn str_u32_len(&mut self) -> Result<String> {
+        let len = u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")) as usize;
+        let s = std::str::from_utf8(self.take(len)?).context("stored string not UTF-8")?;
+        Ok(s.to_string())
+    }
+}
+
+/// Aggregate shard statistics for one store generation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreStats {
+    /// Shard files in this generation (always the full shard count —
+    /// missing files are created empty on first touch).
+    pub shard_files: usize,
+    /// Live index entries (distinct keys, last record wins).
+    pub entries: usize,
+    /// Total records in the logs, superseded ones included.
+    pub records: usize,
+    /// Total bytes across shard files.
+    pub bytes: u64,
+}
+
+/// Result of a read-only [`verify`] audit.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    /// Shard files inspected (every generation, not just the current
+    /// epoch).
+    pub files: usize,
+    /// Valid records found across all files.
+    pub records: usize,
+    /// Files ending in a torn tail — recoverable; the next writer open
+    /// truncates it away.
+    pub torn_tails: usize,
+    /// Hard corruption findings (checksum or framing failures before
+    /// end-of-file), one message per file.
+    pub corrupt: Vec<String>,
+}
+
+impl VerifyReport {
+    /// True when no hard corruption was found (torn tails are fine).
+    pub fn ok(&self) -> bool {
+        self.corrupt.is_empty()
+    }
+}
+
+/// Audit every shard file under `dir` (all versions and epochs) without
+/// modifying anything: checksum each record, classify torn tails vs.
+/// hard corruption.
+pub fn verify(dir: impl AsRef<Path>) -> Result<VerifyReport> {
+    let mut report = VerifyReport::default();
+    for path in shard_files(dir.as_ref())? {
+        report.files += 1;
+        let bytes = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        match log::parse_header(&bytes) {
+            Ok(_) => {}
+            Err(e) => {
+                report.corrupt.push(format!("{}: {e}", path.display()));
+                continue;
+            }
+        }
+        let scan = log::scan_records(&bytes[log::HEADER_LEN..]);
+        report.records += scan.records.len();
+        match scan.issue {
+            None => {}
+            Some(log::ScanIssue::TornTail) => report.torn_tails += 1,
+            Some(log::ScanIssue::Corrupt(msg)) => {
+                report.corrupt.push(format!("{}: {msg}", path.display()));
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Result of a [`gc`] pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GcReport {
+    /// Stale-generation files deleted outright.
+    pub removed_files: usize,
+    /// Current-generation shard files rewritten.
+    pub compacted_files: usize,
+    /// Records across current-generation shards before compaction.
+    pub records_before: usize,
+    /// Records after (== live entries; superseded and torn records are
+    /// gone).
+    pub records_after: usize,
+    /// Bytes across all shard files before the pass.
+    pub bytes_before: u64,
+    /// Bytes across surviving files after the pass.
+    pub bytes_after: u64,
+}
+
+/// Garbage-collect the store at `dir` against the crate's current
+/// generation: see [`gc_with_epoch`].
+pub fn gc(dir: impl AsRef<Path>) -> Result<GcReport> {
+    gc_with_epoch(dir, ENGINE_EPOCH)
+}
+
+/// Garbage-collect `dir` against an explicit epoch: delete shard files
+/// of any other generation (stale [`FORMAT_VERSION`] or epoch), and
+/// compact current-generation shards to last-record-wins (rewrite to a
+/// temp file, then rename into place).
+///
+/// This is an offline maintenance operation: run it while no other
+/// process is appending to the store.
+pub fn gc_with_epoch(dir: impl AsRef<Path>, epoch: u32) -> Result<GcReport> {
+    let dir = dir.as_ref();
+    let mut report = GcReport::default();
+    for path in shard_files(dir)? {
+        let bytes = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        report.bytes_before += bytes.len() as u64;
+        let current = matches!(log::parse_header(&bytes), Ok((v, e)) if v == FORMAT_VERSION && e == epoch);
+        if !current {
+            fs::remove_file(&path).with_context(|| format!("removing {}", path.display()))?;
+            report.removed_files += 1;
+            continue;
+        }
+        let scan = log::scan_records(&bytes[log::HEADER_LEN..]);
+        report.records_before += scan.records.len();
+        let mut live: HashMap<String, Vec<u8>> = HashMap::with_capacity(scan.records.len());
+        for (key, value) in scan.records {
+            live.insert(key, value);
+        }
+        // Deterministic output order so identical stores compact to
+        // identical bytes.
+        let mut keys: Vec<&String> = live.keys().collect();
+        keys.sort();
+        let mut out = Vec::with_capacity(bytes.len());
+        out.extend_from_slice(&log::header_bytes(FORMAT_VERSION, epoch));
+        for key in keys {
+            out.extend_from_slice(&log::encode_record(key, &live[key]));
+        }
+        report.records_after += live.len();
+        report.bytes_after += out.len() as u64;
+        let tmp = path.with_extension("log.tmp");
+        fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        report.compacted_files += 1;
+    }
+    Ok(report)
+}
+
+/// All shard log files directly under `dir`, sorted by name.
+fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => {
+            return Err(e).with_context(|| format!("listing store directory {}", dir.display()))
+        }
+    };
+    for entry in entries {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("shard-") && name.ends_with(".log") {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mgfl_store_unit_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn fp(seed: Option<u64>) -> CellFingerprint {
+        CellFingerprint {
+            topology: if seed.is_some() { TopologyKind::Matcha } else { TopologyKind::Ring },
+            network: "gaia".to_string(),
+            profile: "femnist".to_string(),
+            t: 5,
+            rounds: 60,
+            seed,
+        }
+    }
+
+    fn sample_cell() -> StoredCell {
+        StoredCell {
+            topology: "ring".to_string(),
+            mean_cycle_ms: 123.456,
+            total_ms: 7407.36,
+            rounds_with_isolated: 3,
+            max_isolated: 1,
+            stats: EngineStats {
+                kind: EngineKind::Periodic,
+                period: Some(4),
+                cycle_detected_at: Some(8),
+                cycle_len: Some(4),
+                simulated_rounds: 12,
+                groups: None,
+            },
+        }
+    }
+
+    #[test]
+    fn keys_are_stable_and_seed_aware() {
+        assert_eq!(cell_key(&fp(None)), "cell/ring/gaia/femnist/t5/r60/s-");
+        assert_eq!(cell_key(&fp(Some(42))), "cell/matcha/gaia/femnist/t5/r60/s42");
+        assert_eq!(
+            fitness_key("gaia", "femnist", 400, "overlay/o=0,1;c=;t=5"),
+            "fit/gaia/femnist/r400/overlay/o=0,1;c=;t=5"
+        );
+        assert_eq!(
+            probe_key("gaia", "femnist", 400, 0.5, 17),
+            "probe/gaia/femnist/r400/b0.5/s17"
+        );
+    }
+
+    #[test]
+    fn roundtrip_survives_reopen_and_last_record_wins() {
+        let dir = tmpdir("roundtrip");
+        let cell = sample_cell();
+        {
+            let store = CellStore::open(&dir).unwrap();
+            assert_eq!(store.get_cell(&fp(None)).unwrap(), None);
+            store
+                .put_cell(&fp(None), &cell.to_summary("gaia", "femnist", 60), &cell.stats)
+                .unwrap();
+            store.put_fitness("fit/x", 1.5).unwrap();
+            store.put_fitness("fit/x", 2.5).unwrap();
+        }
+        let store = CellStore::open(&dir).unwrap();
+        assert_eq!(store.get_cell(&fp(None)).unwrap(), Some(cell));
+        assert_eq!(store.get_fitness("fit/x").unwrap(), Some(2.5));
+        let stats = store.stats().unwrap();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.records, 3);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn batched_label_is_normalized_on_put() {
+        let dir = tmpdir("normalize");
+        let store = CellStore::open(&dir).unwrap();
+        let cell = sample_cell();
+        let batched = EngineStats { kind: EngineKind::Batched, ..cell.stats };
+        store
+            .put_cell(&fp(None), &cell.to_summary("gaia", "femnist", 60), &batched)
+            .unwrap();
+        let got = store.get_cell(&fp(None)).unwrap().unwrap();
+        assert_eq!(got.stats.kind, EngineKind::Periodic);
+        assert_eq!(got.stats, cell.stats);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn epoch_generations_are_invisible_to_each_other() {
+        let dir = tmpdir("epoch");
+        {
+            let store = CellStore::open_with_epoch(&dir, 1).unwrap();
+            store.put_fitness("fit/a", 1.0).unwrap();
+        }
+        {
+            let store = CellStore::open_with_epoch(&dir, 2).unwrap();
+            assert_eq!(store.get_fitness("fit/a").unwrap(), None);
+            store.put_fitness("fit/a", 9.0).unwrap();
+        }
+        let store = CellStore::open_with_epoch(&dir, 1).unwrap();
+        assert_eq!(store.get_fitness("fit/a").unwrap(), Some(1.0));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_drops_stale_generations_and_compacts_current() {
+        let dir = tmpdir("gc");
+        {
+            let old = CellStore::open_with_epoch(&dir, 1).unwrap();
+            old.put_fitness("fit/old", 1.0).unwrap();
+            let cur = CellStore::open_with_epoch(&dir, 2).unwrap();
+            cur.put_fitness("fit/a", 1.0).unwrap();
+            cur.put_fitness("fit/a", 2.0).unwrap();
+            cur.put_fitness("fit/b", 3.0).unwrap();
+        }
+        let report = gc_with_epoch(&dir, 2).unwrap();
+        assert_eq!(report.removed_files, 1);
+        assert_eq!(report.records_before, 3);
+        assert_eq!(report.records_after, 2);
+        assert!(report.bytes_after < report.bytes_before);
+        let store = CellStore::open_with_epoch(&dir, 2).unwrap();
+        assert_eq!(store.get_fitness("fit/a").unwrap(), Some(2.0));
+        assert_eq!(store.get_fitness("fit/b").unwrap(), Some(3.0));
+        assert_eq!(
+            CellStore::open_with_epoch(&dir, 1).unwrap().get_fitness("fit/old").unwrap(),
+            None,
+            "stale generation deleted"
+        );
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_reports_clean_stores_clean() {
+        let dir = tmpdir("verify");
+        let store = CellStore::open(&dir).unwrap();
+        store.put_fitness("fit/a", 1.0).unwrap();
+        store.put_fitness("fit/b", 2.0).unwrap();
+        let report = verify(&dir).unwrap();
+        assert!(report.ok());
+        assert_eq!(report.records, 2);
+        assert_eq!(report.torn_tails, 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

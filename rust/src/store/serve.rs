@@ -1,0 +1,447 @@
+//! `mgfl serve` — a minimal, dependency-free HTTP/JSON front end over a
+//! shared [`CellStore`].
+//!
+//! The server exists so a warm store can amortize across *processes*:
+//! a long-lived `mgfl serve` holds one [`CellStore`] open and answers
+//! sweep requests over plain HTTP, serving every previously-simulated
+//! cell from the log and simulating (then persisting) only the misses.
+//! It is deliberately tiny — `std::net::TcpListener`, one thread per
+//! connection, `Connection: close` — because it is an operational
+//! convenience, not a product server.
+//!
+//! ## Routes
+//!
+//! * `GET /health` — liveness: `{"ok":true}`.
+//! * `GET /stats` — store shape: entry/record/byte counts plus the
+//!   engine epoch, same numbers as `mgfl cache stats`.
+//! * `POST /sweep` — body is a JSON object with any subset of
+//!   `name`, `rounds`, `topologies`, `networks`, `profiles`, `t`,
+//!   `seeds` (absent axes take [`SweepSpec::default`]; the string
+//!   `"all"` sugar works as in TOML specs). The response body is
+//!   NDJSON: a header line, one line per cell (byte-identical to the
+//!   cell objects in `sweep_<name>.json`), and a trailer with the
+//!   store hit/miss accounting.
+//!
+//! Malformed requests get `400` with `{"error": ...}`, unknown routes
+//! `404`, and a sweep that fails mid-run `500`. Request bodies are
+//! capped at 1 MiB and reads time out, so a stuck client cannot pin a
+//! handler thread forever.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::CellStore;
+use crate::sweep::{self, RunOptions, SweepSpec};
+use crate::util::Json;
+
+/// Largest accepted request body. Sweep specs are a few hundred bytes;
+/// anything near this limit is a client bug, not a bigger spec.
+const MAX_BODY: usize = 1 << 20;
+
+/// Per-connection socket timeout (read and write).
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A bound-but-not-yet-serving store server. [`Server::run`] consumes
+/// it and loops forever; tests bind to port 0 and read the resolved
+/// address with [`Server::local_addr`] before spawning `run` on a
+/// thread.
+pub struct Server {
+    listener: TcpListener,
+    store: Arc<CellStore>,
+    threads: usize,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7700`; port 0 picks a free port).
+    /// `threads` is forwarded to each sweep's [`RunOptions`].
+    pub fn bind(addr: &str, store: Arc<CellStore>, threads: usize) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding serve address {addr}"))?;
+        Ok(Server { listener, store, threads })
+    }
+
+    /// The resolved listen address.
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop: one handler thread per connection, forever. Accept
+    /// errors (transient, e.g. fd pressure) are reported and survived;
+    /// handler errors are contained to their connection.
+    pub fn run(self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("warning: serve accept failed: {e}");
+                    continue;
+                }
+            };
+            let store = Arc::clone(&self.store);
+            let threads = self.threads;
+            std::thread::spawn(move || {
+                if let Err(e) = handle_connection(stream, &store, threads) {
+                    eprintln!("warning: serve connection failed: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
+/// One parsed HTTP request — exactly the subset the routes consume.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// One response, ready to serialize. `body` is already encoded; the
+/// NDJSON sweep response and the JSON error objects both go through
+/// this.
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body }
+    }
+
+    fn error(status: u16, msg: &str) -> Response {
+        let mut obj = BTreeMap::new();
+        obj.insert("error".to_string(), Json::Str(msg.to_string()));
+        Response::json(status, format!("{}\n", Json::Obj(obj)))
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+fn handle_connection(stream: TcpStream, store: &CellStore, threads: usize) -> Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let resp = match parse_request(&mut reader) {
+        Ok(req) => respond(store, threads, &req),
+        Err(msg) => Response::error(400, &msg),
+    };
+    write_response(stream, &resp)
+}
+
+fn write_response(mut stream: TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Parse one HTTP/1.1 request from `reader`: request line, headers
+/// (only `Content-Length` is consumed), then exactly the declared body.
+/// Errors are client-facing strings (they become the `400` payload).
+fn parse_request<R: BufRead>(reader: &mut R) -> std::result::Result<Request, String> {
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("reading request line: {e}"))?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let path = parts.next().ok_or("request line missing path")?.to_string();
+    let version = parts.next().ok_or("request line missing HTTP version")?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("unsupported protocol '{version}'"));
+    }
+
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| format!("reading header: {e}"))?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(format!("malformed header '{header}'"));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad Content-Length '{}'", value.trim()))?;
+            if content_length > MAX_BODY {
+                return Err(format!("body of {content_length} bytes exceeds the 1 MiB cap"));
+            }
+        }
+    }
+
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| format!("reading {content_length}-byte body: {e}"))?;
+    let body = String::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    Ok(Request { method, path, body })
+}
+
+/// Route dispatch. Every arm returns a complete [`Response`]; nothing
+/// here touches the socket.
+fn respond(store: &CellStore, threads: usize, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => Response::json(200, "{\"ok\":true}\n".to_string()),
+        ("GET", "/stats") => match stats_json(store) {
+            Ok(body) => Response::json(200, body),
+            Err(e) => Response::error(500, &format!("{e:#}")),
+        },
+        ("POST", "/sweep") => match spec_from_json(&req.body) {
+            Ok(spec) => match run_sweep(store, threads, &spec) {
+                Ok(body) => Response::json(200, body),
+                Err(e) => Response::error(500, &format!("{e:#}")),
+            },
+            Err(msg) => Response::error(400, &msg),
+        },
+        _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+fn stats_json(store: &CellStore) -> Result<String> {
+    let s = store.stats()?;
+    let mut obj = BTreeMap::new();
+    obj.insert("epoch".to_string(), Json::Num(store.epoch() as f64));
+    obj.insert("shard_files".to_string(), Json::Num(s.shard_files as f64));
+    obj.insert("entries".to_string(), Json::Num(s.entries as f64));
+    obj.insert("records".to_string(), Json::Num(s.records as f64));
+    obj.insert("bytes".to_string(), Json::Num(s.bytes as f64));
+    Ok(format!("{}\n", Json::Obj(obj)))
+}
+
+/// Build a [`SweepSpec`] from the `POST /sweep` JSON body: defaults
+/// from [`SweepSpec::default`], each present key overriding one axis,
+/// then the same canonicalize + validate gauntlet the TOML loader runs.
+fn spec_from_json(body: &str) -> std::result::Result<SweepSpec, String> {
+    let json = Json::parse(body).map_err(|e| format!("body is not valid JSON: {e:#}"))?;
+    let obj = json.as_obj().map_err(|_| "body must be a JSON object".to_string())?;
+    let mut spec = SweepSpec::default();
+    for (key, value) in obj {
+        match key.as_str() {
+            "name" => {
+                spec.name =
+                    value.as_str().map_err(|_| "'name' must be a string".to_string())?.to_string();
+            }
+            "rounds" => {
+                spec.rounds = value
+                    .as_usize()
+                    .map_err(|_| "'rounds' must be a non-negative integer".to_string())?;
+            }
+            "topologies" => {
+                let items = string_axis(value, "topologies")?;
+                spec.topologies = SweepSpec::parse_topologies(&items)
+                    .map_err(|e| format!("'topologies': {e:#}"))?;
+            }
+            "networks" => {
+                let full = spec.networks.clone();
+                spec.networks = SweepSpec::axis_or_all(string_axis(value, "networks")?, &full);
+            }
+            "profiles" => {
+                let full = spec.profiles.clone();
+                spec.profiles = SweepSpec::axis_or_all(string_axis(value, "profiles")?, &full);
+            }
+            "t" => {
+                spec.t_values = num_axis(value, "t")?.into_iter().map(|n| n as u32).collect();
+            }
+            "seeds" => {
+                spec.seeds = num_axis(value, "seeds")?;
+            }
+            other => return Err(format!("unknown sweep key '{other}'")),
+        }
+    }
+    spec.canonicalize().map_err(|e| format!("{e:#}"))?;
+    spec.validate().map_err(|e| format!("{e:#}"))?;
+    Ok(spec)
+}
+
+fn string_axis(value: &Json, key: &str) -> std::result::Result<Vec<String>, String> {
+    let arr = value.as_arr().map_err(|_| format!("'{key}' must be an array of strings"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .map_err(|_| format!("'{key}' must be an array of strings"))
+        })
+        .collect()
+}
+
+fn num_axis(value: &Json, key: &str) -> std::result::Result<Vec<u64>, String> {
+    let arr = value.as_arr().map_err(|_| format!("'{key}' must be an array of integers"))?;
+    arr.iter()
+        .map(|v| {
+            let n = v.as_f64().map_err(|_| format!("'{key}' must be an array of integers"))?;
+            if n < 0.0 || n.fract() != 0.0 || n > u64::MAX as f64 {
+                return Err(format!("'{key}' entries must be non-negative integers"));
+            }
+            Ok(n as u64)
+        })
+        .collect()
+}
+
+/// Run one sweep read-through against the server's store and render the
+/// NDJSON body: header line, one line per cell (byte-identical to the
+/// artifact cells), accounting trailer.
+fn run_sweep(store: &CellStore, threads: usize, spec: &SweepSpec) -> Result<String> {
+    let opts = RunOptions { threads, progress: false, dedup: true };
+    let outcome = sweep::run_with_store(spec, &opts, Some(store))?;
+    let mut body = String::new();
+    let mut header = BTreeMap::new();
+    header.insert("name".to_string(), Json::Str(outcome.report.name.clone()));
+    header.insert("rounds".to_string(), Json::Num(spec.rounds as f64));
+    header.insert("cells".to_string(), Json::Num(outcome.report.cells.len() as f64));
+    body.push_str(&format!("{}\n", Json::Obj(header)));
+    for cell in &outcome.report.cells {
+        body.push_str(&format!("{}\n", cell.to_json()));
+    }
+    let mut trailer = BTreeMap::new();
+    trailer.insert("done".to_string(), Json::Bool(true));
+    trailer.insert("store_hits".to_string(), Json::Num(outcome.store_hits as f64));
+    trailer.insert("store_misses".to_string(), Json::Num(outcome.store_misses as f64));
+    trailer.insert("unique_cells".to_string(), Json::Num(outcome.unique_cells as f64));
+    body.push_str(&format!("{}\n", Json::Obj(trailer)));
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(text: &str) -> std::result::Result<Request, String> {
+        parse_request(&mut Cursor::new(text.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn requests_parse_and_malformed_ones_do_not() {
+        let r = req("GET /health HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/health");
+        assert_eq!(r.body, "");
+
+        let r = req("POST /sweep HTTP/1.1\r\nContent-Length: 4\r\n\r\n{}\n!").unwrap();
+        assert_eq!(r.body, "{}\n!");
+
+        assert!(req("\r\n\r\n").is_err(), "empty request line");
+        assert!(req("GET /x\r\n\r\n").is_err(), "missing version");
+        assert!(req("GET /x SPDY/9\r\n\r\n").is_err(), "bad protocol");
+        assert!(req("GET /x HTTP/1.1\r\nnocolon\r\n\r\n").is_err(), "malformed header");
+        assert!(
+            req("POST /x HTTP/1.1\r\nContent-Length: nine\r\n\r\n").is_err(),
+            "bad content length"
+        );
+        assert!(
+            req("POST /x HTTP/1.1\r\nContent-Length: 2097152\r\n\r\n").is_err(),
+            "body over the cap"
+        );
+        assert!(
+            req("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").is_err(),
+            "truncated body"
+        );
+    }
+
+    #[test]
+    fn sweep_specs_build_from_json_with_defaults() {
+        let spec = spec_from_json(
+            r#"{"name":"mini","rounds":40,"topologies":["ring","ours"],
+                "networks":["gaia"],"profiles":["femnist"],"t":[3,5],"seeds":[11]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.rounds, 40);
+        assert_eq!(spec.topologies.len(), 2);
+        assert_eq!(spec.networks, ["gaia"]);
+        assert_eq!(spec.profiles, ["femnist"]);
+        assert_eq!(spec.t_values, [3, 5]);
+        assert_eq!(spec.seeds, [11]);
+
+        // Absent keys keep the defaults; "all" sugar expands.
+        let dflt = SweepSpec::default();
+        let spec = spec_from_json(r#"{"networks":["all"],"rounds":8}"#).unwrap();
+        assert_eq!(spec.networks, dflt.networks);
+        assert_eq!(spec.topologies, dflt.topologies);
+        assert_eq!(spec.rounds, 8);
+
+        assert!(spec_from_json("not json").is_err());
+        assert!(spec_from_json("[1,2]").is_err(), "must be an object");
+        assert!(spec_from_json(r#"{"bogus":1}"#).is_err(), "unknown key");
+        assert!(spec_from_json(r#"{"networks":["atlantis"]}"#).is_err(), "unknown network");
+        assert!(spec_from_json(r#"{"seeds":[-1]}"#).is_err(), "negative seed");
+        assert!(spec_from_json(r#"{"rounds":0}"#).is_err(), "validate runs");
+    }
+
+    #[test]
+    fn serve_answers_health_stats_and_warm_sweeps_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("mgfl_serve_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(CellStore::open(&dir).unwrap());
+        let server = Server::bind("127.0.0.1:0", Arc::clone(&store), 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        // The accept loop runs forever; leak it — the process exit
+        // reaps the thread and the listener.
+        std::thread::spawn(move || server.run().unwrap());
+
+        let get =
+            |path: &str| roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"));
+        let health = get("/health");
+        assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+        assert!(health.contains("{\"ok\":true}"), "{health}");
+        let stats = get("/stats");
+        assert!(stats.starts_with("HTTP/1.1 200"), "{stats}");
+        assert!(stats.contains("\"entries\":0"), "{stats}");
+        assert!(get("/nope").starts_with("HTTP/1.1 404"));
+
+        let body = r#"{"name":"mini","rounds":40,"topologies":["ring","ours"],
+                       "networks":["gaia"],"profiles":["femnist"],"t":[3],"seeds":[11]}"#;
+        let post = format!(
+            "POST /sweep HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let cold = roundtrip(addr, &post);
+        assert!(cold.starts_with("HTTP/1.1 200"), "{cold}");
+        assert!(cold.contains("\"store_misses\":2"), "{cold}");
+        let warm = roundtrip(addr, &post);
+        assert!(warm.contains("\"store_hits\":2"), "{warm}");
+        assert!(warm.contains("\"store_misses\":0"), "{warm}");
+        // The cell lines themselves must be byte-identical warm vs cold.
+        assert_eq!(body_of(&cold), body_of(&warm));
+
+        let bad = "POST /sweep HTTP/1.1\r\nHost: t\r\nContent-Length: 7\r\n\r\nnotjson";
+        assert!(roundtrip(addr, bad).starts_with("HTTP/1.1 400"));
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn roundtrip(addr: SocketAddr, request: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn body_of(response: &str) -> &str {
+        response.split_once("\r\n\r\n").expect("header/body split").1
+    }
+}

@@ -181,9 +181,18 @@ impl<K, V> Default for BuildOnce<K, V> {
 impl<K: Eq + Hash + Clone, V: Clone> BuildOnce<K, V> {
     /// Return `key`'s value, running `build` exactly once per key
     /// (concurrent callers block on the first builder, then clone).
+    ///
+    /// Panic-safe: the map lock is only ever held around `HashMap` ops
+    /// (which don't panic), so a poisoned lock — from a `build` closure
+    /// that panicked on some *other* key while a caller held no lock,
+    /// or from a panicking cell simulation unwinding through a caller —
+    /// carries no torn state and is deliberately entered anyway. A
+    /// panicking `build` leaves its `OnceLock` empty (std guarantees
+    /// initialization is retried), so the key stays buildable instead
+    /// of wedging every later lookup.
     pub fn get_or_build(&self, key: &K, build: impl FnOnce() -> V) -> V {
         let slot = {
-            let mut map = self.map.lock().expect("build-once map lock");
+            let mut map = self.map.lock().unwrap_or_else(|e| e.into_inner());
             map.entry(key.clone()).or_default().clone()
         };
         // Outside the map lock: building one key never blocks others.
@@ -196,13 +205,13 @@ impl<K: Eq + Hash + Clone, V: Clone> BuildOnce<K, V> {
     /// accounting — which tests and the search's `unique_evals` pin —
     /// is unaffected by probes.
     pub fn get(&self, key: &K) -> Option<V> {
-        let slot = self.map.lock().expect("build-once map lock").get(key).cloned()?;
+        let slot = self.map.lock().unwrap_or_else(|e| e.into_inner()).get(key).cloned()?;
         slot.get().cloned()
     }
 
     /// Number of distinct keys ever requested (diagnostics/tests).
     pub fn entries(&self) -> usize {
-        self.map.lock().expect("build-once map lock").len()
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 
@@ -711,6 +720,63 @@ mod tests {
         });
         assert_eq!(builds.load(Ordering::Relaxed), 16, "each key must build exactly once");
         assert_eq!(cache.entries(), 16);
+    }
+
+    #[test]
+    fn build_once_survives_a_panicking_builder() {
+        let cache: BuildOnce<u32, u32> = BuildOnce::default();
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.get_or_build(&1, || panic!("boom"))
+        }));
+        assert!(boom.is_err(), "the panicking build must unwind to the caller");
+        // The key must stay buildable (an aborted init leaves the
+        // OnceLock empty), and the map must not be wedged for other
+        // keys or for the read-side accessors.
+        assert_eq!(cache.get(&1), None);
+        assert_eq!(cache.get_or_build(&1, || 7), 7);
+        assert_eq!(cache.get(&1), Some(7));
+        assert_eq!(cache.get_or_build(&2, || 9), 9);
+        assert_eq!(cache.entries(), 2);
+        // Same contract under contention: one worker's build panics
+        // while others build distinct keys; nobody deadlocks and every
+        // surviving key resolves.
+        let shared: BuildOnce<u32, u32> = BuildOnce::default();
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    shared.get_or_build(&0, || panic!("worker boom"))
+                }));
+                assert!(r.is_err());
+            });
+            for k in 1..4u32 {
+                scope.spawn(move || {
+                    assert_eq!(shared.get_or_build(&k, || k * 10), k * 10);
+                });
+            }
+        });
+        assert_eq!(shared.get_or_build(&0, || 5), 5, "the panicked key must retry cleanly");
+    }
+
+    #[test]
+    fn panicking_cell_does_not_wedge_scratch_or_cache() {
+        let cells = spec().expand();
+        let cache = SweepCache::default();
+        let mut bad = cells[0].clone();
+        bad.profile = "no-such-profile".into();
+        // The panic fires inside the thread-local scratch borrow; the
+        // RefCell guard must release on unwind so the same thread's
+        // scratch pool stays usable.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_cell_cached_timed(&bad, &cache)
+        }));
+        assert!(r.is_err(), "an unknown profile must panic, not misreport");
+        let good = &cells[0];
+        let (got, _, _) = run_cell_cached_timed(good, &cache);
+        let want = run_cell_summary(good);
+        assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+        assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits());
+        assert_eq!(got.rounds_with_isolated, want.rounds_with_isolated);
+        assert_eq!(got.max_isolated, want.max_isolated);
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub use cache::{
     CellFingerprint, DedupPlan, SharedSchedule, SweepCache,
 };
 pub use report::{Axis, CellResult, SweepReport};
-pub use spec::{CellSpec, SweepSpec};
+pub use spec::{CellSpec, StoreSpec, SweepFile, SweepSpec};
 
 use std::io::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -46,6 +46,7 @@ use anyhow::Result;
 use crate::simtime::{
     simulate_summary_compiled_with_stats, CompiledTopology, EngineKind, EngineStats, SimSummary,
 };
+use crate::store::{CellStore, StoredCell};
 
 /// How to execute a sweep (host-side knobs; never part of the artifact).
 #[derive(Debug, Clone)]
@@ -349,6 +350,13 @@ pub struct SweepOutcome {
     pub sim_ms: f64,
     /// Engine dispatch over the simulated (unique) cells.
     pub engines: EngineMix,
+    /// Planned work items answered by the persistent store instead of
+    /// being simulated (unique items with dedup on, grid cells with
+    /// dedup off). 0 when no store is attached.
+    pub store_hits: usize,
+    /// Planned work items the store missed (simulated, then written
+    /// back). 0 when no store is attached.
+    pub store_misses: usize,
 }
 
 impl SweepOutcome {
@@ -383,6 +391,22 @@ impl SweepOutcome {
 /// report's `engine` column, like every other column, is byte-identical
 /// across modes and thread counts.
 pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
+    run_with_store(spec, opts, None)
+}
+
+/// [`run`] with an optional persistent [`CellStore`] attached:
+/// read-through (work items whose fingerprint the store already holds
+/// are served without simulating) and write-back (fresh results are
+/// appended for the next run). Reports stay byte-identical to a cold,
+/// store-less run at any thread count: stored results carry normalized
+/// engine stats, and this grid's own batch plan re-labels them (see the
+/// [`crate::store`] module docs on label purity) — which is why warm
+/// runs still compile schedules in phase 1 even when every cell hits.
+pub fn run_with_store(
+    spec: &SweepSpec,
+    opts: &RunOptions,
+    store: Option<&CellStore>,
+) -> Result<SweepOutcome> {
     // Canonicalize a local copy so coordinates (and the cell seeds
     // derived from them) are case-stable no matter how the caller
     // spelled the axes. This also dedupes duplicate axis values (with a
@@ -400,6 +424,20 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
     let fp_plan = DedupPlan::partition(&cells);
     let plan = if opts.dedup { fp_plan.clone() } else { DedupPlan::identity(cells.len()) };
     let work: Vec<&CellSpec> = plan.unique.iter().map(|&i| &cells[i]).collect();
+    // Probe the store serially on the caller thread (reads are index
+    // lookups; the first probe per shard pays that shard's load).
+    let stored: Vec<Option<StoredCell>> = match store {
+        Some(st) => {
+            let mut v = Vec::with_capacity(work.len());
+            for c in &work {
+                v.push(st.get_cell(&c.fingerprint())?);
+            }
+            v
+        }
+        None => vec![None; work.len()],
+    };
+    let store_hits = stored.iter().filter(|s| s.is_some()).count();
+    let store_misses = if store.is_some() { work.len() - store_hits } else { 0 };
     let threads = effective_threads(opts.threads, work.len());
     let inner = RunOptions { threads, progress: opts.progress, dedup: opts.dedup };
     let sched_opts = RunOptions { threads, progress: false, dedup: opts.dedup };
@@ -431,8 +469,19 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
             let produced: Vec<Vec<(usize, (SimSummary, CellTiming, EngineStats))>> =
                 run_cells(&units, &inner, |_, unit| match unit {
                     Unit::Chunk(ci) => {
-                        let chunk = &bplan.chunks[*ci];
-                        let batch: Vec<(&CellSpec, Arc<CompiledTopology>)> = chunk
+                        // Store hits drop out of the batch: per-lane
+                        // batched results are width-independent (pinned
+                        // by the batched-engine proptest), so running
+                        // only the missed lanes is byte-exact.
+                        let missed: Vec<usize> = bplan.chunks[*ci]
+                            .iter()
+                            .copied()
+                            .filter(|&i| stored[i].is_none())
+                            .collect();
+                        if missed.is_empty() {
+                            return Vec::new();
+                        }
+                        let batch: Vec<(&CellSpec, Arc<CompiledTopology>)> = missed
                             .iter()
                             .map(|&i| match &scheds[i] {
                                 Some(SharedSchedule::Periodic(ct)) => (work[i], Arc::clone(ct)),
@@ -441,9 +490,10 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
                             .collect();
                         // The batch key includes `rounds`, so the chunk
                         // is uniform; take the first cell's budget.
-                        let rounds = work[chunk[0]].rounds;
-                        chunk.iter().copied().zip(run_batch_cached(&batch, rounds)).collect()
+                        let rounds = work[missed[0]].rounds;
+                        missed.iter().copied().zip(run_batch_cached(&batch, rounds)).collect()
                     }
+                    Unit::Solo(i) if stored[*i].is_some() => Vec::new(),
                     Unit::Solo(i) => vec![(*i, run_cell_cached_timed(work[*i], &shared))],
                 });
             let mut slots: Vec<Option<(SimSummary, CellTiming, EngineStats)>> =
@@ -451,8 +501,35 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
             for (i, r) in produced.into_iter().flatten() {
                 slots[i] = Some(r);
             }
-            let summaries =
-                slots.into_iter().map(|s| s.expect("every unique cell executed")).collect();
+            // Fill the store-hit slots, applying THIS grid's batch
+            // labels: a stored (normalized, never-batched) result that
+            // lands in a chunk reports `batched`, exactly as the cold
+            // run would have labeled it.
+            let mut in_chunk = vec![false; work.len()];
+            for chunk in &bplan.chunks {
+                for &i in chunk {
+                    in_chunk[i] = true;
+                }
+            }
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if slot.is_none() {
+                    let sc = stored[i].as_ref().expect("empty slots are store hits");
+                    let stats = if in_chunk[i] {
+                        EngineStats { kind: EngineKind::Batched, ..sc.stats }
+                    } else {
+                        sc.stats
+                    };
+                    *slot = Some((
+                        sc.to_summary(&work[i].network, &work[i].profile, work[i].rounds),
+                        CellTiming::default(),
+                        stats,
+                    ));
+                }
+            }
+            let summaries = slots
+                .into_iter()
+                .map(|s| s.expect("every unique cell executed or served from the store"))
+                .collect();
             (summaries, phase1_build)
         } else {
             // Dedup off: every grid cell runs independently, but batch
@@ -474,7 +551,18 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
                 }
             }
             let summaries = run_cells(&work, &inner, |i, c| {
-                if batched_label[fp_plan.assignment[i]] {
+                if let Some(sc) = &stored[i] {
+                    let stats = if batched_label[fp_plan.assignment[i]] {
+                        EngineStats { kind: EngineKind::Batched, ..sc.stats }
+                    } else {
+                        sc.stats
+                    };
+                    (
+                        sc.to_summary(&c.network, &c.profile, c.rounds),
+                        CellTiming::default(),
+                        stats,
+                    )
+                } else if batched_label[fp_plan.assignment[i]] {
                     run_cell_batched_single(c)
                 } else {
                     run_cell_summary_timed(c)
@@ -482,6 +570,21 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
             });
             (summaries, 0.0)
         };
+    // Write fresh results back (serially; appends are cheap). Only
+    // fingerprint representatives are written — duplicates would append
+    // identical records. `stored[i].is_none()` marks the work items
+    // that actually simulated, in both modes.
+    if let Some(st) = store {
+        let mut rep = vec![false; cells.len()];
+        for &i in &fp_plan.unique {
+            rep[i] = true;
+        }
+        for (wi, (s, _, stats)) in summaries.iter().enumerate() {
+            if stored[wi].is_none() && rep[plan.unique[wi]] {
+                st.put_cell(&work[wi].fingerprint(), s, stats)?;
+            }
+        }
+    }
     let results: Vec<CellResult> = cells
         .iter()
         .zip(&plan.assignment)
@@ -503,6 +606,8 @@ pub fn run(spec: &SweepSpec, opts: &RunOptions) -> Result<SweepOutcome> {
         build_ms,
         sim_ms,
         engines,
+        store_hits,
+        store_misses,
     })
 }
 

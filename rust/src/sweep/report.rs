@@ -84,6 +84,33 @@ impl CellResult {
             simulated_rounds: stats.simulated_rounds,
         }
     }
+
+    /// This cell's JSON object, exactly as it appears inside the
+    /// [`SweepReport::to_json`] artifact (also streamed per-line by
+    /// `mgfl serve`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("topology".into(), Json::Str(self.topology.clone()));
+        m.insert("network".into(), Json::Str(self.network.clone()));
+        m.insert("profile".into(), Json::Str(self.profile.clone()));
+        m.insert("t".into(), Json::Num(self.t as f64));
+        // Base seeds are validated to fit a JSON number exactly
+        // (< 2^53); the derived stream is a full 64-bit value,
+        // so it travels as a decimal string.
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("cell_seed".into(), Json::Str(self.cell_seed.to_string()));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("mean_cycle_ms".into(), Json::Num(self.mean_cycle_ms));
+        m.insert("total_ms".into(), Json::Num(self.total_ms));
+        m.insert(
+            "rounds_with_isolated".into(),
+            Json::Num(self.rounds_with_isolated as f64),
+        );
+        m.insert("max_isolated".into(), Json::Num(self.max_isolated as f64));
+        m.insert("engine".into(), Json::Str(self.engine.to_string()));
+        m.insert("simulated_rounds".into(), Json::Num(self.simulated_rounds as f64));
+        Json::Obj(m)
+    }
 }
 
 /// A sweep grid axis, for slicing reports into 2-D tables.
@@ -190,33 +217,7 @@ impl SweepReport {
     /// JSON artifact (deterministic: BTreeMap keys, grid-ordered cells,
     /// no host timing).
     pub fn to_json(&self) -> Json {
-        let cells: Vec<Json> = self
-            .cells
-            .iter()
-            .map(|c| {
-                let mut m = BTreeMap::new();
-                m.insert("topology".into(), Json::Str(c.topology.clone()));
-                m.insert("network".into(), Json::Str(c.network.clone()));
-                m.insert("profile".into(), Json::Str(c.profile.clone()));
-                m.insert("t".into(), Json::Num(c.t as f64));
-                // Base seeds are validated to fit a JSON number exactly
-                // (< 2^53); the derived stream is a full 64-bit value,
-                // so it travels as a decimal string.
-                m.insert("seed".into(), Json::Num(c.seed as f64));
-                m.insert("cell_seed".into(), Json::Str(c.cell_seed.to_string()));
-                m.insert("rounds".into(), Json::Num(c.rounds as f64));
-                m.insert("mean_cycle_ms".into(), Json::Num(c.mean_cycle_ms));
-                m.insert("total_ms".into(), Json::Num(c.total_ms));
-                m.insert(
-                    "rounds_with_isolated".into(),
-                    Json::Num(c.rounds_with_isolated as f64),
-                );
-                m.insert("max_isolated".into(), Json::Num(c.max_isolated as f64));
-                m.insert("engine".into(), Json::Str(c.engine.to_string()));
-                m.insert("simulated_rounds".into(), Json::Num(c.simulated_rounds as f64));
-                Json::Obj(m)
-            })
-            .collect();
+        let cells: Vec<Json> = self.cells.iter().map(|c| c.to_json()).collect();
         let mut top = BTreeMap::new();
         top.insert("name".into(), Json::Str(self.name.clone()));
         top.insert("rounds".into(), Json::Num(self.rounds as f64));

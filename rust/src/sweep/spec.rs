@@ -336,6 +336,102 @@ impl SweepSpec {
     }
 }
 
+/// The `[store]` section of a sweep file: where the persistent cell
+/// store lives and whether this spec uses it by default. CLI flags
+/// (`--store`, `--no-store`) override both fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreSpec {
+    /// Store directory (created on first use).
+    pub path: String,
+    /// Whether the sweep consults the store (default `true`; `false`
+    /// keeps the path on record while forcing cold runs).
+    pub enabled: bool,
+}
+
+/// A parsed sweep file: the grid spec plus the optional `[store]`
+/// section. [`SweepSpec::from_toml_str`] stays section-free (flat specs
+/// embedded in other tools keep erroring on stray sections); this
+/// wrapper is the full file dialect the CLI loads.
+#[derive(Debug, Clone)]
+pub struct SweepFile {
+    /// The experiment grid.
+    pub spec: SweepSpec,
+    /// The `[store]` section, if the file has one.
+    pub store: Option<StoreSpec>,
+}
+
+impl SweepFile {
+    /// Load, canonicalize, and validate a sweep file.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading sweep spec {}", path.as_ref().display()))?;
+        let mut file = Self::from_toml_str(&text)?;
+        file.spec.canonicalize()?;
+        file.spec.validate()?;
+        Ok(file)
+    }
+
+    /// Parse the file dialect: the flat sweep keys, optionally followed
+    /// by a `[store]` section (`path`, `enabled`). Any other section is
+    /// an error.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let mut sweep_text = String::new();
+        let mut store: Option<StoreSpec> = None;
+        let mut in_store = false;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.starts_with('[') {
+                if line == "[store]" {
+                    ensure!(!in_store, "line {}: duplicate [store] section", lineno + 1);
+                    in_store = true;
+                    store = Some(StoreSpec { path: String::new(), enabled: true });
+                    sweep_text.push('\n');
+                    continue;
+                }
+                bail!(
+                    "line {}: unknown section '{line}' (sweep files support only [store])",
+                    lineno + 1
+                );
+            }
+            if !in_store {
+                // Keep the raw line (and blank lines below for store
+                // keys) so SweepSpec::from_toml_str reports the file's
+                // real line numbers.
+                sweep_text.push_str(raw);
+                sweep_text.push('\n');
+                continue;
+            }
+            sweep_text.push('\n');
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let items = split_values(value);
+            let section = store.as_mut().expect("inside [store]");
+            match key.trim() {
+                "path" => section.path = one(&items, "path", lineno)?,
+                "enabled" => {
+                    section.enabled = match one(&items, "enabled", lineno)?.as_str() {
+                        "true" => true,
+                        "false" => false,
+                        other => bail!(
+                            "line {}: [store] enabled must be true or false (got '{other}')",
+                            lineno + 1
+                        ),
+                    }
+                }
+                other => bail!("line {}: unknown [store] key '{other}'", lineno + 1),
+            }
+        }
+        if let Some(s) = &store {
+            ensure!(!s.path.is_empty(), "[store] section requires a path");
+        }
+        Ok(SweepFile { spec: SweepSpec::from_toml_str(&sweep_text)?, store })
+    }
+}
+
 /// Whether `values` lists any value more than once.
 fn has_duplicates<T: PartialEq>(values: &[T]) -> bool {
     values.iter().enumerate().any(|(i, v)| values[..i].contains(v))
@@ -516,6 +612,53 @@ seeds = [17]
         big_seed.seeds = vec![(1u64 << 53) - 1];
         big_seed.validate().unwrap();
         assert!(SweepSpec::from_toml_file("/nonexistent.toml").is_err());
+    }
+
+    #[test]
+    fn sweep_files_parse_the_store_section() {
+        let text = r#"
+name = "warm"
+rounds = 50
+seeds = [17]
+
+[store]
+path = "/tmp/mgfl-store"   # created on first use
+enabled = true
+"#;
+        let file = SweepFile::from_toml_str(text).unwrap();
+        assert_eq!(file.spec.name, "warm");
+        assert_eq!(file.spec.rounds, 50);
+        assert_eq!(
+            file.store,
+            Some(StoreSpec { path: "/tmp/mgfl-store".into(), enabled: true })
+        );
+
+        // No section -> no store; flat specs parse identically to
+        // SweepSpec::from_toml_str.
+        let flat = SweepFile::from_toml_str("name = \"flat\"\n").unwrap();
+        assert!(flat.store.is_none());
+        assert_eq!(flat.spec.name, "flat");
+
+        let off = SweepFile::from_toml_str("[store]\npath = \"p\"\nenabled = false\n").unwrap();
+        assert!(!off.store.unwrap().enabled);
+    }
+
+    #[test]
+    fn sweep_files_reject_bad_store_sections() {
+        // Unknown sections still error (and name the line).
+        let err = SweepFile::from_toml_str("name = \"x\"\n[cache]\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // Missing path, bad keys, bad bools, duplicates.
+        assert!(SweepFile::from_toml_str("[store]\nenabled = true\n").is_err());
+        assert!(SweepFile::from_toml_str("[store]\npath = \"p\"\nbogus = 1\n").is_err());
+        assert!(SweepFile::from_toml_str("[store]\npath = \"p\"\nenabled = maybe\n").is_err());
+        assert!(SweepFile::from_toml_str("[store]\npath = \"p\"\n[store]\n").is_err());
+        // Sweep-key errors keep their original line numbers even after
+        // a store section is stripped.
+        let err = SweepFile::from_toml_str("[store]\npath = \"p\"\n\nbogus = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 4"), "{err}");
     }
 
     #[test]

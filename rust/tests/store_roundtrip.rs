@@ -1,0 +1,138 @@
+//! Integration: store-backed sweeps and searches are invisible in the
+//! artifacts.
+//!
+//! The read-through contract: a sweep (or search) against a store —
+//! cold, warm, or partially warm, at any thread count, with dedup on or
+//! off — produces artifacts byte-identical to a storeless run of the
+//! same spec, while the hit/miss accounting proves what was actually
+//! served from disk. This is the same oracle discipline as the dedup
+//! layer: the store may only ever change *when* a result was computed,
+//! never *what* it is.
+
+use std::path::PathBuf;
+
+use mgfl::config::TopologyKind;
+use mgfl::search::{self, OptimizeSpec, StrategyKind};
+use mgfl::store::CellStore;
+use mgfl::sweep::{self, RunOptions, SweepSpec};
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mgfl_roundtrip_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Stochastic MATCHA next to deterministic designs, two t values, so
+/// the store sees seed-sensitive and seed-insensitive keys side by side.
+fn grid(seeds: Vec<u64>) -> SweepSpec {
+    SweepSpec {
+        name: "store_roundtrip".into(),
+        topologies: vec![TopologyKind::Matcha, TopologyKind::Ring, TopologyKind::Multigraph],
+        networks: vec!["gaia".into()],
+        profiles: vec!["femnist".into()],
+        t_values: vec![3, 5],
+        seeds,
+        rounds: 60,
+    }
+}
+
+fn opts(threads: usize, dedup: bool) -> RunOptions {
+    RunOptions { threads, progress: false, dedup }
+}
+
+#[test]
+fn warm_sweeps_are_byte_identical_at_any_thread_count_and_dedup_mode() {
+    let spec = grid(vec![11, 23]);
+    let reference = sweep::run(&spec, &opts(1, true)).unwrap();
+    let ref_json = reference.report.to_json().to_string();
+    let ref_csv = reference.report.to_csv();
+
+    let dir = tmp("warm");
+    let store = CellStore::open(&dir).unwrap();
+    let cold = sweep::run_with_store(&spec, &opts(1, true), Some(&store)).unwrap();
+    assert_eq!(cold.store_hits, 0, "an empty store must hit nothing");
+    assert_eq!(cold.store_misses, cold.unique_cells, "cold must simulate every unique cell");
+    assert_eq!(cold.report.to_json().to_string(), ref_json, "cold JSON must match storeless");
+    assert_eq!(cold.report.to_csv(), ref_csv, "cold CSV must match storeless");
+
+    for threads in [1usize, 4] {
+        for dedup in [true, false] {
+            let warm = sweep::run_with_store(&spec, &opts(threads, dedup), Some(&store)).unwrap();
+            let ctx = format!("threads={threads} dedup={dedup}");
+            assert_eq!(warm.store_misses, 0, "{ctx}: a warm store must simulate nothing");
+            assert_eq!(
+                warm.store_hits, warm.unique_cells,
+                "{ctx}: every planned work item must be served from the store"
+            );
+            assert_eq!(warm.report.to_json().to_string(), ref_json, "{ctx}: JSON must match");
+            assert_eq!(warm.report.to_csv(), ref_csv, "{ctx}: CSV must match");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_partially_warm_store_serves_hits_and_simulates_only_the_rest() {
+    let dir = tmp("partial");
+    let store = CellStore::open(&dir).unwrap();
+    // Populate from the single-seed subset...
+    sweep::run_with_store(&grid(vec![11]), &opts(2, true), Some(&store)).unwrap();
+
+    // ...then sweep the superset: seed-insensitive cells (ring and the
+    // multigraph) hit, the new seed's MATCHA cells must still simulate.
+    let spec = grid(vec![11, 23]);
+    let reference = sweep::run(&spec, &opts(1, true)).unwrap();
+    let warm = sweep::run_with_store(&spec, &opts(2, true), Some(&store)).unwrap();
+    assert!(warm.store_hits > 0, "subset results must be reused");
+    assert!(warm.store_misses > 0, "the new seed's stochastic cells must simulate");
+    assert_eq!(
+        warm.store_hits + warm.store_misses,
+        warm.unique_cells,
+        "accounting must cover exactly the planned work"
+    );
+    assert_eq!(
+        warm.report.to_json().to_string(),
+        reference.report.to_json().to_string(),
+        "a partially warm sweep must still match the storeless artifacts byte for byte"
+    );
+    assert_eq!(warm.report.to_csv(), reference.report.to_csv());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn optimize_warm_starts_from_a_persisted_fitness_store() {
+    let spec = OptimizeSpec {
+        name: "store_warmstart".into(),
+        rounds: 80,
+        chains: 2,
+        steps: 20,
+        restart_after: 12,
+        strategy: StrategyKind::Hill,
+        matcha_budgets: vec![0.5],
+        ..Default::default()
+    };
+    let run_opts = RunOptions { threads: 2, ..Default::default() };
+    let reference = search::run(&spec, &run_opts).unwrap();
+    let ref_json = reference.report.to_json().to_string();
+
+    let dir = tmp("optimize");
+    let store = CellStore::open(&dir).unwrap();
+    let cold = search::run_with_store(&spec, &run_opts, Some(&store)).unwrap();
+    assert_eq!(cold.store_hits, 0, "an empty store must hit nothing");
+    assert!(cold.store_misses > 0, "cold must simulate candidates, baselines, and probes");
+    assert_eq!(
+        cold.report.to_json().to_string(),
+        ref_json,
+        "persisting fitness must not change the search"
+    );
+
+    // The search is a pure function of the spec, so a second invocation
+    // asks for exactly the fitness values the first one persisted.
+    let warm = search::run_with_store(&spec, &run_opts, Some(&store)).unwrap();
+    assert!(warm.store_hits > 0, "the second invocation must warm-start");
+    assert_eq!(warm.store_misses, 0, "every fitness must be served from the store");
+    assert_eq!(warm.report.to_json().to_string(), ref_json, "warm JSON must match");
+    assert_eq!(warm.report.to_csv(), reference.report.to_csv(), "warm CSV must match");
+    let _ = std::fs::remove_dir_all(&dir);
+}
