@@ -46,6 +46,7 @@ fn grid(rounds: usize) -> SweepSpec {
         t_values: vec![5],
         seeds: (17..25).collect(),
         rounds,
+        scenario: None,
     }
 }
 

@@ -268,6 +268,13 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         spec.seeds.len(),
         spec.rounds,
     );
+    if let Some(sc) = &spec.scenario {
+        eprintln!(
+            "  scenario: seed {} with {} event(s) — fault injection via piecewise-static dispatch",
+            sc.seed,
+            sc.events.len()
+        );
+    }
     let outcome = sweep::run_with_store(
         &spec,
         &RunOptions { threads, progress: true, dedup },
@@ -303,8 +310,14 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         ),
         None => String::new(),
     };
+    let scenario_note = if outcome.report.scenario {
+        let errors = outcome.report.cells.iter().filter(|c| c.error.is_some()).count();
+        format!("; scenario mode: {errors} error cell(s)")
+    } else {
+        String::new()
+    };
     println!(
-        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s; engines: {}{})",
+        "\n{} cells ({} unique simulated, {:.1}x dedup) in {:.2} s on {} threads ({:.1} cells/s; worker time: build {:.2} s + sim {:.2} s; engines: {}{}{})",
         outcome.report.cells.len(),
         outcome.unique_cells,
         outcome.dedup_ratio(),
@@ -315,6 +328,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         outcome.sim_ms / 1e3,
         outcome.engines.describe(),
         store_note,
+        scenario_note,
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
     Ok(())
@@ -441,12 +455,15 @@ fn serve_cmd(args: &Args) -> Result<()> {
     let threads: usize = args.get("threads", 0)?;
     let store = std::sync::Arc::new(CellStore::open(path)?);
     let server = mgfl::store::serve::Server::bind(&addr, store, threads)?;
+    mgfl::store::serve::install_signal_handlers();
     eprintln!(
-        "mgfl serve: store {path} (epoch {}) at http://{} — GET /health, GET /stats, POST /sweep",
+        "mgfl serve: store {path} (epoch {}) at http://{} — GET /health, GET /stats, POST /sweep (Ctrl-C drains and exits)",
         mgfl::store::ENGINE_EPOCH,
         server.local_addr()?,
     );
-    server.run()
+    server.run()?;
+    eprintln!("mgfl serve: shutdown complete (in-flight connections drained)");
+    Ok(())
 }
 
 /// `mgfl cache`: inspect (stats), audit (verify), or compact (gc) a
@@ -853,6 +870,7 @@ fn table6(rounds: usize, train_rounds: usize, threads: usize) -> Result<()> {
         t_values: vec![1, 3, 5, 8, 10, 20, 30],
         seeds: vec![17],
         rounds,
+        scenario: None,
     };
     let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup: true })?;
     for &t in &spec.t_values {

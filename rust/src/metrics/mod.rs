@@ -128,6 +128,19 @@ impl TrainTrace {
     }
 }
 
+/// Nearest-rank percentile over an ascending-sorted slice: the element
+/// at index `floor((len − 1) · q)`. Deterministic pure selection — no
+/// interpolation, no new f64s — so every engine computing degraded-mode
+/// percentiles from bit-identical series reports bit-identical values.
+///
+/// Panics on an empty slice; `q` is clamped to `[0, 1]`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty series");
+    let q = q.clamp(0.0, 1.0);
+    let idx = ((sorted.len() - 1) as f64 * q).floor() as usize;
+    sorted[idx]
+}
+
 /// Render an aligned text table (CLI output for the paper tables).
 pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
@@ -256,6 +269,17 @@ mod tests {
         assert!(s.contains("gaia:ring"));
         assert!(s.contains("amazon:multigraph"));
         assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 0.5), 3.0);
+        assert_eq!(percentile(&s, 0.95), 4.0); // floor(4 * 0.95) = 3
+        assert_eq!(percentile(&s, 1.0), 5.0);
+        assert_eq!(percentile(&[7.5], 0.95), 7.5);
+        assert_eq!(percentile(&s, 2.0), 5.0); // clamped
     }
 
     #[test]

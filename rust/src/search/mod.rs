@@ -571,6 +571,7 @@ pub fn run_with_store(
             base_seed: spec.seed,
             cell_seed: cell_stream(spec.seed, kind, &spec.network, &spec.profile, spec.baseline_t),
             rounds: spec.rounds,
+            scenario: None,
         })
         .collect();
     let mut aux_store_hits = 0usize;

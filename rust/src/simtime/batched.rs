@@ -287,6 +287,7 @@ pub fn run_batched(
                 total_ms: total[j],
                 rounds_with_isolated: riso[j],
                 max_isolated: miso[j],
+                scenario: None,
             };
             let stats = EngineStats {
                 kind: EngineKind::Batched,

@@ -550,6 +550,7 @@ pub fn run_compiled(
         total_ms,
         rounds_with_isolated,
         max_isolated,
+        scenario: None,
     };
     let stats = EngineStats {
         kind: EngineKind::Periodic,
@@ -679,6 +680,7 @@ fn run_streaming(
         total_ms,
         rounds_with_isolated,
         max_isolated,
+        scenario: None,
     };
     let stats = EngineStats {
         kind: EngineKind::Streaming,

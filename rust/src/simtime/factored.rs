@@ -304,6 +304,7 @@ pub fn run_factored(
         total_ms,
         rounds_with_isolated,
         max_isolated,
+        scenario: None,
     };
     let stats = EngineStats {
         kind: EngineKind::Factored,

@@ -10,6 +10,7 @@
 pub mod batched;
 pub mod compiled;
 pub mod factored;
+pub mod scenario;
 
 use std::collections::HashMap;
 
@@ -26,6 +27,11 @@ pub use compiled::{
 };
 pub use factored::{
     run_factored, simulate_summary_factored_with_stats, FactoredSlab, FactoredTopology,
+};
+pub use scenario::{
+    build_timeline, run_scenario_batched, run_scenario_compiled, run_scenario_factored,
+    simulate_summary_scenario, simulate_summary_scenario_naive, Event, EventKind, OutageWindow,
+    ScenarioMetrics, ScenarioSpec, Segment, SegmentMetrics, Timeline,
 };
 
 /// Simulation output for one (topology, network, profile) cell.
@@ -152,6 +158,9 @@ pub struct SimSummary {
     pub rounds_with_isolated: usize,
     /// Max isolated-node count seen in any round.
     pub max_isolated: usize,
+    /// Degraded-mode metrics — `Some` iff the cell ran under a
+    /// fault-injection scenario ([`scenario::ScenarioSpec`]).
+    pub scenario: Option<ScenarioMetrics>,
 }
 
 /// Like [`simulate`] but without recording the per-round trace.
@@ -215,6 +224,7 @@ pub fn simulate_summary_naive(
         total_ms,
         rounds_with_isolated,
         max_isolated,
+        scenario: None,
     }
 }
 

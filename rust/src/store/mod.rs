@@ -63,7 +63,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use crate::simtime::{EngineKind, EngineStats, SimSummary};
+use crate::simtime::{EngineKind, EngineStats, ScenarioMetrics, SegmentMetrics, SimSummary};
 use crate::sweep::CellFingerprint;
 use crate::util::rng::fnv1a;
 
@@ -189,6 +189,7 @@ impl CellStore {
             rounds_with_isolated: summary.rounds_with_isolated,
             max_isolated: summary.max_isolated,
             stats,
+            scenario: summary.scenario.clone(),
         };
         self.put(&cell_key(fp), &cell.encode())
     }
@@ -321,7 +322,7 @@ pub fn cell_key(fp: &CellFingerprint) -> String {
         Some(s) => s.to_string(),
         None => "-".to_string(),
     };
-    format!(
+    let mut key = format!(
         "cell/{}/{}/{}/t{}/r{}/s{}",
         fp.topology.as_str(),
         fp.network,
@@ -329,7 +330,15 @@ pub fn cell_key(fp: &CellFingerprint) -> String {
         fp.t,
         fp.rounds,
         seed
-    )
+    );
+    // Scenario cells get a distinct key space: the fault timeline
+    // changes the result, so a churned cell must never be served its
+    // static twin's record (or vice versa). Static cells keep the
+    // legacy key byte-for-byte — no epoch bump, warm stores stay warm.
+    if let Some(h) = fp.scenario {
+        key.push_str(&format!("/sc{h:016x}"));
+    }
+    key
 }
 
 /// The store key for a search genome's fitness under one evaluation
@@ -359,6 +368,11 @@ pub struct StoredCell {
     pub max_isolated: usize,
     /// Engine statistics, normalized (never `batched`; see module docs).
     pub stats: EngineStats,
+    /// Degraded-mode metrics, present iff the cell ran under a
+    /// fault-injection scenario. Encoded as an optional trailing block,
+    /// so static-cell records are byte-identical to the pre-scenario
+    /// format.
+    pub scenario: Option<ScenarioMetrics>,
 }
 
 impl StoredCell {
@@ -374,6 +388,7 @@ impl StoredCell {
             total_ms: self.total_ms,
             rounds_with_isolated: self.rounds_with_isolated,
             max_isolated: self.max_isolated,
+            scenario: self.scenario.clone(),
         }
     }
 
@@ -397,6 +412,22 @@ impl StoredCell {
         push_opt_u64(&mut out, self.stats.cycle_len.map(|v| v as u64));
         out.extend_from_slice(&(self.stats.simulated_rounds as u64).to_le_bytes());
         push_opt_u64(&mut out, self.stats.groups.map(|v| v as u64));
+        if let Some(m) = &self.scenario {
+            out.extend_from_slice(&(m.segments.len() as u64).to_le_bytes());
+            for s in &m.segments {
+                out.extend_from_slice(&(s.start as u64).to_le_bytes());
+                out.extend_from_slice(&(s.len as u64).to_le_bytes());
+                out.extend_from_slice(&(s.up_silos as u64).to_le_bytes());
+                out.extend_from_slice(&s.p50_ms.to_bits().to_le_bytes());
+                out.extend_from_slice(&s.p95_ms.to_bits().to_le_bytes());
+                out.extend_from_slice(&s.max_ms.to_bits().to_le_bytes());
+            }
+            out.extend_from_slice(&m.p50_ms.to_bits().to_le_bytes());
+            out.extend_from_slice(&m.p95_ms.to_bits().to_le_bytes());
+            out.extend_from_slice(&m.max_ms.to_bits().to_le_bytes());
+            out.extend_from_slice(&m.isolation_rate.to_bits().to_le_bytes());
+            out.extend_from_slice(&(m.recovery_rounds as u64).to_le_bytes());
+        }
         out
     }
 
@@ -419,6 +450,32 @@ impl StoredCell {
         let cycle_len = r.opt_u64()?.map(|v| v as usize);
         let simulated_rounds = r.u64()? as usize;
         let groups = r.opt_u64()?.map(|v| v as usize);
+        // Optional trailing scenario block: absent in records written
+        // before the fault-injection layer (and in static cells since).
+        let scenario = if r.pos < bytes.len() {
+            let nsegs = r.u64()? as usize;
+            let mut segments = Vec::with_capacity(nsegs);
+            for _ in 0..nsegs {
+                segments.push(SegmentMetrics {
+                    start: r.u64()? as usize,
+                    len: r.u64()? as usize,
+                    up_silos: r.u64()? as usize,
+                    p50_ms: f64::from_bits(r.u64()?),
+                    p95_ms: f64::from_bits(r.u64()?),
+                    max_ms: f64::from_bits(r.u64()?),
+                });
+            }
+            Some(ScenarioMetrics {
+                segments,
+                p50_ms: f64::from_bits(r.u64()?),
+                p95_ms: f64::from_bits(r.u64()?),
+                max_ms: f64::from_bits(r.u64()?),
+                isolation_rate: f64::from_bits(r.u64()?),
+                recovery_rounds: r.u64()? as usize,
+            })
+        } else {
+            None
+        };
         if r.pos != bytes.len() {
             bail!("{} trailing bytes after stored cell", bytes.len() - r.pos);
         }
@@ -436,6 +493,7 @@ impl StoredCell {
                 simulated_rounds,
                 groups,
             },
+            scenario,
         })
     }
 }
@@ -660,6 +718,7 @@ mod tests {
             t: 5,
             rounds: 60,
             seed,
+            scenario: None,
         }
     }
 
@@ -678,6 +737,7 @@ mod tests {
                 simulated_rounds: 12,
                 groups: None,
             },
+            scenario: None,
         }
     }
 
@@ -693,6 +753,68 @@ mod tests {
             probe_key("gaia", "femnist", 400, 0.5, 17),
             "probe/gaia/femnist/r400/b0.5/s17"
         );
+        // Scenario cells live in a disjoint key space: the static key
+        // plus a hash suffix, so a warm store can never cross-serve a
+        // churned cell and its static twin.
+        let mut churned = fp(None);
+        churned.scenario = Some(0xdead_beef_0123_4567);
+        assert_eq!(
+            cell_key(&churned),
+            "cell/ring/gaia/femnist/t5/r60/s-/scdeadbeef01234567"
+        );
+        assert_ne!(cell_key(&churned), cell_key(&fp(None)));
+    }
+
+    #[test]
+    fn scenario_records_roundtrip_with_their_metrics() {
+        let dir = tmpdir("scenario_block");
+        let mut cell = sample_cell();
+        cell.stats = EngineStats {
+            kind: EngineKind::Periodic,
+            period: Some(4),
+            cycle_detected_at: None,
+            cycle_len: None,
+            simulated_rounds: 60,
+            groups: None,
+        };
+        cell.scenario = Some(ScenarioMetrics {
+            segments: vec![
+                SegmentMetrics {
+                    start: 0,
+                    len: 40,
+                    up_silos: 11,
+                    p50_ms: 10.5,
+                    p95_ms: 12.25,
+                    max_ms: 13.0,
+                },
+                SegmentMetrics {
+                    start: 40,
+                    len: 20,
+                    up_silos: 9,
+                    p50_ms: 11.5,
+                    p95_ms: 14.25,
+                    max_ms: 15.0,
+                },
+            ],
+            p50_ms: 10.75,
+            p95_ms: 14.0,
+            max_ms: 15.0,
+            isolation_rate: 0.0125,
+            recovery_rounds: 7,
+        });
+        let mut churned = fp(None);
+        churned.scenario = Some(0x1234);
+        let store = CellStore::open(&dir).unwrap();
+        store
+            .put_cell(&churned, &cell.to_summary("gaia", "femnist", 60), &cell.stats)
+            .unwrap();
+        // The scenario record round-trips bit-exactly, and the static
+        // twin's key still misses.
+        assert_eq!(store.get_cell(&churned).unwrap(), Some(cell.clone()));
+        assert_eq!(store.get_cell(&fp(None)).unwrap(), None);
+        let summary = store.get_cell(&churned).unwrap().unwrap().to_summary("gaia", "femnist", 60);
+        assert_eq!(summary.scenario, cell.scenario);
+        fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

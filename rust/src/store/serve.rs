@@ -26,10 +26,20 @@
 //! `404`, and a sweep that fails mid-run `500`. Request bodies are
 //! capped at 1 MiB and reads time out, so a stuck client cannot pin a
 //! handler thread forever.
+//!
+//! ## Robustness
+//!
+//! The accept loop never dies with a connection: a client that
+//! disconnects mid-NDJSON (or mid-request) fails only its own handler
+//! thread. Shutdown is graceful — [`Server::shutdown_handle`] (or a
+//! SIGINT/SIGTERM after [`install_signal_handlers`]) stops accepting,
+//! drains every in-flight handler, then returns from [`Server::run`],
+//! so the store log is never abandoned mid-append.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -46,14 +56,41 @@ const MAX_BODY: usize = 1 << 20;
 /// Per-connection socket timeout (read and write).
 const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// How often the accept loop polls the shutdown flags while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Process-wide signal flag: flipped by the handler that
+/// [`install_signal_handlers`] registers, polled by every accept loop
+/// alongside its per-server [`Server::shutdown_handle`].
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGINT/SIGTERM to a graceful stop: the handler only flips an
+/// atomic (async-signal-safe), and every running [`Server`] notices on
+/// its next poll, drains in-flight connections, and returns. Opt-in —
+/// `mgfl serve` calls this; embedding tests use [`Server::shutdown_handle`]
+/// instead so they never mutate process-global signal state.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    {
+        extern "C" fn on_signal(_sig: libc::c_int) {
+            SIGNALED.store(true, Ordering::SeqCst);
+        }
+        unsafe {
+            libc::signal(libc::SIGINT, on_signal as libc::sighandler_t);
+            libc::signal(libc::SIGTERM, on_signal as libc::sighandler_t);
+        }
+    }
+}
+
 /// A bound-but-not-yet-serving store server. [`Server::run`] consumes
-/// it and loops forever; tests bind to port 0 and read the resolved
-/// address with [`Server::local_addr`] before spawning `run` on a
-/// thread.
+/// it and loops until shut down; tests bind to port 0 and read the
+/// resolved address with [`Server::local_addr`] before spawning `run`
+/// on a thread.
 pub struct Server {
     listener: TcpListener,
     store: Arc<CellStore>,
     threads: usize,
+    shutdown: Arc<AtomicBool>,
 }
 
 impl Server {
@@ -62,7 +99,7 @@ impl Server {
     pub fn bind(addr: &str, store: Arc<CellStore>, threads: usize) -> Result<Server> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding serve address {addr}"))?;
-        Ok(Server { listener, store, threads })
+        Ok(Server { listener, store, threads, shutdown: Arc::new(AtomicBool::new(false)) })
     }
 
     /// The resolved listen address.
@@ -70,25 +107,52 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept loop: one handler thread per connection, forever. Accept
-    /// errors (transient, e.g. fd pressure) are reported and survived;
-    /// handler errors are contained to their connection.
+    /// Per-server stop switch: store `true` and [`Server::run`] exits
+    /// after draining in-flight connections.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Accept loop: one handler thread per connection, until the
+    /// shutdown handle (or a routed signal) flips. Accept errors
+    /// (transient, e.g. fd pressure) are reported and survived; handler
+    /// errors — including a client that hangs up mid-NDJSON — are
+    /// contained to their connection. On shutdown, every in-flight
+    /// handler is joined before returning, so responses and store
+    /// appends already underway complete.
     pub fn run(self) -> Result<()> {
-        for conn in self.listener.incoming() {
-            let stream = match conn {
-                Ok(s) => s,
+        self.listener.set_nonblocking(true).context("making serve listener pollable")?;
+        let mut inflight: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) && !SIGNALED.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // The listener is nonblocking for polling only;
+                    // handlers want plain blocking reads with timeouts.
+                    if let Err(e) = stream.set_nonblocking(false) {
+                        eprintln!("warning: serve accept failed: {e}");
+                        continue;
+                    }
+                    let store = Arc::clone(&self.store);
+                    let threads = self.threads;
+                    inflight.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_connection(stream, &store, threads) {
+                            eprintln!("warning: serve connection failed: {e:#}");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
                 Err(e) => {
                     eprintln!("warning: serve accept failed: {e}");
-                    continue;
+                    std::thread::sleep(ACCEPT_POLL);
                 }
-            };
-            let store = Arc::clone(&self.store);
-            let threads = self.threads;
-            std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, &store, threads) {
-                    eprintln!("warning: serve connection failed: {e:#}");
-                }
-            });
+            }
+            inflight.retain(|h| !h.is_finished());
+        }
+        // Graceful drain: finish what was accepted before stopping.
+        for h in inflight {
+            let _ = h.join();
         }
         Ok(())
     }
@@ -398,9 +462,8 @@ mod tests {
         let store = Arc::new(CellStore::open(&dir).unwrap());
         let server = Server::bind("127.0.0.1:0", Arc::clone(&store), 1).unwrap();
         let addr = server.local_addr().unwrap();
-        // The accept loop runs forever; leak it — the process exit
-        // reaps the thread and the listener.
-        std::thread::spawn(move || server.run().unwrap());
+        let stop = server.shutdown_handle();
+        let served = std::thread::spawn(move || server.run());
 
         let get =
             |path: &str| roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"));
@@ -430,6 +493,57 @@ mod tests {
         let bad = "POST /sweep HTTP/1.1\r\nHost: t\r\nContent-Length: 7\r\n\r\nnotjson";
         assert!(roundtrip(addr, bad).starts_with("HTTP/1.1 400"));
 
+        stop.store(true, Ordering::SeqCst);
+        served.join().unwrap().expect("graceful shutdown returns Ok");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn early_closing_clients_do_not_kill_the_accept_loop() {
+        let dir =
+            std::env::temp_dir().join(format!("mgfl_serve_disco_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(CellStore::open(&dir).unwrap());
+        let server = Server::bind("127.0.0.1:0", Arc::clone(&store), 1).unwrap();
+        let addr = server.local_addr().unwrap();
+        let stop = server.shutdown_handle();
+        let served = std::thread::spawn(move || server.run());
+
+        let body = r#"{"name":"disco","rounds":20,"topologies":["ring"],
+                       "networks":["gaia"],"profiles":["femnist"],"t":[3],"seeds":[1]}"#;
+        let post = format!(
+            "POST /sweep HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        // Client 1: sends a full sweep request and hangs up without
+        // reading a byte of the NDJSON response.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(post.as_bytes()).unwrap();
+        }
+        // Client 2: hangs up mid-request (headers only, missing body).
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"POST /sweep HTTP/1.1\r\nContent-Length: 400\r\n\r\n{\"na").unwrap();
+        }
+        // Client 3: reads part of the response, then disconnects.
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(post.as_bytes()).unwrap();
+            let mut first = [0u8; 16];
+            let _ = s.read(&mut first);
+        }
+        // The accept loop must have survived all three: a well-behaved
+        // client still gets a complete answer.
+        let health = roundtrip(addr, "GET /health HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+        let full = roundtrip(addr, &post);
+        assert!(full.starts_with("HTTP/1.1 200"), "{full}");
+        assert!(full.contains("\"done\":true"), "{full}");
+
+        // Shutdown drains the (possibly still-running) handler threads.
+        stop.store(true, Ordering::SeqCst);
+        served.join().unwrap().expect("graceful shutdown returns Ok");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

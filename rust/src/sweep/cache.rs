@@ -49,9 +49,10 @@ use std::time::Instant;
 use crate::config::TopologyKind;
 use crate::net::{DatasetProfile, NetworkSpec};
 use crate::simtime::{
-    run_batched, run_compiled, run_factored, simulate_summary_scratch,
-    simulate_summary_streaming_scratch, BatchLane, CompiledTopology, EngineStats,
-    FactoredTopology, SimScratch, SimSummary, LANE_WIDTH, MIN_BATCH,
+    run_batched, run_compiled, run_factored, run_scenario_batched, run_scenario_compiled,
+    simulate_summary_scenario, simulate_summary_scratch, simulate_summary_streaming_scratch,
+    BatchLane, CompiledTopology, EngineStats, FactoredTopology, ScenarioSpec, SimScratch,
+    SimSummary, LANE_WIDTH, MIN_BATCH,
 };
 use crate::topo::matcha::{MatchaCore, MatchaTopology, DEFAULT_BUDGET};
 use crate::topo::TopologyDesign;
@@ -111,6 +112,11 @@ pub struct CellFingerprint {
     /// never merged while deterministic cells collapse across the whole
     /// seed axis.
     pub seed: Option<u64>,
+    /// [`ScenarioSpec::fingerprint`] of the cell's fault-injection
+    /// scenario, when one is attached. Joining the identity here keeps
+    /// churned cells from deduping against — and the store from ever
+    /// serving — their static twins.
+    pub scenario: Option<u64>,
 }
 
 impl CellSpec {
@@ -124,6 +130,7 @@ impl CellSpec {
             t: self.t,
             rounds: self.rounds,
             seed: if self.topology.seed_sensitive() { Some(self.cell_seed) } else { None },
+            scenario: self.scenario.as_ref().map(|sc| sc.fingerprint()),
         }
     }
 }
@@ -596,6 +603,148 @@ pub fn run_cell_batched_single(cell: &CellSpec) -> (SimSummary, CellTiming, Engi
     (summary, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 }, stats)
 }
 
+/// Outcome of one scenario cell: the summary/stats pair, or the
+/// structured per-cell error (e.g. churn leaving fewer than two silos
+/// up on this cell's network) that flows into the report instead of a
+/// panic. Timing is always present — it covers the work performed
+/// before the error surfaced.
+pub type ScenarioOutcome = (Result<(SimSummary, EngineStats), String>, CellTiming);
+
+/// Simulate one scenario cell through the shared caches — the
+/// dedup engine's solo executor for cells carrying a
+/// [`ScenarioSpec`]. The *base* schedule cache is scenario-free (masks
+/// are applied at run time), so scenario cells share compiles with
+/// their static twins:
+///
+/// * a `Periodic` verdict runs the piecewise-static masked engine over
+///   the `Arc`-shared base compile ([`run_scenario_compiled`]);
+/// * `Factored`/`Stream` verdicts rebuild the design and re-enter the
+///   scenario dispatcher ([`simulate_summary_scenario`]), which lands
+///   on the scenario-factored or masked-tracker tier — the same tier
+///   the uncached engine takes, so engine labels never depend on
+///   caching;
+/// * MATCHA variants instantiate over the shared [`MatchaCore`] with
+///   the cell's own stream, exactly like the static path.
+pub fn run_cell_scenario_cached(cell: &CellSpec, cache: &SweepCache) -> ScenarioOutcome {
+    let sc = cell.scenario.as_deref().expect("scenario executors require a scenario");
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    match cell.topology {
+        TopologyKind::Matcha | TopologyKind::MatchaPlus => {
+            let mut build_ms = 0.0;
+            let core = cache.matcha_cores.get_or_build(
+                &(cell.network.clone(), cell.profile.clone()),
+                || {
+                    let t0 = Instant::now();
+                    let core = Arc::new(MatchaCore::build(&net, &prof));
+                    build_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    core
+                },
+            );
+            let budget =
+                if cell.topology == TopologyKind::MatchaPlus { 1.0 } else { DEFAULT_BUDGET };
+            let mut topo = MatchaTopology::from_core(core, budget, cell.cell_seed);
+            let t1 = Instant::now();
+            let r = simulate_summary_scenario(&mut topo, &net, &prof, cell.rounds, sc);
+            (r, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 })
+        }
+        _ => {
+            let (sched, build_ms) = cache.schedule_for(cell);
+            match sched.expect("non-MATCHA cells resolve a schedule") {
+                SharedSchedule::Periodic(ct) => {
+                    let t1 = Instant::now();
+                    let r = run_scenario_compiled(&ct, &net, &prof, cell.rounds, sc);
+                    (r, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 })
+                }
+                SharedSchedule::Factored(_) | SharedSchedule::Stream => {
+                    let tb = Instant::now();
+                    let mut topo = cfg.build_topology();
+                    let build_ms = build_ms + tb.elapsed().as_secs_f64() * 1e3;
+                    let t1 = Instant::now();
+                    let r =
+                        simulate_summary_scenario(topo.as_mut(), &net, &prof, cell.rounds, sc);
+                    (r, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 })
+                }
+            }
+        }
+    }
+}
+
+/// The uncached scenario executor (dedup off, unlabeled cells): fresh
+/// build, full scenario dispatcher. Bit-identical to
+/// [`run_cell_scenario_cached`] tier for tier.
+pub fn run_cell_scenario_uncached(cell: &CellSpec) -> ScenarioOutcome {
+    let sc = cell.scenario.as_deref().expect("scenario executors require a scenario");
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    let t0 = Instant::now();
+    let mut topo = cfg.build_topology();
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let r = simulate_summary_scenario(topo.as_mut(), &net, &prof, cell.rounds, sc);
+    (r, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 })
+}
+
+/// Run one batch-labeled scenario cell as a single-lane scenario batch
+/// (dedup off). A one-lane scenario batch performs exactly the per-lane
+/// op sequence of [`run_scenario_compiled`], so only the reported
+/// engine kind says `batched` — the report must not depend on whether
+/// dedup ran.
+pub fn run_cell_scenario_batched_single(cell: &CellSpec) -> ScenarioOutcome {
+    let sc = cell.scenario.as_deref().expect("scenario executors require a scenario");
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    let t0 = Instant::now();
+    let mut topo = cfg.build_topology();
+    let ct = CompiledTopology::compile(topo.as_mut(), cell.rounds)
+        .expect("batch-labeled cells have a materializable periodic schedule");
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let lane = BatchLane { ct: &ct, net: &net, profile: &prof };
+    let r = run_scenario_batched(&ct, std::slice::from_ref(&lane), cell.rounds, sc)
+        .map(|mut v| v.pop().expect("one lane in, one result out"));
+    (r, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 })
+}
+
+/// Execute one planned batch of scenario cells: every cell becomes one
+/// lane of a single [`run_scenario_batched`] pass over the shared base
+/// compile. The batch key holds (network, rounds) constant and the
+/// scenario is spec-wide, so a timeline error — a pure function of
+/// (scenario, network, rounds) — fails every lane identically; each
+/// lane then carries the same structured error its solo run would.
+pub fn run_batch_scenario(
+    chunk: &[(&CellSpec, Arc<CompiledTopology>)],
+    rounds: usize,
+    sc: &ScenarioSpec,
+) -> Vec<ScenarioOutcome> {
+    let resolved: Vec<(NetworkSpec, DatasetProfile)> = chunk
+        .iter()
+        .map(|(cell, _)| {
+            let cfg = cell.to_experiment();
+            let net = cfg.resolve_network();
+            let prof = cfg.resolve_profile().expect("validated profile");
+            (net, prof)
+        })
+        .collect();
+    let lanes: Vec<BatchLane> = chunk
+        .iter()
+        .zip(&resolved)
+        .map(|((_, ct), (net, prof))| BatchLane { ct, net, profile: prof })
+        .collect();
+    let rep = &chunk[0].1;
+    let t0 = Instant::now();
+    let results = run_scenario_batched(rep, &lanes, rounds, sc);
+    let sim_ms = t0.elapsed().as_secs_f64() * 1e3 / lanes.len() as f64;
+    let timing = CellTiming { build_ms: 0.0, sim_ms };
+    match results {
+        Ok(v) => v.into_iter().map(|r| (Ok(r), timing)).collect(),
+        Err(e) => chunk.iter().map(|_| (Err(e.clone()), timing)).collect(),
+    }
+}
+
 /// Plan and execute a small cell list serially with automatic batching:
 /// resolve every cell's shared schedule through `cache`, batch the
 /// groups [`plan_batches`] finds, run everything else per-cell. Results
@@ -660,6 +809,7 @@ mod tests {
             t_values: vec![3, 5],
             seeds: vec![11, 23],
             rounds: 60,
+            scenario: None,
         }
     }
 
@@ -679,6 +829,26 @@ mod tests {
                 assert_eq!(a.fingerprint().seed, None);
             }
         }
+    }
+
+    #[test]
+    fn scenario_joins_the_fingerprint() {
+        let cells = spec().expand();
+        let a = &cells[0];
+        let mut b = a.clone();
+        b.scenario =
+            Some(Arc::new(ScenarioSpec::from_event_strs(1, &["leave@5:silo=1"]).unwrap()));
+        assert_ne!(a.fingerprint(), b.fingerprint(), "a scenario must split the identity");
+        assert_eq!(a.fingerprint().scenario, None);
+        assert_eq!(
+            b.fingerprint().scenario,
+            Some(b.scenario.as_ref().unwrap().fingerprint())
+        );
+        // A different seed over the same events is a different scenario.
+        let mut c = b.clone();
+        c.scenario =
+            Some(Arc::new(ScenarioSpec::from_event_strs(2, &["leave@5:silo=1"]).unwrap()));
+        assert_ne!(b.fingerprint(), c.fingerprint());
     }
 
     #[test]
@@ -780,6 +950,84 @@ mod tests {
     }
 
     #[test]
+    fn scenario_emptying_the_network_errors_instead_of_panicking() {
+        // Sits beside the poison-safety test above: a scenario that
+        // churns the network below 2 up silos must surface as a
+        // structured per-cell error, leaving the caches and the
+        // thread's scratch healthy for the next cell.
+        let cells = spec().expand();
+        let cache = SweepCache::default();
+        let n = crate::net::zoo::gaia().n();
+        let evs: Vec<String> = (1..n).map(|i| format!("leave@5:silo={i}")).collect();
+        let mut bad = cells[0].clone();
+        bad.scenario = Some(Arc::new(ScenarioSpec::from_event_strs(1, &evs).unwrap()));
+        let (res, _) = run_cell_scenario_cached(&bad, &cache);
+        let err = res.expect_err("an emptied network must be a structured error");
+        assert!(err.contains("need at least 2"), "unexpected error text: {err}");
+        // Same error (same string) from every executor flavor.
+        let (res, _) = run_cell_scenario_uncached(&bad);
+        assert_eq!(res.expect_err("uncached executor must agree"), err);
+        // A survivable scenario on the same cache still simulates, and
+        // cached vs uncached stay bitwise identical.
+        let mut good = cells[0].clone();
+        good.scenario =
+            Some(Arc::new(ScenarioSpec::from_event_strs(1, &["leave@5:silo=1"]).unwrap()));
+        let (got, _) = run_cell_scenario_cached(&good, &cache);
+        let (got, got_stats) = got.expect("mild churn simulates");
+        assert!(got.scenario.is_some(), "scenario cells carry degraded-mode metrics");
+        let (want, _) = run_cell_scenario_uncached(&good);
+        let (want, want_stats) = want.unwrap();
+        assert_eq!(got_stats, want_stats);
+        assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+        assert_eq!(got.scenario, want.scenario);
+    }
+
+    #[test]
+    fn scenario_batch_lanes_match_the_solo_executors_bitwise() {
+        let cells = spec().expand();
+        // ring t=3 and ring t=5 share one periodic schedule — the same
+        // chunk shape plan_batches produces.
+        let (ring3, ring5) = (&cells[0], &cells[2]);
+        let sc = Arc::new(
+            ScenarioSpec::from_event_strs(
+                7,
+                &["leave@10:silo=2", "scale@20:factor=1.25", "rejoin@35:silo=2"],
+            )
+            .unwrap(),
+        );
+        let with_sc = |c: &CellSpec| {
+            let mut c = c.clone();
+            c.scenario = Some(Arc::clone(&sc));
+            c
+        };
+        let (a, b) = (with_sc(ring3), with_sc(ring5));
+        let cache = SweepCache::default();
+        let arc_of = |c: &CellSpec| match cache.schedule_for(c).0 {
+            Some(SharedSchedule::Periodic(ct)) => ct,
+            _ => panic!("ring cells compile periodically"),
+        };
+        let chunk = vec![(&a, arc_of(&a)), (&b, arc_of(&b))];
+        let out = run_batch_scenario(&chunk, a.rounds, &sc);
+        assert_eq!(out.len(), 2);
+        for ((cell, _), (got, _)) in chunk.iter().zip(&out) {
+            let (got, got_stats) = got.as_ref().expect("churn batch simulates").clone();
+            assert_eq!(got_stats.kind, crate::simtime::EngineKind::Batched);
+            let (want, _) = run_cell_scenario_batched_single(cell);
+            let (want, want_stats) = want.unwrap();
+            assert_eq!(got_stats, want_stats);
+            assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+            assert_eq!(got.mean_cycle_ms.to_bits(), want.mean_cycle_ms.to_bits());
+            assert_eq!(got.scenario, want.scenario);
+            // and the solo (periodic-labeled) executor agrees on bits.
+            let (solo, _) = run_cell_scenario_cached(cell, &cache);
+            let (solo, solo_stats) = solo.unwrap();
+            assert_eq!(solo_stats.kind, crate::simtime::EngineKind::Periodic);
+            assert_eq!(got.total_ms.to_bits(), solo.total_ms.to_bits());
+            assert_eq!(got.scenario, solo.scenario);
+        }
+    }
+
+    #[test]
     fn cached_cells_match_the_uncached_engine_bitwise() {
         let cells = spec().expand();
         let cache = SweepCache::default();
@@ -823,6 +1071,7 @@ mod tests {
             t_values: vec![30],
             seeds: vec![11, 23],
             rounds,
+            scenario: None,
         };
         let cache = SweepCache::default();
         for cell in &spec.expand() {

@@ -29,9 +29,11 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{
-    plan_batches, run_batch_cached, run_batch_pooled, run_cell_batched_single, run_cell_cached,
-    run_cell_cached_timed, run_cells_auto_batched, simulate_design_pooled, BatchPlan, BuildOnce,
-    CellFingerprint, DedupPlan, SharedSchedule, SweepCache,
+    plan_batches, run_batch_cached, run_batch_pooled, run_batch_scenario,
+    run_cell_batched_single, run_cell_cached, run_cell_cached_timed,
+    run_cell_scenario_batched_single, run_cell_scenario_cached, run_cell_scenario_uncached,
+    run_cells_auto_batched, simulate_design_pooled, BatchPlan, BuildOnce, CellFingerprint,
+    DedupPlan, ScenarioOutcome, SharedSchedule, SweepCache,
 };
 pub use report::{Axis, CellResult, SweepReport};
 pub use spec::{CellSpec, StoreSpec, SweepFile, SweepSpec};
@@ -442,7 +444,10 @@ pub fn run_with_store(
     let inner = RunOptions { threads, progress: opts.progress, dedup: opts.dedup };
     let sched_opts = RunOptions { threads, progress: false, dedup: opts.dedup };
     let t0 = Instant::now();
-    let (summaries, planner_build_ms): (Vec<(SimSummary, CellTiming, EngineStats)>, f64) =
+    // Every executed work item resolves to a [`ScenarioOutcome`]:
+    // static cells always `Ok`, scenario cells may carry a structured
+    // per-cell error (which flows into the report, never the store).
+    let (summaries, planner_build_ms): (Vec<ScenarioOutcome>, f64) =
         if opts.dedup {
             let shared = SweepCache::default();
             // Phase 1 (parallel): resolve every unique cell's shared
@@ -466,7 +471,7 @@ pub fn run_with_store(
                 .map(Unit::Chunk)
                 .chain(bplan.solos.iter().map(|&i| Unit::Solo(i)))
                 .collect();
-            let produced: Vec<Vec<(usize, (SimSummary, CellTiming, EngineStats))>> =
+            let produced: Vec<Vec<(usize, ScenarioOutcome)>> =
                 run_cells(&units, &inner, |_, unit| match unit {
                     Unit::Chunk(ci) => {
                         // Store hits drop out of the batch: per-lane
@@ -491,12 +496,27 @@ pub fn run_with_store(
                         // The batch key includes `rounds`, so the chunk
                         // is uniform; take the first cell's budget.
                         let rounds = work[missed[0]].rounds;
-                        missed.iter().copied().zip(run_batch_cached(&batch, rounds)).collect()
+                        let outs: Vec<ScenarioOutcome> = match &spec.scenario {
+                            Some(sc) => run_batch_scenario(&batch, rounds, sc),
+                            None => run_batch_cached(&batch, rounds)
+                                .into_iter()
+                                .map(|(s, t, st)| (Ok((s, st)), t))
+                                .collect(),
+                        };
+                        missed.iter().copied().zip(outs).collect()
                     }
                     Unit::Solo(i) if stored[*i].is_some() => Vec::new(),
-                    Unit::Solo(i) => vec![(*i, run_cell_cached_timed(work[*i], &shared))],
+                    Unit::Solo(i) => {
+                        let out = if spec.scenario.is_some() {
+                            run_cell_scenario_cached(work[*i], &shared)
+                        } else {
+                            let (s, t, st) = run_cell_cached_timed(work[*i], &shared);
+                            (Ok((s, st)), t)
+                        };
+                        vec![(*i, out)]
+                    }
                 });
-            let mut slots: Vec<Option<(SimSummary, CellTiming, EngineStats)>> =
+            let mut slots: Vec<Option<ScenarioOutcome>> =
                 work.iter().map(|_| None).collect();
             for (i, r) in produced.into_iter().flatten() {
                 slots[i] = Some(r);
@@ -520,9 +540,11 @@ pub fn run_with_store(
                         sc.stats
                     };
                     *slot = Some((
-                        sc.to_summary(&work[i].network, &work[i].profile, work[i].rounds),
+                        Ok((
+                            sc.to_summary(&work[i].network, &work[i].profile, work[i].rounds),
+                            stats,
+                        )),
                         CellTiming::default(),
-                        stats,
                     ));
                 }
             }
@@ -551,21 +573,28 @@ pub fn run_with_store(
                 }
             }
             let summaries = run_cells(&work, &inner, |i, c| {
-                if let Some(sc) = &stored[i] {
+                if let Some(hit) = &stored[i] {
                     let stats = if batched_label[fp_plan.assignment[i]] {
-                        EngineStats { kind: EngineKind::Batched, ..sc.stats }
+                        EngineStats { kind: EngineKind::Batched, ..hit.stats }
                     } else {
-                        sc.stats
+                        hit.stats
                     };
                     (
-                        sc.to_summary(&c.network, &c.profile, c.rounds),
+                        Ok((hit.to_summary(&c.network, &c.profile, c.rounds), stats)),
                         CellTiming::default(),
-                        stats,
                     )
+                } else if spec.scenario.is_some() {
+                    if batched_label[fp_plan.assignment[i]] {
+                        run_cell_scenario_batched_single(c)
+                    } else {
+                        run_cell_scenario_uncached(c)
+                    }
                 } else if batched_label[fp_plan.assignment[i]] {
-                    run_cell_batched_single(c)
+                    let (s, t, st) = run_cell_batched_single(c);
+                    (Ok((s, st)), t)
                 } else {
-                    run_cell_summary_timed(c)
+                    let (s, t, st) = run_cell_summary_timed(c);
+                    (Ok((s, st)), t)
                 }
             });
             (summaries, 0.0)
@@ -579,27 +608,38 @@ pub fn run_with_store(
         for &i in &fp_plan.unique {
             rep[i] = true;
         }
-        for (wi, (s, _, stats)) in summaries.iter().enumerate() {
-            if stored[wi].is_none() && rep[plan.unique[wi]] {
-                st.put_cell(&work[wi].fingerprint(), s, stats)?;
+        for (wi, (res, _)) in summaries.iter().enumerate() {
+            if let Ok((s, stats)) = res {
+                if stored[wi].is_none() && rep[plan.unique[wi]] {
+                    st.put_cell(&work[wi].fingerprint(), s, stats)?;
+                }
             }
         }
     }
     let results: Vec<CellResult> = cells
         .iter()
         .zip(&plan.assignment)
-        .map(|(cell, &slot)| CellResult::from_summary(&summaries[slot].0, cell, &summaries[slot].2))
+        .map(|(cell, &slot)| match &summaries[slot].0 {
+            Ok((s, stats)) => CellResult::from_summary(s, cell, stats),
+            Err(e) => CellResult::from_error(cell, e),
+        })
         .collect();
-    let build_ms: f64 =
-        planner_build_ms + summaries.iter().map(|(_, t, _)| t.build_ms).sum::<f64>();
-    let sim_ms: f64 = summaries.iter().map(|(_, t, _)| t.sim_ms).sum();
+    let build_ms: f64 = planner_build_ms + summaries.iter().map(|(_, t)| t.build_ms).sum::<f64>();
+    let sim_ms: f64 = summaries.iter().map(|(_, t)| t.sim_ms).sum();
     let mut engines = EngineMix::default();
-    for ((s, _, stats), &i) in summaries.iter().zip(&plan.unique) {
-        debug_assert_eq!(s.rounds, cells[i].rounds);
-        engines.count(stats, cells[i].rounds);
+    for ((res, _), &i) in summaries.iter().zip(&plan.unique) {
+        if let Ok((s, stats)) = res {
+            debug_assert_eq!(s.rounds, cells[i].rounds);
+            engines.count(stats, cells[i].rounds);
+        }
     }
     Ok(SweepOutcome {
-        report: SweepReport { name: spec.name.clone(), rounds: spec.rounds, cells: results },
+        report: SweepReport {
+            name: spec.name.clone(),
+            rounds: spec.rounds,
+            scenario: spec.scenario.is_some(),
+            cells: results,
+        },
         host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
         threads,
         unique_cells: work.len(),
@@ -653,6 +693,7 @@ mod tests {
             t_values: vec![5],
             seeds: vec![17],
             rounds: 200,
+            scenario: None,
         };
         let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         assert_eq!(outcome.threads, 2, "explicit thread request is honored");
@@ -702,6 +743,7 @@ mod tests {
             t_values: vec![5],
             seeds: vec![23],
             rounds: 120,
+            scenario: None,
         };
         let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         let got = &outcome.report.cells[0];
@@ -730,6 +772,7 @@ mod tests {
             t_values: vec![5],
             seeds: vec![1, 2, 3],
             rounds: 40,
+            scenario: None,
         };
         let memo = run(&spec, &RunOptions { threads: 3, progress: false, dedup: true }).unwrap();
         let full = run(&spec, &RunOptions { threads: 3, progress: false, dedup: false }).unwrap();
@@ -760,6 +803,7 @@ mod tests {
             t_values: vec![5],
             seeds: vec![17],
             rounds: 60,
+            scenario: None,
         };
         let cell = &spec.expand()[0];
         let (timed, timing, stats) = run_cell_summary_timed(cell);
@@ -768,6 +812,82 @@ mod tests {
         assert_eq!(timed.mean_cycle_ms.to_bits(), plain.mean_cycle_ms.to_bits());
         assert!(timing.build_ms >= 0.0 && timing.sim_ms >= 0.0);
         assert!(stats.simulated_rounds >= 1);
+    }
+
+    #[test]
+    fn scenario_sweeps_stay_byte_identical_across_dedup_modes() {
+        // A churn scenario rides the whole grid: every engine tier the
+        // planner picks (batched chunks under dedup, solo compiled or
+        // tracker cells without) must produce the same artifact bytes.
+        let sc = Arc::new(
+            crate::simtime::ScenarioSpec::from_event_strs(
+                9,
+                &["leave@10:silo=2", "scale@20:factor=1.3", "rejoin@35:silo=2", "jitter@0:amp=2.0"],
+            )
+            .unwrap(),
+        );
+        let spec = SweepSpec {
+            name: "churn".into(),
+            topologies: vec![TopologyKind::Ring, TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![1, 2],
+            rounds: 60,
+            scenario: Some(Arc::clone(&sc)),
+        };
+        let memo = run(&spec, &RunOptions { threads: 2, progress: false, dedup: true }).unwrap();
+        let full = run(&spec, &RunOptions { threads: 1, progress: false, dedup: false }).unwrap();
+        assert!(memo.report.scenario, "the report must flag scenario mode");
+        assert_eq!(
+            memo.report.to_json().to_string(),
+            full.report.to_json().to_string(),
+            "scenario sweeps must be byte-identical across dedup modes and thread counts"
+        );
+        assert_eq!(memo.report.to_csv(), full.report.to_csv());
+        // Deterministic topologies still dedupe across the seed axis:
+        // the scenario hash joins the fingerprint but is grid-wide.
+        assert_eq!(memo.unique_cells, 2);
+        for cell in &memo.report.cells {
+            assert!(cell.error.is_none(), "mild churn must not error: {:?}", cell.error);
+            let m = cell.scenario.as_ref().expect("scenario cells carry degraded metrics");
+            assert!(m.segments.len() >= 3, "leave/rejoin/scale split the timeline");
+            assert!(m.p95_ms >= m.p50_ms && m.max_ms >= m.p95_ms);
+        }
+        let csv = memo.report.to_csv();
+        assert!(csv.lines().next().unwrap().ends_with(
+            ",error,p50_ms,p95_ms,max_ms,isolation_rate,recovery_rounds,segments"
+        ));
+    }
+
+    #[test]
+    fn scenario_emptying_the_network_yields_error_rows_not_a_panic() {
+        // Leave every gaia silo but one: each cell becomes a structured
+        // error row with its grid coordinates intact, and the sweep
+        // itself still succeeds.
+        let n = crate::net::zoo::gaia().n();
+        let evs: Vec<String> = (1..n).map(|i| format!("leave@5:silo={i}")).collect();
+        let sc = Arc::new(crate::simtime::ScenarioSpec::from_event_strs(3, &evs).unwrap());
+        let spec = SweepSpec {
+            name: "blackout".into(),
+            topologies: vec![TopologyKind::Ring, TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![1],
+            rounds: 40,
+            scenario: Some(sc),
+        };
+        let memo = run(&spec, &RunOptions { threads: 2, progress: false, dedup: true }).unwrap();
+        let full = run(&spec, &RunOptions { threads: 1, progress: false, dedup: false }).unwrap();
+        assert_eq!(memo.report.to_json().to_string(), full.report.to_json().to_string());
+        for cell in &memo.report.cells {
+            assert_eq!(cell.engine, "error");
+            let err = cell.error.as_ref().expect("blackout cells carry the failure string");
+            assert!(err.contains("need at least 2"), "unexpected error text: {err}");
+            assert_eq!(cell.total_ms, 0.0);
+        }
+        assert_eq!(memo.engines.total_rounds, 0, "error cells never reach an engine");
     }
 
     #[test]
@@ -782,6 +902,7 @@ mod tests {
             t_values: vec![5, 5],
             seeds: vec![7, 7],
             rounds: 10,
+            scenario: None,
         };
         let outcome = run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
         assert_eq!(outcome.report.cells.len(), 1, "duplicates must not inflate the grid");

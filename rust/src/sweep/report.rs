@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::metrics::render_pivot;
-use crate::simtime::{EngineStats, SimSummary};
+use crate::simtime::{EngineStats, ScenarioMetrics, SimSummary};
 use crate::util::Json;
 
 use super::spec::CellSpec;
@@ -58,6 +58,15 @@ pub struct CellResult {
     /// Rounds that did real per-edge/per-group work (cycle-replayed
     /// rounds excluded). Also deterministic.
     pub simulated_rounds: usize,
+    /// Degraded-mode metrics, present iff the cell ran under a
+    /// fault-injection scenario ([`crate::simtime::ScenarioSpec`]).
+    pub scenario: Option<ScenarioMetrics>,
+    /// Structured per-cell failure (e.g. a scenario churning this
+    /// cell's network below 2 up silos). Error rows keep their grid
+    /// coordinates, zero out the numeric columns, report engine
+    /// `error`, and are never written to the store. Deterministic —
+    /// the message is a pure function of (scenario, network, rounds).
+    pub error: Option<String>,
 }
 
 impl CellResult {
@@ -82,6 +91,30 @@ impl CellResult {
             max_isolated: s.max_isolated,
             engine: stats.kind.as_str(),
             simulated_rounds: stats.simulated_rounds,
+            scenario: s.scenario.clone(),
+            error: None,
+        }
+    }
+
+    /// An error row: the cell's own coordinates, zeroed numerics, and
+    /// the structured failure string.
+    pub fn from_error(cell: &CellSpec, error: &str) -> Self {
+        CellResult {
+            topology: cell.topology.as_str().to_string(),
+            network: cell.network.clone(),
+            profile: cell.profile.clone(),
+            t: cell.t,
+            seed: cell.base_seed,
+            cell_seed: cell.cell_seed,
+            rounds: cell.rounds,
+            mean_cycle_ms: 0.0,
+            total_ms: 0.0,
+            rounds_with_isolated: 0,
+            max_isolated: 0,
+            engine: "error",
+            simulated_rounds: 0,
+            scenario: None,
+            error: Some(error.to_string()),
         }
     }
 
@@ -109,6 +142,36 @@ impl CellResult {
         m.insert("max_isolated".into(), Json::Num(self.max_isolated as f64));
         m.insert("engine".into(), Json::Str(self.engine.to_string()));
         m.insert("simulated_rounds".into(), Json::Num(self.simulated_rounds as f64));
+        // Scenario fields appear only on scenario/error cells, so
+        // static-sweep artifacts stay byte-identical to the
+        // pre-scenario format.
+        if let Some(sc) = &self.scenario {
+            let segments: Vec<Json> = sc
+                .segments
+                .iter()
+                .map(|s| {
+                    let mut seg = BTreeMap::new();
+                    seg.insert("start".into(), Json::Num(s.start as f64));
+                    seg.insert("len".into(), Json::Num(s.len as f64));
+                    seg.insert("up_silos".into(), Json::Num(s.up_silos as f64));
+                    seg.insert("p50_ms".into(), Json::Num(s.p50_ms));
+                    seg.insert("p95_ms".into(), Json::Num(s.p95_ms));
+                    seg.insert("max_ms".into(), Json::Num(s.max_ms));
+                    Json::Obj(seg)
+                })
+                .collect();
+            let mut o = BTreeMap::new();
+            o.insert("segments".into(), Json::Arr(segments));
+            o.insert("p50_ms".into(), Json::Num(sc.p50_ms));
+            o.insert("p95_ms".into(), Json::Num(sc.p95_ms));
+            o.insert("max_ms".into(), Json::Num(sc.max_ms));
+            o.insert("isolation_rate".into(), Json::Num(sc.isolation_rate));
+            o.insert("recovery_rounds".into(), Json::Num(sc.recovery_rounds as f64));
+            m.insert("scenario".into(), Json::Obj(o));
+        }
+        if let Some(e) = &self.error {
+            m.insert("error".into(), Json::Str(e.clone()));
+        }
         Json::Obj(m)
     }
 }
@@ -158,6 +221,11 @@ pub struct SweepReport {
     pub name: String,
     /// Simulated rounds per cell.
     pub rounds: usize,
+    /// Whether the sweep ran under an `[events]` fault-injection
+    /// scenario. Gates the degraded-mode CSV columns and the top-level
+    /// JSON flag, so static-sweep artifacts stay byte-identical to the
+    /// pre-scenario format.
+    pub scenario: bool,
     /// One result per grid coordinate, in grid order.
     pub cells: Vec<CellResult>,
 }
@@ -221,17 +289,26 @@ impl SweepReport {
         let mut top = BTreeMap::new();
         top.insert("name".into(), Json::Str(self.name.clone()));
         top.insert("rounds".into(), Json::Num(self.rounds as f64));
+        if self.scenario {
+            top.insert("scenario".into(), Json::Bool(true));
+        }
         top.insert("cells".into(), Json::Arr(cells));
         Json::Obj(top)
     }
 
     /// CSV artifact, one row per cell in grid order (deterministic).
+    /// Scenario sweeps append the degraded-mode columns; static sweeps
+    /// keep the legacy header byte for byte.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "topology,network,profile,t,seed,cell_seed,rounds,mean_cycle_ms,total_ms,rounds_with_isolated,max_isolated,engine,simulated_rounds\n",
+            "topology,network,profile,t,seed,cell_seed,rounds,mean_cycle_ms,total_ms,rounds_with_isolated,max_isolated,engine,simulated_rounds",
         );
+        if self.scenario {
+            out.push_str(",error,p50_ms,p95_ms,max_ms,isolation_rate,recovery_rounds,segments");
+        }
+        out.push('\n');
         for c in &self.cells {
-            let _ = writeln!(
+            let _ = write!(
                 out,
                 "{},{},{},{},{},{},{},{:.6},{:.6},{},{},{},{}",
                 c.topology,
@@ -248,6 +325,42 @@ impl SweepReport {
                 c.engine,
                 c.simulated_rounds,
             );
+            if self.scenario {
+                // Error text rides in the CSV cell with commas
+                // sanitized (the structured string lives in the JSON
+                // artifact); error rows zero the metric columns.
+                let err = c.error.as_deref().unwrap_or("").replace(',', ";");
+                match &c.scenario {
+                    Some(sc) => {
+                        let segments = sc
+                            .segments
+                            .iter()
+                            .map(|s| {
+                                format!(
+                                    "{}:{}:{}:{:.6}:{:.6}:{:.6}",
+                                    s.start, s.len, s.up_silos, s.p50_ms, s.p95_ms, s.max_ms
+                                )
+                            })
+                            .collect::<Vec<_>>()
+                            .join("|");
+                        let _ = write!(
+                            out,
+                            ",{},{:.6},{:.6},{:.6},{:.6},{},{}",
+                            err,
+                            sc.p50_ms,
+                            sc.p95_ms,
+                            sc.max_ms,
+                            sc.isolation_rate,
+                            sc.recovery_rounds,
+                            segments,
+                        );
+                    }
+                    None => {
+                        let _ = write!(out, ",{err},0.000000,0.000000,0.000000,0.000000,0,");
+                    }
+                }
+            }
+            out.push('\n');
         }
         out
     }
@@ -285,6 +398,8 @@ mod tests {
             max_isolated: 2,
             engine: "periodic",
             simulated_rounds: 10,
+            scenario: None,
+            error: None,
         }
     }
 
@@ -292,6 +407,7 @@ mod tests {
         SweepReport {
             name: "test".into(),
             rounds: 10,
+            scenario: false,
             cells: vec![
                 cell("ring", "gaia", "femnist", 50.0, 1),
                 cell("ring", "gaia", "femnist", 70.0, 2),
@@ -362,5 +478,77 @@ mod tests {
         let r = report();
         assert_eq!(r.cell("ring", "gaia", "femnist").unwrap().seed, 1);
         assert!(r.cell("star", "gaia", "femnist").is_none());
+    }
+
+    #[test]
+    fn scenario_reports_carry_degraded_mode_columns_and_error_rows() {
+        use crate::simtime::{ScenarioMetrics, SegmentMetrics};
+        let mut ok = cell("ring", "gaia", "femnist", 50.0, 1);
+        ok.scenario = Some(ScenarioMetrics {
+            segments: vec![SegmentMetrics {
+                start: 0,
+                len: 10,
+                up_silos: 11,
+                p50_ms: 48.5,
+                p95_ms: 52.0,
+                max_ms: 55.25,
+            }],
+            p50_ms: 48.5,
+            p95_ms: 52.0,
+            max_ms: 55.25,
+            isolation_rate: 0.05,
+            recovery_rounds: 3,
+        });
+        let mut err = cell("ring", "tiny", "femnist", 0.0, 1);
+        err.mean_cycle_ms = 0.0;
+        err.total_ms = 0.0;
+        err.rounds_with_isolated = 0;
+        err.max_isolated = 0;
+        err.engine = "error";
+        err.simulated_rounds = 0;
+        err.error = Some("scenario leaves 1 silo(s) up at round 5, need at least 2".into());
+        let r = SweepReport {
+            name: "churn".into(),
+            rounds: 10,
+            scenario: true,
+            cells: vec![ok, err],
+        };
+        let csv = r.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.ends_with("error,p50_ms,p95_ms,max_ms,isolation_rate,recovery_rounds,segments"),
+            "{header}"
+        );
+        let ok_row = csv.lines().nth(1).unwrap();
+        assert!(ok_row.contains(",48.500000,52.000000,55.250000,0.050000,3,"), "{ok_row}");
+        assert!(ok_row.ends_with("0:10:11:48.500000:52.000000:55.250000"), "{ok_row}");
+        let err_row = csv.lines().nth(2).unwrap();
+        assert!(err_row.contains(",error,0,"), "{err_row}");
+        // Commas in the error are sanitized so the row stays rectangular.
+        assert!(err_row.contains("at round 5; need at least 2"), "{err_row}");
+        assert_eq!(
+            err_row.split(',').count(),
+            header.split(',').count(),
+            "error rows keep the scenario column count"
+        );
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("scenario").unwrap(), &Json::Bool(true));
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        let sc = cells[0].get("scenario").unwrap();
+        assert_eq!(sc.get("recovery_rounds").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(sc.get("segments").unwrap().as_arr().unwrap().len(), 1);
+        assert!(cells[0].get("error").is_err());
+        assert!(cells[1].get("scenario").is_err());
+        assert!(cells[1]
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("need at least 2"));
+        // Static reports keep the legacy artifact byte for byte: no
+        // scenario flag, no extra columns.
+        let legacy = report();
+        assert!(legacy.to_csv().lines().next().unwrap().ends_with("simulated_rounds"));
+        assert!(Json::parse(&legacy.to_json().to_string()).unwrap().get("scenario").is_err());
     }
 }

@@ -3,11 +3,13 @@
 //! loader (same dialect as [`crate::config`], plus `[list]` values).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{ExperimentConfig, TopologyKind};
 use crate::net::{zoo, DatasetProfile};
+use crate::simtime::ScenarioSpec;
 use crate::util::rng::{derive_stream, fnv1a};
 
 /// A full experiment grid. Expanding it yields one [`CellSpec`] per
@@ -30,6 +32,11 @@ pub struct SweepSpec {
     pub seeds: Vec<u64>,
     /// Simulated communication rounds per cell (paper: 6400).
     pub rounds: usize,
+    /// Fault-injection scenario applied to *every* cell (the `[events]`
+    /// section), or `None` for the classic static sweep. Shared by
+    /// `Arc` — the grid can expand to thousands of cells and the
+    /// scenario is immutable.
+    pub scenario: Option<Arc<ScenarioSpec>>,
 }
 
 impl Default for SweepSpec {
@@ -42,6 +49,7 @@ impl Default for SweepSpec {
             t_values: vec![5],
             seeds: vec![17],
             rounds: 6400,
+            scenario: None,
         }
     }
 }
@@ -69,6 +77,9 @@ pub struct CellSpec {
     pub cell_seed: u64,
     /// Simulated communication rounds.
     pub rounds: usize,
+    /// Fault-injection scenario the cell runs under, if any (inherited
+    /// from the spec; identical for every cell of one sweep).
+    pub scenario: Option<Arc<ScenarioSpec>>,
 }
 
 impl CellSpec {
@@ -193,6 +204,9 @@ impl SweepSpec {
                 "base seed {seed} exceeds 2^53 and would lose precision in JSON artifacts"
             );
         }
+        if let Some(sc) = &self.scenario {
+            sc.validate().context("[events] section")?;
+        }
         Ok(())
     }
 
@@ -244,6 +258,7 @@ impl SweepSpec {
                                 base_seed,
                                 cell_seed: cell_stream(base_seed, topology, network, profile, t),
                                 rounds: self.rounds,
+                                scenario: self.scenario.clone(),
                             });
                         }
                     }
@@ -314,6 +329,11 @@ impl SweepSpec {
     }
 
     /// Serialize back to the TOML subset (for shipped example specs).
+    ///
+    /// A scenario serializes as a trailing `[events]` section, which
+    /// only the *file* dialect ([`SweepFile::from_toml_str`]) parses —
+    /// the flat [`Self::from_toml_str`] stays section-free, so specs
+    /// with a scenario round-trip through `SweepFile`.
     pub fn to_toml_string(&self) -> String {
         let quote_list = |items: &[String]| -> String {
             let quoted: Vec<String> = items.iter().map(|s| format!("\"{s}\"")).collect();
@@ -323,7 +343,7 @@ impl SweepSpec {
             self.topologies.iter().map(|k| k.as_str().to_string()).collect();
         let t_list: Vec<String> = self.t_values.iter().map(|t| t.to_string()).collect();
         let seed_list: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
-        format!(
+        let mut out = format!(
             "name = \"{}\"\nrounds = {}\ntopologies = {}\nnetworks = {}\nprofiles = {}\nt = [{}]\nseeds = [{}]\n",
             self.name,
             self.rounds,
@@ -332,7 +352,12 @@ impl SweepSpec {
             quote_list(&self.profiles),
             t_list.join(", "),
             seed_list.join(", "),
-        )
+        );
+        if let Some(sc) = &self.scenario {
+            out.push_str(&format!("\n[events]\nseed = {}\n", sc.seed));
+            out.push_str(&format!("events = {}\n", quote_list(&sc.event_strs())));
+        }
+        out
     }
 }
 
@@ -372,29 +397,46 @@ impl SweepFile {
     }
 
     /// Parse the file dialect: the flat sweep keys, optionally followed
-    /// by a `[store]` section (`path`, `enabled`). Any other section is
-    /// an error.
+    /// by `[store]` (`path`, `enabled`) and/or `[events]` (`seed`,
+    /// `events`) sections. Any other section is an error.
     pub fn from_toml_str(text: &str) -> Result<Self> {
+        #[derive(PartialEq, Clone, Copy)]
+        enum Section {
+            Sweep,
+            Store,
+            Events,
+        }
         let mut sweep_text = String::new();
         let mut store: Option<StoreSpec> = None;
-        let mut in_store = false;
+        let mut ev_seed = 0u64;
+        let mut ev_strs: Option<Vec<String>> = None;
+        let mut seen_events = false;
+        let mut section = Section::Sweep;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
             if line.starts_with('[') {
-                if line == "[store]" {
-                    ensure!(!in_store, "line {}: duplicate [store] section", lineno + 1);
-                    in_store = true;
-                    store = Some(StoreSpec { path: String::new(), enabled: true });
-                    sweep_text.push('\n');
-                    continue;
+                match line {
+                    "[store]" => {
+                        ensure!(store.is_none(), "line {}: duplicate [store] section", lineno + 1);
+                        section = Section::Store;
+                        store = Some(StoreSpec { path: String::new(), enabled: true });
+                    }
+                    "[events]" => {
+                        ensure!(!seen_events, "line {}: duplicate [events] section", lineno + 1);
+                        section = Section::Events;
+                        seen_events = true;
+                    }
+                    other => bail!(
+                        "line {}: unknown section '{other}' (sweep files support [store] and \
+                         [events])",
+                        lineno + 1
+                    ),
                 }
-                bail!(
-                    "line {}: unknown section '{line}' (sweep files support only [store])",
-                    lineno + 1
-                );
+                sweep_text.push('\n');
+                continue;
             }
-            if !in_store {
-                // Keep the raw line (and blank lines below for store
+            if section == Section::Sweep {
+                // Keep the raw line (and blank lines below for section
                 // keys) so SweepSpec::from_toml_str reports the file's
                 // real line numbers.
                 sweep_text.push_str(raw);
@@ -409,26 +451,48 @@ impl SweepFile {
                 .split_once('=')
                 .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
             let items = split_values(value);
-            let section = store.as_mut().expect("inside [store]");
-            match key.trim() {
-                "path" => section.path = one(&items, "path", lineno)?,
-                "enabled" => {
-                    section.enabled = match one(&items, "enabled", lineno)?.as_str() {
-                        "true" => true,
-                        "false" => false,
-                        other => bail!(
-                            "line {}: [store] enabled must be true or false (got '{other}')",
-                            lineno + 1
-                        ),
+            match section {
+                Section::Sweep => unreachable!("handled above"),
+                Section::Store => {
+                    let section = store.as_mut().expect("inside [store]");
+                    match key.trim() {
+                        "path" => section.path = one(&items, "path", lineno)?,
+                        "enabled" => {
+                            section.enabled = match one(&items, "enabled", lineno)?.as_str() {
+                                "true" => true,
+                                "false" => false,
+                                other => bail!(
+                                    "line {}: [store] enabled must be true or false (got \
+                                     '{other}')",
+                                    lineno + 1
+                                ),
+                            }
+                        }
+                        other => bail!("line {}: unknown [store] key '{other}'", lineno + 1),
                     }
                 }
-                other => bail!("line {}: unknown [store] key '{other}'", lineno + 1),
+                Section::Events => match key.trim() {
+                    "seed" => {
+                        ev_seed = one(&items, "seed", lineno)?
+                            .parse()
+                            .with_context(|| format!("line {}: [events] seed", lineno + 1))?
+                    }
+                    "events" => ev_strs = Some(items),
+                    other => bail!("line {}: unknown [events] key '{other}'", lineno + 1),
+                },
             }
         }
         if let Some(s) = &store {
             ensure!(!s.path.is_empty(), "[store] section requires a path");
         }
-        Ok(SweepFile { spec: SweepSpec::from_toml_str(&sweep_text)?, store })
+        let mut spec = SweepSpec::from_toml_str(&sweep_text)?;
+        if seen_events {
+            let strs = ev_strs.unwrap_or_default();
+            ensure!(!strs.is_empty(), "[events] section requires a non-empty events list");
+            let sc = ScenarioSpec::from_event_strs(ev_seed, &strs).context("[events] section")?;
+            spec.scenario = Some(Arc::new(sc));
+        }
+        Ok(SweepFile { spec, store })
     }
 }
 
@@ -533,6 +597,7 @@ mod tests {
             t_values: vec![3, 5],
             seeds: vec![1, 2, 3],
             rounds: 640,
+            scenario: None,
         };
         let text = spec.to_toml_string();
         let back = SweepSpec::from_toml_str(&text).unwrap();
@@ -659,6 +724,77 @@ enabled = true
             .unwrap_err()
             .to_string();
         assert!(err.contains("line 4"), "{err}");
+    }
+
+    #[test]
+    fn sweep_files_parse_the_events_section() {
+        let text = r#"
+name = "churn"
+rounds = 200
+networks = [gaia]
+seeds = [17]
+
+[events]
+seed = 9
+events = ["leave@13:silo=3", "rejoin@41:silo=3", "outage@70:frac=0.3:dur=18"]
+"#;
+        let file = SweepFile::from_toml_str(text).unwrap();
+        let sc = file.spec.scenario.as_ref().expect("scenario parsed");
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.events.len(), 3);
+        assert_eq!(sc.events[2].round, 70);
+        file.spec.validate().unwrap();
+        // Every expanded cell inherits the same shared scenario.
+        let cells = file.spec.expand();
+        assert!(cells.iter().all(|c| c.scenario.as_deref() == Some(sc.as_ref())));
+
+        // Round-trip: spec -> TOML ([events] section) -> SweepFile.
+        let back = SweepFile::from_toml_str(&file.spec.to_toml_string()).unwrap();
+        assert_eq!(back.spec.scenario.as_deref(), Some(sc.as_ref()));
+
+        // [events] and [store] coexist in either order.
+        let both = SweepFile::from_toml_str(
+            "name = \"b\"\n[events]\nseed = 1\nevents = [\"leave@1:silo=0\"]\n[store]\npath = \"p\"\n",
+        )
+        .unwrap();
+        assert!(both.spec.scenario.is_some());
+        assert_eq!(both.store.unwrap().path, "p");
+    }
+
+    #[test]
+    fn the_committed_churn_spec_loads_and_validates() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/specs/churn_gaia.toml");
+        let file = SweepFile::from_toml_file(path).unwrap();
+        assert_eq!(file.spec.name, "churn_gaia");
+        let sc = file.spec.scenario.as_ref().expect("churn_gaia carries an [events] section");
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.events.len(), 6);
+        // The scenario must be viable on its own network/round budget.
+        crate::simtime::build_timeline(sc, &crate::net::zoo::gaia(), file.spec.rounds).unwrap();
+    }
+
+    #[test]
+    fn bad_events_sections_are_rejected() {
+        assert!(SweepFile::from_toml_str("[events]\n").is_err(), "events list required");
+        assert!(SweepFile::from_toml_str("[events]\nevents = [\"meteor@1:x=2\"]\n").is_err());
+        assert!(SweepFile::from_toml_str("[events]\nseed = -1\nevents = [\"leave@1:silo=0\"]\n")
+            .is_err());
+        assert!(SweepFile::from_toml_str("[events]\nbogus = 1\n").is_err());
+        assert!(SweepFile::from_toml_str(
+            "[events]\nevents = [\"leave@1:silo=0\"]\n[events]\n"
+        )
+        .is_err());
+        // Spec-level validation rejects out-of-range parameters on
+        // hand-built scenarios too.
+        let mut spec = SweepSpec::default();
+        spec.scenario = Some(Arc::new(ScenarioSpec {
+            seed: 1,
+            events: vec![crate::simtime::Event {
+                round: 0,
+                kind: crate::simtime::EventKind::Scale { factor: f64::NAN },
+            }],
+        }));
+        assert!(spec.validate().is_err());
     }
 
     #[test]

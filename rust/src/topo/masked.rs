@@ -1,0 +1,208 @@
+//! Availability-masked view of a [`TopologyDesign`]: the plan
+//! invalidation layer the scenario engine ([`crate::simtime::scenario`])
+//! uses when silos leave and rejoin.
+//!
+//! A [`MaskedTopology`] wraps an inner design with a per-silo up/down
+//! mask and a round offset, and emits the inner design's plans with
+//! every edge touching a down silo removed. The node set is untouched —
+//! a down silo stays in the plan's `n` with zero edges, which under the
+//! single isolation rule ([`RoundPlan::mark_participation`]: isolated ⇔
+//! has an edge and no strong edge) counts it as *absent*, not isolated.
+//! That is the paper-consistent reading: an isolated node is one the
+//! schedule serves badly this round, not one that has left the
+//! federation.
+//!
+//! The offset re-bases the inner round index: `plan(k)` delegates to
+//! `inner.plan(offset + k)`, so a scenario segment starting at global
+//! round `s` can be driven from local round 0 while the inner design
+//! sees the true global schedule position. Filtering preserves plan
+//! order, so delay-state updates walk edges in exactly the order the
+//! unmasked design would — the property every engine's bit-identity
+//! argument rests on.
+
+use crate::graph::Graph;
+
+use super::{RoundPlan, ScheduleFactorization, TopologyDesign};
+
+/// A [`TopologyDesign`] filtered through a silo up/down mask, re-based
+/// at a round offset. See the module docs.
+pub struct MaskedTopology<'a> {
+    inner: &'a mut dyn TopologyDesign,
+    offset: usize,
+    up: &'a [bool],
+    scratch: RoundPlan,
+}
+
+impl<'a> MaskedTopology<'a> {
+    /// Wrap `inner`, dropping every planned edge with a down endpoint
+    /// and re-basing round `k` to inner round `offset + k`.
+    ///
+    /// Panics if the mask length disagrees with the overlay's silo
+    /// count.
+    pub fn new(inner: &'a mut dyn TopologyDesign, offset: usize, up: &'a [bool]) -> Self {
+        assert_eq!(
+            inner.overlay().n(),
+            up.len(),
+            "mask has {} entries but design '{}' covers {} silos",
+            up.len(),
+            inner.name(),
+            inner.overlay().n()
+        );
+        MaskedTopology { inner, offset, up, scratch: RoundPlan::default() }
+    }
+
+    /// Silos currently up under the mask.
+    pub fn up_count(&self) -> usize {
+        self.up.iter().filter(|&&u| u).count()
+    }
+}
+
+impl TopologyDesign for MaskedTopology<'_> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    /// The *unmasked* overlay: which pairs may ever communicate when
+    /// everyone is up. Masking is a runtime availability statement, not
+    /// a design change.
+    fn overlay(&self) -> &Graph {
+        self.inner.overlay()
+    }
+
+    fn plan(&mut self, k: usize) -> RoundPlan {
+        let mut out = RoundPlan::default();
+        self.plan_into(k, &mut out);
+        out
+    }
+
+    fn plan_into(&mut self, k: usize, out: &mut RoundPlan) {
+        self.inner.plan_into(self.offset + k, &mut self.scratch);
+        out.reset(self.scratch.n);
+        for &(u, v, ty) in &self.scratch.edges {
+            if self.up[u] && self.up[v] {
+                out.push(u, v, ty);
+            }
+        }
+    }
+
+    /// The inner period survives masking: the mask is round-constant
+    /// and `(offset + k) % p` depends only on `k % p`.
+    fn period(&self) -> Option<u64> {
+        self.inner.period()
+    }
+
+    /// The inner factorization filtered by the mask — but only at
+    /// offset 0. The factorization contract keys strong rounds to
+    /// `k % m == 0` in the *caller's* round index; a nonzero offset
+    /// shifts that phase, which [`ScheduleFactorization`] cannot
+    /// express, so offset segments must handle the phase themselves
+    /// (the scenario engine's factored runner does).
+    fn factorization(&self) -> Option<ScheduleFactorization> {
+        if self.offset != 0 {
+            return None;
+        }
+        let f = self.inner.factorization()?;
+        let edges: Vec<(usize, usize, u32)> =
+            f.edges.into_iter().filter(|&(u, v, _)| self.up[u] && self.up[v]).collect();
+        Some(ScheduleFactorization { n: f.n, edges })
+    }
+
+    fn seed_sensitive(&self) -> bool {
+        self.inner.seed_sensitive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{zoo, DatasetProfile};
+    use crate::topo::ring::RingTopology;
+    use crate::topo::MultigraphTopology;
+
+    #[test]
+    fn full_mask_is_the_identity() {
+        let net = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let mut a = MultigraphTopology::from_network(&net, &prof, 5);
+        let mut b = MultigraphTopology::from_network(&net, &prof, 5);
+        let up = vec![true; net.n()];
+        let mut masked = MaskedTopology::new(&mut b, 0, &up);
+        assert_eq!(masked.up_count(), net.n());
+        for k in 0..40 {
+            let want = a.plan(k);
+            let got = masked.plan(k);
+            assert_eq!(want.n, got.n);
+            assert_eq!(want.edges, got.edges, "round {k}");
+        }
+        assert_eq!(masked.period(), a.period());
+        assert_eq!(masked.seed_sensitive(), a.seed_sensitive());
+        assert_eq!(masked.name(), "multigraph");
+    }
+
+    #[test]
+    fn down_silo_loses_every_edge_but_stays_in_n() {
+        let net = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let mut inner = RingTopology::new(&net, &prof);
+        let mut up = vec![true; net.n()];
+        up[3] = false;
+        let mut masked = MaskedTopology::new(&mut inner, 0, &up);
+        let plan = masked.plan(0);
+        assert_eq!(plan.n, net.n());
+        assert!(plan.edges.iter().all(|&(u, v, _)| u != 3 && v != 3));
+        assert!(!plan.edges.is_empty());
+        // A down silo has no edges, so it is absent — never isolated.
+        assert!(!plan.isolated_nodes().contains(&3));
+        // Order of the surviving edges matches the unmasked plan.
+        let mut fresh = RingTopology::new(&net, &prof);
+        let unmasked = fresh.plan(0);
+        let filtered: Vec<_> = unmasked
+            .edges
+            .iter()
+            .copied()
+            .filter(|&(u, v, _)| u != 3 && v != 3)
+            .collect();
+        assert_eq!(plan.edges, filtered);
+    }
+
+    #[test]
+    fn offset_rebases_the_round_index() {
+        let net = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let mut a = MultigraphTopology::from_network(&net, &prof, 5);
+        let mut b = MultigraphTopology::from_network(&net, &prof, 5);
+        let up = vec![true; net.n()];
+        let mut masked = MaskedTopology::new(&mut b, 7, &up);
+        for k in 0..20 {
+            assert_eq!(a.plan(7 + k).edges, masked.plan(k).edges, "round {k}");
+        }
+    }
+
+    #[test]
+    fn factorization_filters_at_offset_zero_and_hides_elsewhere() {
+        let net = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let mut inner = MultigraphTopology::from_network(&net, &prof, 20);
+        let full = inner.factorization().expect("multigraph factorizes");
+        let mut up = vec![true; net.n()];
+        up[0] = false;
+        {
+            let masked = MaskedTopology::new(&mut inner, 0, &up);
+            let f = masked.factorization().expect("offset 0 keeps the factorization");
+            assert!(f.edges.len() < full.edges.len());
+            assert!(f.edges.iter().all(|&(u, v, _)| u != 0 && v != 0));
+        }
+        let masked = MaskedTopology::new(&mut inner, 3, &up);
+        assert!(masked.factorization().is_none(), "offset phase is inexpressible");
+    }
+
+    #[test]
+    #[should_panic(expected = "mask")]
+    fn mismatched_mask_length_is_rejected() {
+        let net = zoo::gaia();
+        let prof = DatasetProfile::femnist();
+        let mut inner = RingTopology::new(&net, &prof);
+        let up = vec![true; 3];
+        let _ = MaskedTopology::new(&mut inner, 0, &up);
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod candidate;
 pub mod delta_mbst;
+pub mod masked;
 pub mod matcha;
 pub mod mst;
 pub mod multigraph;
@@ -20,6 +21,7 @@ use crate::delay::EdgeType;
 use crate::graph::{Graph, NodeId};
 
 pub use candidate::CandidateTopology;
+pub use masked::MaskedTopology;
 pub use multigraph::Multigraph;
 pub use states::{GraphState, MultigraphTopology};
 

@@ -82,6 +82,7 @@ fn sweep_batch_planner_dispatch_is_observable_and_deterministic() {
         t_values: vec![3, 5],
         seeds: vec![17],
         rounds: 60,
+        scenario: None,
     };
     let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
 
@@ -135,6 +136,7 @@ fn seed_replicated_ring_grid_batches_without_perturbing_artifacts() {
         t_values: vec![3, 5],
         seeds: (17..22).collect(),
         rounds: 40,
+        scenario: None,
     };
     let dedup = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
     let no_dedup =

@@ -102,6 +102,7 @@ fn sweep_reports_carry_the_engine_dispatch() {
         t_values: vec![30],
         seeds: vec![17],
         rounds,
+        scenario: None,
     };
     let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
     let engine_of = |topo: &str| {

@@ -1,0 +1,298 @@
+//! Model-based property tests for the fault-injection scenario layer,
+//! backed by the real proptest crate (gated behind `--features proptest`
+//! like `tests/proptest_sweep.rs`; the offline build vendors no
+//! proptest).
+//!
+//! Two families:
+//!
+//! * **Stateful model**: random event sequences are folded through an
+//!   independent, naive per-round event model; [`build_timeline`]'s
+//!   piecewise-static segments must agree with the model at every
+//!   round (mask, up-count, capacity scale, partition of `0..rounds`).
+//! * **Engine equivalence**: over zoo and synthetic geo networks, the
+//!   naive masked tracker (the oracle) must match the piecewise
+//!   compiled, factored, and batched engines *bitwise* — totals, mean
+//!   cycle, isolation counters, and the degraded-mode metrics — under
+//!   random churn, including event rounds packed tightly together so
+//!   segment boundaries land mid-period and exercise the Eq. 4 backlog
+//!   carry across segments.
+#![cfg(feature = "proptest")]
+
+use mgfl::net::synth::geo_clustered;
+use mgfl::net::{zoo, DatasetProfile, NetworkSpec};
+use mgfl::simtime::{
+    build_timeline, run_scenario_batched, run_scenario_compiled, run_scenario_factored,
+    simulate_summary_scenario, simulate_summary_scenario_naive, BatchLane, CompiledTopology,
+    EngineKind, ScenarioSpec, SimSummary,
+};
+use mgfl::topo::MultigraphTopology;
+use proptest::prelude::*;
+
+/// One randomly-drawn event, still abstract (silo indices are resolved
+/// against the concrete network's size at build time).
+#[derive(Debug, Clone)]
+enum RawEvent {
+    Leave { round: usize, silo: usize },
+    Rejoin { round: usize, silo: usize },
+    Scale { round: usize, factor: f64 },
+    Jitter { round: usize, amp: f64 },
+    Outage { round: usize, frac: f64, dur: usize, epicenter: Option<usize> },
+}
+
+impl RawEvent {
+    /// Render as the sweep-spec DSL string, clamping silo references
+    /// into `0..n` so every draw is valid on the chosen network.
+    fn to_dsl(&self, n: usize) -> String {
+        match self {
+            RawEvent::Leave { round, silo } => format!("leave@{round}:silo={}", silo % n),
+            RawEvent::Rejoin { round, silo } => format!("rejoin@{round}:silo={}", silo % n),
+            RawEvent::Scale { round, factor } => format!("scale@{round}:factor={factor}"),
+            RawEvent::Jitter { round, amp } => format!("jitter@{round}:amp={amp}"),
+            RawEvent::Outage { round, frac, dur, epicenter } => {
+                let epi = epicenter.map(|e| format!(":epicenter={}", e % n)).unwrap_or_default();
+                format!("outage@{round}:frac={frac}:dur={dur}{epi}")
+            }
+        }
+    }
+}
+
+/// Event strategy. Rounds are drawn from a small range on purpose:
+/// collisions and near-collisions are the interesting cases (same-round
+/// stacking, zero-length segments, boundaries adjacent to the period).
+fn raw_event(rounds: usize, with_outage: bool) -> impl Strategy<Value = RawEvent> {
+    let r = 0..rounds;
+    let leave = (r.clone(), 0usize..32).prop_map(|(round, silo)| RawEvent::Leave { round, silo });
+    let rejoin =
+        (r.clone(), 0usize..32).prop_map(|(round, silo)| RawEvent::Rejoin { round, silo });
+    let scale =
+        (r.clone(), 1u32..40).prop_map(|(round, f)| RawEvent::Scale { round, factor: f as f64 / 10.0 });
+    let jitter =
+        (r.clone(), 0u32..80).prop_map(|(round, a)| RawEvent::Jitter { round, amp: a as f64 / 10.0 });
+    let outage = (r, 1u32..7, 1usize..25, prop::option::of(0usize..32)).prop_map(
+        |(round, decifrac, dur, epicenter)| RawEvent::Outage {
+            round,
+            frac: decifrac as f64 / 10.0,
+            dur,
+            epicenter,
+        },
+    );
+    if with_outage {
+        prop_oneof![4 => leave, 3 => rejoin, 2 => scale, 2 => jitter, 2 => outage].boxed()
+    } else {
+        prop_oneof![4 => leave, 3 => rejoin, 2 => scale, 2 => jitter].boxed()
+    }
+}
+
+/// The network pool the engine-equivalence tests draw from: both zoo
+/// networks plus seeded synthetic geo-clusters of different sizes.
+fn network(choice: usize) -> NetworkSpec {
+    match choice % 4 {
+        0 => zoo::gaia(),
+        1 => zoo::amazon(),
+        2 => geo_clustered(9, 41),
+        _ => geo_clustered(14, 42),
+    }
+}
+
+fn spec_on(net: &NetworkSpec, seed: u64, raw: &[RawEvent]) -> ScenarioSpec {
+    let strs: Vec<String> = raw.iter().map(|e| e.to_dsl(net.n())).collect();
+    ScenarioSpec::from_event_strs(seed, &strs).expect("clamped draws always parse")
+}
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.total_ms.to_bits(), b.total_ms.to_bits(), "{ctx}: total_ms");
+    assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}: mean_cycle_ms");
+    assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}: isolation rounds");
+    assert_eq!(a.max_isolated, b.max_isolated, "{ctx}: max isolated");
+    assert_eq!(a.scenario, b.scenario, "{ctx}: degraded-mode metrics");
+}
+
+proptest! {
+    // The model test is pure bookkeeping (no simulation), so it can
+    // afford the default case count; the engine tests below simulate
+    // real cells and trim theirs.
+
+    /// Fold the events through a naive one-round-at-a-time model and
+    /// check `build_timeline` agrees everywhere. Outages are excluded
+    /// here (their blast region is geometry- and seed-dependent — the
+    /// engine tests cover them); everything else is modeled exactly.
+    #[test]
+    fn timeline_segments_agree_with_a_naive_event_model(
+        raw in prop::collection::vec(raw_event(60, false), 0..10),
+        rounds in 1usize..60,
+        seed in 0u64..1000,
+    ) {
+        let net = zoo::gaia();
+        let n = net.n();
+        let sc = spec_on(&net, seed, &raw);
+        // The model: replay events round by round.
+        let mut up = vec![true; n];
+        let mut scale = 1.0f64;
+        let mut model: Vec<(Vec<bool>, f64)> = Vec::with_capacity(rounds);
+        let mut dies_at: Option<usize> = None;
+        'rounds: for k in 0..rounds {
+            for e in &sc.events {
+                if e.round != k {
+                    continue;
+                }
+                match e.kind {
+                    mgfl::simtime::EventKind::Leave { silo } => up[silo] = false,
+                    mgfl::simtime::EventKind::Rejoin { silo } => up[silo] = true,
+                    mgfl::simtime::EventKind::Scale { factor } => scale = factor,
+                    _ => {}
+                }
+            }
+            if up.iter().filter(|&&u| u).count() < 2 {
+                dies_at = Some(k);
+                break 'rounds;
+            }
+            model.push((up.clone(), scale));
+        }
+        let timeline = build_timeline(&sc, &net, rounds);
+        if let Some(k) = dies_at {
+            let err = timeline.expect_err("model says the network empties");
+            prop_assert!(
+                err.contains(&format!("at round {k}")) && err.contains("need at least 2"),
+                "unexpected error: {err}"
+            );
+            return Ok(());
+        }
+        let timeline = timeline.unwrap();
+        // Segments partition 0..rounds in order, none empty.
+        let mut next = 0usize;
+        for seg in &timeline.segments {
+            prop_assert_eq!(seg.start, next, "segments must tile the run");
+            prop_assert!(seg.len > 0, "zero-length segments must be dropped");
+            next = seg.start + seg.len;
+            // Constant state inside the segment, equal to the model.
+            for k in seg.start..next {
+                let (ref want_up, want_scale) = model[k];
+                prop_assert_eq!(&seg.up, want_up, "round {} mask", k);
+                prop_assert_eq!(seg.scale.to_bits(), want_scale.to_bits(), "round {} scale", k);
+            }
+            prop_assert_eq!(seg.up_count, seg.up.iter().filter(|&&u| u).count());
+        }
+        prop_assert_eq!(next, rounds, "segments must cover every round");
+        // Jitter series: per-round, finite, empty iff never enabled
+        // inside the horizon (events at `round >= rounds` never fire).
+        if sc
+            .events
+            .iter()
+            .any(|e| e.round < rounds && matches!(e.kind, mgfl::simtime::EventKind::Jitter { .. }))
+        {
+            prop_assert_eq!(timeline.jitter.len(), rounds);
+            prop_assert!(timeline.jitter.iter().all(|j| j.is_finite() && *j >= 0.0));
+        } else {
+            prop_assert!(timeline.jitter.is_empty());
+        }
+    }
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(24))]
+
+    /// The tentpole invariant: naive == compiled == factored == batched,
+    /// bitwise, for arbitrary churn over zoo + synthetic networks —
+    /// or the same structured error from every path.
+    #[test]
+    fn every_engine_agrees_with_the_naive_oracle_bitwise(
+        raw in prop::collection::vec(raw_event(48, true), 1..8),
+        net_choice in 0usize..4,
+        t in prop::sample::select(vec![3u32, 5]),
+        seed in 0u64..1000,
+    ) {
+        let rounds = 48usize;
+        let net = network(net_choice);
+        let prof = DatasetProfile::femnist();
+        let sc = spec_on(&net, seed, &raw);
+        let mut naive_topo = MultigraphTopology::from_network(&net, &prof, t);
+        let want = simulate_summary_scenario_naive(&mut naive_topo, &net, &prof, rounds, &sc);
+
+        // Dispatcher (periodic multigraph → compiled piecewise path).
+        let mut topo = MultigraphTopology::from_network(&net, &prof, t);
+        let got = simulate_summary_scenario(&mut topo, &net, &prof, rounds, &sc);
+        match (&want, &got) {
+            (Err(we), Err(ge)) => {
+                // Structured per-cell error: every path reports the
+                // same string, nothing panics.
+                prop_assert_eq!(we, ge);
+                let f = MultigraphTopology::from_network(&net, &prof, t);
+                if let Some(fact) = run_scenario_factored(&f, &net, &prof, rounds, &sc) {
+                    prop_assert_eq!(&fact.expect_err("factored must error too"), we);
+                }
+                return Ok(());
+            }
+            (Err(_), Ok(_)) | (Ok(_), Err(_)) => {
+                prop_assert!(false, "oracle and dispatcher disagree about viability");
+            }
+            (Ok(want), Ok((got, _stats))) => {
+                assert_bitwise(want, got, "dispatcher vs oracle");
+            }
+        }
+        let want = want.unwrap();
+
+        // Factored grouped path (admission is network-dependent).
+        let f = MultigraphTopology::from_network(&net, &prof, t);
+        if let Some(fact) = run_scenario_factored(&f, &net, &prof, rounds, &sc) {
+            let (fact, stats) = fact.unwrap();
+            prop_assert_eq!(stats.kind, EngineKind::Factored);
+            assert_bitwise(&want, &fact, "factored vs oracle");
+        }
+
+        // Compiled + single-lane batched paths.
+        let mut c = MultigraphTopology::from_network(&net, &prof, t);
+        if let Some(ct) = CompiledTopology::compile(&mut c, rounds) {
+            let (solo, _) = run_scenario_compiled(&ct, &net, &prof, rounds, &sc).unwrap();
+            assert_bitwise(&want, &solo, "compiled vs oracle");
+            let lanes = [BatchLane { ct: &ct, net: &net, profile: &prof }];
+            let mut lanes_out = run_scenario_batched(&ct, &lanes, rounds, &sc).unwrap();
+            let (batched, stats) = lanes_out.pop().unwrap();
+            prop_assert_eq!(stats.kind, EngineKind::Batched);
+            assert_bitwise(&want, &batched, "batched vs oracle");
+        }
+    }
+
+    /// Batched lanes must be width-independent under churn: each lane of
+    /// a 3-profile batch equals its own solo compiled run bitwise, with
+    /// the backlog carried across every segment boundary identically.
+    #[test]
+    fn batched_lanes_are_width_independent_under_random_churn(
+        raw in prop::collection::vec(raw_event(40, true), 1..6),
+        seed in 0u64..1000,
+    ) {
+        let rounds = 40usize;
+        let net = zoo::gaia();
+        let sc = spec_on(&net, seed, &raw);
+        let profiles = DatasetProfile::all();
+        let mut compiles = Vec::new();
+        for prof in &profiles {
+            let mut topo = MultigraphTopology::from_network(&net, prof, 5);
+            compiles.push(CompiledTopology::compile(&mut topo, rounds).expect("gaia t=5 compiles"));
+        }
+        let lanes: Vec<BatchLane> = profiles
+            .iter()
+            .zip(&compiles)
+            .map(|(prof, ct)| BatchLane { ct, net: &net, profile: prof })
+            .collect();
+        let batched = run_scenario_batched(&compiles[0], &lanes, rounds, &sc);
+        match batched {
+            Err(e) => {
+                // Chunk-wide structured error: the solo path must agree.
+                let solo = run_scenario_compiled(&compiles[0], &net, &profiles[0], rounds, &sc);
+                prop_assert_eq!(&solo.expect_err("solo must error too"), &e);
+            }
+            Ok(per_lane) => {
+                prop_assert_eq!(per_lane.len(), profiles.len());
+                for ((prof, ct), (summary, stats)) in
+                    profiles.iter().zip(&compiles).zip(&per_lane)
+                {
+                    prop_assert_eq!(stats.kind, EngineKind::Batched);
+                    let (solo, _) =
+                        run_scenario_compiled(ct, &net, prof, rounds, &sc).unwrap();
+                    assert_bitwise(summary, &solo, &format!("lane {} vs solo", prof.name));
+                }
+            }
+        }
+    }
+}

@@ -35,6 +35,7 @@ proptest! {
             t_values: ts.clone(),
             seeds: seeds.clone(),
             rounds,
+            scenario: None,
         };
         let back = SweepSpec::from_toml_str(&spec.to_toml_string()).unwrap();
         prop_assert_eq!(back.topologies, topologies);

@@ -34,6 +34,7 @@ fn grid(seeds: Vec<u64>) -> SweepSpec {
         t_values: vec![3, 5],
         seeds,
         rounds: 60,
+        scenario: None,
     }
 }
 
@@ -97,6 +98,72 @@ fn a_partially_warm_store_serves_hits_and_simulates_only_the_rest() {
         "a partially warm sweep must still match the storeless artifacts byte for byte"
     );
     assert_eq!(warm.report.to_csv(), reference.report.to_csv());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenario_cells_never_cross_hit_their_static_twins_in_a_warm_store() {
+    use mgfl::simtime::ScenarioSpec;
+    use std::sync::Arc;
+
+    let sc = Arc::new(
+        ScenarioSpec::from_event_strs(
+            9,
+            &["leave@10:silo=2", "scale@20:factor=1.4", "rejoin@35:silo=2"],
+        )
+        .unwrap(),
+    );
+    let static_spec = grid(vec![11]);
+    let churned_spec = SweepSpec { scenario: Some(Arc::clone(&sc)), ..grid(vec![11]) };
+    // Same grid, different identity: every cell fingerprint must split
+    // on the scenario hash.
+    for (a, b) in static_spec.expand().iter().zip(churned_spec.expand().iter()) {
+        assert_ne!(a.fingerprint(), b.fingerprint(), "scenario must join the cell identity");
+        assert_eq!(a.fingerprint().scenario, None);
+        assert!(b.fingerprint().scenario.is_some());
+    }
+
+    let dir = tmp("scenario");
+    let store = CellStore::open(&dir).unwrap();
+    // Warm the store with the static grid, then sweep the churned twin:
+    // nothing may be served across the scenario boundary.
+    let static_cold = sweep::run_with_store(&static_spec, &opts(2, true), Some(&store)).unwrap();
+    assert_eq!(static_cold.store_hits, 0);
+    let churn_cold = sweep::run_with_store(&churned_spec, &opts(2, true), Some(&store)).unwrap();
+    assert_eq!(
+        churn_cold.store_hits, 0,
+        "a static-warm store must never serve a scenario cell"
+    );
+    assert_eq!(churn_cold.store_misses, churn_cold.unique_cells);
+
+    // And the reverse: the churned results are in the store now, but a
+    // static re-sweep hits only its own records...
+    let static_warm = sweep::run_with_store(&static_spec, &opts(2, true), Some(&store)).unwrap();
+    assert_eq!(static_warm.store_misses, 0, "static cells re-serve from their own records");
+    assert_eq!(
+        static_warm.report.to_json().to_string(),
+        static_cold.report.to_json().to_string(),
+        "static artifacts stay byte-identical with scenario records interleaved in the store"
+    );
+    // ...and a churned re-sweep serves every cell, metrics included,
+    // byte-identical to its cold run, across dedup modes.
+    for dedup in [true, false] {
+        let warm = sweep::run_with_store(&churned_spec, &opts(4, dedup), Some(&store)).unwrap();
+        assert_eq!(warm.store_misses, 0, "dedup={dedup}: churned cells re-serve");
+        assert_eq!(
+            warm.report.to_json().to_string(),
+            churn_cold.report.to_json().to_string(),
+            "dedup={dedup}: warm scenario artifacts must match cold byte for byte"
+        );
+        assert_eq!(warm.report.to_csv(), churn_cold.report.to_csv());
+    }
+    // Degraded-mode metrics actually round-tripped through the log.
+    let warm = sweep::run_with_store(&churned_spec, &opts(1, true), Some(&store)).unwrap();
+    assert!(warm.report.scenario);
+    assert!(
+        warm.report.cells.iter().all(|c| c.scenario.is_some() && c.error.is_none()),
+        "every served scenario cell must carry its ScenarioMetrics"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -31,6 +31,7 @@ fn spec() -> SweepSpec {
         t_values: vec![3, 5],
         seeds: vec![11, 23],
         rounds: 80,
+        scenario: None,
     }
 }
 
@@ -164,6 +165,7 @@ fn seed_replicated_spec(rounds: usize) -> SweepSpec {
         t_values: vec![5],
         seeds: (17..25).collect(),
         rounds,
+        scenario: None,
     }
 }
 

@@ -168,6 +168,7 @@ fn sweep_engine_resolves_and_canonicalizes_synthetic_networks() {
         t_values: vec![5],
         seeds: vec![17],
         rounds: 40,
+        scenario: None,
     };
     spec.canonicalize().unwrap();
     assert_eq!(spec.networks, vec!["synth-geo-n64-s3", "gaia"]);
