@@ -42,6 +42,7 @@ fn grid(rounds: usize) -> SweepSpec {
         seeds: (17..25).collect(),
         rounds,
         scenario: None,
+        adapt: Vec::new(),
     }
 }
 

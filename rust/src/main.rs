@@ -27,9 +27,11 @@ SUBCOMMANDS
   sweep     [spec.toml] [--threads 0] [--out results] [--name sweep] [--rounds 6400]
             [--topologies all|a,b] [--networks all|a,b] [--profiles all|a,b]
             [--t 1,3,5] [--seeds 17,18] [--no-dedup] [--store PATH] [--no-store]
+            [--allow-errors]
   optimize  [spec.toml] [--name optimize] [--network gaia] [--profile femnist]
             [--strategy hill|anneal] [--chains 4] [--steps 400] [--rounds 600]
-            [--seed 17] [--threads 0] [--out results] [--store PATH]
+            [--seed 17] [--deadline-ms 0] [--threads 0] [--out results]
+            [--store PATH]
   serve     --store PATH [--addr 127.0.0.1:7700] [--threads 0]
   cache     <stats|verify|gc> --store PATH
   scale     [--sizes 64,256,1024] [--variant geo|sphere] [--seed 7]
@@ -63,6 +65,14 @@ with byte-identical artifacts either way. Spec files may carry a
 `[store]` section; `--store` overrides it and `--no-store` disables it.
 `serve` keeps one store open behind a local HTTP/JSON endpoint, and
 `cache` inspects (stats), audits (verify), or compacts (gc) a store.
+
+Sweep spec files may also carry `[events]` (deterministic fault
+injection) and `[adapt]` (online re-planning at segment boundaries;
+policies none|rebuild|warm) sections — see docs/SPECS.md. A sweep with
+failed cells (engine=\"error\" rows in the artifacts) exits nonzero
+unless `--allow-errors` is passed. `optimize --deadline-ms N` stops
+chains gracefully at a wall-clock budget; truncated searches set
+`budget_exhausted` in the report.
 ";
 
 fn resolve_profile(name: &str) -> Result<DatasetProfile> {
@@ -258,7 +268,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
     };
     let store = store_path.map(CellStore::open).transpose()?;
     eprintln!(
-        "sweep '{}': {} cells ({} topologies x {} networks x {} profiles x {} t x {} seeds, {} rounds)",
+        "sweep '{}': {} cells ({} topologies x {} networks x {} profiles x {} t x {} seeds{}, {} rounds)",
         spec.name,
         spec.cell_count(),
         spec.topologies.len(),
@@ -266,6 +276,11 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         spec.profiles.len(),
         spec.t_values.len(),
         spec.seeds.len(),
+        if spec.adapt.is_empty() {
+            String::new()
+        } else {
+            format!(" x {} adapt policies", spec.adapt.len())
+        },
         spec.rounds,
     );
     if let Some(sc) = &spec.scenario {
@@ -273,6 +288,13 @@ fn sweep_cmd(args: &Args) -> Result<()> {
             "  scenario: seed {} with {} event(s) — fault injection via piecewise-static dispatch",
             sc.seed,
             sc.events.len()
+        );
+    }
+    if spec.is_adaptive() {
+        let policies: Vec<&str> = spec.adapt.iter().map(|a| a.policy.as_str()).collect();
+        eprintln!(
+            "  adapt: policies [{}] — online re-planning at scenario segment boundaries",
+            policies.join(", ")
         );
     }
     let outcome = sweep::run_with_store(
@@ -310,9 +332,11 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         ),
         None => String::new(),
     };
+    let errors = outcome.report.cells.iter().filter(|c| c.error.is_some()).count();
     let scenario_note = if outcome.report.scenario {
-        let errors = outcome.report.cells.iter().filter(|c| c.error.is_some()).count();
-        format!("; scenario mode: {errors} error cell(s)")
+        format!("; scenario mode: {errors} engine=\"error\" cell(s)")
+    } else if errors > 0 {
+        format!("; {errors} engine=\"error\" cell(s)")
     } else {
         String::new()
     };
@@ -331,6 +355,15 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         scenario_note,
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
+    // A failed cell is a failed sweep: the artifacts record the error
+    // rows either way, but the exit status should not look green unless
+    // the caller explicitly opted into partial results.
+    if errors > 0 && !args.has("allow-errors") {
+        anyhow::bail!(
+            "{errors} cell(s) failed (engine=\"error\" rows in the artifacts); \
+             pass --allow-errors to accept a partial sweep"
+        );
+    }
     Ok(())
 }
 
@@ -360,6 +393,7 @@ fn optimize_cmd(args: &Args) -> Result<()> {
     spec.seed = args.get("seed", spec.seed)?;
     spec.chains = args.get("chains", spec.chains)?;
     spec.steps = args.get("steps", spec.steps)?;
+    spec.deadline_ms = args.get("deadline-ms", spec.deadline_ms)?;
     spec.canonicalize()?;
     spec.validate()?;
 
@@ -431,14 +465,20 @@ fn optimize_cmd(args: &Args) -> Result<()> {
         ),
         None => String::new(),
     };
+    let deadline_note = if report.budget_exhausted {
+        format!("; wall-clock budget exhausted ({} ms deadline)", spec.deadline_ms)
+    } else {
+        String::new()
+    };
     println!(
-        "{} unique candidates simulated ({} cache hits, {} accepted moves) in {:.2} s on {} threads{}",
+        "{} unique candidates simulated ({} cache hits, {} accepted moves) in {:.2} s on {} threads{}{}",
         report.unique_evals,
         report.cache_hits,
         accepted,
         outcome.host_elapsed_ms / 1e3,
         outcome.threads,
         store_note,
+        deadline_note,
     );
     println!("artifacts: {} | {}", json_path.display(), csv_path.display());
     Ok(())
@@ -488,6 +528,14 @@ fn cache_cmd(args: &Args) -> Result<()> {
                 s.records,
                 s.shard_files,
                 s.bytes,
+            );
+            println!(
+                "  cells: {} static + {} scenario + {} adaptive; {} other entr{} (fitness/probe)",
+                s.static_cells,
+                s.scenario_cells,
+                s.adaptive_cells,
+                s.other_entries,
+                if s.other_entries == 1 { "y" } else { "ies" },
             );
         }
         "verify" => {
@@ -871,6 +919,7 @@ fn table6(rounds: usize, train_rounds: usize, threads: usize) -> Result<()> {
         seeds: vec![17],
         rounds,
         scenario: None,
+        adapt: Vec::new(),
     };
     let outcome = sweep::run(&spec, &RunOptions { threads, progress: true, dedup: true })?;
     for &t in &spec.t_values {

@@ -111,6 +111,13 @@ pub struct SearchReport {
     pub unique_evals: usize,
     /// Fitness lookups served from the dedup cache.
     pub cache_hits: usize,
+    /// True when any chain stopped at the spec's wall-clock deadline
+    /// ([`crate::search::OptimizeSpec::deadline_ms`]) before consuming
+    /// its full step budget. Always `false` at the `deadline_ms = 0`
+    /// default, where the pure-function-of-spec contract holds; a
+    /// nonzero deadline is explicitly host-dependent, and this flag is
+    /// how an artifact discloses that a run was truncated.
+    pub budget_exhausted: bool,
 }
 
 fn candidate_json(c: &CandidateSummary) -> Json {
@@ -199,6 +206,7 @@ impl SearchReport {
         top.insert("improvement_pct".into(), Json::Num(self.improvement_pct));
         top.insert("unique_evals".into(), Json::Num(self.unique_evals as f64));
         top.insert("cache_hits".into(), Json::Num(self.cache_hits as f64));
+        top.insert("budget_exhausted".into(), Json::Bool(self.budget_exhausted));
         Json::Obj(top)
     }
 
@@ -272,6 +280,7 @@ mod tests {
             improvement_pct: 27.5,
             unique_evals: 9,
             cache_hits: 4,
+            budget_exhausted: false,
         }
     }
 
@@ -298,6 +307,7 @@ mod tests {
         assert_eq!(j.get("baselines").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("budget_probes").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("unique_evals").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(j.get("budget_exhausted").unwrap(), &Json::Bool(false));
     }
 
     #[test]

@@ -1,0 +1,828 @@
+//! Self-healing topologies: online re-optimization at `Timeline`
+//! segment boundaries.
+//!
+//! The paper's multigraph schedule is fixed at construction time, so a
+//! single silo departure degrades every remaining round — PR 9 models
+//! that honestly (the masked static topology limps through the churn),
+//! and this module closes the loop: at every segment boundary whose
+//! up-mask changed, re-plan the overlay on the *surviving* network and
+//! splice the new schedule into the running simulation.
+//!
+//! # Policies
+//!
+//! * [`AdaptPolicy::None`] — no adaptation; the planner reproduces the
+//!   PR 9 piecewise-static walk bitwise (the control row of every
+//!   adaptive sweep).
+//! * [`AdaptPolicy::Rebuild`] — re-run the paper's own pipeline on the
+//!   survivors: Christofides ring over the surviving sub-connectivity,
+//!   then Algorithms 1–2 via [`CandidateTopology`].
+//! * [`AdaptPolicy::Warm`] — hill-climb from the previous segment's
+//!   genome (survivors keep their ring order, rejoined silos are
+//!   appended, dead chords dropped) under a per-boundary evaluation
+//!   budget and optional wall-clock deadline; fitness is the mean τ of
+//!   a short masked-tracker run on the surviving network.
+//!
+//! # Reconfiguration cost
+//!
+//! Adaptation is never free: each re-planned boundary first *freezes*
+//! on the outgoing topology (under the new mask) for
+//! `freeze_rounds` — modeling overlay deployment — before the new
+//! schedule activates at offset 0.
+//!
+//! # Graceful degradation
+//!
+//! The fallback ladder never fails a cell: warm search out of budget
+//! or past its deadline falls to the rebuilt paper design; a rebuild
+//! that cannot produce a valid overlay (or a segment network too small
+//! to plan on) falls to the PR 9 masked static base. Every step down
+//! is counted in [`AdaptMetrics::fallbacks`].
+//!
+//! # Determinism
+//!
+//! Search RNG streams derive from the **scenario** seed and structural
+//! labels (`adapt/<policy>/seg/<i>`), never from wall-clock or thread
+//! identity, so adaptive artifacts are byte-identical across threads,
+//! dedup modes, and store warmth. The one deliberate exception is
+//! `deadline_ms > 0`: a firing wall-clock deadline makes the accepted
+//! step count host-dependent, so committed specs keep it at 0 and
+//! exercise the fallback ladder through zero budgets instead.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::delay::{pair_d0_ms, EdgeType};
+use crate::graph::{christofides_cycle_dense, DenseGraph, Graph};
+use crate::net::{DatasetProfile, NetworkSpec};
+use crate::simtime::scenario::finalize;
+use crate::simtime::{
+    build_timeline, run_spliced, AdaptMetrics, EngineKind, EngineStats, ScenarioSpec, SimSummary,
+    SplicedPhase, Timeline,
+};
+use crate::topo::{CandidateTopology, MaskedTopology, TopologyDesign};
+use crate::util::rng::{fnv1a, named_stream};
+use crate::util::Rng64;
+
+/// Overlay degree cap for warm-search chord moves (ring contributes 2,
+/// chords the rest) — mirrors `mgfl optimize`'s default `max_degree`.
+const ADAPT_MAX_DEGREE: usize = 3;
+
+/// Proposal attempts allowed per budgeted evaluation before a warm
+/// search gives up on finding valid moves (tiny surviving networks can
+/// reject every reorder).
+const ATTEMPTS_PER_EVAL: usize = 8;
+
+/// What to do at a segment boundary whose up-mask changed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptPolicy {
+    /// Keep the static base topology (PR 9 behavior, bit-for-bit).
+    None,
+    /// Re-run the paper pipeline (Christofides ring → Algorithms 1–2)
+    /// over the surviving silos.
+    Rebuild,
+    /// Warm-started hill climb from the previous segment's genome,
+    /// bounded by [`AdaptSpec::budget`] and [`AdaptSpec::deadline_ms`].
+    Warm,
+}
+
+impl AdaptPolicy {
+    /// The spec-file token for this policy.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdaptPolicy::None => "none",
+            AdaptPolicy::Rebuild => "rebuild",
+            AdaptPolicy::Warm => "warm",
+        }
+    }
+
+    /// Parse a spec-file token (`none` | `rebuild` | `warm`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "none" => Ok(AdaptPolicy::None),
+            "rebuild" => Ok(AdaptPolicy::Rebuild),
+            "warm" => Ok(AdaptPolicy::Warm),
+            other => anyhow::bail!("unknown adapt policy '{other}' (none|rebuild|warm)"),
+        }
+    }
+
+    /// Whether this policy ever re-plans (everything except `none`).
+    pub fn is_active(&self) -> bool {
+        !matches!(self, AdaptPolicy::None)
+    }
+}
+
+/// One cell's resolved adaptation configuration: the policy plus the
+/// shared knobs of the `[adapt]` sweep section.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdaptSpec {
+    /// Boundary policy.
+    pub policy: AdaptPolicy,
+    /// Fitness evaluations allowed per re-planned boundary (`warm`
+    /// only; evaluating the warm start costs 1). A zero budget cannot
+    /// evaluate anything and falls back to `rebuild` at every
+    /// boundary — the deterministic way to exercise the ladder.
+    pub budget: usize,
+    /// Wall-clock deadline per boundary, ms; 0 disables. **A firing
+    /// deadline makes results host-dependent** — committed specs keep 0.
+    pub deadline_ms: u64,
+    /// Rounds frozen on the outgoing topology while a new overlay
+    /// "deploys" (clamped to the segment length).
+    pub freeze_rounds: usize,
+    /// Rounds of the masked-tracker fitness probe per candidate.
+    pub eval_rounds: usize,
+}
+
+impl Default for AdaptSpec {
+    fn default() -> Self {
+        AdaptSpec {
+            policy: AdaptPolicy::None,
+            budget: 48,
+            deadline_ms: 0,
+            freeze_rounds: 4,
+            eval_rounds: 80,
+        }
+    }
+}
+
+impl AdaptSpec {
+    /// Canonical serialization — the store-key/fingerprint preimage.
+    pub fn canonical_string(&self) -> String {
+        format!(
+            "policy={};budget={};deadline_ms={};freeze={};eval={}",
+            self.policy.as_str(),
+            self.budget,
+            self.deadline_ms,
+            self.freeze_rounds,
+            self.eval_rounds
+        )
+    }
+
+    /// FNV-1a fingerprint of [`Self::canonical_string`]. Joins
+    /// [`crate::sweep::CellFingerprint`] and the store cell key for
+    /// active policies, so adaptive cells never cross-hit static ones.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a(self.canonical_string().as_bytes())
+    }
+
+    /// Whether this spec re-plans at boundaries (policy ≠ `none`).
+    pub fn is_active(&self) -> bool {
+        self.policy.is_active()
+    }
+
+    /// Range checks for spec-file input.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.eval_rounds >= 1, "[adapt] eval_rounds must be >= 1");
+        Ok(())
+    }
+}
+
+/// The warm-search genome over one segment's survivors: a ring of
+/// *global* up-silo ids plus chord pairs (global, `u < v`, both up).
+/// `t` is not searched — the cell's own `t` carries over, keeping the
+/// per-boundary budget spent on the overlay.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct AdaptGenome {
+    order: Vec<usize>,
+    chords: Vec<(usize, usize)>,
+}
+
+impl AdaptGenome {
+    /// Whether normalized `(u, v)` is a ring edge of `order`.
+    fn has_ring_pair(&self, u: usize, v: usize) -> bool {
+        let k = self.order.len();
+        (0..k).any(|i| {
+            let (a, b) = (self.order[i], self.order[(i + 1) % k]);
+            (a.min(b), a.max(b)) == (u, v)
+        })
+    }
+
+    /// Overlay degree of every *up* silo (ring 2 each, chords 1 per
+    /// endpoint), keyed by global id.
+    fn degrees(&self, n: usize) -> Vec<usize> {
+        let mut deg = vec![0usize; n];
+        let k = self.order.len();
+        for i in 0..k {
+            deg[self.order[i]] += 1;
+            deg[self.order[(i + 1) % k]] += 1;
+        }
+        for &(u, v) in &self.chords {
+            deg[u] += 1;
+            deg[v] += 1;
+        }
+        deg
+    }
+}
+
+/// The paper-design genome over the survivors: Christofides ring on the
+/// surviving sub-connectivity (the `remove_silos` idiom), no chords.
+fn rebuild_genome(net: &NetworkSpec, profile: &DatasetProfile, up_ids: &[usize]) -> AdaptGenome {
+    let conn = net.connectivity_dense(profile);
+    let sub = DenseGraph::from_fn(up_ids.len(), |a, b| conn.weight(up_ids[a], up_ids[b]));
+    let cycle = christofides_cycle_dense(&sub);
+    AdaptGenome { order: cycle.into_iter().map(|i| up_ids[i]).collect(), chords: Vec::new() }
+}
+
+/// Project the previous segment's genome onto a new up-set: survivors
+/// keep their relative ring order, rejoined silos append in index
+/// order, chords keep only up-up pairs that are not ring edges of the
+/// projected ring.
+fn project_genome(prev: &AdaptGenome, up: &[bool], up_ids: &[usize]) -> AdaptGenome {
+    let mut order: Vec<usize> = prev.order.iter().copied().filter(|&s| up[s]).collect();
+    for &s in up_ids {
+        if !order.contains(&s) {
+            order.push(s);
+        }
+    }
+    let mut g = AdaptGenome { order, chords: Vec::new() };
+    let mut chords: Vec<(usize, usize)> = prev
+        .chords
+        .iter()
+        .copied()
+        .filter(|&(u, v)| up[u] && up[v] && !g.has_ring_pair(u, v))
+        .collect();
+    chords.sort_unstable();
+    chords.dedup();
+    g.chords = chords;
+    g
+}
+
+/// Materialize a genome into a full-`n` connected overlay: ring edges
+/// over consecutive order pairs (a 2-silo ring is a single edge),
+/// chords, and every *down* silo attached to its cheapest up anchor
+/// (min Eq. 3 weight, ties to the lowest index) so
+/// [`CandidateTopology`] can run the paper pipeline over the whole
+/// network. The anchor edges are masked out at run time — they exist
+/// only so Algorithms 1–2 see a connected overlay.
+fn materialize_overlay(
+    g: &AdaptGenome,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    up: &[bool],
+) -> Graph {
+    let mut ov = Graph::new(net.n());
+    let k = g.order.len();
+    for i in 0..k {
+        if k == 2 && i == 1 {
+            break; // 2-node ring is a single edge, not a double edge
+        }
+        let (a, b) = (g.order[i], g.order[(i + 1) % k]);
+        ov.add_edge(a, b, net.conn_weight(profile, a, b));
+    }
+    for &(u, v) in &g.chords {
+        ov.add_edge(u, v, net.conn_weight(profile, u, v));
+    }
+    for d in 0..net.n() {
+        if up[d] {
+            continue;
+        }
+        let anchor = g
+            .order
+            .iter()
+            .copied()
+            .map(|u| (net.conn_weight(profile, d, u), u))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+            .expect("planned segments have at least 2 up silos");
+        ov.add_edge(d, anchor.1, anchor.0);
+    }
+    ov
+}
+
+/// Mean τ of a short masked single-phase tracker run over the
+/// survivors — the warm search's fitness. Runs at scale 1.0 (capacity
+/// shifts rescale candidates near-uniformly, so they cannot change the
+/// ranking enough to buy their cost here).
+fn eval_genome(
+    g: &AdaptGenome,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    t: u32,
+    up: &[bool],
+    eval_rounds: usize,
+) -> f64 {
+    let ov = materialize_overlay(g, net, profile, up);
+    let mut topos: Vec<Box<dyn TopologyDesign>> =
+        vec![Box::new(CandidateTopology::new(ov, net, profile, t))];
+    let phase =
+        SplicedPhase { topo: 0, offset: 0, up: up.to_vec(), scale: 1.0, len: eval_rounds };
+    let (tau, _) = run_spliced(&mut topos, std::slice::from_ref(&phase), net, profile);
+    tau.iter().sum::<f64>() / tau.len() as f64
+}
+
+/// Propose one mutation: `two_opt` / `or_opt` ring reorders (invalid on
+/// rings too small to reorder), `chord_add` under the degree cap,
+/// `chord_drop`. Returns `None` for invalid draws — the search treats
+/// that as a skipped attempt. Draw counts per arm are fixed, so the
+/// stream stays deterministic.
+fn propose_adapt(g: &AdaptGenome, rng: &mut Rng64, n: usize) -> Option<AdaptGenome> {
+    let k = g.order.len();
+    let kinds = ["two_opt", "or_opt", "chord_add", "chord_drop"];
+    let kind = kinds[rng.gen_range(0, kinds.len())];
+    let mut out = g.clone();
+    match kind {
+        "two_opt" => {
+            if k < 4 {
+                return None;
+            }
+            let i = rng.gen_range(1, k - 1);
+            let j = rng.gen_range(i + 1, k);
+            out.order[i..=j].reverse();
+        }
+        "or_opt" => {
+            if k < 3 {
+                return None;
+            }
+            let i = rng.gen_range(1, k);
+            let j = rng.gen_range(1, k);
+            let node = out.order.remove(i);
+            let pos = j.min(out.order.len());
+            out.order.insert(pos, node);
+        }
+        "chord_add" => {
+            if k < 4 {
+                return None; // every pair of a <4-ring is a ring edge
+            }
+            let a = rng.gen_range(0, k);
+            let b = rng.gen_range(0, k);
+            let (u, v) = (g.order[a], g.order[b]);
+            if u == v {
+                return None;
+            }
+            let (u, v) = (u.min(v), u.max(v));
+            if out.has_ring_pair(u, v) || out.chords.contains(&(u, v)) {
+                return None;
+            }
+            let deg = out.degrees(n);
+            if deg[u] >= ADAPT_MAX_DEGREE || deg[v] >= ADAPT_MAX_DEGREE {
+                return None;
+            }
+            out.chords.push((u, v));
+            out.chords.sort_unstable();
+        }
+        "chord_drop" => {
+            if out.chords.is_empty() {
+                return None;
+            }
+            let i = rng.gen_range(0, out.chords.len());
+            out.chords.remove(i);
+        }
+        _ => unreachable!("kind drawn from the kinds list"),
+    }
+    Some(out)
+}
+
+/// Warm-started greedy hill climb over one boundary's survivors.
+/// Returns `None` when the budget is zero or the deadline fires before
+/// the warm start itself is evaluated — the caller falls back to
+/// rebuild. RNG stream: `adapt/<policy>/seg/<segment index>` off the
+/// *scenario* seed, so deterministic-topology adaptive cells stay
+/// identical across the sweep's seed axis.
+#[allow(clippy::too_many_arguments)]
+fn warm_search(
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    t: u32,
+    up: &[bool],
+    up_ids: &[usize],
+    seg_idx: usize,
+    sc_seed: u64,
+    spec: &AdaptSpec,
+    prev: Option<&AdaptGenome>,
+    rebuild: AdaptGenome,
+    metrics: &mut AdaptMetrics,
+) -> Option<AdaptGenome> {
+    if spec.budget == 0 {
+        return None;
+    }
+    let deadline = (spec.deadline_ms > 0)
+        .then(|| Instant::now() + Duration::from_millis(spec.deadline_ms));
+    let past_deadline = |d: &Option<Instant>| d.map_or(false, |d| Instant::now() >= d);
+    if past_deadline(&deadline) {
+        return None;
+    }
+    let label = format!("adapt/{}/seg/{}", spec.policy.as_str(), seg_idx);
+    let mut rng = Rng64::seed_from_u64(named_stream(sc_seed, &label));
+    let start = match prev {
+        Some(p) => project_genome(p, up, up_ids),
+        None => rebuild,
+    };
+    let mut best_fit = eval_genome(&start, net, profile, t, up, spec.eval_rounds);
+    let mut best = start;
+    let mut evals = 1usize;
+    let max_attempts = spec.budget.saturating_mul(ATTEMPTS_PER_EVAL);
+    let mut attempts = 0usize;
+    while evals < spec.budget && attempts < max_attempts && !past_deadline(&deadline) {
+        attempts += 1;
+        if let Some(cand) = propose_adapt(&best, &mut rng, net.n()) {
+            let fit = eval_genome(&cand, net, profile, t, up, spec.eval_rounds);
+            evals += 1;
+            if fit < best_fit {
+                best_fit = fit;
+                best = cand;
+            }
+        }
+    }
+    metrics.evals_spent += evals;
+    Some(best)
+}
+
+/// Plan one boundary's replacement topology, walking the fallback
+/// ladder (warm → rebuild → `None` = masked static base). Every step
+/// down increments `metrics.fallbacks`.
+#[allow(clippy::too_many_arguments)]
+fn plan_segment_topology(
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    t: u32,
+    up: &[bool],
+    seg_idx: usize,
+    sc_seed: u64,
+    spec: &AdaptSpec,
+    prev: Option<&AdaptGenome>,
+    metrics: &mut AdaptMetrics,
+) -> Option<(Box<dyn TopologyDesign>, AdaptGenome)> {
+    let up_ids: Vec<usize> =
+        up.iter().enumerate().filter(|&(_, &u)| u).map(|(i, _)| i).collect();
+    if up_ids.len() < 2 {
+        // Invalid segment network: nothing to plan on.
+        metrics.fallbacks += 1;
+        return None;
+    }
+    let rebuild = rebuild_genome(net, profile, &up_ids);
+    let genome = if spec.policy == AdaptPolicy::Warm {
+        match warm_search(
+            net, profile, t, up, &up_ids, seg_idx, sc_seed, spec, prev, rebuild.clone(), metrics,
+        ) {
+            Some(g) => g,
+            None => {
+                metrics.fallbacks += 1;
+                rebuild
+            }
+        }
+    } else {
+        rebuild
+    };
+    let overlay = materialize_overlay(&genome, net, profile, up);
+    if !overlay.is_connected() {
+        // Structurally invalid rebuild: fall to the masked static base.
+        metrics.fallbacks += 1;
+        return None;
+    }
+    Some((Box::new(CandidateTopology::new(overlay, net, profile, t)), genome))
+}
+
+/// A fully planned adaptive run: the topology table, the spliced phase
+/// sequence covering `0..rounds`, and the accounting.
+struct Planned {
+    topos: Vec<Box<dyn TopologyDesign>>,
+    phases: Vec<SplicedPhase>,
+    metrics: AdaptMetrics,
+}
+
+/// The deterministic adaptation planner. Segment 0 always runs the
+/// static base at PR 9's global offset; later boundaries whose mask is
+/// unchanged continue the current topology; changed masks under an
+/// active policy freeze, re-plan, and splice. Shared verbatim by the
+/// engine and the oracle, so both step identical phases.
+fn plan_adaptation(
+    base: Box<dyn TopologyDesign>,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    t: u32,
+    tl: &Timeline,
+    sc_seed: u64,
+    spec: &AdaptSpec,
+) -> Planned {
+    let mut topos: Vec<Box<dyn TopologyDesign>> = vec![base];
+    let mut phases: Vec<SplicedPhase> = Vec::new();
+    let mut metrics = AdaptMetrics {
+        policy: spec.policy.as_str().to_string(),
+        replans: 0,
+        fallbacks: 0,
+        evals_spent: 0,
+        freeze_rounds: 0,
+    };
+    // Current topology: table index plus activation round (`None` =
+    // the base, which keeps PR 9's global-round schedule offset).
+    let mut cur = 0usize;
+    let mut cur_origin: Option<usize> = None;
+    let mut cur_genome: Option<AdaptGenome> = None;
+    let offset_for = |origin: Option<usize>, start: usize| match origin {
+        None => start,
+        Some(g0) => start - g0,
+    };
+    for (i, seg) in tl.segments.iter().enumerate() {
+        let mask_changed = i > 0 && seg.up != tl.segments[i - 1].up;
+        if !spec.policy.is_active() || !mask_changed {
+            phases.push(SplicedPhase {
+                topo: cur,
+                offset: offset_for(cur_origin, seg.start),
+                up: seg.up.clone(),
+                scale: seg.scale,
+                len: seg.len,
+            });
+            continue;
+        }
+        let freeze = spec.freeze_rounds.min(seg.len);
+        if freeze > 0 {
+            phases.push(SplicedPhase {
+                topo: cur,
+                offset: offset_for(cur_origin, seg.start),
+                up: seg.up.clone(),
+                scale: seg.scale,
+                len: freeze,
+            });
+            metrics.freeze_rounds += freeze;
+        }
+        match plan_segment_topology(
+            net,
+            profile,
+            t,
+            &seg.up,
+            i,
+            sc_seed,
+            spec,
+            cur_genome.as_ref(),
+            &mut metrics,
+        ) {
+            Some((topo, genome)) => {
+                topos.push(topo);
+                cur = topos.len() - 1;
+                cur_origin = Some(seg.start + freeze);
+                cur_genome = Some(genome);
+                metrics.replans += 1;
+            }
+            None => {
+                cur = 0;
+                cur_origin = None;
+                cur_genome = None;
+            }
+        }
+        if seg.len > freeze {
+            phases.push(SplicedPhase {
+                topo: cur,
+                offset: offset_for(cur_origin, seg.start + freeze),
+                up: seg.up.clone(),
+                scale: seg.scale,
+                len: seg.len - freeze,
+            });
+        }
+    }
+    Planned { topos, phases, metrics }
+}
+
+/// The adaptive scenario engine: plan, splice, step, finalize. The
+/// summary's topology name is the *base* design's (the policy column
+/// distinguishes adaptive rows); engine kind is always `Streaming`
+/// (spliced schedules are aperiodic by construction). With
+/// `policy = "none"` this is bitwise the PR 9 masked tracker.
+pub fn simulate_summary_adaptive(
+    base: Box<dyn TopologyDesign>,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+    sc: &ScenarioSpec,
+    spec: &AdaptSpec,
+    t: u32,
+) -> Result<(SimSummary, EngineStats), String> {
+    assert!(rounds > 0);
+    let name = base.name().to_string();
+    let tl = build_timeline(sc, net, rounds)?;
+    let mut planned = plan_adaptation(base, net, profile, t, &tl, sc.seed, spec);
+    let (tau, iso) = run_spliced(&mut planned.topos, &planned.phases, net, profile);
+    let (mut summary, stats) = finalize(
+        name,
+        net,
+        profile,
+        rounds,
+        &tl,
+        tau,
+        iso,
+        EngineKind::Streaming,
+        None,
+        None,
+    );
+    if spec.is_active() {
+        if let Some(m) = summary.scenario.as_mut() {
+            m.adapt = Some(planned.metrics);
+        }
+    }
+    Ok((summary, stats))
+}
+
+/// The naive spliced oracle: identical planning (shared
+/// `plan_adaptation`), but the phases are stepped by an independent
+/// plain loop — fresh [`MaskedTopology`] per phase, allocating `plan`
+/// calls, its own hashed pair state — performing the same f64
+/// operations in the same order as the engine's factored-out
+/// [`run_spliced`] path. Every adaptive output is pinned bitwise
+/// against this.
+pub fn simulate_summary_adaptive_oracle(
+    base: Box<dyn TopologyDesign>,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    rounds: usize,
+    sc: &ScenarioSpec,
+    spec: &AdaptSpec,
+    t: u32,
+) -> Result<(SimSummary, EngineStats), String> {
+    assert!(rounds > 0);
+    let name = base.name().to_string();
+    let tl = build_timeline(sc, net, rounds)?;
+    let mut planned = plan_adaptation(base, net, profile, t, &tl, sc.seed, spec);
+
+    let floor = profile.u as f64 * profile.t_c_ms;
+    // (base_d0, backlog) per normalized pair, carried across phases.
+    let mut state: HashMap<(usize, usize), (f64, f64)> = HashMap::new();
+    let mut tau_series = Vec::with_capacity(rounds);
+    let mut iso_series = Vec::with_capacity(rounds);
+    for ph in &planned.phases {
+        let mut masked = MaskedTopology::new(planned.topos[ph.topo].as_mut(), ph.offset, &ph.up);
+        for r in 0..ph.len {
+            let plan = masked.plan(r);
+            let degrees = plan.degrees();
+            let mut tau = floor;
+            for &(u, v, ty) in &plan.edges {
+                let key = if u <= v { (u, v) } else { (v, u) };
+                let st = state.entry(key).or_insert_with(|| {
+                    let d0 = pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]);
+                    (d0, d0 * ph.scale)
+                });
+                if ty == EdgeType::Strong {
+                    tau = tau.max(floor.max(st.1));
+                }
+            }
+            for &(u, v, ty) in &plan.edges {
+                let key = if u <= v { (u, v) } else { (v, u) };
+                let st = state.get_mut(&key).unwrap();
+                match ty {
+                    EdgeType::Strong => st.1 = st.0 * ph.scale,
+                    EdgeType::Weak => st.1 = (st.1 - tau).max(floor),
+                }
+            }
+            tau_series.push(tau);
+            iso_series.push(plan.isolated_nodes().len() as u32);
+        }
+    }
+
+    let (mut summary, stats) = finalize(
+        name,
+        net,
+        profile,
+        rounds,
+        &tl,
+        tau_series,
+        iso_series,
+        EngineKind::Streaming,
+        None,
+        None,
+    );
+    if spec.is_active() {
+        if let Some(m) = summary.scenario.as_mut() {
+            m.adapt = Some(planned.metrics);
+        }
+    }
+    Ok((summary, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::zoo;
+    use crate::simtime::simulate_summary_scenario_naive;
+    use crate::topo::MultigraphTopology;
+
+    fn gaia() -> (NetworkSpec, DatasetProfile) {
+        (zoo::gaia(), DatasetProfile::femnist())
+    }
+
+    fn base(net: &NetworkSpec, prof: &DatasetProfile) -> Box<dyn TopologyDesign> {
+        Box::new(MultigraphTopology::from_network(net, prof, 5))
+    }
+
+    fn churn() -> ScenarioSpec {
+        ScenarioSpec::from_event_strs(
+            9,
+            &[
+                "leave@40:silo=3",
+                "rejoin@80:silo=3",
+                "scale@100:factor=1.5",
+                "outage@200:frac=0.3:dur=50",
+                "scale@300:factor=1.0",
+            ],
+        )
+        .unwrap()
+    }
+
+    fn strip_adapt(mut s: SimSummary) -> SimSummary {
+        if let Some(m) = s.scenario.as_mut() {
+            m.adapt = None;
+        }
+        s
+    }
+
+    #[test]
+    fn policy_none_is_bitwise_the_pr9_tracker() {
+        let (net, prof) = gaia();
+        let sc = churn();
+        let spec = AdaptSpec::default();
+        assert!(!spec.is_active());
+        let (got, stats) =
+            simulate_summary_adaptive(base(&net, &prof), &net, &prof, 400, &sc, &spec, 5)
+                .unwrap();
+        assert_eq!(stats.kind, EngineKind::Streaming);
+        let mut b = MultigraphTopology::from_network(&net, &prof, 5);
+        let want = simulate_summary_scenario_naive(&mut b, &net, &prof, 400, &sc).unwrap();
+        assert_eq!(got.total_ms.to_bits(), want.total_ms.to_bits());
+        assert_eq!(got.scenario, want.scenario, "no adapt block under policy none");
+    }
+
+    #[test]
+    fn zero_budget_warm_equals_rebuild_and_records_fallbacks() {
+        let (net, prof) = gaia();
+        let sc = churn();
+        let warm0 = AdaptSpec { policy: AdaptPolicy::Warm, budget: 0, ..Default::default() };
+        let rebuild = AdaptSpec { policy: AdaptPolicy::Rebuild, ..Default::default() };
+        let (w, _) =
+            simulate_summary_adaptive(base(&net, &prof), &net, &prof, 400, &sc, &warm0, 5)
+                .unwrap();
+        let (r, _) =
+            simulate_summary_adaptive(base(&net, &prof), &net, &prof, 400, &sc, &rebuild, 5)
+                .unwrap();
+        let wm = w.scenario.as_ref().unwrap().adapt.clone().unwrap();
+        let rm = r.scenario.as_ref().unwrap().adapt.clone().unwrap();
+        assert_eq!(wm.policy, "warm");
+        assert_eq!(rm.policy, "rebuild");
+        assert!(wm.fallbacks > 0, "zero budget must fall down the ladder");
+        assert_eq!(rm.fallbacks, 0);
+        assert_eq!(wm.replans, rm.replans);
+        assert_eq!(wm.evals_spent, 0);
+        assert_eq!(
+            strip_adapt(w).total_ms.to_bits(),
+            strip_adapt(r).total_ms.to_bits(),
+            "zero-budget warm must equal rebuild bitwise"
+        );
+    }
+
+    #[test]
+    fn engine_matches_oracle_bitwise_for_every_policy() {
+        let (net, prof) = gaia();
+        let sc = churn();
+        for policy in [AdaptPolicy::None, AdaptPolicy::Rebuild, AdaptPolicy::Warm] {
+            let spec = AdaptSpec { policy, budget: 12, eval_rounds: 30, ..Default::default() };
+            let (a, sa) =
+                simulate_summary_adaptive(base(&net, &prof), &net, &prof, 300, &sc, &spec, 5)
+                    .unwrap();
+            let (b, sb) = simulate_summary_adaptive_oracle(
+                base(&net, &prof),
+                &net,
+                &prof,
+                300,
+                &sc,
+                &spec,
+                5,
+            )
+            .unwrap();
+            assert_eq!(sa.kind, sb.kind);
+            assert_eq!(a.total_ms.to_bits(), b.total_ms.to_bits(), "{policy:?}");
+            assert_eq!(a.scenario, b.scenario, "{policy:?}: metrics must agree exactly");
+        }
+    }
+
+    #[test]
+    fn warm_replans_and_spends_budget_deterministically() {
+        let (net, prof) = gaia();
+        let sc = churn();
+        let spec =
+            AdaptSpec { policy: AdaptPolicy::Warm, budget: 16, eval_rounds: 40, ..Default::default() };
+        let run = || {
+            simulate_summary_adaptive(base(&net, &prof), &net, &prof, 400, &sc, &spec, 5)
+                .unwrap()
+                .0
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.total_ms.to_bits(), b.total_ms.to_bits());
+        let m = a.scenario.as_ref().unwrap().adapt.clone().unwrap();
+        assert!(m.replans >= 3, "churn() changes the mask at several boundaries: {m:?}");
+        assert!(m.evals_spent >= m.replans, "each replan evaluates at least the start");
+        assert!(m.freeze_rounds > 0, "reconfiguration is never free");
+        assert_eq!(a.scenario, b.scenario);
+    }
+
+    #[test]
+    fn adapt_spec_fingerprint_splits_on_every_knob() {
+        let a = AdaptSpec { policy: AdaptPolicy::Warm, ..Default::default() };
+        let mut b = a.clone();
+        b.budget += 1;
+        let mut c = a.clone();
+        c.freeze_rounds += 1;
+        let mut d = a.clone();
+        d.policy = AdaptPolicy::Rebuild;
+        let mut e = a.clone();
+        e.eval_rounds += 1;
+        for (x, tag) in [(&b, "budget"), (&c, "freeze"), (&d, "policy"), (&e, "eval")] {
+            assert_ne!(a.fingerprint(), x.fingerprint(), "{tag} must split the fingerprint");
+        }
+        assert_eq!(AdaptPolicy::parse("warm").unwrap(), AdaptPolicy::Warm);
+        assert!(AdaptPolicy::parse("frob").is_err());
+    }
+}

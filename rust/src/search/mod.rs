@@ -20,14 +20,18 @@
 //! keys ⇒ equal fitness bits), so thread count and scheduling never
 //! change a single reported byte (`tests/search_determinism.rs`).
 
+pub mod adapt;
 pub mod genome;
 pub mod spec;
 
+pub use adapt::{
+    simulate_summary_adaptive, simulate_summary_adaptive_oracle, AdaptPolicy, AdaptSpec,
+};
 pub use genome::{propose, random_genome, Genome};
 pub use spec::{OptimizeSpec, StrategyKind};
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -349,6 +353,9 @@ pub struct ChainResult {
     pub best_fitness_ms: f64,
     /// Accepted-move trace, beginning with the `start` marker.
     pub trace: Vec<ChainStep>,
+    /// True when the chain stopped at the wall-clock deadline before
+    /// consuming its full step budget ([`OptimizeSpec::deadline_ms`]).
+    pub exhausted: bool,
 }
 
 /// A chain driver: consumes `steps` proposals from the chain's own RNG
@@ -358,14 +365,26 @@ pub trait SearchStrategy: Sync {
     /// Spec/report spelling of the strategy.
     fn name(&self) -> &'static str;
 
-    /// Run chain `chain` from `start` to completion.
+    /// Run chain `chain` from `start` to completion — or until
+    /// `deadline` passes, whichever comes first. A deadline stop is
+    /// graceful: the chain keeps everything accepted so far and marks
+    /// [`ChainResult::exhausted`]. `None` (the `deadline_ms = 0`
+    /// default) never stops early, preserving the pure-function-of-spec
+    /// determinism contract.
     fn run_chain(
         &self,
         chain: usize,
         start: Genome,
         ev: &Evaluator<'_>,
         spec: &OptimizeSpec,
+        deadline: Option<Instant>,
     ) -> ChainResult;
+}
+
+/// True once `deadline` (if any) has passed. Checked between proposal
+/// steps so a stop never tears a half-evaluated transition.
+fn past_deadline(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
 }
 
 /// The chain's deterministic RNG: stream `"optimize/chain/{c}"` of the
@@ -390,6 +409,7 @@ impl SearchStrategy for HillClimb {
         start: Genome,
         ev: &Evaluator<'_>,
         spec: &OptimizeSpec,
+        deadline: Option<Instant>,
     ) -> ChainResult {
         let n = start.order.len();
         let mut rng = chain_rng(spec, chain);
@@ -400,7 +420,12 @@ impl SearchStrategy for HillClimb {
         let mut f_best = f_cur;
         let mut trace = vec![ChainStep { step: 0, mv: "start", fitness_ms: f_cur }];
         let mut stall = 0usize;
+        let mut exhausted = false;
         for step in 1..=spec.steps {
+            if past_deadline(deadline) {
+                exhausted = true;
+                break;
+            }
             let Some((g, mv)) = propose(&cur, &mut rng, n, spec) else {
                 continue;
             };
@@ -428,7 +453,15 @@ impl SearchStrategy for HillClimb {
                 }
             }
         }
-        ChainResult { chain, start, start_fitness_ms, best, best_fitness_ms: f_best, trace }
+        ChainResult {
+            chain,
+            start,
+            start_fitness_ms,
+            best,
+            best_fitness_ms: f_best,
+            trace,
+            exhausted,
+        }
     }
 }
 
@@ -449,6 +482,7 @@ impl SearchStrategy for Anneal {
         start: Genome,
         ev: &Evaluator<'_>,
         spec: &OptimizeSpec,
+        deadline: Option<Instant>,
     ) -> ChainResult {
         let n = start.order.len();
         let mut rng = chain_rng(spec, chain);
@@ -459,7 +493,12 @@ impl SearchStrategy for Anneal {
         let mut f_best = f_cur;
         let mut trace = vec![ChainStep { step: 0, mv: "start", fitness_ms: f_cur }];
         let mut temp = spec.anneal_t0;
+        let mut exhausted = false;
         for step in 1..=spec.steps {
+            if past_deadline(deadline) {
+                exhausted = true;
+                break;
+            }
             temp *= spec.anneal_alpha;
             let Some((g, mv)) = propose(&cur, &mut rng, n, spec) else {
                 continue;
@@ -476,7 +515,15 @@ impl SearchStrategy for Anneal {
                 }
             }
         }
-        ChainResult { chain, start, start_fitness_ms, best, best_fitness_ms: f_best, trace }
+        ChainResult {
+            chain,
+            start,
+            start_fitness_ms,
+            best,
+            best_fitness_ms: f_best,
+            trace,
+            exhausted,
+        }
     }
 }
 
@@ -572,6 +619,7 @@ pub fn run_with_store(
             cell_seed: cell_stream(spec.seed, kind, &spec.network, &spec.profile, spec.baseline_t),
             rounds: spec.rounds,
             scenario: None,
+            adapt: None,
         })
         .collect();
     let mut aux_store_hits = 0usize;
@@ -638,9 +686,15 @@ pub fn run_with_store(
     // opening fitness() call becomes a cache hit. Values are bit-equal
     // to the solo path, so chain trajectories are unchanged.
     let _ = ev.fitness_batch(&starts);
+    // The wall-clock deadline (if any) covers the whole search, not
+    // each chain: every chain races the same instant, measured from
+    // run start so baseline time counts against the budget too.
+    let deadline =
+        (spec.deadline_ms > 0).then(|| t0 + Duration::from_millis(spec.deadline_ms));
     let inner = RunOptions { threads: opts.threads, progress: false, dedup: true };
-    let results: Vec<ChainResult> =
-        run_cells(&starts, &inner, |i, start| strategy.run_chain(i, start.clone(), &ev, &spec));
+    let results: Vec<ChainResult> = run_cells(&starts, &inner, |i, start| {
+        strategy.run_chain(i, start.clone(), &ev, &spec, deadline)
+    });
     let threads = crate::sweep::effective_threads(opts.threads, starts.len());
 
     // Winner: minimum best fitness, first chain wins ties.
@@ -717,6 +771,7 @@ pub fn run_with_store(
         improvement_pct,
         unique_evals: ev.unique_evals(),
         cache_hits: ev.cache_hits(),
+        budget_exhausted: results.iter().any(|r| r.exhausted),
     };
     Ok(SearchOutcome {
         report,
@@ -757,6 +812,30 @@ mod tests {
         // Hill-climbing only ever improves, so the winner can't lose.
         assert!(r.best.mean_cycle_ms <= r.baselines[0].mean_cycle_ms);
         assert!(r.improvement_pct >= 0.0);
+        assert!(!r.budget_exhausted, "no deadline: the full step budget ran");
+    }
+
+    #[test]
+    fn an_expired_deadline_stops_chains_gracefully() {
+        let net = zoo::gaia();
+        let p = DatasetProfile::femnist();
+        let spec = tiny_spec();
+        let ev = Evaluator::new(&net, &p, spec.rounds);
+        let start = paper_start(&net, &p, &spec);
+
+        // A deadline that has already passed: both strategies keep the
+        // start marker, spend zero proposals, and flag exhaustion.
+        for strategy in [&HillClimb as &dyn SearchStrategy, &Anneal] {
+            let r = strategy.run_chain(0, start.clone(), &ev, &spec, Some(Instant::now()));
+            assert!(r.exhausted, "{}: expired deadline must stop the chain", strategy.name());
+            assert_eq!(r.trace.len(), 1, "{}: only the start marker", strategy.name());
+            assert_eq!(r.best_fitness_ms.to_bits(), r.start_fitness_ms.to_bits());
+        }
+
+        // No deadline (the deadline_ms = 0 default) never exhausts.
+        let r = HillClimb.run_chain(0, start, &ev, &spec, None);
+        assert!(!r.exhausted);
+        assert!(r.trace.len() > 1, "the tiny spec accepts at least one move");
     }
 
     #[test]

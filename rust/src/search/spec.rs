@@ -86,6 +86,14 @@ pub struct OptimizeSpec {
     /// MATCHA communication budgets to probe alongside the search
     /// (reported for comparison; never a search winner).
     pub matcha_budgets: Vec<f64>,
+    /// Wall-clock budget for the whole run, ms; 0 disables. When the
+    /// deadline passes, chains stop proposing at their next step and
+    /// finish gracefully with the best genome found so far, and the
+    /// report records `budget_exhausted = true`. **A firing deadline
+    /// makes which step stops host-dependent**, so the trimmed trace —
+    /// unlike every other artifact field — is not reproducible across
+    /// machines; committed specs keep 0.
+    pub deadline_ms: u64,
 }
 
 impl Default for OptimizeSpec {
@@ -107,6 +115,7 @@ impl Default for OptimizeSpec {
             anneal_t0: 2.0,
             anneal_alpha: 0.995,
             matcha_budgets: Vec::new(),
+            deadline_ms: 0,
         }
     }
 }
@@ -271,6 +280,10 @@ impl OptimizeSpec {
                         .collect::<Result<_, _>>()
                         .with_context(|| ctx(key))?
                 }
+                "deadline_ms" => {
+                    spec.deadline_ms =
+                        one(&items, key, lineno)?.parse().with_context(|| ctx(key))?
+                }
                 other => bail!("line {}: unknown optimize key '{other}'", lineno + 1),
             }
         }
@@ -284,7 +297,7 @@ impl OptimizeSpec {
             "name = \"{}\"\nnetwork = \"{}\"\nprofile = \"{}\"\nrounds = {}\nseed = {}\n\
              strategy = \"{}\"\nchains = {}\nsteps = {}\nrestart_after = {}\n\
              t_min = {}\nt_max = {}\nbaseline_t = {}\nmax_degree = {}\n\
-             anneal_t0 = {}\nanneal_alpha = {}\nmatcha_budgets = [{}]\n",
+             anneal_t0 = {}\nanneal_alpha = {}\nmatcha_budgets = [{}]\ndeadline_ms = {}\n",
             self.name,
             self.network,
             self.profile,
@@ -301,6 +314,7 @@ impl OptimizeSpec {
             self.anneal_t0,
             self.anneal_alpha,
             budgets.join(", "),
+            self.deadline_ms,
         )
     }
 }
@@ -326,6 +340,7 @@ mod tests {
             t_min: 2,
             t_max: 7,
             matcha_budgets: vec![0.3, 0.7],
+            deadline_ms: 1500,
             ..Default::default()
         };
         let back = OptimizeSpec::from_toml_str(&spec.to_toml_string()).unwrap();
@@ -336,6 +351,7 @@ mod tests {
         assert_eq!(back.t_max, 7);
         assert_eq!(back.matcha_budgets, vec![0.3, 0.7]);
         assert_eq!(back.anneal_alpha, spec.anneal_alpha);
+        assert_eq!(back.deadline_ms, 1500);
     }
 
     #[test]

@@ -30,8 +30,9 @@ pub use factored::{
 };
 pub use scenario::{
     build_timeline, run_scenario_batched, run_scenario_compiled, run_scenario_factored,
-    simulate_summary_scenario, simulate_summary_scenario_naive, Event, EventKind, OutageWindow,
-    ScenarioMetrics, ScenarioSpec, Segment, SegmentMetrics, Timeline,
+    run_spliced, simulate_summary_scenario, simulate_summary_scenario_naive, AdaptMetrics, Event,
+    EventKind, OutageWindow, ScenarioMetrics, ScenarioSpec, Segment, SegmentMetrics, SplicedPhase,
+    Timeline,
 };
 
 /// Simulation output for one (topology, network, profile) cell.

@@ -510,6 +510,30 @@ pub struct ScenarioMetrics {
     /// pre-outage segment's maximum (the remaining rounds if it never
     /// does; 0 for outages starting at round 0 or ending past the run).
     pub recovery_rounds: usize,
+    /// Adaptation-loop accounting, present only on cells run under an
+    /// active [`crate::search::adapt`] policy. `None` on every static
+    /// scenario path, which keeps PR 9 outputs (equality, store bytes,
+    /// report artifacts) untouched.
+    pub adapt: Option<AdaptMetrics>,
+}
+
+/// What the adaptation loop spent and where it gave up, accumulated
+/// over every re-planned segment boundary of one cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdaptMetrics {
+    /// Policy that produced this run (`"rebuild"` or `"warm"`).
+    pub policy: String,
+    /// Boundaries where a freshly planned topology was activated.
+    pub replans: usize,
+    /// Boundaries that fell down the graceful-degradation ladder
+    /// (warm search out of budget/deadline → rebuild; rebuild invalid
+    /// → masked static base).
+    pub fallbacks: usize,
+    /// Total fitness evaluations spent across all warm searches.
+    pub evals_spent: usize,
+    /// Total rounds spent frozen on the outgoing topology while a new
+    /// overlay "deploys" (the reconfiguration-cost model).
+    pub freeze_rounds: usize,
 }
 
 /// Per-pair Eq. 4 state under a scenario: the unscaled base d_0 (so
@@ -518,6 +542,57 @@ pub struct ScenarioMetrics {
 struct PairState {
     base_d0: f64,
     backlog: f64,
+}
+
+/// Step one piecewise-static *phase* — a topology under a fixed
+/// (mask, scale) for `len` rounds, with masked plan index `r` mapping
+/// to the inner schedule's round `offset + r` — appending to the shared
+/// τ/isolation series and carrying per-pair Eq. 4 state in `state`.
+///
+/// This is the naive tracker's inner loop, factored out so the PR 9
+/// segment walk ([`run_scenario_tracker`]) and the adaptation layer's
+/// spliced-phase walk ([`run_spliced`]) perform byte-for-byte the same
+/// f64 operations per phase. Pure code motion from the tracker: any
+/// change here moves every scenario engine's bits.
+fn step_phase(
+    topo: &mut dyn TopologyDesign,
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+    offset: usize,
+    up: &[bool],
+    scale: f64,
+    len: usize,
+    state: &mut HashMap<(usize, usize), PairState>,
+    tau_series: &mut Vec<f64>,
+    iso_series: &mut Vec<u32>,
+) {
+    let floor = profile.u as f64 * profile.t_c_ms;
+    let mut masked = MaskedTopology::new(topo, offset, up);
+    for r in 0..len {
+        let plan = masked.plan(r);
+        let degrees = plan.degrees();
+        let mut tau = floor;
+        for &(u, v, ty) in &plan.edges {
+            let key = if u <= v { (u, v) } else { (v, u) };
+            let st = state.entry(key).or_insert_with(|| {
+                let d0 = pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]);
+                PairState { base_d0: d0, backlog: d0 * scale }
+            });
+            if ty == EdgeType::Strong {
+                tau = tau.max(floor.max(st.backlog));
+            }
+        }
+        for &(u, v, ty) in &plan.edges {
+            let key = if u <= v { (u, v) } else { (v, u) };
+            let st = state.get_mut(&key).unwrap();
+            match ty {
+                EdgeType::Strong => st.backlog = st.base_d0 * scale,
+                EdgeType::Weak => st.backlog = (st.backlog - tau).max(floor),
+            }
+        }
+        tau_series.push(tau);
+        iso_series.push(plan.isolated_nodes().len() as u32);
+    }
 }
 
 /// The scenario oracle: a [`MaskedTopology`]-driven mirror of the
@@ -531,38 +606,80 @@ fn run_scenario_tracker(
     profile: &DatasetProfile,
     tl: &Timeline,
 ) -> (Vec<f64>, Vec<u32>) {
-    let floor = profile.u as f64 * profile.t_c_ms;
     let mut state: HashMap<(usize, usize), PairState> = HashMap::new();
     let rounds: usize = tl.segments.iter().map(|s| s.len).sum();
     let mut tau_series = Vec::with_capacity(rounds);
     let mut iso_series = Vec::with_capacity(rounds);
     for seg in &tl.segments {
-        let mut masked = MaskedTopology::new(topo, seg.start, &seg.up);
-        for r in 0..seg.len {
-            let plan = masked.plan(r);
-            let degrees = plan.degrees();
-            let mut tau = floor;
-            for &(u, v, ty) in &plan.edges {
-                let key = if u <= v { (u, v) } else { (v, u) };
-                let st = state.entry(key).or_insert_with(|| {
-                    let d0 = pair_d0_ms(net, profile, u, v, degrees[u], degrees[v]);
-                    PairState { base_d0: d0, backlog: d0 * seg.scale }
-                });
-                if ty == EdgeType::Strong {
-                    tau = tau.max(floor.max(st.backlog));
-                }
-            }
-            for &(u, v, ty) in &plan.edges {
-                let key = if u <= v { (u, v) } else { (v, u) };
-                let st = state.get_mut(&key).unwrap();
-                match ty {
-                    EdgeType::Strong => st.backlog = st.base_d0 * seg.scale,
-                    EdgeType::Weak => st.backlog = (st.backlog - tau).max(floor),
-                }
-            }
-            tau_series.push(tau);
-            iso_series.push(plan.isolated_nodes().len() as u32);
-        }
+        step_phase(
+            topo,
+            net,
+            profile,
+            seg.start,
+            &seg.up,
+            seg.scale,
+            seg.len,
+            &mut state,
+            &mut tau_series,
+            &mut iso_series,
+        );
+    }
+    (tau_series, iso_series)
+}
+
+/// One phase of an adaptive (spliced-schedule) run: which topology to
+/// step, at which schedule offset, under which mask/scale, for how
+/// long. Produced by the adaptation planner
+/// ([`crate::search::adapt`]); consumed by [`run_spliced`].
+#[derive(Debug, Clone)]
+pub struct SplicedPhase {
+    /// Index into the caller's topology table.
+    pub topo: usize,
+    /// Schedule offset: phase round `r` steps the topology's plan at
+    /// `offset + r`. The static base keeps PR 9's global-round offset;
+    /// freshly activated topologies restart at 0.
+    pub offset: usize,
+    /// Per-silo availability during the phase.
+    pub up: Vec<bool>,
+    /// Capacity scale during the phase.
+    pub scale: f64,
+    /// Rounds in the phase.
+    pub len: usize,
+}
+
+/// Step a spliced sequence of phases over a shared topology table,
+/// carrying per-pair Eq. 4 backlog across every phase boundary —
+/// including topology swaps, where pairs present in both overlays keep
+/// their in-flight backlog and new pairs seed from the masked plan
+/// degrees of their first round, exactly as the PR 9 tracker seeds
+/// pairs entering a masked schedule mid-run.
+///
+/// With one topology and phases mirroring the timeline's segments
+/// (offset = segment start), this *is* [`run_scenario_tracker`] —
+/// pinned bitwise by `policy = "none"` tests.
+pub fn run_spliced(
+    topos: &mut [Box<dyn TopologyDesign>],
+    phases: &[SplicedPhase],
+    net: &NetworkSpec,
+    profile: &DatasetProfile,
+) -> (Vec<f64>, Vec<u32>) {
+    let mut state: HashMap<(usize, usize), PairState> = HashMap::new();
+    let rounds: usize = phases.iter().map(|p| p.len).sum();
+    let mut tau_series = Vec::with_capacity(rounds);
+    let mut iso_series = Vec::with_capacity(rounds);
+    for ph in phases {
+        step_phase(
+            topos[ph.topo].as_mut(),
+            net,
+            profile,
+            ph.offset,
+            &ph.up,
+            ph.scale,
+            ph.len,
+            &mut state,
+            &mut tau_series,
+            &mut iso_series,
+        );
     }
     (tau_series, iso_series)
 }
@@ -571,8 +688,10 @@ fn run_scenario_tracker(
 /// series: add the jitter series, accumulate the total sequentially in
 /// round order, compute per-segment and whole-run degraded-mode
 /// metrics. Engines only have to agree on the input series for the
-/// outputs to agree bitwise.
-fn finalize(
+/// outputs to agree bitwise. `pub(crate)` so the adaptation layer
+/// ([`crate::search::adapt`]) assembles its summaries through the same
+/// code path.
+pub(crate) fn finalize(
     topology: String,
     net: &NetworkSpec,
     profile: &DatasetProfile,
@@ -665,6 +784,7 @@ fn finalize(
             max_ms,
             isolation_rate,
             recovery_rounds,
+            adapt: None,
         }),
     };
     let stats = EngineStats {

@@ -63,7 +63,9 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
-use crate::simtime::{EngineKind, EngineStats, ScenarioMetrics, SegmentMetrics, SimSummary};
+use crate::simtime::{
+    AdaptMetrics, EngineKind, EngineStats, ScenarioMetrics, SegmentMetrics, SimSummary,
+};
 use crate::sweep::CellFingerprint;
 use crate::util::rng::fnv1a;
 
@@ -215,7 +217,9 @@ impl CellStore {
     }
 
     /// Aggregate statistics over this generation's shards (forces every
-    /// shard to load).
+    /// shard to load). Live entries are additionally broken out by key
+    /// namespace — static vs scenario vs adaptive cells vs everything
+    /// else — so `mgfl cache stats` can say what a store actually holds.
     pub fn stats(&self) -> Result<StoreStats> {
         let mut out = StoreStats::default();
         for s in 0..SHARD_COUNT {
@@ -225,6 +229,28 @@ impl CellStore {
             out.entries += state.index.len();
             out.records += state.records;
             out.bytes += state.bytes;
+            for key in state.index.keys() {
+                if !key.starts_with("cell/") {
+                    out.other_entries += 1;
+                    continue;
+                }
+                // cell_key appends `/sc<hash>` then `/ad<hash>`, so the
+                // last path segment is authoritative (axis names are
+                // never consulted, whatever characters they contain).
+                let last = key.rsplit('/').next().unwrap_or("");
+                let is_hash_seg = |p: &str| {
+                    last.len() == p.len() + 16
+                        && last.starts_with(p)
+                        && last[p.len()..].bytes().all(|b| b.is_ascii_hexdigit())
+                };
+                if is_hash_seg("ad") {
+                    out.adaptive_cells += 1;
+                } else if is_hash_seg("sc") {
+                    out.scenario_cells += 1;
+                } else {
+                    out.static_cells += 1;
+                }
+            }
         }
         Ok(out)
     }
@@ -338,6 +364,13 @@ pub fn cell_key(fp: &CellFingerprint) -> String {
     if let Some(h) = fp.scenario {
         key.push_str(&format!("/sc{h:016x}"));
     }
+    // Adaptive cells (active [adapt] policy) extend the key space
+    // again: a re-optimized run must never cross-hit its static twin.
+    // Policy-none cells carry no adapt hash and legitimately share the
+    // static scenario key.
+    if let Some(h) = fp.adapt {
+        key.push_str(&format!("/ad{h:016x}"));
+    }
     key
 }
 
@@ -427,6 +460,16 @@ impl StoredCell {
             out.extend_from_slice(&m.max_ms.to_bits().to_le_bytes());
             out.extend_from_slice(&m.isolation_rate.to_bits().to_le_bytes());
             out.extend_from_slice(&(m.recovery_rounds as u64).to_le_bytes());
+            // Optional trailing adapt block (same absent-iff-None idiom
+            // as the scenario block, so PR 9 records stay byte-stable).
+            if let Some(a) = &m.adapt {
+                out.extend_from_slice(&(a.policy.len() as u32).to_le_bytes());
+                out.extend_from_slice(a.policy.as_bytes());
+                out.extend_from_slice(&(a.replans as u64).to_le_bytes());
+                out.extend_from_slice(&(a.fallbacks as u64).to_le_bytes());
+                out.extend_from_slice(&(a.evals_spent as u64).to_le_bytes());
+                out.extend_from_slice(&(a.freeze_rounds as u64).to_le_bytes());
+            }
         }
         out
     }
@@ -465,13 +508,32 @@ impl StoredCell {
                     max_ms: f64::from_bits(r.u64()?),
                 });
             }
+            let p50_ms = f64::from_bits(r.u64()?);
+            let p95_ms = f64::from_bits(r.u64()?);
+            let max_ms = f64::from_bits(r.u64()?);
+            let isolation_rate = f64::from_bits(r.u64()?);
+            let recovery_rounds = r.u64()? as usize;
+            // Optional trailing adapt block: absent in every static or
+            // policy-none scenario record.
+            let adapt = if r.pos < bytes.len() {
+                Some(AdaptMetrics {
+                    policy: r.str_u32_len()?,
+                    replans: r.u64()? as usize,
+                    fallbacks: r.u64()? as usize,
+                    evals_spent: r.u64()? as usize,
+                    freeze_rounds: r.u64()? as usize,
+                })
+            } else {
+                None
+            };
             Some(ScenarioMetrics {
                 segments,
-                p50_ms: f64::from_bits(r.u64()?),
-                p95_ms: f64::from_bits(r.u64()?),
-                max_ms: f64::from_bits(r.u64()?),
-                isolation_rate: f64::from_bits(r.u64()?),
-                recovery_rounds: r.u64()? as usize,
+                p50_ms,
+                p95_ms,
+                max_ms,
+                isolation_rate,
+                recovery_rounds,
+                adapt,
             })
         } else {
             None
@@ -541,7 +603,7 @@ impl Reader<'_> {
 }
 
 /// Aggregate shard statistics for one store generation.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StoreStats {
     /// Shard files in this generation (always the full shard count —
     /// missing files are created empty on first touch).
@@ -552,6 +614,19 @@ pub struct StoreStats {
     pub records: usize,
     /// Total bytes across shard files.
     pub bytes: u64,
+    /// Live `cell/` entries with no scenario or adapt suffix (classic
+    /// static sweep results).
+    pub static_cells: usize,
+    /// Live `cell/` entries keyed under a `/sc` scenario suffix but no
+    /// `/ad` adapt suffix (PR 9 fault-injection results — including
+    /// policy-`none` rows of adaptive sweeps, which share this space).
+    pub scenario_cells: usize,
+    /// Live `cell/` entries keyed under an `/ad` adapt suffix (active
+    /// re-optimization policies).
+    pub adaptive_cells: usize,
+    /// Live non-cell entries (`fit/` fitness values, `probe/` MATCHA
+    /// budget probes, anything future).
+    pub other_entries: usize,
 }
 
 /// Result of a read-only [`verify`] audit.
@@ -719,6 +794,7 @@ mod tests {
             rounds: 60,
             seed,
             scenario: None,
+            adapt: None,
         }
     }
 
@@ -801,6 +877,7 @@ mod tests {
             max_ms: 15.0,
             isolation_rate: 0.0125,
             recovery_rounds: 7,
+            adapt: None,
         });
         let mut churned = fp(None);
         churned.scenario = Some(0x1234);
@@ -814,6 +891,71 @@ mod tests {
         assert_eq!(store.get_cell(&fp(None)).unwrap(), None);
         let summary = store.get_cell(&churned).unwrap().unwrap().to_summary("gaia", "femnist", 60);
         assert_eq!(summary.scenario, cell.scenario);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn adaptive_records_roundtrip_and_stats_break_out_key_namespaces() {
+        let dir = tmpdir("adapt_block");
+        let mut cell = sample_cell();
+        cell.scenario = Some(ScenarioMetrics {
+            segments: vec![SegmentMetrics {
+                start: 0,
+                len: 60,
+                up_silos: 11,
+                p50_ms: 10.5,
+                p95_ms: 12.25,
+                max_ms: 13.0,
+            }],
+            p50_ms: 10.5,
+            p95_ms: 12.25,
+            max_ms: 13.0,
+            isolation_rate: 0.0,
+            recovery_rounds: 2,
+            adapt: Some(crate::simtime::AdaptMetrics {
+                policy: "warm".into(),
+                replans: 3,
+                fallbacks: 1,
+                evals_spent: 96,
+                freeze_rounds: 12,
+            }),
+        });
+        let mut adaptive = fp(None);
+        adaptive.scenario = Some(0x1234);
+        adaptive.adapt = Some(0xfeed_f00d_cafe_0042);
+        // The adapt hash extends the key after the scenario suffix.
+        assert_eq!(
+            cell_key(&adaptive),
+            "cell/ring/gaia/femnist/t5/r60/s-/sc0000000000001234/adfeedf00dcafe0042"
+        );
+        let store = CellStore::open(&dir).unwrap();
+        store
+            .put_cell(&adaptive, &cell.to_summary("gaia", "femnist", 60), &cell.stats)
+            .unwrap();
+        // Bit-exact roundtrip, adapt counters included; the policy-none
+        // (scenario-only) and static twins still miss.
+        assert_eq!(store.get_cell(&adaptive).unwrap(), Some(cell.clone()));
+        let mut churn_twin = fp(None);
+        churn_twin.scenario = Some(0x1234);
+        assert_eq!(store.get_cell(&churn_twin).unwrap(), None);
+        assert_eq!(store.get_cell(&fp(None)).unwrap(), None);
+        // Populate the other namespaces and check the stats breakdown.
+        let mut plain = sample_cell();
+        plain.scenario = None;
+        store.put_cell(&fp(None), &plain.to_summary("gaia", "femnist", 60), &plain.stats).unwrap();
+        let mut churned = sample_cell();
+        churned.scenario = cell.scenario.clone();
+        churned.scenario.as_mut().unwrap().adapt = None;
+        store
+            .put_cell(&churn_twin, &churned.to_summary("gaia", "femnist", 60), &churned.stats)
+            .unwrap();
+        store.put_fitness("fit/x", 1.5).unwrap();
+        let stats = store.stats().unwrap();
+        assert_eq!(stats.entries, 4);
+        assert_eq!(stats.adaptive_cells, 1);
+        assert_eq!(stats.scenario_cells, 1);
+        assert_eq!(stats.static_cells, 1);
+        assert_eq!(stats.other_entries, 1);
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -117,6 +117,12 @@ pub struct CellFingerprint {
     /// churned cells from deduping against — and the store from ever
     /// serving — their static twins.
     pub scenario: Option<u64>,
+    /// [`crate::search::AdaptSpec::fingerprint`] of the cell's
+    /// adaptation config, present **only** for active (non-`none`)
+    /// policies. Policy-none cells keep `None` so they dedup against —
+    /// and warm-start from — their static scenario twins, exactly as
+    /// PR 9 wrote them.
+    pub adapt: Option<u64>,
 }
 
 impl CellSpec {
@@ -131,7 +137,17 @@ impl CellSpec {
             rounds: self.rounds,
             seed: if self.topology.seed_sensitive() { Some(self.cell_seed) } else { None },
             scenario: self.scenario.as_ref().map(|sc| sc.fingerprint()),
+            adapt: self.adapt.as_ref().filter(|a| a.is_active()).map(|a| a.fingerprint()),
         }
+    }
+
+    /// Whether this cell re-plans at segment boundaries (an attached
+    /// adaptation spec with an active, non-`none` policy). Adaptive
+    /// cells take the dedicated [`run_cell_adaptive`] executor; policy
+    /// `none` cells route through the PR 9 scenario executors
+    /// untouched.
+    pub fn is_adaptive(&self) -> bool {
+        self.adapt.as_ref().is_some_and(|a| a.is_active())
     }
 }
 
@@ -300,7 +316,12 @@ impl SweepCache {
     /// consulted. The batch planner's phase-1 probe: the verdict (and
     /// dispatch) is exactly the one [`run_cell_cached`] would reach for
     /// this cell, so planning never changes which engine a cell takes.
+    /// Adaptive cells also return `None` — their spliced schedules are
+    /// a function of the run-time re-planning loop, never shareable.
     pub fn schedule_for(&self, cell: &CellSpec) -> (Option<SharedSchedule>, f64) {
+        if cell.is_adaptive() {
+            return (None, 0.0);
+        }
         match cell.topology {
             TopologyKind::Matcha | TopologyKind::MatchaPlus => (None, 0.0),
             _ => {
@@ -671,6 +692,31 @@ pub fn run_cell_scenario_cached(cell: &CellSpec, cache: &SweepCache) -> Scenario
     }
 }
 
+/// Simulate one *adaptive* cell: build the static base design fresh,
+/// then hand it to the adaptation loop
+/// ([`crate::search::simulate_summary_adaptive`]), which re-plans the
+/// overlay at every scenario segment boundary and splices the phases
+/// back together. Always solo — spliced schedules are run-time state,
+/// so there is nothing to share or batch — and identical under dedup
+/// on/off, caching, and any thread count: the adaptation RNG derives
+/// from (scenario seed, policy, segment index) only.
+pub fn run_cell_adaptive(cell: &CellSpec) -> ScenarioOutcome {
+    let sc = cell.scenario.as_deref().expect("adaptive cells carry a scenario");
+    let spec = cell.adapt.as_deref().expect("adaptive cells carry an adapt spec");
+    debug_assert!(spec.is_active(), "policy-none cells take the scenario executors");
+    let cfg = cell.to_experiment();
+    let net = cfg.resolve_network();
+    let prof = cfg.resolve_profile().expect("validated profile");
+    let t0 = Instant::now();
+    let topo = cfg.build_topology();
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let r = crate::search::simulate_summary_adaptive(
+        topo, &net, &prof, cell.rounds, sc, spec, cell.t,
+    );
+    (r, CellTiming { build_ms, sim_ms: t1.elapsed().as_secs_f64() * 1e3 })
+}
+
 /// The uncached scenario executor (dedup off, unlabeled cells): fresh
 /// build, full scenario dispatcher. Bit-identical to
 /// [`run_cell_scenario_cached`] tier for tier.
@@ -810,6 +856,7 @@ mod tests {
             seeds: vec![11, 23],
             rounds: 60,
             scenario: None,
+            adapt: Vec::new(),
         }
     }
 
@@ -1072,6 +1119,7 @@ mod tests {
             seeds: vec![11, 23],
             rounds,
             scenario: None,
+            adapt: Vec::new(),
         };
         let cache = SweepCache::default();
         for cell in &spec.expand() {

@@ -29,7 +29,7 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{
-    plan_batches, run_batch_cached, run_batch_pooled, run_batch_scenario,
+    plan_batches, run_batch_cached, run_batch_pooled, run_batch_scenario, run_cell_adaptive,
     run_cell_batched_single, run_cell_cached, run_cell_cached_timed,
     run_cell_scenario_batched_single, run_cell_scenario_cached, run_cell_scenario_uncached,
     run_cells_auto_batched, simulate_design_pooled, BatchPlan, BuildOnce, CellFingerprint,
@@ -507,7 +507,9 @@ pub fn run_with_store(
                     }
                     Unit::Solo(i) if stored[*i].is_some() => Vec::new(),
                     Unit::Solo(i) => {
-                        let out = if spec.scenario.is_some() {
+                        let out = if work[*i].is_adaptive() {
+                            run_cell_adaptive(work[*i])
+                        } else if spec.scenario.is_some() {
                             run_cell_scenario_cached(work[*i], &shared)
                         } else {
                             let (s, t, st) = run_cell_cached_timed(work[*i], &shared);
@@ -583,6 +585,8 @@ pub fn run_with_store(
                         Ok((hit.to_summary(&c.network, &c.profile, c.rounds), stats)),
                         CellTiming::default(),
                     )
+                } else if c.is_adaptive() {
+                    run_cell_adaptive(c)
                 } else if spec.scenario.is_some() {
                     if batched_label[fp_plan.assignment[i]] {
                         run_cell_scenario_batched_single(c)
@@ -638,6 +642,7 @@ pub fn run_with_store(
             name: spec.name.clone(),
             rounds: spec.rounds,
             scenario: spec.scenario.is_some(),
+            adaptive: spec.is_adaptive(),
             cells: results,
         },
         host_elapsed_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -694,6 +699,7 @@ mod tests {
             seeds: vec![17],
             rounds: 200,
             scenario: None,
+            adapt: Vec::new(),
         };
         let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         assert_eq!(outcome.threads, 2, "explicit thread request is honored");
@@ -744,6 +750,7 @@ mod tests {
             seeds: vec![23],
             rounds: 120,
             scenario: None,
+            adapt: Vec::new(),
         };
         let outcome = run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
         let got = &outcome.report.cells[0];
@@ -773,6 +780,7 @@ mod tests {
             seeds: vec![1, 2, 3],
             rounds: 40,
             scenario: None,
+            adapt: Vec::new(),
         };
         let memo = run(&spec, &RunOptions { threads: 3, progress: false, dedup: true }).unwrap();
         let full = run(&spec, &RunOptions { threads: 3, progress: false, dedup: false }).unwrap();
@@ -804,6 +812,7 @@ mod tests {
             seeds: vec![17],
             rounds: 60,
             scenario: None,
+            adapt: Vec::new(),
         };
         let cell = &spec.expand()[0];
         let (timed, timing, stats) = run_cell_summary_timed(cell);
@@ -835,6 +844,7 @@ mod tests {
             seeds: vec![1, 2],
             rounds: 60,
             scenario: Some(Arc::clone(&sc)),
+            adapt: Vec::new(),
         };
         let memo = run(&spec, &RunOptions { threads: 2, progress: false, dedup: true }).unwrap();
         let full = run(&spec, &RunOptions { threads: 1, progress: false, dedup: false }).unwrap();
@@ -877,6 +887,7 @@ mod tests {
             seeds: vec![1],
             rounds: 40,
             scenario: Some(sc),
+            adapt: Vec::new(),
         };
         let memo = run(&spec, &RunOptions { threads: 2, progress: false, dedup: true }).unwrap();
         let full = run(&spec, &RunOptions { threads: 1, progress: false, dedup: false }).unwrap();
@@ -903,6 +914,7 @@ mod tests {
             seeds: vec![7, 7],
             rounds: 10,
             scenario: None,
+            adapt: Vec::new(),
         };
         let outcome = run(&spec, &RunOptions { threads: 1, ..Default::default() }).unwrap();
         assert_eq!(outcome.report.cells.len(), 1, "duplicates must not inflate the grid");

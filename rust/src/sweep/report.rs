@@ -67,6 +67,13 @@ pub struct CellResult {
     /// `error`, and are never written to the store. Deterministic —
     /// the message is a pure function of (scenario, network, rounds).
     pub error: Option<String>,
+    /// The cell's adaptation-policy coordinate (`"none"` / `"rebuild"`
+    /// / `"warm"`), present iff the sweep carries an `[adapt]` axis
+    /// with at least one active policy ([`super::SweepSpec`]
+    /// canonicalization drops inert all-`none` axes). It is the column
+    /// that distinguishes an adaptive row from its static-degraded twin
+    /// at the same grid coordinates.
+    pub adapt_policy: Option<String>,
 }
 
 impl CellResult {
@@ -93,6 +100,7 @@ impl CellResult {
             simulated_rounds: stats.simulated_rounds,
             scenario: s.scenario.clone(),
             error: None,
+            adapt_policy: cell.adapt.as_ref().map(|a| a.policy.as_str().to_string()),
         }
     }
 
@@ -115,6 +123,7 @@ impl CellResult {
             simulated_rounds: 0,
             scenario: None,
             error: Some(error.to_string()),
+            adapt_policy: cell.adapt.as_ref().map(|a| a.policy.as_str().to_string()),
         }
     }
 
@@ -167,10 +176,27 @@ impl CellResult {
             o.insert("max_ms".into(), Json::Num(sc.max_ms));
             o.insert("isolation_rate".into(), Json::Num(sc.isolation_rate));
             o.insert("recovery_rounds".into(), Json::Num(sc.recovery_rounds as f64));
+            // Adaptation counters ride inside the scenario object iff
+            // the cell actually re-planned (active policies only).
+            if let Some(a) = &sc.adapt {
+                let mut ad = BTreeMap::new();
+                ad.insert("policy".into(), Json::Str(a.policy.clone()));
+                ad.insert("replans".into(), Json::Num(a.replans as f64));
+                ad.insert("fallbacks".into(), Json::Num(a.fallbacks as f64));
+                ad.insert("evals_spent".into(), Json::Num(a.evals_spent as f64));
+                ad.insert("freeze_rounds".into(), Json::Num(a.freeze_rounds as f64));
+                o.insert("adapt".into(), Json::Obj(ad));
+            }
             m.insert("scenario".into(), Json::Obj(o));
         }
         if let Some(e) = &self.error {
             m.insert("error".into(), Json::Str(e.clone()));
+        }
+        // The policy coordinate appears only on cells of adaptive
+        // sweeps (spec canonicalization guarantees `Some` implies an
+        // active axis), so every pre-adapt artifact stays byte-stable.
+        if let Some(p) = &self.adapt_policy {
+            m.insert("adapt_policy".into(), Json::Str(p.clone()));
         }
         Json::Obj(m)
     }
@@ -226,6 +252,11 @@ pub struct SweepReport {
     /// JSON flag, so static-sweep artifacts stay byte-identical to the
     /// pre-scenario format.
     pub scenario: bool,
+    /// Whether the sweep carries an active `[adapt]` axis. Gates the
+    /// adaptation CSV columns and the top-level JSON flag the same way
+    /// `scenario` gates the degraded-mode ones — scenario-only (and
+    /// all-`none`) artifacts stay byte-identical to PR 9.
+    pub adaptive: bool,
     /// One result per grid coordinate, in grid order.
     pub cells: Vec<CellResult>,
 }
@@ -292,6 +323,9 @@ impl SweepReport {
         if self.scenario {
             top.insert("scenario".into(), Json::Bool(true));
         }
+        if self.adaptive {
+            top.insert("adaptive".into(), Json::Bool(true));
+        }
         top.insert("cells".into(), Json::Arr(cells));
         Json::Obj(top)
     }
@@ -305,6 +339,9 @@ impl SweepReport {
         );
         if self.scenario {
             out.push_str(",error,p50_ms,p95_ms,max_ms,isolation_rate,recovery_rounds,segments");
+        }
+        if self.adaptive {
+            out.push_str(",adapt_policy,replans,fallbacks,evals_spent,freeze_rounds");
         }
         out.push('\n');
         for c in &self.cells {
@@ -360,6 +397,24 @@ impl SweepReport {
                     }
                 }
             }
+            if self.adaptive {
+                // Policy-`none` (and error) rows carry zero counters:
+                // they never re-plan, so the columns stay rectangular
+                // without inventing data.
+                let policy = c.adapt_policy.as_deref().unwrap_or("");
+                match c.scenario.as_ref().and_then(|sc| sc.adapt.as_ref()) {
+                    Some(a) => {
+                        let _ = write!(
+                            out,
+                            ",{policy},{},{},{},{}",
+                            a.replans, a.fallbacks, a.evals_spent, a.freeze_rounds,
+                        );
+                    }
+                    None => {
+                        let _ = write!(out, ",{policy},0,0,0,0");
+                    }
+                }
+            }
             out.push('\n');
         }
         out
@@ -400,6 +455,7 @@ mod tests {
             simulated_rounds: 10,
             scenario: None,
             error: None,
+            adapt_policy: None,
         }
     }
 
@@ -408,6 +464,7 @@ mod tests {
             name: "test".into(),
             rounds: 10,
             scenario: false,
+            adaptive: false,
             cells: vec![
                 cell("ring", "gaia", "femnist", 50.0, 1),
                 cell("ring", "gaia", "femnist", 70.0, 2),
@@ -498,6 +555,7 @@ mod tests {
             max_ms: 55.25,
             isolation_rate: 0.05,
             recovery_rounds: 3,
+            adapt: None,
         });
         let mut err = cell("ring", "tiny", "femnist", 0.0, 1);
         err.mean_cycle_ms = 0.0;
@@ -511,6 +569,7 @@ mod tests {
             name: "churn".into(),
             rounds: 10,
             scenario: true,
+            adaptive: false,
             cells: vec![ok, err],
         };
         let csv = r.to_csv();
@@ -550,5 +609,75 @@ mod tests {
         let legacy = report();
         assert!(legacy.to_csv().lines().next().unwrap().ends_with("simulated_rounds"));
         assert!(Json::parse(&legacy.to_json().to_string()).unwrap().get("scenario").is_err());
+    }
+
+    #[test]
+    fn adaptive_reports_carry_policy_columns_and_counters() {
+        use crate::simtime::{AdaptMetrics, ScenarioMetrics, SegmentMetrics};
+        let sc_metrics = |adapt| ScenarioMetrics {
+            segments: vec![SegmentMetrics {
+                start: 0,
+                len: 10,
+                up_silos: 11,
+                p50_ms: 48.5,
+                p95_ms: 52.0,
+                max_ms: 55.25,
+            }],
+            p50_ms: 48.5,
+            p95_ms: 52.0,
+            max_ms: 55.25,
+            isolation_rate: 0.05,
+            recovery_rounds: 3,
+            adapt,
+        };
+        let mut stat = cell("multigraph", "gaia", "femnist", 50.0, 1);
+        stat.scenario = Some(sc_metrics(None));
+        stat.adapt_policy = Some("none".into());
+        let mut warm = cell("multigraph", "gaia", "femnist", 44.0, 1);
+        warm.scenario = Some(sc_metrics(Some(AdaptMetrics {
+            policy: "warm".into(),
+            replans: 2,
+            fallbacks: 1,
+            evals_spent: 64,
+            freeze_rounds: 8,
+        })));
+        warm.adapt_policy = Some("warm".into());
+        let r = SweepReport {
+            name: "heal".into(),
+            rounds: 10,
+            scenario: true,
+            adaptive: true,
+            cells: vec![stat, warm],
+        };
+        let csv = r.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(
+            header.ends_with(",adapt_policy,replans,fallbacks,evals_spent,freeze_rounds"),
+            "{header}"
+        );
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert!(rows[0].ends_with(",none,0,0,0,0"), "{}", rows[0]);
+        assert!(rows[1].ends_with(",warm,2,1,64,8"), "{}", rows[1]);
+        assert_eq!(rows[0].split(',').count(), header.split(',').count());
+        assert_eq!(rows[1].split(',').count(), header.split(',').count());
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("adaptive").unwrap(), &Json::Bool(true));
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("adapt_policy").unwrap().as_str().unwrap(), "none");
+        assert!(cells[0].get("scenario").unwrap().get("adapt").is_err());
+        let a = cells[1].get("scenario").unwrap().get("adapt").unwrap();
+        assert_eq!(a.get("policy").unwrap().as_str().unwrap(), "warm");
+        assert_eq!(a.get("replans").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(a.get("fallbacks").unwrap().as_usize().unwrap(), 1);
+        // Non-adaptive scenario reports never emit the columns.
+        let plain = SweepReport {
+            name: "churn".into(),
+            rounds: 10,
+            scenario: true,
+            adaptive: false,
+            cells: vec![],
+        };
+        assert!(plain.to_csv().lines().next().unwrap().ends_with(",segments"));
+        assert!(Json::parse(&plain.to_json().to_string()).unwrap().get("adaptive").is_err());
     }
 }

@@ -9,6 +9,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{ExperimentConfig, TopologyKind};
 use crate::net::{zoo, DatasetProfile};
+use crate::search::{AdaptPolicy, AdaptSpec};
 use crate::simtime::ScenarioSpec;
 use crate::util::rng::{derive_stream, fnv1a};
 
@@ -37,6 +38,11 @@ pub struct SweepSpec {
     /// `Arc` — the grid can expand to thousands of cells and the
     /// scenario is immutable.
     pub scenario: Option<Arc<ScenarioSpec>>,
+    /// Adaptation-policy axis (the `[adapt]` section): one entry per
+    /// policy, sharing the section's knobs. Empty for classic sweeps.
+    /// Expands as the *outermost* axis so the static grid keeps its
+    /// PR 9 presentation order within each policy block.
+    pub adapt: Vec<Arc<AdaptSpec>>,
 }
 
 impl Default for SweepSpec {
@@ -50,6 +56,7 @@ impl Default for SweepSpec {
             seeds: vec![17],
             rounds: 6400,
             scenario: None,
+            adapt: Vec::new(),
         }
     }
 }
@@ -80,6 +87,11 @@ pub struct CellSpec {
     /// Fault-injection scenario the cell runs under, if any (inherited
     /// from the spec; identical for every cell of one sweep).
     pub scenario: Option<Arc<ScenarioSpec>>,
+    /// Adaptation spec of this cell's policy coordinate (`None` when
+    /// the sweep has no `[adapt]` section). Policy `none` cells carry
+    /// `Some` — the report labels them — but fingerprint and execution
+    /// treat them exactly like static-scenario cells.
+    pub adapt: Option<Arc<AdaptSpec>>,
 }
 
 impl CellSpec {
@@ -152,6 +164,14 @@ impl SweepSpec {
         dedup_axis("profiles", &mut self.profiles);
         dedup_axis("t", &mut self.t_values);
         dedup_axis("seeds", &mut self.seeds);
+        // An adapt axis with no active policy is the static sweep under
+        // another name; dropping it here means every cell that carries
+        // an [`AdaptSpec`] belongs to a genuinely adaptive sweep, and
+        // all-`none` specs produce artifacts (and store records) byte-
+        // identical to their `[adapt]`-free twins.
+        if !self.is_adaptive() {
+            self.adapt.clear();
+        }
         Ok(())
     }
 
@@ -207,6 +227,20 @@ impl SweepSpec {
         if let Some(sc) = &self.scenario {
             sc.validate().context("[events] section")?;
         }
+        for a in &self.adapt {
+            a.validate().context("[adapt] section")?;
+        }
+        ensure!(
+            !has_duplicates(&self.adapt.iter().map(|a| a.policy).collect::<Vec<_>>()),
+            "[adapt] policies contains duplicate values"
+        );
+        if self.is_adaptive() {
+            ensure!(
+                self.scenario.is_some(),
+                "[adapt] with an active policy requires an [events] section (re-planning \
+                 happens at scenario segment boundaries)"
+            );
+        }
         Ok(())
     }
 
@@ -238,28 +272,49 @@ impl SweepSpec {
             * self.topologies.len()
             * self.t_values.len()
             * self.seeds.len()
+            * self.adapt.len().max(1)
+    }
+
+    /// Whether any policy on the adapt axis actually re-plans
+    /// (everything-`none` grids stay byte-identical to PR 9 sweeps).
+    pub fn is_adaptive(&self) -> bool {
+        self.adapt.iter().any(|a| a.is_active())
     }
 
     /// Expand the grid into independent cells, in presentation order
-    /// (profile, network, topology, t, seed) — the artifact order.
+    /// (policy, profile, network, topology, t, seed) — the artifact
+    /// order. The adapt axis is outermost so each policy block repeats
+    /// the PR 9 static order; `cell_seed` never depends on the policy
+    /// coordinate, which is what keeps policy-`none` cells bitwise
+    /// equal to their static-sweep counterparts.
     pub fn expand(&self) -> Vec<CellSpec> {
         let mut cells = Vec::with_capacity(self.cell_count());
-        for profile in &self.profiles {
-            for network in &self.networks {
-                for &topology in &self.topologies {
-                    for &t in &self.t_values {
-                        for &base_seed in &self.seeds {
-                            cells.push(CellSpec {
-                                index: cells.len(),
-                                topology,
-                                network: network.clone(),
-                                profile: profile.clone(),
-                                t,
-                                base_seed,
-                                cell_seed: cell_stream(base_seed, topology, network, profile, t),
-                                rounds: self.rounds,
-                                scenario: self.scenario.clone(),
-                            });
+        let adapt_axis: Vec<Option<Arc<AdaptSpec>>> = if self.adapt.is_empty() {
+            vec![None]
+        } else {
+            self.adapt.iter().cloned().map(Some).collect()
+        };
+        for adapt in &adapt_axis {
+            for profile in &self.profiles {
+                for network in &self.networks {
+                    for &topology in &self.topologies {
+                        for &t in &self.t_values {
+                            for &base_seed in &self.seeds {
+                                cells.push(CellSpec {
+                                    index: cells.len(),
+                                    topology,
+                                    network: network.clone(),
+                                    profile: profile.clone(),
+                                    t,
+                                    base_seed,
+                                    cell_seed: cell_stream(
+                                        base_seed, topology, network, profile, t,
+                                    ),
+                                    rounds: self.rounds,
+                                    scenario: self.scenario.clone(),
+                                    adapt: adapt.clone(),
+                                });
+                            }
                         }
                     }
                 }
@@ -357,6 +412,19 @@ impl SweepSpec {
             out.push_str(&format!("\n[events]\nseed = {}\n", sc.seed));
             out.push_str(&format!("events = {}\n", quote_list(&sc.event_strs())));
         }
+        if let Some(first) = self.adapt.first() {
+            let policies: Vec<String> =
+                self.adapt.iter().map(|a| a.policy.as_str().to_string()).collect();
+            out.push_str(&format!(
+                "\n[adapt]\npolicies = {}\nbudget = {}\ndeadline_ms = {}\nfreeze_rounds = \
+                 {}\neval_rounds = {}\n",
+                quote_list(&policies),
+                first.budget,
+                first.deadline_ms,
+                first.freeze_rounds,
+                first.eval_rounds,
+            ));
+        }
         out
     }
 }
@@ -397,20 +465,26 @@ impl SweepFile {
     }
 
     /// Parse the file dialect: the flat sweep keys, optionally followed
-    /// by `[store]` (`path`, `enabled`) and/or `[events]` (`seed`,
-    /// `events`) sections. Any other section is an error.
+    /// by `[store]` (`path`, `enabled`), `[events]` (`seed`, `events`),
+    /// and/or `[adapt]` (`policies`, `budget`, `deadline_ms`,
+    /// `freeze_rounds`, `eval_rounds`) sections. Any other section is
+    /// an error.
     pub fn from_toml_str(text: &str) -> Result<Self> {
         #[derive(PartialEq, Clone, Copy)]
         enum Section {
             Sweep,
             Store,
             Events,
+            Adapt,
         }
         let mut sweep_text = String::new();
         let mut store: Option<StoreSpec> = None;
         let mut ev_seed = 0u64;
         let mut ev_strs: Option<Vec<String>> = None;
         let mut seen_events = false;
+        let mut ad_policies: Option<Vec<String>> = None;
+        let mut ad_knobs = AdaptSpec::default();
+        let mut seen_adapt = false;
         let mut section = Section::Sweep;
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.split('#').next().unwrap_or("").trim();
@@ -426,9 +500,14 @@ impl SweepFile {
                         section = Section::Events;
                         seen_events = true;
                     }
+                    "[adapt]" => {
+                        ensure!(!seen_adapt, "line {}: duplicate [adapt] section", lineno + 1);
+                        section = Section::Adapt;
+                        seen_adapt = true;
+                    }
                     other => bail!(
-                        "line {}: unknown section '{other}' (sweep files support [store] and \
-                         [events])",
+                        "line {}: unknown section '{other}' (sweep files support [store], \
+                         [events], and [adapt])",
                         lineno + 1
                     ),
                 }
@@ -480,6 +559,33 @@ impl SweepFile {
                     "events" => ev_strs = Some(items),
                     other => bail!("line {}: unknown [events] key '{other}'", lineno + 1),
                 },
+                Section::Adapt => {
+                    let ctx = |k: &str| format!("line {}: [adapt] {k}", lineno + 1);
+                    match key.trim() {
+                        "policies" => ad_policies = Some(items),
+                        "budget" => {
+                            ad_knobs.budget = one(&items, "budget", lineno)?
+                                .parse()
+                                .with_context(|| ctx("budget"))?
+                        }
+                        "deadline_ms" => {
+                            ad_knobs.deadline_ms = one(&items, "deadline_ms", lineno)?
+                                .parse()
+                                .with_context(|| ctx("deadline_ms"))?
+                        }
+                        "freeze_rounds" => {
+                            ad_knobs.freeze_rounds = one(&items, "freeze_rounds", lineno)?
+                                .parse()
+                                .with_context(|| ctx("freeze_rounds"))?
+                        }
+                        "eval_rounds" => {
+                            ad_knobs.eval_rounds = one(&items, "eval_rounds", lineno)?
+                                .parse()
+                                .with_context(|| ctx("eval_rounds"))?
+                        }
+                        other => bail!("line {}: unknown [adapt] key '{other}'", lineno + 1),
+                    }
+                }
             }
         }
         if let Some(s) = &store {
@@ -491,6 +597,17 @@ impl SweepFile {
             ensure!(!strs.is_empty(), "[events] section requires a non-empty events list");
             let sc = ScenarioSpec::from_event_strs(ev_seed, &strs).context("[events] section")?;
             spec.scenario = Some(Arc::new(sc));
+        }
+        if seen_adapt {
+            let policies = ad_policies.unwrap_or_default();
+            ensure!(!policies.is_empty(), "[adapt] section requires a non-empty policies list");
+            spec.adapt = policies
+                .iter()
+                .map(|p| {
+                    let policy = AdaptPolicy::parse(p).context("[adapt] policies")?;
+                    Ok(Arc::new(AdaptSpec { policy, ..ad_knobs.clone() }))
+                })
+                .collect::<Result<_>>()?;
         }
         Ok(SweepFile { spec, store })
     }
@@ -598,6 +715,7 @@ mod tests {
             seeds: vec![1, 2, 3],
             rounds: 640,
             scenario: None,
+            adapt: Vec::new(),
         };
         let text = spec.to_toml_string();
         let back = SweepSpec::from_toml_str(&text).unwrap();
@@ -762,6 +880,88 @@ events = ["leave@13:silo=3", "rejoin@41:silo=3", "outage@70:frac=0.3:dur=18"]
     }
 
     #[test]
+    fn sweep_files_parse_the_adapt_section() {
+        let text = r#"
+name = "heal"
+rounds = 200
+networks = [gaia]
+topologies = [multigraph]
+profiles = [femnist]
+seeds = [17]
+
+[events]
+seed = 9
+events = ["leave@13:silo=3", "rejoin@41:silo=3"]
+
+[adapt]
+policies = ["none", "warm"]
+budget = 32
+freeze_rounds = 2
+eval_rounds = 40
+"#;
+        let file = SweepFile::from_toml_str(text).unwrap();
+        file.spec.validate().unwrap();
+        assert_eq!(file.spec.adapt.len(), 2);
+        assert_eq!(file.spec.adapt[0].policy, AdaptPolicy::None);
+        assert_eq!(file.spec.adapt[1].policy, AdaptPolicy::Warm);
+        assert!(file.spec.adapt.iter().all(|a| a.budget == 32
+            && a.freeze_rounds == 2
+            && a.eval_rounds == 40
+            && a.deadline_ms == 0));
+        assert!(file.spec.is_adaptive());
+        // Policy is the outermost axis: the grid doubles and the first
+        // half carries policy none, the second half warm.
+        assert_eq!(file.spec.cell_count(), 2);
+        let cells = file.spec.expand();
+        assert_eq!(cells[0].adapt.as_ref().unwrap().policy, AdaptPolicy::None);
+        assert_eq!(cells[1].adapt.as_ref().unwrap().policy, AdaptPolicy::Warm);
+        // The policy coordinate never perturbs the cell seed.
+        assert_eq!(cells[0].cell_seed, cells[1].cell_seed);
+
+        // Round-trip: spec -> TOML ([adapt] section) -> SweepFile.
+        let back = SweepFile::from_toml_str(&file.spec.to_toml_string()).unwrap();
+        assert_eq!(back.spec.adapt, file.spec.adapt);
+    }
+
+    #[test]
+    fn bad_adapt_sections_are_rejected() {
+        assert!(SweepFile::from_toml_str("[adapt]\n").is_err(), "policies list required");
+        let err = SweepFile::from_toml_str("[adapt]\npolicies = [\"meteor\"]\n")
+            .unwrap_err()
+            .root_cause()
+            .to_string();
+        assert!(err.contains("unknown adapt policy"), "{err}");
+        assert!(SweepFile::from_toml_str("[adapt]\npolicies = [\"warm\"]\nbogus = 1\n").is_err());
+        assert!(SweepFile::from_toml_str(
+            "[adapt]\npolicies = [\"warm\"]\n[adapt]\npolicies = [\"warm\"]\n"
+        )
+        .is_err());
+        // An active policy without [events] has no boundaries to
+        // re-plan at; validate() rejects the combination.
+        let active = SweepFile::from_toml_str("[adapt]\npolicies = [\"rebuild\"]\n").unwrap();
+        assert!(active.spec.validate().unwrap_err().to_string().contains("[events]"));
+        // All-none adapt axes are fine without events (they are just a
+        // labeled re-run of the static sweep).
+        let inert = SweepFile::from_toml_str("[adapt]\npolicies = [\"none\"]\n").unwrap();
+        assert!(!inert.spec.is_adaptive());
+        inert.spec.validate().unwrap();
+        // Duplicate policies would inflate the grid with identical cells.
+        let dup = SweepFile::from_toml_str(
+            "[events]\nseed = 1\nevents = [\"leave@1:silo=0\"]\n\
+             [adapt]\npolicies = [\"warm\", \"warm\"]\n",
+        )
+        .unwrap();
+        assert!(dup.spec.validate().unwrap_err().to_string().contains("duplicate"));
+        // eval_rounds is range-checked through the spec validator.
+        let zero = SweepFile::from_toml_str(
+            "[events]\nseed = 1\nevents = [\"leave@1:silo=0\"]\n\
+             [adapt]\npolicies = [\"warm\"]\neval_rounds = 0\n",
+        )
+        .unwrap();
+        assert!(zero.spec.validate().is_err());
+    }
+
+    #[test]
     fn the_committed_churn_spec_loads_and_validates() {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/specs/churn_gaia.toml");
         let file = SweepFile::from_toml_file(path).unwrap();
@@ -771,6 +971,29 @@ events = ["leave@13:silo=3", "rejoin@41:silo=3", "outage@70:frac=0.3:dur=18"]
         assert_eq!(sc.events.len(), 6);
         // The scenario must be viable on its own network/round budget.
         crate::simtime::build_timeline(sc, &crate::net::zoo::gaia(), file.spec.rounds).unwrap();
+    }
+
+    #[test]
+    fn the_committed_adapt_spec_loads_and_validates() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/specs/adapt_gaia.toml");
+        let file = SweepFile::from_toml_file(path).unwrap();
+        file.spec.validate().unwrap();
+        assert_eq!(file.spec.name, "adapt_gaia");
+        assert!(file.spec.is_adaptive());
+        // One policy axis covering the whole ladder: the PR 9 static
+        // base, the rebuild fallback, and the warm-started search.
+        let policies: Vec<AdaptPolicy> = file.spec.adapt.iter().map(|a| a.policy).collect();
+        assert_eq!(policies, vec![AdaptPolicy::None, AdaptPolicy::Rebuild, AdaptPolicy::Warm]);
+        // Wall-clock deadlines are host-dependent; the committed spec
+        // must stay a pure function of its bytes.
+        assert!(file.spec.adapt.iter().all(|a| a.deadline_ms == 0));
+        let sc = file.spec.scenario.as_ref().expect("adapt_gaia carries an [events] section");
+        crate::simtime::build_timeline(sc, &crate::net::zoo::gaia(), file.spec.rounds).unwrap();
+        // Three policies x one static cell: the grid triples, sharing
+        // one cell seed so rows differ by policy alone.
+        assert_eq!(file.spec.cell_count(), 3);
+        let cells = file.spec.expand();
+        assert!(cells.iter().all(|c| c.cell_seed == cells[0].cell_seed));
     }
 
     #[test]

@@ -83,6 +83,7 @@ fn sweep_batch_planner_dispatch_is_observable_and_deterministic() {
         seeds: vec![17],
         rounds: 60,
         scenario: None,
+        adapt: Vec::new(),
     };
     let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
 
@@ -137,6 +138,7 @@ fn seed_replicated_ring_grid_batches_without_perturbing_artifacts() {
         seeds: (17..22).collect(),
         rounds: 40,
         scenario: None,
+        adapt: Vec::new(),
     };
     let dedup = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
     let no_dedup =

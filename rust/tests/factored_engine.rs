@@ -103,6 +103,7 @@ fn sweep_reports_carry_the_engine_dispatch() {
         seeds: vec![17],
         rounds,
         scenario: None,
+        adapt: Vec::new(),
     };
     let outcome = sweep::run(&spec, &RunOptions { threads: 2, ..Default::default() }).unwrap();
     let engine_of = |topo: &str| {

@@ -1,0 +1,292 @@
+//! Property tests for the adaptation layer (`search::adapt`), backed by
+//! the real proptest crate (gated behind `--features proptest` like
+//! `tests/proptest_scenarios.rs`; the offline build vendors no
+//! proptest).
+//!
+//! Four pins over random churn timelines:
+//!
+//! * **Policy `none` is PR 9**: an inactive [`AdaptSpec`] routed through
+//!   the adaptive entry point must reproduce the static masked scenario
+//!   tracker bitwise — totals, isolation counters, degraded-mode
+//!   metrics — or fail with the same structured error.
+//! * **Ladder**: a warm search with zero budget must degrade to the
+//!   rebuild policy bitwise, recording its fallbacks.
+//! * **Oracle**: the spliced production engine must match the naive
+//!   single-segment oracle bitwise for every policy.
+//! * **Scheduling invariance**: adaptive sweep artifacts (JSON + CSV)
+//!   are byte-identical across thread counts and with dedup on or off.
+#![cfg(feature = "proptest")]
+
+use std::sync::Arc;
+
+use mgfl::config::TopologyKind;
+use mgfl::net::synth::geo_clustered;
+use mgfl::net::{zoo, DatasetProfile, NetworkSpec};
+use mgfl::search::{
+    simulate_summary_adaptive, simulate_summary_adaptive_oracle, AdaptPolicy, AdaptSpec,
+};
+use mgfl::simtime::{simulate_summary_scenario_naive, ScenarioSpec, SimSummary};
+use mgfl::sweep::{run, RunOptions, SweepSpec};
+use mgfl::topo::{MultigraphTopology, TopologyDesign};
+use proptest::prelude::*;
+
+/// One randomly-drawn event, still abstract (silo indices are resolved
+/// against the concrete network's size at render time).
+#[derive(Debug, Clone)]
+enum RawEvent {
+    Leave { round: usize, silo: usize },
+    Rejoin { round: usize, silo: usize },
+    Scale { round: usize, factor: f64 },
+    Jitter { round: usize, amp: f64 },
+    Outage { round: usize, frac: f64, dur: usize, epicenter: Option<usize> },
+}
+
+impl RawEvent {
+    /// Render as the sweep-spec DSL string, clamping silo references
+    /// into `0..n` so every draw is valid on the chosen network.
+    fn to_dsl(&self, n: usize) -> String {
+        match self {
+            RawEvent::Leave { round, silo } => format!("leave@{round}:silo={}", silo % n),
+            RawEvent::Rejoin { round, silo } => format!("rejoin@{round}:silo={}", silo % n),
+            RawEvent::Scale { round, factor } => format!("scale@{round}:factor={factor}"),
+            RawEvent::Jitter { round, amp } => format!("jitter@{round}:amp={amp}"),
+            RawEvent::Outage { round, frac, dur, epicenter } => {
+                let epi = epicenter.map(|e| format!(":epicenter={}", e % n)).unwrap_or_default();
+                format!("outage@{round}:frac={frac}:dur={dur}{epi}")
+            }
+        }
+    }
+}
+
+/// Event strategy: rounds drawn from a small range on purpose, so
+/// same-round stacking, short segments, and freeze windows overlapping
+/// the next boundary all come up. Mask-changing events dominate the
+/// weights — those are the ones that trigger re-planning.
+fn raw_event(rounds: usize) -> impl Strategy<Value = RawEvent> {
+    let r = 0..rounds;
+    let leave = (r.clone(), 0usize..32).prop_map(|(round, silo)| RawEvent::Leave { round, silo });
+    let rejoin =
+        (r.clone(), 0usize..32).prop_map(|(round, silo)| RawEvent::Rejoin { round, silo });
+    let scale = (r.clone(), 1u32..40)
+        .prop_map(|(round, f)| RawEvent::Scale { round, factor: f as f64 / 10.0 });
+    let jitter = (r.clone(), 0u32..80)
+        .prop_map(|(round, a)| RawEvent::Jitter { round, amp: a as f64 / 10.0 });
+    let outage = (r, 1u32..7, 1usize..25, prop::option::of(0usize..32)).prop_map(
+        |(round, decifrac, dur, epicenter)| RawEvent::Outage {
+            round,
+            frac: decifrac as f64 / 10.0,
+            dur,
+            epicenter,
+        },
+    );
+    prop_oneof![4 => leave, 3 => rejoin, 2 => scale, 1 => jitter, 2 => outage]
+}
+
+/// The network pool: both zoo networks plus seeded synthetic
+/// geo-clusters of different sizes.
+fn network(choice: usize) -> NetworkSpec {
+    match choice % 4 {
+        0 => zoo::gaia(),
+        1 => zoo::amazon(),
+        2 => geo_clustered(9, 41),
+        _ => geo_clustered(14, 42),
+    }
+}
+
+fn spec_on(net: &NetworkSpec, seed: u64, raw: &[RawEvent]) -> ScenarioSpec {
+    let strs: Vec<String> = raw.iter().map(|e| e.to_dsl(net.n())).collect();
+    ScenarioSpec::from_event_strs(seed, &strs).expect("clamped draws always parse")
+}
+
+fn base(net: &NetworkSpec, prof: &DatasetProfile, t: u32) -> Box<dyn TopologyDesign> {
+    Box::new(MultigraphTopology::from_network(net, prof, t))
+}
+
+fn assert_bitwise(a: &SimSummary, b: &SimSummary, ctx: &str) {
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.total_ms.to_bits(), b.total_ms.to_bits(), "{ctx}: total_ms");
+    assert_eq!(a.mean_cycle_ms.to_bits(), b.mean_cycle_ms.to_bits(), "{ctx}: mean_cycle_ms");
+    assert_eq!(a.rounds_with_isolated, b.rounds_with_isolated, "{ctx}: isolation rounds");
+    assert_eq!(a.max_isolated, b.max_isolated, "{ctx}: max isolated");
+    assert_eq!(a.scenario, b.scenario, "{ctx}: degraded-mode metrics");
+}
+
+/// Drop the adapt accounting block so two summaries produced under
+/// different (but behaviorally identical) policies compare equal.
+fn strip_adapt(mut s: SimSummary) -> SimSummary {
+    if let Some(m) = s.scenario.as_mut() {
+        m.adapt = None;
+    }
+    s
+}
+
+proptest! {
+    #![proptest_config(ProptestConfig::with_cases(24))]
+
+    /// An inactive adapt spec must be invisible: the adaptive entry
+    /// point under policy `none` reproduces the PR 9 masked scenario
+    /// tracker bitwise — including the absence of an adapt metrics
+    /// block — or errors identically on non-viable timelines.
+    #[test]
+    fn policy_none_matches_the_pr9_scenario_path_bitwise(
+        raw in prop::collection::vec(raw_event(48), 1..8),
+        net_choice in 0usize..4,
+        t in prop::sample::select(vec![3u32, 5]),
+        seed in 0u64..1000,
+    ) {
+        let rounds = 48usize;
+        let net = network(net_choice);
+        let prof = DatasetProfile::femnist();
+        let sc = spec_on(&net, seed, &raw);
+        let spec = AdaptSpec::default();
+        prop_assert!(!spec.is_active());
+        let got = simulate_summary_adaptive(base(&net, &prof, t), &net, &prof, rounds, &sc, &spec, t);
+        let mut b = MultigraphTopology::from_network(&net, &prof, t);
+        let want = simulate_summary_scenario_naive(&mut b, &net, &prof, rounds, &sc);
+        match (want, got) {
+            (Err(we), Err(ge)) => prop_assert_eq!(we, ge, "errors must match"),
+            (Ok(want), Ok((got, _))) => {
+                prop_assert!(
+                    got.scenario.as_ref().is_some_and(|m| m.adapt.is_none()),
+                    "policy none must not grow an adapt block"
+                );
+                assert_bitwise(&want, &got, "policy none vs PR 9 tracker");
+            }
+            _ => prop_assert!(false, "adaptive and static paths disagree about viability"),
+        }
+    }
+
+    /// The graceful-degradation ladder: a warm search with no eval
+    /// budget can never plan, so every re-planned segment falls back to
+    /// the rebuild genome and the run equals policy `rebuild` bitwise.
+    #[test]
+    fn zero_budget_warm_equals_rebuild_everywhere(
+        raw in prop::collection::vec(raw_event(48), 1..8),
+        net_choice in 0usize..4,
+        seed in 0u64..1000,
+    ) {
+        let rounds = 48usize;
+        let net = network(net_choice);
+        let prof = DatasetProfile::femnist();
+        let sc = spec_on(&net, seed, &raw);
+        let warm0 = AdaptSpec { policy: AdaptPolicy::Warm, budget: 0, ..Default::default() };
+        let rebuild = AdaptSpec { policy: AdaptPolicy::Rebuild, ..Default::default() };
+        let w = simulate_summary_adaptive(base(&net, &prof, 5), &net, &prof, rounds, &sc, &warm0, 5);
+        let r =
+            simulate_summary_adaptive(base(&net, &prof, 5), &net, &prof, rounds, &sc, &rebuild, 5);
+        match (w, r) {
+            (Err(we), Err(re)) => prop_assert_eq!(we, re, "errors must match"),
+            (Ok((w, _)), Ok((r, _))) => {
+                let wm = w.scenario.as_ref().unwrap().adapt.clone().unwrap();
+                let rm = r.scenario.as_ref().unwrap().adapt.clone().unwrap();
+                prop_assert_eq!(wm.replans, rm.replans, "same boundaries, same replans");
+                prop_assert_eq!(wm.evals_spent, 0, "no budget, no evals");
+                prop_assert!(
+                    wm.fallbacks >= rm.fallbacks.max(wm.replans),
+                    "every zero-budget replan must fall down the ladder ({wm:?} vs {rm:?})"
+                );
+                assert_bitwise(&strip_adapt(w), &strip_adapt(r), "zero-budget warm vs rebuild");
+            }
+            _ => prop_assert!(false, "warm and rebuild disagree about viability"),
+        }
+    }
+
+    /// The tentpole invariant: for every policy, the spliced production
+    /// engine matches the naive single-segment oracle bitwise — cycle
+    /// totals, isolation counters, degraded-mode metrics, and the adapt
+    /// accounting block itself.
+    #[test]
+    fn adaptive_engine_matches_the_single_segment_oracle_bitwise(
+        raw in prop::collection::vec(raw_event(48), 1..8),
+        net_choice in 0usize..4,
+        policy in prop::sample::select(vec![AdaptPolicy::None, AdaptPolicy::Rebuild, AdaptPolicy::Warm]),
+        seed in 0u64..1000,
+    ) {
+        let rounds = 48usize;
+        let net = network(net_choice);
+        let prof = DatasetProfile::femnist();
+        let sc = spec_on(&net, seed, &raw);
+        let spec = AdaptSpec { policy, budget: 6, eval_rounds: 20, ..Default::default() };
+        let a = simulate_summary_adaptive(base(&net, &prof, 5), &net, &prof, rounds, &sc, &spec, 5);
+        let b = simulate_summary_adaptive_oracle(
+            base(&net, &prof, 5),
+            &net,
+            &prof,
+            rounds,
+            &sc,
+            &spec,
+            5,
+        );
+        match (a, b) {
+            (Err(ae), Err(be)) => prop_assert_eq!(ae, be, "errors must match"),
+            (Ok((a, sa)), Ok((b, sb))) => {
+                prop_assert_eq!(sa.kind, sb.kind);
+                assert_bitwise(&a, &b, "engine vs oracle");
+            }
+            _ => prop_assert!(false, "engine and oracle disagree about viability"),
+        }
+    }
+}
+
+proptest! {
+    // Whole-sweep cases simulate one grid per policy twice per knob
+    // setting; trim the case count accordingly.
+    #![proptest_config(ProptestConfig::with_cases(8))]
+
+    /// Adaptive sweep artifacts are a pure function of the spec: JSON
+    /// and CSV must be byte-identical across thread counts and with the
+    /// dedup layer on or off (adaptive cells always run solo, so dedup
+    /// must be a pure pass-through for them).
+    #[test]
+    fn adaptive_sweep_artifacts_are_thread_and_dedup_invariant(
+        raw in prop::collection::vec(raw_event(40), 1..6),
+        seed in 0u64..1000,
+    ) {
+        let net = zoo::gaia();
+        let sc = spec_on(&net, seed, &raw);
+        let spec = SweepSpec {
+            name: "prop_adapt".into(),
+            topologies: vec![TopologyKind::Multigraph],
+            networks: vec!["gaia".into()],
+            profiles: vec!["femnist".into()],
+            t_values: vec![5],
+            seeds: vec![17],
+            rounds: 40,
+            scenario: Some(Arc::new(sc)),
+            adapt: vec![
+                Arc::new(AdaptSpec::default()),
+                Arc::new(AdaptSpec {
+                    policy: AdaptPolicy::Warm,
+                    budget: 6,
+                    eval_rounds: 20,
+                    ..Default::default()
+                }),
+            ],
+        };
+        spec.validate().unwrap();
+        let baseline = run(&spec, &RunOptions { threads: 1, progress: false, dedup: false })
+            .unwrap()
+            .report;
+        prop_assert_eq!(baseline.cells.len(), 2, "one row per policy");
+        prop_assert!(baseline.adaptive, "the report must flag its adapt columns");
+        for (threads, dedup) in [(1, true), (4, false), (4, true)] {
+            let got = run(&spec, &RunOptions { threads, progress: false, dedup })
+                .unwrap()
+                .report;
+            prop_assert_eq!(
+                baseline.to_json().to_string(),
+                got.to_json().to_string(),
+                "JSON must be byte-identical at threads={} dedup={}",
+                threads,
+                dedup
+            );
+            prop_assert_eq!(
+                baseline.to_csv(),
+                got.to_csv(),
+                "CSV must be byte-identical at threads={} dedup={}",
+                threads,
+                dedup
+            );
+        }
+    }
+}

@@ -36,6 +36,7 @@ proptest! {
             seeds: seeds.clone(),
             rounds,
             scenario: None,
+            adapt: Vec::new(),
         };
         let back = SweepSpec::from_toml_str(&spec.to_toml_string()).unwrap();
         prop_assert_eq!(back.topologies, topologies);

@@ -182,7 +182,7 @@ fn search_finds_the_enumerated_optimum_on_a_six_silo_network() {
                     Rng64::seed_from_u64(named_stream(spec.seed, &format!("optimize/init/{c}")));
                 random_genome(&mut rng, net.n(), &spec)
             };
-            let r = strategy.run_chain(c, start, &ev, &spec);
+            let r = strategy.run_chain(c, start, &ev, &spec, None);
             if r.best_fitness_ms < best {
                 best = r.best_fitness_ms;
             }

@@ -198,6 +198,115 @@ fn gc_compacts_superseded_records_without_losing_the_latest() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Regression for the adaptive key-space extension: gc must treat the
+/// `/sc` (scenario) and `/ad` (adaptive) suffixed cell keys exactly
+/// like classic static keys — compacting superseded revisions, keeping
+/// the latest record of *each* namespace, and never collapsing a cell
+/// onto its static or policy-none twin.
+#[test]
+fn gc_compacts_across_the_extended_cell_key_namespaces() {
+    use mgfl::config::TopologyKind;
+    use mgfl::simtime::{
+        AdaptMetrics, EngineKind, EngineStats, ScenarioMetrics, SegmentMetrics, SimSummary,
+    };
+    use mgfl::sweep::CellFingerprint;
+
+    let dir = tmp("gc_namespaces");
+    let fp = |scenario: Option<u64>, adapt: Option<u64>| CellFingerprint {
+        topology: TopologyKind::Multigraph,
+        network: "gaia".into(),
+        profile: "femnist".into(),
+        t: 5,
+        rounds: 60,
+        seed: None,
+        scenario,
+        adapt,
+    };
+    let summary = |mean: f64, adapt: Option<AdaptMetrics>, scenario: bool| SimSummary {
+        topology: "multigraph".into(),
+        network: "gaia".into(),
+        profile: "femnist".into(),
+        rounds: 60,
+        mean_cycle_ms: mean,
+        total_ms: mean * 60.0,
+        rounds_with_isolated: 1,
+        max_isolated: 2,
+        scenario: scenario.then(|| ScenarioMetrics {
+            segments: vec![SegmentMetrics {
+                start: 0,
+                len: 60,
+                up_silos: 11,
+                p50_ms: mean,
+                p95_ms: mean * 1.2,
+                max_ms: mean * 1.5,
+            }],
+            p50_ms: mean,
+            p95_ms: mean * 1.2,
+            max_ms: mean * 1.5,
+            isolation_rate: 0.01,
+            recovery_rounds: 3,
+            adapt,
+        }),
+    };
+    let stats = EngineStats {
+        kind: EngineKind::Streaming,
+        period: None,
+        cycle_detected_at: None,
+        cycle_len: None,
+        simulated_rounds: 60,
+        groups: None,
+    };
+    let warm = AdaptMetrics {
+        policy: "warm".to_string(),
+        replans: 3,
+        fallbacks: 1,
+        evals_spent: 96,
+        freeze_rounds: 12,
+    };
+
+    let statics = fp(None, None);
+    let churned = fp(Some(0x1234), None);
+    let adaptive = fp(Some(0x1234), Some(0xfeed));
+    {
+        let store = CellStore::open(&dir).unwrap();
+        // Supersede each namespace several times; only the last
+        // revision of each may survive compaction.
+        for rev in 0..8 {
+            let mean = 10.0 + rev as f64;
+            store.put_cell(&statics, &summary(mean, None, false), &stats).unwrap();
+            store.put_cell(&churned, &summary(mean, None, true), &stats).unwrap();
+            store.put_cell(&adaptive, &summary(mean, Some(warm.clone()), true), &stats).unwrap();
+        }
+        store.put_fitness("fit/gaia/femnist/r60/x", 1.5).unwrap();
+        let s = store.stats().unwrap();
+        assert_eq!(s.entries, 4);
+        assert_eq!(s.records, 25, "superseded records pile up until gc");
+    }
+
+    let report = gc(&dir).unwrap();
+    assert_eq!(report.records_before, 25);
+    assert_eq!(report.records_after, 4, "compaction keeps one live record per namespace");
+
+    let store = CellStore::open(&dir).unwrap();
+    for (fp, adapt, scenario) in
+        [(&statics, None, false), (&churned, None, true), (&adaptive, Some(warm), true)]
+    {
+        let got = store.get_cell(fp).unwrap().expect("latest revision must survive gc");
+        assert_eq!(got.mean_cycle_ms.to_bits(), 17.0f64.to_bits());
+        assert_eq!(got.scenario, summary(17.0, adapt, scenario).scenario);
+    }
+    // The namespace breakdown survives compaction: one live cell per
+    // key space plus the fitness entry.
+    let s = store.stats().unwrap();
+    assert_eq!(s.static_cells, 1);
+    assert_eq!(s.scenario_cells, 1);
+    assert_eq!(s.adaptive_cells, 1);
+    assert_eq!(s.other_entries, 1);
+    drop(store);
+    assert!(verify(&dir).unwrap().ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Helper "test" driven by the two-process test below: when
 /// `MGFL_STORE_CHILD` points at a store directory, this process is the
 /// child appender; in a normal test run the env var is absent and this

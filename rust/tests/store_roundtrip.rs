@@ -35,6 +35,7 @@ fn grid(seeds: Vec<u64>) -> SweepSpec {
         seeds,
         rounds: 60,
         scenario: None,
+        adapt: Vec::new(),
     }
 }
 

@@ -32,6 +32,7 @@ fn spec() -> SweepSpec {
         seeds: vec![11, 23],
         rounds: 80,
         scenario: None,
+        adapt: Vec::new(),
     }
 }
 
@@ -166,6 +167,7 @@ fn seed_replicated_spec(rounds: usize) -> SweepSpec {
         seeds: (17..25).collect(),
         rounds,
         scenario: None,
+        adapt: Vec::new(),
     }
 }
 

@@ -169,6 +169,7 @@ fn sweep_engine_resolves_and_canonicalizes_synthetic_networks() {
         seeds: vec![17],
         rounds: 40,
         scenario: None,
+        adapt: Vec::new(),
     };
     spec.canonicalize().unwrap();
     assert_eq!(spec.networks, vec!["synth-geo-n64-s3", "gaia"]);
